@@ -1,0 +1,96 @@
+//! Ablation sweeps over the design choices DESIGN.md calls out:
+//! τ (delay-scheduling patience), ρ (Af growth factor), δ (utilization
+//! threshold), L (period length), FIFO-vs-fair for static baselines, and
+//! the §2.3 extension: reliable (On-demand) JM hosts in a spot fleet.
+
+use houtu::config::{Config, Deployment};
+use houtu::deploy::run_trace_experiment;
+
+fn run(cfg: &Config) -> (f64, f64, f64) {
+    let w = run_trace_experiment(cfg, cfg.deployment);
+    (w.metrics.avg_jrt(), w.metrics.makespan(), {
+        w.wan.stats.cross_dc_total_bytes() as f64 / (1 << 30) as f64
+    })
+}
+
+fn main() {
+    let base = Config::default();
+
+    println!("--- τ sweep (Parades patience; threshold = τ·p / 2τ·p) ---");
+    println!("{:>6} {:>12} {:>12} {:>14}", "tau", "avg JRT (s)", "makespan", "cross-DC GB");
+    for tau in [0.1, 0.25, 0.5, 1.0, 2.0] {
+        let mut c = base.clone();
+        c.scheduler.tau = tau;
+        let (jrt, mk, gb) = run(&c);
+        println!("{tau:>6} {jrt:>12.0} {mk:>12.0} {gb:>14.2}");
+    }
+
+    println!("\n--- ρ sweep (Af growth factor) ---");
+    println!("{:>6} {:>12} {:>12}", "rho", "avg JRT (s)", "makespan");
+    for rho in [1.2, 1.5, 2.0, 3.0] {
+        let mut c = base.clone();
+        c.scheduler.rho = rho;
+        let (jrt, mk, _) = run(&c);
+        println!("{rho:>6} {jrt:>12.0} {mk:>12.0}");
+    }
+
+    println!("\n--- δ sweep (Af utilization threshold) ---");
+    println!("{:>6} {:>12} {:>12}", "delta", "avg JRT (s)", "makespan");
+    for delta in [0.3, 0.5, 0.7, 0.9] {
+        let mut c = base.clone();
+        c.scheduler.delta = delta;
+        let (jrt, mk, _) = run(&c);
+        println!("{delta:>6} {jrt:>12.0} {mk:>12.0}");
+    }
+
+    println!("\n--- L sweep (scheduling period, seconds) ---");
+    println!("{:>6} {:>12} {:>12}", "L", "avg JRT (s)", "makespan");
+    for l in [2.0, 5.0, 10.0, 20.0] {
+        let mut c = base.clone();
+        c.scheduler.period_l_secs = l;
+        let (jrt, mk, _) = run(&c);
+        println!("{l:>6} {jrt:>12.0} {mk:>12.0}");
+    }
+
+    println!("\n--- static-baseline queue policy (cent-stat) ---");
+    for (label, fifo) in [("FIFO (stock YARN)", true), ("fair-share", false)] {
+        let mut c = base.clone();
+        c.deployment = Deployment::CentStat;
+        c.scheduler.static_fifo = fifo;
+        let (jrt, mk, _) = run(&c);
+        println!("{label:<22} avg JRT {jrt:>5.0}s  makespan {mk:>5.0}s");
+    }
+
+    println!("\n--- straggler mitigation (25% of tasks 6x slow) ---");
+    for (label, spec) in [("speculation on", true), ("speculation off", false)] {
+        let mut c = base.clone();
+        c.workload.straggler_prob = 0.25;
+        c.workload.straggler_factor = 6.0;
+        c.failures.speculation = spec;
+        let w = run_trace_experiment(&c, Deployment::Houtu);
+        let relaunches: u32 = w.jobs.values().map(|rt| rt.speculative_relaunches).sum();
+        println!(
+            "{label:<18} avg JRT {:>5.0}s  makespan {:>5.0}s  relaunches {relaunches}",
+            w.metrics.avg_jrt(),
+            w.metrics.makespan()
+        );
+    }
+
+    println!("\n--- §2.3 extension: reliable JM hosts under spot chaos ---");
+    for (label, reliable) in [("all-spot workers", false), ("on-demand JM hosts", true)] {
+        let mut c = base.clone();
+        c.workload.num_jobs = 8;
+        c.cloud.revocations = true;
+        c.cloud.spot_volatility = 0.6;
+        c.cloud.market_period_secs = 60.0;
+        c.cloud.bid_multiplier = 1.3;
+        c.cloud.reliable_jm_hosts = reliable;
+        let w = run_trace_experiment(&c, Deployment::Houtu);
+        println!(
+            "{label:<22} avg JRT {:>5.0}s  JM recoveries {:>2}  machine ${:.2}",
+            w.metrics.avg_jrt(),
+            w.metrics.recovery_intervals_secs.len(),
+            w.cost.machine_usd,
+        );
+    }
+}

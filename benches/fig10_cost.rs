@@ -1,0 +1,6 @@
+//! Regenerates Fig 10: normalized machine + communication cost.
+fn main() {
+    let cfg = houtu::config::Config::default();
+    let (_, results) = houtu::exp::fig8_performance(&cfg);
+    print!("{}", houtu::exp::fig10_cost(&results));
+}

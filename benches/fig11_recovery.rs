@@ -1,0 +1,6 @@
+//! Regenerates Fig 11: containers over time through pJM / sJM / 
+//! centralized-JM failures at t=70 s, plus the resulting JRTs.
+fn main() {
+    let cfg = houtu::config::Config::default();
+    print!("{}", houtu::exp::fig11_recovery(&cfg));
+}

@@ -1,0 +1,6 @@
+//! Regenerates Fig 12: intermediate-info sizes per workload (large
+//! inputs) and the time cost of HOUTU's mechanisms.
+fn main() {
+    let cfg = houtu::config::Config::default();
+    print!("{}", houtu::exp::fig12_overhead(&cfg));
+}

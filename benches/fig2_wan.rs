@@ -1,0 +1,6 @@
+//! Regenerates Fig 2: the (mean, std) Mbps WAN bandwidth matrix, measured
+//! iperf-style against the AR(1) fabric (3 rounds x 5 min).
+fn main() {
+    let cfg = houtu::config::Config::default();
+    print!("{}", houtu::exp::fig2_wan(&cfg));
+}

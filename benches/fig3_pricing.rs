@@ -1,0 +1,5 @@
+//! Regenerates Fig 3: the Reserved / On-demand / Spot price table.
+fn main() {
+    print!("{}", houtu::exp::fig3_table());
+    print!("{}", houtu::exp::fig7_table()); // Fig 7 rides along (static table)
+}

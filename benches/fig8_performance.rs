@@ -1,0 +1,9 @@
+//! Regenerates Fig 8: JRT CDF + avg JRT & makespan across the four
+//! deployments on the online trace.
+fn main() {
+    let cfg = houtu::config::Config::default();
+    let t0 = std::time::Instant::now();
+    let (report, _) = houtu::exp::fig8_performance(&cfg);
+    print!("{report}");
+    println!("\n[bench] four deployments simulated in {:.2?}", t0.elapsed());
+}

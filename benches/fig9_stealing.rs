@@ -1,0 +1,7 @@
+//! Regenerates Fig 9: cumulative running tasks under injected load,
+//! with and without work stealing.
+fn main() {
+    let cfg = houtu::config::Config::default();
+    let (report, _) = houtu::exp::fig9_stealing(&cfg);
+    print!("{report}");
+}

@@ -1,0 +1,130 @@
+//! Hot-path microbenchmarks (L3 perf deliverable, DESIGN.md §Perf).
+//!
+//! No criterion in the offline image, so this is a plain timing harness:
+//! warm up, run N iterations, report ns/op and ops/s. Targets:
+//! * Parades `on_update` — called on every container heartbeat;
+//! * Af step — every sub-job every period;
+//! * fair-scheduler allocation — every master every period;
+//! * zk write+watch — every task completion;
+//! * DES event dispatch — everything rides on it;
+//! * whole Fig-8 trace — the end-to-end number.
+
+use std::time::Instant;
+
+use houtu::cloud::InstanceClass;
+use houtu::cluster::Cluster;
+use houtu::config::{Config, Deployment};
+use houtu::consensus::ZkEnsemble;
+use houtu::ids::*;
+use houtu::jm::{af::AfState, af::PeriodFeedback, on_update, ContainerView, ParadesParams, WaitingTask};
+use houtu::master::Master;
+use houtu::sim::Sim;
+use houtu::util::Pcg;
+
+fn bench(name: &str, iters: u64, mut f: impl FnMut()) {
+    // Warm-up.
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let dt = t0.elapsed();
+    let ns = dt.as_nanos() as f64 / iters as f64;
+    println!("{name:<38} {ns:>12.0} ns/op {:>14.0} ops/s", 1e9 / ns);
+}
+
+fn parades_queue(rng: &mut Pcg, len: usize) -> Vec<WaitingTask> {
+    (0..len)
+        .map(|i| {
+            let pref = NodeId { dc: DcId(rng.index(4)), idx: rng.index(4) };
+            WaitingTask {
+                id: TaskId { job: JobId(1), stage: StageId(0), index: i as u32 },
+                r: rng.uniform(0.1, 0.7),
+                p: rng.uniform(5.0, 60.0),
+                input_bytes: 1 << 27,
+                pref_node: Some(pref),
+                pref_rack: Some((pref.dc, pref.idx % 2)),
+                wait: rng.uniform(0.0, 30.0),
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let params = ParadesParams { delta: 0.7, tau: 0.5 };
+    let mut rng = Pcg::seeded(1);
+
+    // Parades on_update over a 64-task queue (worst realistic backlog).
+    let base = parades_queue(&mut rng, 64);
+    let view = ContainerView {
+        id: ContainerId(1),
+        node: NodeId { dc: DcId(0), idx: 0 },
+        rack: 0,
+        free: 1.0,
+    };
+    bench("parades::on_update (64-task queue)", 200_000, || {
+        let mut q = base.clone();
+        let picks = on_update(&mut q, view, params, false);
+        std::hint::black_box(picks);
+    });
+
+    // Af step.
+    let mut af = AfState::default();
+    bench("af::step", 2_000_000, || {
+        let d = af.step(
+            PeriodFeedback { utilization: 0.8, allocation: 4, had_waiting_tasks: true },
+            0.7,
+            1.5,
+            16,
+        );
+        std::hint::black_box(d);
+    });
+
+    // Fair-scheduler allocation: 8 sub-jobs over 64 containers.
+    bench("master::allocate (8 jobs, 64 slots)", 20_000, || {
+        let mut cluster =
+            Cluster::build(&["A".into()], 16, 4, 2, |_, _| InstanceClass::OnDemand);
+        let mut m = Master::new(DcId(0));
+        for j in 0..8 {
+            let jm = JmId { job: JobId(j), dc: DcId(0) };
+            m.register(jm);
+            m.set_desire(jm, 12);
+        }
+        std::hint::black_box(m.allocate(&mut cluster));
+    });
+
+    // zk write + watch fire.
+    let mut zk = ZkEnsemble::new(4);
+    let s1 = zk.connect(DcId(0));
+    let s2 = zk.connect(DcId(1));
+    zk.create(s1, "/bench", vec![0; 256], false, false).unwrap();
+    bench("zk set_data + watch", 500_000, || {
+        zk.watch(s2, "/bench", houtu::consensus::WatchKind::Data);
+        std::hint::black_box(zk.set_data("/bench", vec![1; 256]).unwrap());
+    });
+
+    // DES event dispatch.
+    bench("sim event schedule+dispatch", 50, || {
+        let mut sim = Sim::new(0u64);
+        for t in 0..100_000u64 {
+            sim.schedule_at(t, |s| s.state += 1);
+        }
+        sim.run_to_completion();
+        assert_eq!(sim.state, 100_000);
+    });
+    println!("(sim bench is per 100k events — divide by 1e5 for per-event)");
+
+    // End-to-end: the full Fig-8 trace on HOUTU.
+    let cfg = Config::default();
+    let t0 = Instant::now();
+    let w = houtu::deploy::run_trace_experiment(&cfg, Deployment::Houtu);
+    let dt = t0.elapsed();
+    println!(
+        "end-to-end houtu trace ({} jobs, {:.0}s simulated): {:.2?} wall",
+        cfg.workload.num_jobs,
+        w.metrics.makespan(),
+        dt
+    );
+}

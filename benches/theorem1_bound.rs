@@ -1,0 +1,14 @@
+//! Theorem 1 empirical check: the achieved makespan stays within a small
+//! constant of the work/span lower bound, across several seeds.
+fn main() {
+    let mut cfg = houtu::config::Config::default();
+    let mut worst: f64 = 0.0;
+    for seed in [42, 43, 44, 45] {
+        cfg.seed = seed;
+        let (report, ratio) = houtu::exp::theorem1_bound(&cfg);
+        print!("[seed {seed}] {report}");
+        worst = worst.max(ratio);
+    }
+    println!("worst ratio over seeds: {worst:.2}x");
+    assert!(worst < 12.0, "competitive ratio blew up: {worst}");
+}

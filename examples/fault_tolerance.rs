@@ -1,0 +1,46 @@
+//! Fault tolerance walkthrough (§6.4 / Fig 11): kill the VM hosting a JM
+//! at t=70 s and watch HOUTU continue while the centralized baseline
+//! resubmits from scratch.
+//!
+//! Run: `cargo run --release --example fault_tolerance`
+
+use houtu::config::{Config, Deployment};
+use houtu::dag::{SizeClass, WorkloadKind};
+use houtu::deploy::{run_single_job, SingleJobPlan};
+use houtu::ids::{DcId, JobId};
+
+fn scenario(label: &str, mode: Deployment, kill_dc: DcId) {
+    let cfg = Config::default();
+    let w = run_single_job(
+        &cfg,
+        mode,
+        SingleJobPlan {
+            kind: WorkloadKind::WordCount,
+            size: SizeClass::Large,
+            home: DcId(0),
+            inject_at: None,
+            kill_jm_at: Some((70.0, kill_dc)),
+        },
+    );
+    let rec = &w.metrics.jobs[&JobId(0)];
+    println!("--- {label} ---");
+    println!("JRT: {:.0}s   restarts: {}   recoveries: {}", rec.jrt().unwrap(), rec.restarts, rec.recoveries);
+    if let Some(iv) = w.metrics.recovery_intervals_secs.first() {
+        println!("recovery interval (kill → successor operating): {iv:.1}s");
+    }
+    if let Some(el) = w.metrics.election_delays_secs.first() {
+        println!("pJM election delay: {el:.2}s");
+    }
+    if mode == Deployment::Houtu {
+        let rt = &w.jobs[&JobId(0)];
+        println!("primary ended at {} (started at dc0)", rt.primary);
+    }
+    println!();
+}
+
+fn main() {
+    println!("HOUTU job-level fault tolerance (JM VM killed at t=70s)\n");
+    scenario("HOUTU — kill the PRIMARY JM (election + continue)", Deployment::Houtu, DcId(0));
+    scenario("HOUTU — kill a SEMI-ACTIVE JM (inherit containers + continue)", Deployment::Houtu, DcId(2));
+    scenario("centralized baseline — kill the only JM (full resubmission)", Deployment::CentDyna, DcId(0));
+}

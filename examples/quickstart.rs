@@ -1,0 +1,59 @@
+//! Quickstart: submit one geo-distributed TPC-H job to HOUTU and watch
+//! its lifecycle — replicated JMs, Af resource ramp, Parades locality.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use houtu::config::{Config, Deployment};
+use houtu::dag::{SizeClass, WorkloadKind};
+use houtu::deploy::{run_single_job, SingleJobPlan};
+use houtu::ids::{DcId, JobId};
+
+fn main() {
+    let cfg = Config::default();
+    println!("HOUTU quickstart — TPC-H Q3 across {} regions", cfg.topology.num_dcs());
+    println!("regions: {:?}", cfg.topology.regions);
+    println!("containers: {} ({} per region)\n", cfg.topology.total_containers(), cfg.topology.containers_per_dc());
+
+    let world = run_single_job(
+        &cfg,
+        Deployment::Houtu,
+        SingleJobPlan {
+            kind: WorkloadKind::TpcH,
+            size: SizeClass::Medium,
+            home: DcId(0),
+            inject_at: None,
+            kill_jm_at: None,
+        },
+    );
+
+    let job = JobId(0);
+    let rec = &world.metrics.jobs[&job];
+    let rt = &world.jobs[&job];
+    println!("job {job}: {} {} submitted to {}", rec.kind.name(), rec.size.name(), rt.spec.home_dc);
+    println!("stages: {}   tasks: {}", rt.spec.stages.len(), rec.tasks_total);
+    println!("work T1 = {:.1} container-seconds, critical path T∞ = {:.1}s", rt.spec.work(), rt.spec.critical_path());
+    println!("\nper-region job managers:");
+    for (dc, jm) in &rt.jms {
+        println!(
+            "  {} {:<11} node-local {:>3}  rack-local {:>3}  any {:>3}  stolen-in {:>2}  stolen-out {:>2}",
+            dc,
+            format!("{:?}", jm.role),
+            jm.stats.assigned_node_local,
+            jm.stats.assigned_rack_local,
+            jm.stats.assigned_any,
+            jm.stats.tasks_stolen_in,
+            jm.stats.tasks_stolen_out,
+        );
+    }
+    println!("\njob response time: {:.1}s", rec.jrt().unwrap());
+    println!(
+        "task input locality: {} local / {} cross-DC fetches",
+        world.metrics.local_input_tasks, world.metrics.remote_input_tasks
+    );
+    println!(
+        "cross-DC traffic: {} ({} control msgs)",
+        houtu::util::fmt_bytes(world.wan.stats.cross_dc_total_bytes()),
+        world.wan.stats.messages
+    );
+    println!("intermediate info final size: {} bytes", rt.info.encoded_size());
+}

@@ -1,0 +1,30 @@
+//! Cost analysis (§6.3 / Fig 10): the same online workload on all four
+//! deployments; decentralized ones ride Spot instances, centralized ones
+//! On-demand. Prints the machine + communication cost breakdown.
+//!
+//! Run: `cargo run --release --example spot_cost`
+
+use houtu::cloud::fig3_prices;
+use houtu::config::{Config, Deployment};
+use houtu::exp;
+
+fn main() {
+    let cfg = Config::default();
+    println!("Spot vs On-demand economics (AliCloud row of Fig 3):");
+    for r in fig3_prices() {
+        if r.provider == "AliCloud" {
+            println!(
+                "  on-demand ${}/h vs spot ~${}/h  ({}x cheaper, no reliability SLA)",
+                r.on_demand_hourly,
+                r.spot_hourly,
+                (r.on_demand_hourly / r.spot_hourly).round()
+            );
+        }
+    }
+    println!("\nrunning the {}-job online trace on all four deployments...\n", cfg.workload.num_jobs);
+    let results: Vec<_> = Deployment::ALL.iter().map(|&m| exp::run_deployment(&cfg, m)).collect();
+    print!("{}", exp::fig10_cost(&results));
+    println!("\n(The machine-cost gap is spot pricing x the makespan gap; the");
+    println!(" communication gap is HOUTU keeping tasks in their data's region");
+    println!(" unless stolen after the 2τ·p patience threshold.)");
+}

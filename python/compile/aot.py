@@ -1,0 +1,75 @@
+"""AOT bridge: lower the L2 graphs to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compiler_ir('hlo').as_serialized_hlo_module_proto()``)
+is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which the image's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser on the rust side reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Shapes are fixed at export (PJRT compiles per shape): the rust runtime
+pads its batches to these shapes.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Export shapes (rust side pads to these; keep in sync with
+# rust/src/runtime/mod.rs SHAPES).
+LOGREG_N, LOGREG_D = 1024, 64
+PAGERANK_N = 256
+SEG_N, SEG_K, SEG_V = 1024, 64, 4
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifacts():
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct
+    return {
+        "logreg_step": jax.jit(model.logreg_train_step, donate_argnums=(0,)).lower(
+            spec((LOGREG_D,), f32),
+            spec((LOGREG_N, LOGREG_D), f32),
+            spec((LOGREG_N,), f32),
+            spec((), f32),
+        ),
+        "pagerank_step": jax.jit(model.pagerank_iteration).lower(
+            spec((PAGERANK_N, PAGERANK_N), f32),
+            spec((PAGERANK_N,), f32),
+            spec((), f32),
+        ),
+        "wordcount_agg": jax.jit(model.wordcount_agg).lower(
+            spec((SEG_N, SEG_K), f32),
+            spec((SEG_N, SEG_V), f32),
+        ),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, lowered in artifacts().items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Pallas kernels (L1) and their pure-jnp oracles (``ref``)."""
+
+from . import logreg, pagerank, ref, segsum  # noqa: F401

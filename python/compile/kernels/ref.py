@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package must match its oracle to float tolerance
+across the shape/dtype sweep in ``python/tests``. The oracles are also the
+semantic documentation: each corresponds to the inner loop of one paper
+workload (§6.1 of the HOUTU paper).
+"""
+
+import jax.numpy as jnp
+
+
+def sigmoid(z):
+    return 1.0 / (1.0 + jnp.exp(-z))
+
+
+def logreg_grad(w, x, y):
+    """Gradient of mean logistic loss: X^T (sigmoid(Xw) - y) / n.
+
+    The per-partition computation of an Iterative-ML task: each task owns a
+    shard of (x, y) and emits a gradient that the collect stage averages.
+    """
+    n = x.shape[0]
+    err = sigmoid(x @ w) - y
+    return x.T @ err / n
+
+
+def logreg_loss(w, x, y):
+    """Mean logistic loss (for the e2e loss curve)."""
+    logits = x @ w
+    return jnp.mean(jnp.logaddexp(0.0, logits) - y * logits)
+
+
+def pagerank_step(m, r, damping=0.85):
+    """One damped power iteration: r' = d * M @ r + (1 - d) / n.
+
+    ``m`` is the column-normalized link matrix transposed so the step is a
+    plain dense matvec — a PageRank task's per-partition compute.
+    """
+    n = r.shape[0]
+    return damping * (m @ r) + (1.0 - damping) / n
+
+
+def segsum(onehot, values):
+    """Segment sum as a matmul: out[k] = sum_i onehot[i, k] * values[i].
+
+    The group-by/reduce at the heart of WordCount and the TPC-H Q3
+    aggregation, expressed as a one-hot matmul so it maps onto the MXU
+    (DESIGN.md section Hardware-Adaptation).
+    """
+    return onehot.T @ values

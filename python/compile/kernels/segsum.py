@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: segment sum as a one-hot matmul.
+
+``out[k, v] = sum_i onehot[i, k] * values[i, v]`` — the WordCount /
+TPC-H-Q3 group-by expressed as a matmul so the reduction runs on the MXU
+systolic array instead of a scatter (DESIGN.md Hardware-Adaptation). The
+row dimension is tiled; per-step partials accumulate into the (k, v)
+output resident in VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 128
+
+
+def _kernel(h_ref, v_ref, o_ref):
+    i = pl.program_id(0)
+    part = h_ref[...].T @ v_ref[...]
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += part
+
+
+def segsum(onehot, values):
+    """Pallas-tiled segment sum; matches ``ref.segsum``.
+
+    onehot: (n, k) f32 indicator matrix; values: (n, v) f32.
+    """
+    n, k = onehot.shape
+    v = values.shape[1]
+    padded = pl.cdiv(n, BLOCK_ROWS) * BLOCK_ROWS
+    h, val = onehot, values
+    if padded != n:
+        h = jnp.pad(onehot, ((0, padded - n), (0, 0)))
+        val = jnp.pad(values, ((0, padded - n), (0, 0)))
+    grid = padded // BLOCK_ROWS
+    return pl.pallas_call(
+        _kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, k), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, v), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((k, v), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, v), values.dtype),
+        interpret=True,
+    )(h, val)

@@ -1,0 +1,42 @@
+"""L2 — the JAX compute graphs tasks execute, calling the L1 kernels.
+
+Three entry points, one per real-compute workload in the coordinator:
+
+* ``logreg_train_step`` — full Iterative-ML step: Pallas gradient +
+  SGD update + loss (donated weight buffer; one fused HLO).
+* ``pagerank_iteration`` — one damped power iteration + residual.
+* ``wordcount_agg`` — segment-sum aggregation of token counts.
+
+``aot.py`` lowers each once to HLO *text* in ``artifacts/``; the rust
+runtime loads and executes them via PJRT. Python never runs at request
+time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import logreg, pagerank, segsum
+from .kernels import ref
+
+
+def logreg_train_step(w, x, y, lr):
+    """One SGD step on mean logistic loss. Returns (w', loss).
+
+    The gradient goes through the Pallas kernel; the loss through jnp
+    (cheap, fuses into the same HLO module).
+    """
+    grad = logreg.logreg_grad(w, x, y)
+    loss = ref.logreg_loss(w, x, y)
+    return w - lr * grad, loss
+
+
+def pagerank_iteration(m, r, damping):
+    """One PageRank step. Returns (r', l1_residual)."""
+    r2 = pagerank.pagerank_step(m, r, damping)
+    resid = jnp.sum(jnp.abs(r2 - r))
+    return r2, resid
+
+
+def wordcount_agg(onehot, values):
+    """Group-by/sum of per-token value rows. Returns (k, v) totals."""
+    return segsum.segsum(onehot, values)

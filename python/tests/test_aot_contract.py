@@ -1,0 +1,42 @@
+"""Cross-language contract: the export shapes in aot.py must match the
+constants the rust runtime pads its batches to, and the emitted HLO must
+carry the donation/layout properties EXPERIMENTS.md claims."""
+
+import re
+from pathlib import Path
+
+from compile import aot
+
+REPO = Path(__file__).resolve().parents[2]
+
+
+def rust_const(name: str) -> int:
+    text = (REPO / "rust/src/runtime/mod.rs").read_text()
+    m = re.search(rf"pub const {name}: usize = (\d+);", text)
+    assert m, f"{name} not found in rust runtime"
+    return int(m.group(1))
+
+
+def test_shapes_match_rust_runtime():
+    assert aot.LOGREG_N == rust_const("LOGREG_N")
+    assert aot.LOGREG_D == rust_const("LOGREG_D")
+    assert aot.PAGERANK_N == rust_const("PAGERANK_N")
+    assert aot.SEG_N == rust_const("SEG_N")
+    assert aot.SEG_K == rust_const("SEG_K")
+    assert aot.SEG_V == rust_const("SEG_V")
+
+
+def test_logreg_artifact_donates_weight_buffer():
+    text = aot.to_hlo_text(aot.artifacts()["logreg_step"])
+    assert "input_output_alias" in text, "weight buffer must be donated"
+
+
+def test_artifact_parameter_counts():
+    arts = aot.artifacts()
+    expect = {"logreg_step": 4, "pagerank_step": 3, "wordcount_agg": 2}
+    for name, nparams in expect.items():
+        text = aot.to_hlo_text(arts[name])
+        entry = text[text.index("ENTRY"):]
+        body = entry[: entry.index("ROOT")]
+        found = body.count("parameter(")
+        assert found == nparams, f"{name}: {found} params, expected {nparams}"

@@ -1,0 +1,198 @@
+//! Command-line launcher (hand-rolled — no clap in the offline image).
+//!
+//! ```text
+//! houtu <command> [--config FILE] [--set section.key=value]...
+//!
+//! commands:
+//!   fig2|fig3|fig7|fig8|fig9|fig10|fig11|fig12   regenerate a paper figure
+//!   theorem1                                     check the makespan bound
+//!   run --deployment D --workload W --size S     run one job
+//!   trace --deployment D                         run the online trace
+//!   all                                          every figure in sequence
+//! ```
+
+use crate::config::{Config, Deployment};
+use crate::dag::{SizeClass, WorkloadKind};
+use crate::deploy::{run_single_job, SingleJobPlan};
+use crate::exp;
+use crate::ids::DcId;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: houtu <fig2|fig3|fig7|fig8|fig9|fig10|fig11|fig12|theorem1|run|trace|export|all> \
+         [--config FILE] [--set section.key=value]... [--deployment D] [--workload W] [--size S]"
+    );
+    std::process::exit(2);
+}
+
+/// Parsed command line.
+pub struct Cli {
+    pub command: String,
+    pub cfg: Config,
+    pub deployment: Deployment,
+    pub workload: WorkloadKind,
+    pub size: SizeClass,
+}
+
+pub fn parse(args: &[String]) -> Cli {
+    if args.is_empty() {
+        usage();
+    }
+    let command = args[0].clone();
+    let mut cfg = Config::default();
+    let mut deployment = Deployment::Houtu;
+    let mut workload = WorkloadKind::WordCount;
+    let mut size = SizeClass::Medium;
+    let mut i = 1;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--config" => {
+                i += 1;
+                let path = args.get(i).unwrap_or_else(|| usage());
+                cfg = Config::from_file(path).unwrap_or_else(|e| {
+                    eprintln!("error: {e:#}");
+                    std::process::exit(1);
+                });
+            }
+            "--set" => {
+                i += 1;
+                let kv = args.get(i).unwrap_or_else(|| usage());
+                if let Err(e) = cfg.apply_override(kv) {
+                    eprintln!("error: {e:#}");
+                    std::process::exit(1);
+                }
+            }
+            "--deployment" => {
+                i += 1;
+                deployment = Deployment::parse(args.get(i).unwrap_or_else(|| usage()))
+                    .unwrap_or_else(|e| {
+                        eprintln!("error: {e:#}");
+                        std::process::exit(1);
+                    });
+            }
+            "--workload" => {
+                i += 1;
+                workload = match args.get(i).map(String::as_str) {
+                    Some("wordcount") => WorkloadKind::WordCount,
+                    Some("tpch") => WorkloadKind::TpcH,
+                    Some("ml") => WorkloadKind::IterativeMl,
+                    Some("pagerank") => WorkloadKind::PageRank,
+                    _ => usage(),
+                };
+            }
+            "--size" => {
+                i += 1;
+                size = match args.get(i).map(String::as_str) {
+                    Some("small") => SizeClass::Small,
+                    Some("medium") => SizeClass::Medium,
+                    Some("large") => SizeClass::Large,
+                    _ => usage(),
+                };
+            }
+            other => {
+                eprintln!("unknown flag {other:?}");
+                usage();
+            }
+        }
+        i += 1;
+    }
+    Cli { command, cfg, deployment, workload, size }
+}
+
+/// Entry point used by `main.rs`.
+pub fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = parse(&args);
+    run(&cli);
+}
+
+pub fn run(cli: &Cli) {
+    let cfg = &cli.cfg;
+    match cli.command.as_str() {
+        "fig2" => print!("{}", exp::fig2_wan(cfg)),
+        "fig3" => print!("{}", exp::fig3_table()),
+        "fig7" => print!("{}", exp::fig7_table()),
+        "fig8" => {
+            let (report, _) = exp::fig8_performance(cfg);
+            print!("{report}");
+        }
+        "fig9" => {
+            let (report, _) = exp::fig9_stealing(cfg);
+            print!("{report}");
+        }
+        "fig10" => {
+            let (_, results) = exp::fig8_performance(cfg);
+            print!("{}", exp::fig10_cost(&results));
+        }
+        "fig11" => print!("{}", exp::fig11_recovery(cfg)),
+        "fig12" => print!("{}", exp::fig12_overhead(cfg)),
+        "theorem1" => {
+            let (report, _) = exp::theorem1_bound(cfg);
+            print!("{report}");
+        }
+        "run" => {
+            let w = run_single_job(
+                cfg,
+                cli.deployment,
+                SingleJobPlan {
+                    kind: cli.workload,
+                    size: cli.size,
+                    home: DcId(0),
+                    inject_at: None,
+                    kill_jm_at: None,
+                },
+            );
+            let rec = &w.metrics.jobs[&crate::ids::JobId(0)];
+            println!(
+                "{} {} on {}: JRT {:.1}s ({} tasks, {} cross-DC inputs)",
+                rec.kind.name(),
+                rec.size.name(),
+                cli.deployment.name(),
+                rec.jrt().unwrap_or(f64::NAN),
+                rec.tasks_total,
+                w.metrics.remote_input_tasks,
+            );
+        }
+        "export" => {
+            let dir = std::path::Path::new("results");
+            match exp::export_csv(cfg, dir) {
+                Ok(files) => {
+                    for f in files {
+                        println!("wrote results/{f}");
+                    }
+                }
+                Err(e) => {
+                    eprintln!("export failed: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        "trace" => {
+            let r = exp::run_deployment(cfg, cli.deployment);
+            println!(
+                "{}: {} jobs, avg JRT {:.0}s, makespan {:.0}s, machine ${:.2}, transfer ${:.2}",
+                r.mode.name(),
+                cfg.workload.num_jobs,
+                r.avg_jrt,
+                r.makespan,
+                r.machine_usd,
+                r.transfer_usd
+            );
+        }
+        "all" => {
+            print!("{}", exp::fig2_wan(cfg));
+            print!("{}", exp::fig3_table());
+            print!("{}", exp::fig7_table());
+            let (report, results) = exp::fig8_performance(cfg);
+            print!("{report}");
+            print!("{}", exp::fig10_cost(&results));
+            let (r9, _) = exp::fig9_stealing(cfg);
+            print!("{r9}");
+            print!("{}", exp::fig11_recovery(cfg));
+            print!("{}", exp::fig12_overhead(cfg));
+            let (t1, _) = exp::theorem1_bound(cfg);
+            print!("{t1}");
+        }
+        _ => usage(),
+    }
+}

@@ -1,0 +1,217 @@
+//! Cloud market substrate: the Fig-3 price table, a per-region spot
+//! market with bid-based revocation, and cost metering (machine-hours plus
+//! the $0.13/GB cross-DC transfer tariff of §6.3).
+//!
+//! The spot price follows a mean-reverting log-AR(1) process recalculated
+//! every `market_period_secs`; each spot instance carries its own bid
+//! (jittered around `bid_multiplier × mean spot price`), and a price
+//! excursion above a bid revokes exactly the instances it out-prices —
+//! matching the paper's "terminate those instances whose maximum bid is
+//! below the new market price".
+
+use crate::config::CloudConfig;
+use crate::util::Pcg;
+
+/// One row of the paper's Fig 3 (USD; <4 vCPU, 16 GB> class).
+#[derive(Debug, Clone, Copy)]
+pub struct PriceRow {
+    pub provider: &'static str,
+    pub reserved_yearly: f64,
+    pub on_demand_hourly: f64,
+    pub spot_hourly: f64,
+}
+
+/// The paper's Fig 3 table, verbatim.
+pub fn fig3_prices() -> Vec<PriceRow> {
+    vec![
+        PriceRow { provider: "GCP", reserved_yearly: 1164.0, on_demand_hourly: 0.19, spot_hourly: 0.04 },
+        PriceRow { provider: "EC2", reserved_yearly: 1013.0, on_demand_hourly: 0.2, spot_hourly: 0.035 },
+        PriceRow { provider: "AliCloud", reserved_yearly: 866.0, on_demand_hourly: 0.312, spot_hourly: 0.036 },
+        PriceRow { provider: "Azure", reserved_yearly: 1312.0, on_demand_hourly: 0.26, spot_hourly: 0.06 },
+    ]
+}
+
+/// How an instance is paid for.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InstanceClass {
+    OnDemand,
+    /// Spot instance with our standing bid ($/hour).
+    Spot { bid: f64 },
+}
+
+impl InstanceClass {
+    pub fn is_spot(&self) -> bool {
+        matches!(self, InstanceClass::Spot { .. })
+    }
+}
+
+/// Per-region spot market.
+#[derive(Debug, Clone)]
+pub struct SpotMarket {
+    mean: f64,
+    phi: f64,
+    sigma: f64,
+    price: f64,
+    rng: Pcg,
+}
+
+impl SpotMarket {
+    pub fn new(cfg: &CloudConfig, rng: Pcg) -> Self {
+        SpotMarket {
+            mean: cfg.spot_hourly_mean,
+            phi: 0.9,
+            sigma: cfg.spot_volatility,
+            price: cfg.spot_hourly_mean,
+            rng,
+        }
+    }
+
+    /// Current market price ($/hour).
+    pub fn price(&self) -> f64 {
+        self.price
+    }
+
+    /// Recalculate the market price (one market period). Returns the new
+    /// price. Log-AR(1) around log(mean) keeps the price positive and
+    /// produces occasional multi-× spikes — the revocation driver.
+    pub fn step(&mut self) -> f64 {
+        let lmean = self.mean.ln();
+        let lx = self.price.ln();
+        let innov = (1.0 - self.phi * self.phi).sqrt();
+        let eps = self.rng.std_normal();
+        self.price = (lmean + self.phi * (lx - lmean) + innov * self.sigma * eps).exp();
+        self.price
+    }
+
+    /// Draw a per-instance bid: `bid_multiplier × mean`, jittered ±10 % so
+    /// a spike revokes a subset rather than the whole fleet.
+    pub fn draw_bid(&mut self, cfg: &CloudConfig) -> f64 {
+        cfg.bid_multiplier * self.mean * self.rng.uniform(0.9, 1.1)
+    }
+
+    /// Would an instance with `bid` be revoked at the current price?
+    pub fn revokes(&self, bid: f64) -> bool {
+        self.price > bid
+    }
+}
+
+/// Accumulates the Fig-10 cost components for one deployment run.
+#[derive(Debug, Default, Clone)]
+pub struct CostMeter {
+    pub machine_usd: f64,
+    pub transfer_usd: f64,
+    /// Machine-hours billed per class, for reporting.
+    pub on_demand_hours: f64,
+    pub spot_hours: f64,
+}
+
+impl CostMeter {
+    /// Bill `hours` of an instance at the given class. Spot usage is billed
+    /// at the current market price (as AliCloud does), not at the bid.
+    pub fn charge_machine(&mut self, class: InstanceClass, hours: f64, market_price: f64) {
+        match class {
+            InstanceClass::OnDemand => {
+                self.on_demand_hours += hours;
+                self.machine_usd += hours * market_price;
+            }
+            InstanceClass::Spot { .. } => {
+                self.spot_hours += hours;
+                self.machine_usd += hours * market_price;
+            }
+        }
+    }
+
+    /// Bill cross-DC transfer bytes at `per_gb` $/GB.
+    pub fn charge_transfer(&mut self, bytes: u64, per_gb: f64) {
+        self.transfer_usd += bytes as f64 / (1024.0 * 1024.0 * 1024.0) * per_gb;
+    }
+
+    pub fn total_usd(&self) -> f64 {
+        self.machine_usd + self.transfer_usd
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn cloud_cfg() -> CloudConfig {
+        Config::default().cloud
+    }
+
+    #[test]
+    fn fig3_table_matches_paper() {
+        let rows = fig3_prices();
+        assert_eq!(rows.len(), 4);
+        let ali = rows.iter().find(|r| r.provider == "AliCloud").unwrap();
+        assert_eq!(ali.reserved_yearly, 866.0);
+        assert_eq!(ali.on_demand_hourly, 0.312);
+        assert_eq!(ali.spot_hourly, 0.036);
+        // §2.3: spot up to ~10x below on-demand.
+        for r in &rows {
+            assert!(r.on_demand_hourly / r.spot_hourly >= 4.0, "{}", r.provider);
+        }
+    }
+
+    #[test]
+    fn spot_price_stays_positive_and_near_mean() {
+        let cfg = cloud_cfg();
+        let mut m = SpotMarket::new(&cfg, Pcg::seeded(5));
+        let mut prices = Vec::new();
+        for _ in 0..20_000 {
+            prices.push(m.step());
+        }
+        assert!(prices.iter().all(|&p| p > 0.0));
+        let mean = crate::util::stats::mean(&prices);
+        assert!((mean - cfg.spot_hourly_mean).abs() < cfg.spot_hourly_mean * 0.5, "mean {mean}");
+    }
+
+    #[test]
+    fn spikes_above_bid_occur_but_are_rare() {
+        let cfg = cloud_cfg();
+        let mut m = SpotMarket::new(&cfg, Pcg::seeded(6));
+        let bid = cfg.bid_multiplier * cfg.spot_hourly_mean;
+        let n = 50_000;
+        let spikes = (0..n).filter(|_| m.step() > bid).count();
+        let frac = spikes as f64 / n as f64;
+        assert!(frac > 0.0005, "no revocation events at all ({frac})");
+        assert!(frac < 0.15, "revocations too frequent ({frac})");
+    }
+
+    #[test]
+    fn bids_are_jittered() {
+        let cfg = cloud_cfg();
+        let mut m = SpotMarket::new(&cfg, Pcg::seeded(7));
+        let bids: Vec<f64> = (0..100).map(|_| m.draw_bid(&cfg)).collect();
+        let base = cfg.bid_multiplier * cfg.spot_hourly_mean;
+        assert!(bids.iter().all(|&b| b >= base * 0.9 - 1e-12 && b <= base * 1.1 + 1e-12));
+        assert!(crate::util::stats::std_dev(&bids) > 0.0);
+    }
+
+    #[test]
+    fn cost_meter_accumulates() {
+        let mut c = CostMeter::default();
+        c.charge_machine(InstanceClass::OnDemand, 2.0, 0.312);
+        c.charge_machine(InstanceClass::Spot { bid: 0.06 }, 10.0, 0.036);
+        c.charge_transfer(10 * 1024 * 1024 * 1024, 0.13);
+        assert!((c.machine_usd - (2.0 * 0.312 + 10.0 * 0.036)).abs() < 1e-9);
+        assert!((c.transfer_usd - 1.3).abs() < 1e-9);
+        assert_eq!(c.on_demand_hours, 2.0);
+        assert_eq!(c.spot_hours, 10.0);
+        assert!((c.total_usd() - (c.machine_usd + c.transfer_usd)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spot_is_much_cheaper_for_same_hours() {
+        // The Fig-10 effect in miniature: 16 workers for 1 h.
+        let cfg = cloud_cfg();
+        let mut spot = CostMeter::default();
+        let mut ondemand = CostMeter::default();
+        for _ in 0..16 {
+            spot.charge_machine(InstanceClass::Spot { bid: 0.06 }, 1.0, cfg.spot_hourly_mean);
+            ondemand.charge_machine(InstanceClass::OnDemand, 1.0, cfg.on_demand_hourly);
+        }
+        assert!(spot.machine_usd < ondemand.machine_usd * 0.15);
+    }
+}

@@ -1,0 +1,475 @@
+//! Cluster substrate: data centers, worker nodes, containers and the
+//! per-container utilization monitor (§5 "Monitor mechanism").
+//!
+//! A *container* is the unified resource unit of the paper: a fixed
+//! <cores, memory> slot, normalized to capacity 1.0. Both tasks and job
+//! managers run in containers, which is why both failure classes occur
+//! with the same probability on spot instances (§2.3). Parades may pack
+//! multiple tasks into one container as long as Σ r ≤ 1.
+//!
+//! Utilization is tracked as a time-weighted step function of the used
+//! fraction, mirroring the 1 Hz OS-counter monitor the paper adds to
+//! YARN's NodeManager; [`Cluster::take_period_utilization`] returns the
+//! average over the closing scheduling period — exactly the `u(q−1)` that
+//! Af consumes.
+
+use crate::cloud::InstanceClass;
+use crate::ids::{ContainerId, DcId, JmId, NodeId, TaskId};
+use crate::sim::{to_secs, SimTime};
+use crate::util::stats::TimeWeighted;
+
+/// A running task's footprint inside a container.
+#[derive(Debug, Clone, Copy)]
+pub struct RunningTask {
+    pub task: TaskId,
+    pub r: f64,
+}
+
+/// A container (executor slot), capacity normalized to 1.0.
+#[derive(Debug)]
+pub struct Container {
+    pub id: ContainerId,
+    pub node: NodeId,
+    pub rack: usize,
+    /// Free resource in [0, 1].
+    pub free: f64,
+    pub running: Vec<RunningTask>,
+    /// Sub-job currently granted this container (None = in the DC free pool).
+    pub owner: Option<JmId>,
+    /// Utilization monitor (used fraction over time).
+    util: TimeWeighted,
+    pub alive: bool,
+}
+
+impl Container {
+    pub fn used(&self) -> f64 {
+        1.0 - self.free
+    }
+}
+
+/// A worker machine hosting several containers.
+#[derive(Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub rack: usize,
+    pub class: InstanceClass,
+    pub containers: Vec<ContainerId>,
+    pub alive: bool,
+    pub started_at: SimTime,
+}
+
+/// One region's machines.
+#[derive(Debug)]
+pub struct DataCenter {
+    pub id: DcId,
+    pub region: String,
+    pub nodes: Vec<Node>,
+}
+
+/// Dense container table: ids are allocated monotonically and entries are
+/// never removed (death just flips `alive`), so a Vec indexed by id
+/// replaces a HashMap — this store sits on the hottest path (every
+/// heartbeat / allocation / steal check) and hashing it cost ~38 % of
+/// end-to-end runtime before the swap (EXPERIMENTS.md §Perf).
+#[derive(Debug, Default)]
+pub struct ContainerStore(Vec<Container>);
+
+impl ContainerStore {
+    #[inline]
+    pub fn get(&self, id: &ContainerId) -> Option<&Container> {
+        self.0.get(id.0 as usize)
+    }
+    #[inline]
+    pub fn get_mut(&mut self, id: &ContainerId) -> Option<&mut Container> {
+        self.0.get_mut(id.0 as usize)
+    }
+    pub fn push(&mut self, c: Container) {
+        debug_assert_eq!(c.id.0 as usize, self.0.len(), "ids must stay dense");
+        self.0.push(c);
+    }
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+    pub fn iter(&self) -> impl Iterator<Item = &Container> {
+        self.0.iter()
+    }
+}
+
+impl std::ops::Index<&ContainerId> for ContainerStore {
+    type Output = Container;
+    #[inline]
+    fn index(&self, id: &ContainerId) -> &Container {
+        &self.0[id.0 as usize]
+    }
+}
+
+/// All machines in all regions, plus the global container table.
+#[derive(Debug, Default)]
+pub struct Cluster {
+    pub dcs: Vec<DataCenter>,
+    pub containers: ContainerStore,
+    next_container: u64,
+}
+
+impl Cluster {
+    /// Build the testbed: `workers` nodes per region, `slots` containers
+    /// per node, spread round-robin over `racks` racks. Spot bids are drawn
+    /// by the caller (cloud layer) and passed in via `classes`.
+    pub fn build(
+        regions: &[String],
+        workers: usize,
+        slots: usize,
+        racks: usize,
+        mut class_of: impl FnMut(DcId, usize) -> InstanceClass,
+    ) -> Cluster {
+        let mut cluster = Cluster::default();
+        for (d, region) in regions.iter().enumerate() {
+            let dc = DcId(d);
+            let mut nodes = Vec::new();
+            for n in 0..workers {
+                let id = NodeId { dc, idx: n };
+                let rack = n % racks.max(1);
+                let mut node = Node {
+                    id,
+                    rack,
+                    class: class_of(dc, n),
+                    containers: Vec::new(),
+                    alive: true,
+                    started_at: 0,
+                };
+                for _ in 0..slots {
+                    let cid = ContainerId(cluster.next_container);
+                    cluster.next_container += 1;
+                    cluster.containers.push(Container {
+                        id: cid,
+                        node: id,
+                        rack,
+                        free: 1.0,
+                        running: Vec::new(),
+                        owner: None,
+                        util: TimeWeighted::new(0.0, 0.0),
+                        alive: true,
+                    });
+                    node.containers.push(cid);
+                }
+                nodes.push(node);
+            }
+            cluster.dcs.push(DataCenter { id: dc, region: region.clone(), nodes });
+        }
+        cluster
+    }
+
+    pub fn container(&self, id: ContainerId) -> &Container {
+        &self.containers[&id]
+    }
+
+    pub fn container_mut(&mut self, id: ContainerId) -> &mut Container {
+        self.containers.get_mut(&id).expect("unknown container")
+    }
+
+    /// All live containers in a DC.
+    pub fn dc_containers(&self, dc: DcId) -> Vec<ContainerId> {
+        self.dcs[dc.0]
+            .nodes
+            .iter()
+            .filter(|n| n.alive)
+            .flat_map(|n| n.containers.iter().copied())
+            .filter(|c| self.containers[c].alive)
+            .collect()
+    }
+
+    /// Live containers in a DC not granted to any sub-job.
+    /// Single pass, no intermediate allocation — hot in every allocation
+    /// round and steal check.
+    pub fn free_pool(&self, dc: DcId) -> Vec<ContainerId> {
+        let mut out = Vec::new();
+        for n in &self.dcs[dc.0].nodes {
+            if !n.alive {
+                continue;
+            }
+            for &cid in &n.containers {
+                let c = &self.containers[&cid];
+                if c.alive && c.owner.is_none() {
+                    out.push(cid);
+                }
+            }
+        }
+        out
+    }
+
+    /// Total live container capacity per DC (|P_j| in the analysis).
+    /// Allocation-free count.
+    pub fn dc_capacity(&self, dc: DcId) -> usize {
+        self.dcs[dc.0]
+            .nodes
+            .iter()
+            .filter(|n| n.alive)
+            .map(|n| n.containers.iter().filter(|c| self.containers[c].alive).count())
+            .sum()
+    }
+
+    /// Grant a free container to a sub-job. Panics if already owned.
+    pub fn grant(&mut self, cid: ContainerId, owner: JmId) {
+        let c = self.container_mut(cid);
+        assert!(c.alive, "granting dead container {cid}");
+        assert!(c.owner.is_none(), "container {cid} already owned by {:?}", c.owner);
+        c.owner = Some(owner);
+    }
+
+    /// Transfer ownership (token re-grant after JM recovery, §5).
+    pub fn regrant(&mut self, cid: ContainerId, new_owner: JmId) {
+        let c = self.container_mut(cid);
+        assert!(c.alive);
+        c.owner = Some(new_owner);
+    }
+
+    /// Return a container to the free pool. Running tasks must have been
+    /// handled by the caller; we assert the container is idle.
+    pub fn release(&mut self, cid: ContainerId, t: SimTime) {
+        let c = self.container_mut(cid);
+        debug_assert!(c.running.is_empty(), "releasing busy container {cid}");
+        c.owner = None;
+        c.free = 1.0;
+        c.util.set(to_secs(t), 0.0);
+    }
+
+    /// Start a task of footprint `r` on a container. Panics on over-commit
+    /// — Parades must check `free` first (the no-over-commit invariant is
+    /// property-tested in `jm`).
+    pub fn start_task(&mut self, cid: ContainerId, task: TaskId, r: f64, t: SimTime) {
+        let c = self.container_mut(cid);
+        assert!(c.alive, "starting task on dead container");
+        assert!(
+            c.free + 1e-9 >= r,
+            "over-commit on {cid}: free={} r={r}",
+            c.free
+        );
+        c.free = (c.free - r).max(0.0);
+        c.running.push(RunningTask { task, r });
+        let used = c.used();
+        c.util.set(to_secs(t), used);
+    }
+
+    /// Finish (or abort) a task on a container, freeing its resources.
+    pub fn finish_task(&mut self, cid: ContainerId, task: TaskId, t: SimTime) -> bool {
+        let c = self.container_mut(cid);
+        if let Some(pos) = c.running.iter().position(|rt| rt.task == task) {
+            let rt = c.running.swap_remove(pos);
+            c.free = (c.free + rt.r).min(1.0);
+            let used = c.used();
+            c.util.set(to_secs(t), used);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Period-average utilization of a set of containers (Af's `u(q−1)`),
+    /// resetting each monitor window. Containers average equally, matching
+    /// the paper's per-second sampling then per-period averaging.
+    pub fn take_period_utilization(&mut self, cids: &[ContainerId], t: SimTime) -> f64 {
+        if cids.is_empty() {
+            return 0.0;
+        }
+        let ts = to_secs(t);
+        let mut sum = 0.0;
+        for cid in cids {
+            if let Some(c) = self.containers.get_mut(cid) {
+                sum += c.util.take_average(ts);
+            }
+        }
+        sum / cids.len() as f64
+    }
+
+    /// Kill a node (spot revocation / manual VM termination). Returns the
+    /// containers that died and the tasks that were running on them.
+    pub fn kill_node(&mut self, node: NodeId, t: SimTime) -> (Vec<ContainerId>, Vec<TaskId>) {
+        let mut dead_containers = Vec::new();
+        let mut dead_tasks = Vec::new();
+        let n = &mut self.dcs[node.dc.0].nodes[node.idx];
+        if !n.alive {
+            return (dead_containers, dead_tasks);
+        }
+        n.alive = false;
+        let cids = n.containers.clone();
+        for cid in cids {
+            let c = self.container_mut(cid);
+            if !c.alive {
+                continue;
+            }
+            c.alive = false;
+            c.util.set(to_secs(t), 0.0);
+            for rt in c.running.drain(..) {
+                dead_tasks.push(rt.task);
+            }
+            c.free = 0.0;
+            dead_containers.push(cid);
+        }
+        (dead_containers, dead_tasks)
+    }
+
+    /// Restart a dead node with fresh containers (new instance acquired
+    /// from the market). Returns the new container ids.
+    pub fn restart_node(&mut self, node: NodeId, slots: usize, t: SimTime) -> Vec<ContainerId> {
+        let rack = self.dcs[node.dc.0].nodes[node.idx].rack;
+        let mut fresh = Vec::new();
+        for _ in 0..slots {
+            let cid = ContainerId(self.next_container);
+            self.next_container += 1;
+            self.containers.push(Container {
+                id: cid,
+                node,
+                rack,
+                free: 1.0,
+                running: Vec::new(),
+                owner: None,
+                util: TimeWeighted::new(to_secs(t), 0.0),
+                alive: true,
+            });
+            fresh.push(cid);
+        }
+        let n = &mut self.dcs[node.dc.0].nodes[node.idx];
+        n.alive = true;
+        n.started_at = t;
+        n.containers = fresh.clone();
+        fresh
+    }
+
+    /// Sum of used resource over live containers of a DC (for injection
+    /// experiments and reporting).
+    pub fn dc_load(&self, dc: DcId) -> f64 {
+        self.dc_containers(dc).iter().map(|c| self.containers[c].used()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ids::{JobId, StageId};
+    use crate::sim::secs;
+
+    fn task(i: u32) -> TaskId {
+        TaskId { job: JobId(1), stage: StageId(0), index: i }
+    }
+
+    fn jm() -> JmId {
+        JmId { job: JobId(1), dc: DcId(0) }
+    }
+
+    fn small_cluster() -> Cluster {
+        Cluster::build(
+            &["A".into(), "B".into()],
+            2,
+            2,
+            2,
+            |_, _| InstanceClass::OnDemand,
+        )
+    }
+
+    #[test]
+    fn build_shapes() {
+        let c = small_cluster();
+        assert_eq!(c.dcs.len(), 2);
+        assert_eq!(c.dc_containers(DcId(0)).len(), 4);
+        assert_eq!(c.dc_capacity(DcId(1)), 4);
+        assert_eq!(c.free_pool(DcId(0)).len(), 4);
+        // Rack spread: nodes 0,1 on racks 0,1.
+        assert_eq!(c.dcs[0].nodes[0].rack, 0);
+        assert_eq!(c.dcs[0].nodes[1].rack, 1);
+    }
+
+    #[test]
+    fn grant_and_release_cycle() {
+        let mut c = small_cluster();
+        let cid = c.free_pool(DcId(0))[0];
+        c.grant(cid, jm());
+        assert_eq!(c.free_pool(DcId(0)).len(), 3);
+        assert_eq!(c.container(cid).owner, Some(jm()));
+        c.release(cid, secs(10));
+        assert_eq!(c.free_pool(DcId(0)).len(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "already owned")]
+    fn double_grant_panics() {
+        let mut c = small_cluster();
+        let cid = c.free_pool(DcId(0))[0];
+        c.grant(cid, jm());
+        c.grant(cid, jm());
+    }
+
+    #[test]
+    fn task_packing_respects_capacity() {
+        let mut c = small_cluster();
+        let cid = c.free_pool(DcId(0))[0];
+        c.grant(cid, jm());
+        c.start_task(cid, task(0), 0.6, secs(1));
+        assert!((c.container(cid).free - 0.4).abs() < 1e-9);
+        c.start_task(cid, task(1), 0.4, secs(2));
+        assert!(c.container(cid).free < 1e-9);
+        assert!(c.finish_task(cid, task(0), secs(5)));
+        assert!((c.container(cid).free - 0.6).abs() < 1e-9);
+        assert!(!c.finish_task(cid, task(0), secs(6)), "double finish is a no-op");
+    }
+
+    #[test]
+    #[should_panic(expected = "over-commit")]
+    fn overcommit_panics() {
+        let mut c = small_cluster();
+        let cid = c.free_pool(DcId(0))[0];
+        c.grant(cid, jm());
+        c.start_task(cid, task(0), 0.8, secs(1));
+        c.start_task(cid, task(1), 0.3, secs(1));
+    }
+
+    #[test]
+    fn period_utilization_is_time_weighted() {
+        let mut c = small_cluster();
+        let cid = c.free_pool(DcId(0))[0];
+        c.grant(cid, jm());
+        // busy 0.5 for the first half of a 10 s period, idle after.
+        c.start_task(cid, task(0), 0.5, secs(0));
+        c.finish_task(cid, task(0), secs(5));
+        let u = c.take_period_utilization(&[cid], secs(10));
+        assert!((u - 0.25).abs() < 1e-9, "u={u}");
+        // Next period: fully idle.
+        let u2 = c.take_period_utilization(&[cid], secs(20));
+        assert!(u2.abs() < 1e-9);
+    }
+
+    #[test]
+    fn kill_node_reports_casualties_and_restart_revives() {
+        let mut c = small_cluster();
+        let node = NodeId { dc: DcId(0), idx: 0 };
+        let cids = c.dcs[0].nodes[0].containers.clone();
+        c.grant(cids[0], jm());
+        c.start_task(cids[0], task(3), 0.5, secs(1));
+        let (dead_c, dead_t) = c.kill_node(node, secs(2));
+        assert_eq!(dead_c.len(), 2);
+        assert_eq!(dead_t, vec![task(3)]);
+        assert_eq!(c.dc_capacity(DcId(0)), 2);
+        // Idempotent.
+        let (dc2, dt2) = c.kill_node(node, secs(3));
+        assert!(dc2.is_empty() && dt2.is_empty());
+        let fresh = c.restart_node(node, 2, secs(10));
+        assert_eq!(fresh.len(), 2);
+        assert_eq!(c.dc_capacity(DcId(0)), 4);
+        // New ids, never reused.
+        assert!(fresh.iter().all(|f| !cids.contains(f)));
+    }
+
+    #[test]
+    fn dc_load_sums_usage() {
+        let mut c = small_cluster();
+        let pool = c.free_pool(DcId(0));
+        c.grant(pool[0], jm());
+        c.grant(pool[1], jm());
+        c.start_task(pool[0], task(0), 0.5, secs(1));
+        c.start_task(pool[1], task(1), 0.25, secs(1));
+        assert!((c.dc_load(DcId(0)) - 0.75).abs() < 1e-9);
+        assert_eq!(c.dc_load(DcId(1)), 0.0);
+    }
+}

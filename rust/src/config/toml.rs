@@ -1,0 +1,285 @@
+//! Tiny TOML-subset parser (no serde in the offline image).
+//!
+//! Supported: `[section]` headers, `key = value` with values being
+//! integers, floats, booleans, quoted strings, and flat arrays of those.
+//! Comments start with `#`. This covers every config file this repo ships;
+//! anything fancier is a parse error, not silent misbehaviour.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Str(s) => write!(f, "{s:?}"),
+            Value::Array(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// A parsed document: section name → key → value. Top-level keys live in
+/// the "" section.
+#[derive(Debug, Default, Clone)]
+pub struct Doc {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_i64).unwrap_or(default)
+    }
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+}
+
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.message)
+    }
+}
+impl std::error::Error for ParseError {}
+
+fn err(line: usize, message: impl Into<String>) -> ParseError {
+    ParseError { line, message: message.into() }
+}
+
+/// Strip a trailing comment that is not inside a string literal.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_scalar(s: &str, line: usize) -> Result<Value, ParseError> {
+    let s = s.trim();
+    if s.starts_with('"') {
+        if !s.ends_with('"') || s.len() < 2 {
+            return Err(err(line, format!("unterminated string: {s}")));
+        }
+        let body = &s[1..s.len() - 1];
+        // Minimal escapes.
+        let unescaped = body.replace("\\\"", "\"").replace("\\\\", "\\");
+        return Ok(Value::Str(unescaped));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(line, format!("cannot parse value: {s:?}")))
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, ParseError> {
+    let s = s.trim();
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| err(line, "unterminated array"))?;
+        let mut items = Vec::new();
+        // Split on commas outside of strings.
+        let mut depth_str = false;
+        let mut cur = String::new();
+        for c in body.chars() {
+            match c {
+                '"' => {
+                    depth_str = !depth_str;
+                    cur.push(c);
+                }
+                ',' if !depth_str => {
+                    if !cur.trim().is_empty() {
+                        items.push(parse_scalar(&cur, line)?);
+                    }
+                    cur.clear();
+                }
+                _ => cur.push(c),
+            }
+        }
+        if !cur.trim().is_empty() {
+            items.push(parse_scalar(&cur, line)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    parse_scalar(s, line)
+}
+
+/// Parse a document from text.
+pub fn parse(text: &str) -> Result<Doc, ParseError> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    doc.sections.entry(section.clone()).or_default();
+
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?;
+            section = name.trim().to_string();
+            doc.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err(lineno, format!("expected key = value, got {line:?}")))?;
+        let key = line[..eq].trim().to_string();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let value = parse_value(&line[eq + 1..], lineno)?;
+        doc.sections.get_mut(&section).unwrap().insert(key, value);
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = parse(
+            r#"
+            top = 1
+            [experiment]
+            seed = 42          # a comment
+            duration = 3600.5
+            name = "fig8 run"
+            enabled = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.i64_or("", "top", 0), 1);
+        assert_eq!(doc.i64_or("experiment", "seed", 0), 42);
+        assert!((doc.f64_or("experiment", "duration", 0.0) - 3600.5).abs() < 1e-9);
+        assert_eq!(doc.str_or("experiment", "name", ""), "fig8 run");
+        assert!(doc.bool_or("experiment", "enabled", false));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = parse(r#"regions = ["NC-3", "NC-5", "EC-1", "SC-1"]"#).unwrap();
+        let arr = doc.get("", "regions").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 4);
+        assert_eq!(arr[0].as_str(), Some("NC-3"));
+    }
+
+    #[test]
+    fn parses_numeric_arrays_and_underscores() {
+        let doc = parse("sizes = [200, 1_000, 5000]\nbig = 1_000_000").unwrap();
+        let arr = doc.get("", "sizes").unwrap().as_array().unwrap();
+        assert_eq!(arr[1].as_i64(), Some(1000));
+        assert_eq!(doc.i64_or("", "big", 0), 1_000_000);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse(r##"s = "a # b""##).unwrap();
+        assert_eq!(doc.str_or("", "s", ""), "a # b");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("not a kv line").is_err());
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("x = [1, 2").is_err());
+        assert!(parse("x = \"open").is_err());
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let doc = parse("[a]\nx = 1").unwrap();
+        assert_eq!(doc.i64_or("a", "missing", 7), 7);
+        assert_eq!(doc.i64_or("nosection", "x", 9), 9);
+    }
+}

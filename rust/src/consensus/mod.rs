@@ -1,0 +1,463 @@
+//! Zookeeper-like coordination substrate (§5 "How the job managers
+//! coordinate").
+//!
+//! One replica per data center forms an ensemble with a single write
+//! leader and quorum-acknowledged updates. The znode tree supports
+//! persistent, ephemeral and sequential nodes, data/children watches and
+//! session expiry — enough to host the paper's intermediate-information
+//! replication (taskMap, partitionList, executorList) and the pJM leader
+//! election via ephemeral-sequential election nodes.
+//!
+//! Latency model: a write from DC `d` pays client→leader, a quorum round
+//! from the leader (median ack among followers), and the reply — computed
+//! against the live WAN fabric, so consensus slows down exactly when the
+//! paper says it should. Reads are served by the local replica
+//! (Zookeeper's sequential-consistency contract).
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::ids::DcId;
+use crate::net::Wan;
+use crate::sim::SimTime;
+
+pub type SessionId = u64;
+
+/// Watch kinds, Zookeeper-style.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WatchKind {
+    Data,
+    Children,
+}
+
+/// A fired watch, to be delivered to `session`'s owner by the caller.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Notification {
+    pub session: SessionId,
+    pub path: String,
+    pub kind: WatchKind,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Znode {
+    pub data: Vec<u8>,
+    pub version: u64,
+    pub ephemeral_owner: Option<SessionId>,
+    seq_counter: u64,
+}
+
+#[derive(Debug)]
+struct Session {
+    dc: DcId,
+    alive: bool,
+    ephemerals: Vec<String>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct ZkStats {
+    pub writes: u64,
+    pub reads: u64,
+    pub bytes_written: u64,
+    pub watches_fired: u64,
+    pub elections: u64,
+}
+
+/// The ensemble (logical state is a single authoritative tree; replication
+/// is modeled through the latency/traffic functions and failure hooks).
+pub struct ZkEnsemble {
+    pub leader: DcId,
+    num_dcs: usize,
+    tree: BTreeMap<String, Znode>,
+    sessions: HashMap<SessionId, Session>,
+    next_session: SessionId,
+    watches: HashMap<(String, WatchKind), Vec<SessionId>>,
+    pub stats: ZkStats,
+}
+
+impl ZkEnsemble {
+    pub fn new(num_dcs: usize) -> Self {
+        ZkEnsemble {
+            leader: DcId(0),
+            num_dcs,
+            tree: BTreeMap::new(),
+            sessions: HashMap::new(),
+            next_session: 1,
+            watches: HashMap::new(),
+            stats: ZkStats::default(),
+        }
+    }
+
+    /// Open a client session homed in `dc`.
+    pub fn connect(&mut self, dc: DcId) -> SessionId {
+        let sid = self.next_session;
+        self.next_session += 1;
+        self.sessions.insert(sid, Session { dc, alive: true, ephemerals: Vec::new() });
+        sid
+    }
+
+    pub fn session_alive(&self, sid: SessionId) -> bool {
+        self.sessions.get(&sid).map(|s| s.alive).unwrap_or(false)
+    }
+
+    /// Quorum-write latency for a client in `from`, including the fired
+    /// control-plane traffic (`bytes` of payload).
+    pub fn write_latency(&self, wan: &mut Wan, from: DcId, bytes: u64) -> SimTime {
+        let to_leader = wan.message_delay(from, self.leader, bytes + 64);
+        // Leader replicates to followers; commit at median ack (quorum).
+        let mut acks: Vec<SimTime> = (0..self.num_dcs)
+            .map(DcId)
+            .filter(|&d| d != self.leader)
+            .map(|d| {
+                let go = wan.message_delay(self.leader, d, bytes + 64);
+                let back = wan.message_delay(d, self.leader, 64);
+                go + back
+            })
+            .collect();
+        acks.sort_unstable();
+        let quorum = self.num_dcs / 2; // leader + this many followers
+        let quorum_delay = if acks.is_empty() {
+            0
+        } else {
+            acks[quorum.saturating_sub(1).min(acks.len() - 1)]
+        };
+        let reply = wan.message_delay(self.leader, from, 64);
+        to_leader + quorum_delay + reply
+    }
+
+    /// Local-replica read latency.
+    pub fn read_latency(&self, wan: &mut Wan, from: DcId, bytes: u64) -> SimTime {
+        wan.message_delay(from, from, bytes)
+    }
+
+    fn fire(&mut self, path: &str, kind: WatchKind, out: &mut Vec<Notification>) {
+        if let Some(sids) = self.watches.remove(&(path.to_string(), kind)) {
+            for session in sids {
+                if self.session_alive(session) {
+                    self.stats.watches_fired += 1;
+                    out.push(Notification { session, path: path.to_string(), kind });
+                }
+            }
+        }
+    }
+
+    fn parent_of(path: &str) -> Option<String> {
+        path.rfind('/').map(|i| if i == 0 { "/".to_string() } else { path[..i].to_string() })
+    }
+
+    /// Create a znode. `sequential` appends a zero-padded monotone counter
+    /// scoped to the parent. Returns the actual path and any fired watches.
+    pub fn create(
+        &mut self,
+        session: SessionId,
+        path: &str,
+        data: Vec<u8>,
+        ephemeral: bool,
+        sequential: bool,
+    ) -> Result<(String, Vec<Notification>), String> {
+        if !self.session_alive(session) {
+            return Err(format!("session {session} expired"));
+        }
+        let actual = if sequential {
+            let parent = Self::parent_of(path).unwrap_or_else(|| "/".into());
+            let counter = {
+                let pz = self.tree.entry(parent).or_default();
+                let c = pz.seq_counter;
+                pz.seq_counter += 1;
+                c
+            };
+            format!("{path}{counter:010}")
+        } else {
+            path.to_string()
+        };
+        if self.tree.contains_key(&actual) && !sequential {
+            return Err(format!("node exists: {actual}"));
+        }
+        self.stats.writes += 1;
+        self.stats.bytes_written += data.len() as u64;
+        let owner = if ephemeral { Some(session) } else { None };
+        self.tree.insert(
+            actual.clone(),
+            Znode { data, version: 0, ephemeral_owner: owner, seq_counter: 0 },
+        );
+        if ephemeral {
+            self.sessions.get_mut(&session).unwrap().ephemerals.push(actual.clone());
+        }
+        let mut fired = Vec::new();
+        if let Some(parent) = Self::parent_of(&actual) {
+            self.fire(&parent, WatchKind::Children, &mut fired);
+        }
+        Ok((actual, fired))
+    }
+
+    /// Set a znode's data (version bump). Fires data watches.
+    pub fn set_data(&mut self, path: &str, data: Vec<u8>) -> Result<Vec<Notification>, String> {
+        self.stats.writes += 1;
+        self.stats.bytes_written += data.len() as u64;
+        let z = self.tree.get_mut(path).ok_or_else(|| format!("no node {path}"))?;
+        z.data = data;
+        z.version += 1;
+        let mut fired = Vec::new();
+        self.fire(path, WatchKind::Data, &mut fired);
+        Ok(fired)
+    }
+
+    pub fn get(&mut self, path: &str) -> Option<&Znode> {
+        self.stats.reads += 1;
+        self.tree.get(path)
+    }
+
+    pub fn exists(&self, path: &str) -> bool {
+        self.tree.contains_key(path)
+    }
+
+    /// Delete a znode. Fires data watch on the node and children watch on
+    /// the parent.
+    pub fn delete(&mut self, path: &str) -> Result<Vec<Notification>, String> {
+        let z = self.tree.remove(path).ok_or_else(|| format!("no node {path}"))?;
+        if let Some(owner) = z.ephemeral_owner {
+            if let Some(s) = self.sessions.get_mut(&owner) {
+                s.ephemerals.retain(|p| p != path);
+            }
+        }
+        self.stats.writes += 1;
+        let mut fired = Vec::new();
+        self.fire(path, WatchKind::Data, &mut fired);
+        if let Some(parent) = Self::parent_of(path) {
+            self.fire(&parent, WatchKind::Children, &mut fired);
+        }
+        Ok(fired)
+    }
+
+    /// Children of a path (direct descendants), sorted.
+    pub fn children(&mut self, path: &str) -> Vec<String> {
+        self.stats.reads += 1;
+        let prefix = if path == "/" { "/".to_string() } else { format!("{path}/") };
+        self.tree
+            .range(prefix.clone()..)
+            .take_while(|(k, _)| k.starts_with(&prefix))
+            .filter(|(k, _)| !k[prefix.len()..].contains('/'))
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+
+    /// Register a one-shot watch.
+    pub fn watch(&mut self, session: SessionId, path: &str, kind: WatchKind) {
+        self.watches.entry((path.to_string(), kind)).or_default().push(session);
+    }
+
+    /// Expire a session: delete its ephemerals, fire their watches. This is
+    /// the JM-failure detection primitive — the pJM's election node
+    /// disappears and the next candidate's watch fires.
+    pub fn expire_session(&mut self, sid: SessionId) -> Vec<Notification> {
+        let Some(s) = self.sessions.get_mut(&sid) else {
+            return Vec::new();
+        };
+        if !s.alive {
+            return Vec::new();
+        }
+        s.alive = false;
+        let eph = std::mem::take(&mut s.ephemerals);
+        let mut fired = Vec::new();
+        for path in eph {
+            if self.tree.remove(&path).is_some() {
+                self.stats.writes += 1;
+                self.fire(&path, WatchKind::Data, &mut fired);
+                if let Some(parent) = Self::parent_of(&path) {
+                    self.fire(&parent, WatchKind::Children, &mut fired);
+                }
+            }
+        }
+        fired
+    }
+
+    /// Leader-election helper over ephemeral-sequential nodes under
+    /// `election_root`: the session owning the smallest sequence number is
+    /// the leader. Returns (winner session, its path) if any candidate.
+    pub fn election_winner(&mut self, election_root: &str) -> Option<(SessionId, String)> {
+        self.stats.elections += 1;
+        let kids = self.children(election_root);
+        let mut best: Option<(SessionId, String)> = None;
+        for k in kids {
+            if let Some(z) = self.tree.get(&k) {
+                if let Some(owner) = z.ephemeral_owner {
+                    if self.session_alive(owner) && (best.is_none() || k < best.as_ref().unwrap().1)
+                    {
+                        best = Some((owner, k.clone()));
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// DC of a session (for latency lookups).
+    pub fn session_dc(&self, sid: SessionId) -> Option<DcId> {
+        self.sessions.get(&sid).map(|s| s.dc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::util::Pcg;
+
+    fn zk() -> ZkEnsemble {
+        ZkEnsemble::new(4)
+    }
+
+    #[test]
+    fn create_get_set_delete_roundtrip() {
+        let mut z = zk();
+        let s = z.connect(DcId(0));
+        let (p, _) = z.create(s, "/jobs/j1/taskMap", b"v0".to_vec(), false, false).unwrap();
+        assert_eq!(p, "/jobs/j1/taskMap");
+        assert_eq!(z.get(&p).unwrap().data, b"v0");
+        assert_eq!(z.get(&p).unwrap().version, 0);
+        z.set_data(&p, b"v1".to_vec()).unwrap();
+        assert_eq!(z.get(&p).unwrap().version, 1);
+        z.delete(&p).unwrap();
+        assert!(!z.exists(&p));
+        assert!(z.delete(&p).is_err());
+    }
+
+    #[test]
+    fn duplicate_create_fails() {
+        let mut z = zk();
+        let s = z.connect(DcId(0));
+        z.create(s, "/a", vec![], false, false).unwrap();
+        assert!(z.create(s, "/a", vec![], false, false).is_err());
+    }
+
+    #[test]
+    fn sequential_nodes_are_monotone() {
+        let mut z = zk();
+        let s = z.connect(DcId(0));
+        let (p1, _) = z.create(s, "/el/n-", vec![], true, true).unwrap();
+        let (p2, _) = z.create(s, "/el/n-", vec![], true, true).unwrap();
+        let (p3, _) = z.create(s, "/el/n-", vec![], true, true).unwrap();
+        assert!(p1 < p2 && p2 < p3, "{p1} {p2} {p3}");
+    }
+
+    #[test]
+    fn data_watch_fires_once() {
+        let mut z = zk();
+        let s1 = z.connect(DcId(0));
+        let s2 = z.connect(DcId(1));
+        z.create(s1, "/x", vec![], false, false).unwrap();
+        z.watch(s2, "/x", WatchKind::Data);
+        let fired = z.set_data("/x", b"1".to_vec()).unwrap();
+        assert_eq!(fired, vec![Notification { session: s2, path: "/x".into(), kind: WatchKind::Data }]);
+        // One-shot: second write fires nothing.
+        assert!(z.set_data("/x", b"2".to_vec()).unwrap().is_empty());
+    }
+
+    #[test]
+    fn children_watch_on_create_and_delete() {
+        let mut z = zk();
+        let s = z.connect(DcId(0));
+        z.create(s, "/dir", vec![], false, false).unwrap();
+        z.watch(s, "/dir", WatchKind::Children);
+        let (_, fired) = z.create(s, "/dir/a", vec![], false, false).unwrap();
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].kind, WatchKind::Children);
+        z.watch(s, "/dir", WatchKind::Children);
+        let fired = z.delete("/dir/a").unwrap();
+        assert!(fired.iter().any(|n| n.kind == WatchKind::Children));
+    }
+
+    #[test]
+    fn children_lists_direct_descendants_only() {
+        let mut z = zk();
+        let s = z.connect(DcId(0));
+        for p in ["/j/a", "/j/b", "/j/b/nested", "/other"] {
+            z.create(s, p, vec![], false, false).unwrap();
+        }
+        assert_eq!(z.children("/j"), vec!["/j/a".to_string(), "/j/b".to_string()]);
+    }
+
+    #[test]
+    fn session_expiry_reaps_ephemerals_and_fires_watches() {
+        let mut z = zk();
+        let s1 = z.connect(DcId(0));
+        let s2 = z.connect(DcId(1));
+        let (p, _) = z.create(s1, "/el/leader-", vec![], true, true).unwrap();
+        z.create(s1, "/persistent", vec![], false, false).unwrap();
+        z.watch(s2, &p, WatchKind::Data);
+        let fired = z.expire_session(s1);
+        assert!(!z.exists(&p), "ephemeral reaped");
+        assert!(z.exists("/persistent"), "persistent survives");
+        assert!(fired.iter().any(|n| n.session == s2));
+        assert!(z.expire_session(s1).is_empty(), "double expiry is no-op");
+        assert!(z.create(s1, "/nope", vec![], false, false).is_err(), "dead session can't write");
+    }
+
+    #[test]
+    fn election_smallest_sequence_wins_and_failover_works() {
+        let mut z = zk();
+        let s_a = z.connect(DcId(0));
+        let s_b = z.connect(DcId(1));
+        let s_c = z.connect(DcId(2));
+        z.create(s_a, "/job1/el/c-", vec![], true, true).unwrap();
+        z.create(s_b, "/job1/el/c-", vec![], true, true).unwrap();
+        z.create(s_c, "/job1/el/c-", vec![], true, true).unwrap();
+        let (w, _) = z.election_winner("/job1/el").unwrap();
+        assert_eq!(w, s_a, "first creator wins");
+        z.expire_session(s_a);
+        let (w2, _) = z.election_winner("/job1/el").unwrap();
+        assert_eq!(w2, s_b, "next in line after failure");
+        z.expire_session(s_b);
+        z.expire_session(s_c);
+        assert!(z.election_winner("/job1/el").is_none());
+    }
+
+    #[test]
+    fn write_latency_pays_quorum_round() {
+        let cfg = Config::default();
+        let mut wan = Wan::new(cfg.wan, Pcg::seeded(1));
+        let z = ZkEnsemble::new(4);
+        // From the leader's own DC: no client hop, but still a quorum round.
+        let local = z.write_latency(&mut wan, DcId(0), 1024);
+        let remote = z.write_latency(&mut wan, DcId(2), 1024);
+        assert!(local >= 30, "quorum round over WAN, got {local}ms");
+        assert!(remote > local, "remote client pays extra hop");
+        // Reads are local and cheap.
+        let read = z.read_latency(&mut wan, DcId(2), 1024);
+        assert!(read < 5, "local read {read}ms");
+    }
+
+    #[test]
+    fn property_election_winner_is_always_live_and_minimal() {
+        use crate::testkit::{forall, UsizeIn, VecOf};
+        // Random interleavings of joins/expirations.
+        let gen = VecOf { elem: UsizeIn(0, 5), min_len: 1, max_len: 20 };
+        forall(0xE1EC, &gen, |ops: &Vec<usize>| {
+            let mut z = ZkEnsemble::new(4);
+            let mut sessions = Vec::new();
+            for (i, &op) in ops.iter().enumerate() {
+                if op < 4 || sessions.is_empty() {
+                    let s = z.connect(DcId(i % 4));
+                    z.create(s, "/el/c-", vec![], true, true).unwrap();
+                    sessions.push(s);
+                } else {
+                    let idx = op % sessions.len();
+                    let s = sessions.remove(idx);
+                    z.expire_session(s);
+                }
+            }
+            match z.election_winner("/el") {
+                Some((w, _)) => {
+                    crate::prop_assert!(z.session_alive(w), "winner must be alive");
+                    crate::prop_assert!(sessions.contains(&w), "winner among live sessions");
+                    // Winner is the earliest-connected live session (ephemeral
+                    // sequence order == connect order here).
+                    let min = sessions.iter().min().unwrap();
+                    crate::prop_assert!(w == *min, "winner {w} != earliest live {min}");
+                }
+                None => {
+                    crate::prop_assert!(sessions.is_empty(), "no winner despite live candidates");
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,462 @@
+//! DAG job model (§4.1 / Appendix A).
+//!
+//! A job is a DAG of *stages*; each stage is a set of tasks performing the
+//! same computation over different partitions, so tasks within a stage
+//! share characteristics. Each task `t_ij` carries a peak requirement
+//! `r ∈ (θ, 1]` (normalized to container capacity), a processing time `p`,
+//! its input size and a locality preference (the node/DC holding its
+//! input). Only *available* stages' task information is known to the
+//! schedulers — the semi-clairvoyant model — which [`JobProgress`]
+//! enforces: a stage's tasks are released exactly when all parent stages
+//! complete.
+
+use std::collections::HashMap;
+
+use crate::ids::{DcId, JobId, NodeId, StageId, TaskId};
+
+/// Workload family (§6.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum WorkloadKind {
+    WordCount,
+    TpcH,
+    IterativeMl,
+    PageRank,
+}
+
+impl WorkloadKind {
+    pub const ALL: [WorkloadKind; 4] =
+        [WorkloadKind::WordCount, WorkloadKind::TpcH, WorkloadKind::IterativeMl, WorkloadKind::PageRank];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadKind::WordCount => "WordCount",
+            WorkloadKind::TpcH => "TPC-H",
+            WorkloadKind::IterativeMl => "IterativeML",
+            WorkloadKind::PageRank => "PageRank",
+        }
+    }
+}
+
+/// Input size class (Fig 7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SizeClass {
+    Small,
+    Medium,
+    Large,
+}
+
+impl SizeClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SizeClass::Small => "small",
+            SizeClass::Medium => "medium",
+            SizeClass::Large => "large",
+        }
+    }
+}
+
+/// Static description of one task.
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub id: TaskId,
+    /// Peak resource requirement, normalized to container capacity.
+    pub r: f64,
+    /// Processing time in seconds (on its preferred placement).
+    pub p: f64,
+    /// Bytes this task reads.
+    pub input_bytes: u64,
+    /// Bytes this task writes (consumed by child stages).
+    pub output_bytes: u64,
+    /// Node whose local storage holds the input (None for shuffle reads —
+    /// resolved from the partitionList when the stage is released).
+    pub pref_node: Option<NodeId>,
+    /// DC where the input (or most of it) lives.
+    pub pref_dc: DcId,
+}
+
+/// Static description of one stage.
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    pub id: StageId,
+    pub parents: Vec<StageId>,
+    pub tasks: Vec<TaskSpec>,
+}
+
+/// Static description of a job.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub id: JobId,
+    pub kind: WorkloadKind,
+    pub size: SizeClass,
+    /// DC the user submits to (the pJM's home).
+    pub home_dc: DcId,
+    pub stages: Vec<StageSpec>,
+}
+
+impl JobSpec {
+    /// Total work T₁(J) = Σ r·p over all tasks (Appendix A).
+    pub fn work(&self) -> f64 {
+        self.stages
+            .iter()
+            .flat_map(|s| &s.tasks)
+            .map(|t| t.r * t.p)
+            .sum()
+    }
+
+    /// Critical-path length T∞: the longest chain of per-stage maximum
+    /// processing times (a lower bound on completion with infinite
+    /// containers).
+    pub fn critical_path(&self) -> f64 {
+        let mut memo: HashMap<StageId, f64> = HashMap::new();
+        fn depth(s: StageId, spec: &JobSpec, memo: &mut HashMap<StageId, f64>) -> f64 {
+            if let Some(&d) = memo.get(&s) {
+                return d;
+            }
+            let stage = spec.stage(s);
+            let own = stage.tasks.iter().map(|t| t.p).fold(0.0, f64::max);
+            let parent = stage
+                .parents
+                .iter()
+                .map(|&p| depth(p, spec, memo))
+                .fold(0.0, f64::max);
+            let d = own + parent;
+            memo.insert(s, d);
+            d
+        }
+        self.stages
+            .iter()
+            .map(|s| depth(s.id, self, &mut memo))
+            .fold(0.0, f64::max)
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.stages.iter().map(|s| s.tasks.len()).sum()
+    }
+
+    pub fn stage(&self, id: StageId) -> &StageSpec {
+        &self.stages[id.0 as usize]
+    }
+
+    /// Structural validation: ids dense, DAG acyclic (parents must have
+    /// smaller ids — generators emit topo order), tasks well-formed.
+    pub fn validate(&self, theta: f64) -> Result<(), String> {
+        for (i, s) in self.stages.iter().enumerate() {
+            if s.id.0 as usize != i {
+                return Err(format!("stage id {} at index {i}", s.id));
+            }
+            for p in &s.parents {
+                if p.0 >= s.id.0 {
+                    return Err(format!("stage {} has non-topological parent {}", s.id, p));
+                }
+            }
+            if s.tasks.is_empty() {
+                return Err(format!("stage {} has no tasks", s.id));
+            }
+            for t in &s.tasks {
+                if t.id.job != self.id || t.id.stage != s.id {
+                    return Err(format!("task {} mislabeled", t.id));
+                }
+                if !(t.r > 0.0 && t.r <= 1.0) {
+                    return Err(format!("task {} r={} out of (0,1]", t.id, t.r));
+                }
+                if t.r < theta {
+                    return Err(format!("task {} r={} below theta={theta}", t.id, t.r));
+                }
+                if t.p <= 0.0 {
+                    return Err(format!("task {} has p={}", t.id, t.p));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Runtime status of a task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskStatus {
+    /// Parent stages incomplete — not yet visible to schedulers.
+    Unreleased,
+    /// Released, waiting for assignment.
+    Waiting,
+    Running,
+    Done,
+}
+
+/// Runtime progress of one job: which stages are released/complete and the
+/// status of every task. This is the semi-clairvoyance gate: schedulers may
+/// only query *released* tasks.
+#[derive(Debug)]
+pub struct JobProgress {
+    pub job: JobId,
+    status: Vec<Vec<TaskStatus>>,
+    remaining: Vec<usize>,
+    released: Vec<bool>,
+    pub done_tasks: usize,
+    pub total_tasks: usize,
+}
+
+impl JobProgress {
+    pub fn new(spec: &JobSpec) -> JobProgress {
+        let status: Vec<Vec<TaskStatus>> = spec
+            .stages
+            .iter()
+            .map(|s| vec![TaskStatus::Unreleased; s.tasks.len()])
+            .collect();
+        let remaining = spec.stages.iter().map(|s| s.tasks.len()).collect();
+        JobProgress {
+            job: spec.id,
+            status,
+            remaining,
+            released: vec![false; spec.stages.len()],
+            done_tasks: 0,
+            total_tasks: spec.num_tasks(),
+        }
+    }
+
+    pub fn task_status(&self, t: TaskId) -> TaskStatus {
+        self.status[t.stage.0 as usize][t.index as usize]
+    }
+
+    pub fn stage_released(&self, s: StageId) -> bool {
+        self.released[s.0 as usize]
+    }
+
+    pub fn stage_done(&self, s: StageId) -> bool {
+        self.remaining[s.0 as usize] == 0
+    }
+
+    pub fn job_done(&self) -> bool {
+        self.done_tasks == self.total_tasks
+    }
+
+    /// Release every stage whose parents are all complete (and that isn't
+    /// already released). Returns the newly released stage ids, in order.
+    pub fn release_ready_stages(&mut self, spec: &JobSpec) -> Vec<StageId> {
+        let mut fresh = Vec::new();
+        for s in &spec.stages {
+            if self.released[s.id.0 as usize] {
+                continue;
+            }
+            if s.parents.iter().all(|&p| self.stage_done(p)) {
+                self.released[s.id.0 as usize] = true;
+                for st in &mut self.status[s.id.0 as usize] {
+                    *st = TaskStatus::Waiting;
+                }
+                fresh.push(s.id);
+            }
+        }
+        fresh
+    }
+
+    pub fn mark_running(&mut self, t: TaskId) {
+        let st = &mut self.status[t.stage.0 as usize][t.index as usize];
+        assert_eq!(*st, TaskStatus::Waiting, "task {t} not waiting");
+        *st = TaskStatus::Running;
+    }
+
+    /// Task failed (container death) — goes back to waiting.
+    pub fn mark_waiting(&mut self, t: TaskId) {
+        let st = &mut self.status[t.stage.0 as usize][t.index as usize];
+        assert_eq!(*st, TaskStatus::Running, "task {t} not running");
+        *st = TaskStatus::Waiting;
+    }
+
+    /// Task completed. Returns true if this completed its stage.
+    pub fn mark_done(&mut self, t: TaskId) -> bool {
+        let st = &mut self.status[t.stage.0 as usize][t.index as usize];
+        assert_eq!(*st, TaskStatus::Running, "task {t} not running");
+        *st = TaskStatus::Done;
+        self.done_tasks += 1;
+        let rem = &mut self.remaining[t.stage.0 as usize];
+        *rem -= 1;
+        *rem == 0
+    }
+
+    /// Count of tasks in a given status (for reporting).
+    pub fn count(&self, wanted: TaskStatus) -> usize {
+        self.status
+            .iter()
+            .flat_map(|v| v.iter())
+            .filter(|&&s| s == wanted)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, UsizeIn, VecOf};
+
+    /// A diamond DAG: s0 -> {s1, s2} -> s3, two tasks per stage.
+    fn diamond() -> JobSpec {
+        let job = JobId(1);
+        let mk_stage = |sid: u32, parents: Vec<u32>| StageSpec {
+            id: StageId(sid),
+            parents: parents.into_iter().map(StageId).collect(),
+            tasks: (0..2)
+                .map(|i| TaskSpec {
+                    id: TaskId { job, stage: StageId(sid), index: i },
+                    r: 0.5,
+                    p: 10.0,
+                    input_bytes: 1 << 20,
+                    output_bytes: 1 << 18,
+                    pref_node: Some(NodeId { dc: DcId(0), idx: 0 }),
+                    pref_dc: DcId(0),
+                })
+                .collect(),
+        };
+        JobSpec {
+            id: job,
+            kind: WorkloadKind::WordCount,
+            size: SizeClass::Small,
+            home_dc: DcId(0),
+            stages: vec![mk_stage(0, vec![]), mk_stage(1, vec![0]), mk_stage(2, vec![0]), mk_stage(3, vec![1, 2])],
+        }
+    }
+
+    #[test]
+    fn work_and_critical_path() {
+        let j = diamond();
+        assert!((j.work() - 8.0 * 0.5 * 10.0).abs() < 1e-9);
+        // 3 stages deep, 10 s each.
+        assert!((j.critical_path() - 30.0).abs() < 1e-9);
+        assert_eq!(j.num_tasks(), 8);
+        j.validate(0.05).unwrap();
+    }
+
+    #[test]
+    fn validate_catches_bad_specs() {
+        let mut j = diamond();
+        j.stages[1].parents = vec![StageId(3)];
+        assert!(j.validate(0.05).is_err(), "non-topological parent");
+
+        let mut j = diamond();
+        j.stages[0].tasks[0].r = 0.0;
+        assert!(j.validate(0.05).is_err(), "zero r");
+
+        let mut j = diamond();
+        j.stages[0].tasks[0].r = 0.01;
+        assert!(j.validate(0.05).is_err(), "below theta");
+
+        let mut j = diamond();
+        j.stages[0].tasks[0].p = -1.0;
+        assert!(j.validate(0.05).is_err(), "negative p");
+    }
+
+    #[test]
+    fn stages_release_in_dependency_order() {
+        let j = diamond();
+        let mut prog = JobProgress::new(&j);
+        assert_eq!(prog.release_ready_stages(&j), vec![StageId(0)]);
+        assert!(prog.release_ready_stages(&j).is_empty(), "no double release");
+        assert_eq!(prog.task_status(j.stages[1].tasks[0].id), TaskStatus::Unreleased);
+
+        // Finish stage 0 -> releases 1 and 2, not 3.
+        for t in &j.stages[0].tasks {
+            prog.mark_running(t.id);
+            prog.mark_done(t.id);
+        }
+        assert_eq!(prog.release_ready_stages(&j), vec![StageId(1), StageId(2)]);
+
+        for t in j.stages[1].tasks.iter().chain(&j.stages[2].tasks) {
+            prog.mark_running(t.id);
+            prog.mark_done(t.id);
+        }
+        assert_eq!(prog.release_ready_stages(&j), vec![StageId(3)]);
+        for t in &j.stages[3].tasks {
+            prog.mark_running(t.id);
+            assert!(!prog.job_done());
+            prog.mark_done(t.id);
+        }
+        assert!(prog.job_done());
+        assert_eq!(prog.done_tasks, 8);
+    }
+
+    #[test]
+    fn failed_task_returns_to_waiting() {
+        let j = diamond();
+        let mut prog = JobProgress::new(&j);
+        prog.release_ready_stages(&j);
+        let t = j.stages[0].tasks[0].id;
+        prog.mark_running(t);
+        prog.mark_waiting(t); // container died
+        assert_eq!(prog.task_status(t), TaskStatus::Waiting);
+        prog.mark_running(t);
+        prog.mark_done(t);
+        assert_eq!(prog.task_status(t), TaskStatus::Done);
+    }
+
+    #[test]
+    #[should_panic(expected = "not waiting")]
+    fn cannot_run_unreleased_task() {
+        let j = diamond();
+        let mut prog = JobProgress::new(&j);
+        prog.mark_running(j.stages[3].tasks[0].id);
+    }
+
+    /// Property: for random chain DAGs, counts are conserved and release
+    /// order respects dependencies whatever the completion order.
+    #[test]
+    fn prop_task_conservation_over_random_chains() {
+        // Generate a random chain of stage widths, drive to completion in a
+        // seeded-random order, check invariants throughout.
+        let gen = VecOf { elem: UsizeIn(1, 6), min_len: 1, max_len: 8 };
+        forall(0xDA6, &gen, |widths: &Vec<usize>| {
+            let job = JobId(9);
+            let stages: Vec<StageSpec> = widths
+                .iter()
+                .enumerate()
+                .map(|(i, &w)| StageSpec {
+                    id: StageId(i as u32),
+                    parents: if i == 0 { vec![] } else { vec![StageId(i as u32 - 1)] },
+                    tasks: (0..w as u32)
+                        .map(|k| TaskSpec {
+                            id: TaskId { job, stage: StageId(i as u32), index: k },
+                            r: 0.5,
+                            p: 1.0,
+                            input_bytes: 1,
+                            output_bytes: 1,
+                            pref_node: None,
+                            pref_dc: DcId(0),
+                        })
+                        .collect(),
+                })
+                .collect();
+            let spec = JobSpec {
+                id: job,
+                kind: WorkloadKind::PageRank,
+                size: SizeClass::Small,
+                home_dc: DcId(0),
+                stages,
+            };
+            spec.validate(0.05).map_err(|e| e)?;
+            let mut prog = JobProgress::new(&spec);
+            let mut released_total = 0;
+            loop {
+                let fresh = prog.release_ready_stages(&spec);
+                released_total += fresh.len();
+                let waiting: Vec<TaskId> = spec
+                    .stages
+                    .iter()
+                    .flat_map(|s| &s.tasks)
+                    .filter(|t| prog.task_status(t.id) == TaskStatus::Waiting)
+                    .map(|t| t.id)
+                    .collect();
+                if waiting.is_empty() {
+                    break;
+                }
+                for t in waiting {
+                    prog.mark_running(t);
+                    prog.mark_done(t);
+                }
+                crate::prop_assert!(
+                    prog.count(TaskStatus::Done) == prog.done_tasks,
+                    "done count mismatch"
+                );
+            }
+            crate::prop_assert!(prog.job_done(), "job should complete");
+            crate::prop_assert!(released_total == widths.len(), "all stages released once");
+            Ok(())
+        });
+    }
+}

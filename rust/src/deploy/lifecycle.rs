@@ -1,0 +1,533 @@
+//! Job lifecycle events (§3.1 steps 0–5): submission, JM generation,
+//! stage release with the pJM's initial assignment, Parades-driven task
+//! starts (with WAN input fetches), completion reporting with
+//! partitionList replication, and job finish.
+//!
+//! Event handlers follow a strict two-phase pattern: mutate `sim.state`
+//! inside a scoped borrow and *collect* follow-up events, then schedule
+//! them — keeping the borrow checker and the event queue honest.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::cluster::Cluster;
+use crate::dag::{SizeClass, WorkloadKind};
+use crate::ids::{ContainerId, DcId, JmId, JobId, NodeId, TaskId};
+use crate::jm::{Assignment, ContainerView, IntermediateInfo, JobManager, PartitionEntry, Role, WaitingTask};
+use crate::sim::{secs_f, SimTime};
+
+use super::world::{JobRt, WorldSim};
+
+/// Spawn-time for a fresh JM container process (seconds).
+pub const JM_SPAWN_SECS: f64 = 1.0;
+
+/// Build a [`ContainerView`] from cluster state.
+pub fn view_of(cluster: &Cluster, cid: ContainerId) -> ContainerView {
+    let c = cluster.container(cid);
+    ContainerView { id: cid, node: c.node, rack: c.rack, free: c.free }
+}
+
+/// Submit a job: resolve the description, generate the pJM locally and
+/// sJMs remotely (steps 1–2b), then release stage 0.
+pub fn submit_job(sim: &mut WorldSim, kind: WorkloadKind, size: SizeClass, home: DcId) -> JobId {
+    let now = sim.now_secs();
+    let (job, spawns) = {
+        let w = &mut sim.state;
+        let job = w.alloc_job_id();
+        w.gen.ensure_dataset(&mut w.dfs, kind, size);
+        let spec = w.gen.make_job(job, kind, size, home, &w.dfs);
+        spec.validate(w.cfg.scheduler.theta).expect("generated job invalid");
+        w.metrics.submit(job, kind, size, now, spec.num_tasks());
+        let rt = JobRt {
+            progress: crate::dag::JobProgress::new(&spec),
+            spec,
+            jms: Default::default(),
+            primary: home,
+            sessions: Default::default(),
+            info: IntermediateInfo { job, ..Default::default() },
+            outputs: HashMap::new(),
+            task_sources: HashMap::new(),
+            attempts: HashMap::new(),
+            submitted_secs: now,
+            done: false,
+            steal_inflight: Default::default(),
+            steal_rr: 0,
+            generation: 0,
+            estimator: crate::jm::StageEstimator::standard(),
+            started_at: HashMap::new(),
+            speculative_relaunches: 0,
+        };
+        let jm_dcs = w.jm_dcs(home);
+        let spawns: Vec<(DcId, SimTime)> = jm_dcs
+            .into_iter()
+            .map(|dc| {
+                let delay = if dc == home {
+                    secs_f(JM_SPAWN_SECS)
+                } else {
+                    w.wan.message_delay(home, dc, 32 * 1024) + secs_f(JM_SPAWN_SECS)
+                };
+                (dc, delay)
+            })
+            .collect();
+        w.jobs.insert(job, rt);
+        (job, spawns)
+    };
+    for (dc, delay) in spawns {
+        sim.schedule_in(delay, move |sim| spawn_jm(sim, job, dc));
+    }
+    job
+}
+
+/// Create the JM replica for (job, dc): take a container, open a zk
+/// session, enter the election, register with the local master.
+pub fn spawn_jm(sim: &mut WorldSim, job: JobId, dc: DcId) {
+    let now = sim.now_secs();
+    enum Next {
+        Retry,
+        Done(bool), // is_primary
+        Abort,
+    }
+    let next = {
+        let w = &mut sim.state;
+        match w.jobs.get(&job) {
+            None => Next::Abort,
+            Some(rt) if rt.done => Next::Abort,
+            Some(rt) => {
+                let home = rt.primary;
+                let role = if dc == home { Role::Primary } else { Role::SemiActive };
+                let jm_id = JmId { job, dc };
+                let centralized = w.mode.centralized();
+                let master = if centralized { &mut w.masters[0] } else { &mut w.masters[dc.0] };
+                match master.spawn_jm_container_at(jm_id, &mut w.cluster, dc) {
+                    None => Next::Retry,
+                    Some(container) => {
+                        master.register(jm_id);
+                        let session = w.zk.connect(dc);
+                        let _ = w.zk.create(
+                            session,
+                            &format!("/jobs/j{}/election/c-", job.0),
+                            vec![],
+                            true,
+                            true,
+                        );
+                        let jm = JobManager::new(jm_id, role, container, now);
+                        let rt = w.jobs.get_mut(&job).unwrap();
+                        rt.sessions.insert(dc, session);
+                        rt.jms.insert(dc, jm);
+                        let count = rt.container_count();
+                        w.metrics.record_containers(job, now, count);
+                        Next::Done(role == Role::Primary)
+                    }
+                }
+            }
+        }
+    };
+    match next {
+        Next::Abort => {}
+        Next::Retry => {
+            sim.schedule_in(secs_f(2.0), move |sim| spawn_jm(sim, job, dc));
+        }
+        Next::Done(is_primary) => {
+            if is_primary {
+                sim.defer(move |sim| release_ready(sim, job));
+            }
+        }
+    }
+}
+
+/// pJM: release every stage whose parents completed, resolve locality +
+/// sources, run the initial assignment (proportional to data per DC) and
+/// ship the tasks to the owning JMs (taskMap).
+pub fn release_ready(sim: &mut WorldSim, job: JobId) {
+    let shipments = {
+        let w = &mut sim.state;
+        let Some(rt) = w.jobs.get_mut(&job) else { return };
+        if rt.done {
+            return;
+        }
+        let fresh = rt.progress.release_ready_stages(&rt.spec);
+        if fresh.is_empty() {
+            return;
+        }
+        let num_dcs = w.cfg.topology.num_dcs();
+        let racks = w.cfg.topology.racks_per_dc.max(1);
+        let centralized = w.mode.centralized();
+        let home = rt.primary;
+        let mut per_dc: BTreeMap<DcId, Vec<WaitingTask>> = BTreeMap::new();
+
+        for sid in fresh {
+            rt.info.released_stages.push(sid);
+            // Per-DC / per-node weights of the stage's parent outputs.
+            let mut dc_weights = vec![0u64; num_dcs];
+            let mut node_bytes: BTreeMap<NodeId, u64> = BTreeMap::new();
+            for p in &rt.spec.stage(sid).parents {
+                for t in &rt.spec.stage(*p).tasks {
+                    if let Some((node, bytes)) = rt.outputs.get(&t.id) {
+                        dc_weights[node.dc.0] += *bytes;
+                        *node_bytes.entry(*node).or_default() += *bytes;
+                    }
+                }
+            }
+            let mut best_node: Vec<Option<(NodeId, u64)>> = vec![None; num_dcs];
+            for (node, b) in &node_bytes {
+                let cur = &mut best_node[node.dc.0];
+                if cur.map(|(_, cb)| *b > cb).unwrap_or(true) {
+                    *cur = Some((*node, *b));
+                }
+            }
+
+            let stage_tasks = rt.spec.stage(sid).tasks.clone();
+            let all_map = stage_tasks.iter().all(|t| t.pref_node.is_some());
+            let targets: Vec<DcId> = if all_map {
+                stage_tasks.iter().map(|t| t.pref_dc).collect()
+            } else {
+                proportional_targets(&dc_weights, stage_tasks.len(), home)
+            };
+
+            for (t, &target) in stage_tasks.iter().zip(&targets) {
+                let sources: Vec<(DcId, u64)> = if t.pref_node.is_some() {
+                    vec![(t.pref_dc, t.input_bytes)]
+                } else {
+                    let total: u64 = dc_weights.iter().sum();
+                    if total == 0 {
+                        vec![(target, t.input_bytes)]
+                    } else {
+                        dc_weights
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, &b)| b > 0)
+                            .map(|(d, &b)| {
+                                (DcId(d), (t.input_bytes as f64 * b as f64 / total as f64) as u64)
+                            })
+                            .collect()
+                    }
+                };
+                rt.task_sources.insert(t.id, sources);
+                let owner = if centralized { home } else { target };
+                rt.info.task_map.push((t.id, owner));
+                let pref_node = t.pref_node.or(best_node[target.0].map(|(n, _)| n));
+                // Parades thresholds use the §5 estimator, not oracle p.
+                let est_p = rt.estimator.estimate_p(sid, t.input_bytes);
+                per_dc.entry(owner).or_default().push(WaitingTask {
+                    id: t.id,
+                    r: t.r,
+                    p: est_p,
+                    input_bytes: t.input_bytes,
+                    pref_node,
+                    pref_rack: pref_node.map(|n| (n.dc, n.idx % racks)),
+                    wait: 0.0,
+                });
+            }
+        }
+
+        let generation = rt.generation;
+        per_dc
+            .into_iter()
+            .map(|(dc, tasks)| {
+                let delay = if dc == home { 1 } else { w.wan.message_delay(home, dc, 8 * 1024) };
+                (dc, tasks, delay, generation)
+            })
+            .collect::<Vec<_>>()
+    };
+    for (dc, tasks, delay, generation) in shipments {
+        sim.schedule_in(delay, move |sim| enqueue_tasks(sim, job, dc, tasks, generation));
+    }
+    replicate_info(sim, job);
+}
+
+/// Largest-remainder proportional split of `n` tasks over DC weights.
+/// Falls back to the home DC when all weights are zero.
+pub fn proportional_targets(weights: &[u64], n: usize, home: DcId) -> Vec<DcId> {
+    let total: u64 = weights.iter().sum();
+    if total == 0 || n == 0 {
+        return vec![home; n];
+    }
+    let fracs: Vec<f64> = weights.iter().map(|&w| w as f64 * n as f64 / total as f64).collect();
+    let mut counts: Vec<usize> = fracs.iter().map(|f| f.floor() as usize).collect();
+    let mut assigned: usize = counts.iter().sum();
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = fracs[a] - fracs[a].floor();
+        let fb = fracs[b] - fracs[b].floor();
+        fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
+    });
+    let mut i = 0;
+    while assigned < n {
+        counts[order[i % order.len()]] += 1;
+        assigned += 1;
+        i += 1;
+    }
+    let mut out = Vec::with_capacity(n);
+    for (d, &c) in counts.iter().enumerate() {
+        for _ in 0..c {
+            out.push(DcId(d));
+        }
+    }
+    out.truncate(n);
+    out
+}
+
+/// Tasks arrive at a JM's queue; poke its idle executors. `generation`
+/// guards against shipments that crossed a job restart.
+pub fn enqueue_tasks(sim: &mut WorldSim, job: JobId, dc: DcId, tasks: Vec<WaitingTask>, generation: u32) {
+    let accepted = {
+        let w = &mut sim.state;
+        match w.jobs.get_mut(&job) {
+            None => return,
+            Some(rt) if rt.done || rt.generation != generation => return,
+            Some(rt) => match rt.jms.get_mut(&dc) {
+                Some(jm) if jm.alive => {
+                    jm.enqueue(tasks.clone());
+                    true
+                }
+                _ => false,
+            },
+        }
+    };
+    if !accepted {
+        // JM not up yet (or dead): retry shortly; tasks are not lost.
+        sim.schedule_in(secs_f(1.0), move |sim| enqueue_tasks(sim, job, dc, tasks, generation));
+        return;
+    }
+    poke_executors(sim, job, dc);
+}
+
+/// Defer UPDATE events for every executor of (job, dc) with free capacity.
+pub fn poke_executors(sim: &mut WorldSim, job: JobId, dc: DcId) {
+    let cids: Vec<ContainerId> = {
+        let w = &sim.state;
+        let Some(rt) = w.jobs.get(&job) else { return };
+        let Some(jm) = rt.jms.get(&dc) else { return };
+        if !jm.alive {
+            return;
+        }
+        jm.executors
+            .iter()
+            .copied()
+            .filter(|c| {
+                w.cluster
+                    .containers
+                    .get(c)
+                    .map(|cc| cc.alive && cc.free > 0.0)
+                    .unwrap_or(false)
+            })
+            .collect()
+    };
+    for cid in cids {
+        sim.defer(move |sim| container_update(sim, job, dc, cid));
+    }
+}
+
+/// The UPDATE event: one container of (job, dc) reports free capacity.
+pub fn container_update(sim: &mut WorldSim, job: JobId, dc: DcId, cid: ContainerId) {
+    let now = sim.now_secs();
+    let picks: Vec<Assignment> = {
+        let w = &mut sim.state;
+        let Some(rt) = w.jobs.get_mut(&job) else { return };
+        if rt.done {
+            return;
+        }
+        let Some(jm) = rt.jms.get_mut(&dc) else { return };
+        if !jm.alive || !jm.executors.contains(&cid) {
+            return;
+        }
+        let view = match w.cluster.containers.get(&cid) {
+            Some(c) if c.alive && c.free > 0.0 => {
+                ContainerView { id: cid, node: c.node, rack: c.rack, free: c.free }
+            }
+            _ => return,
+        };
+        jm.handle_update(view, now, w.params)
+    };
+    for a in picks {
+        start_assignment(sim, job, dc, a);
+    }
+}
+
+/// Commit one assignment: reserve the container, fetch inputs (WAN if
+/// cross-DC), run for `p`, then report completion.
+pub fn start_assignment(sim: &mut WorldSim, job: JobId, dc: DcId, a: Assignment) {
+    let now_ms = sim.now();
+    let now = sim.now_secs();
+    let (t, cid, attempt, fetch_ms, links, true_p) = {
+        let w = &mut sim.state;
+        let Some(rt) = w.jobs.get_mut(&job) else { return };
+        let t = a.task.id;
+        if rt.progress.task_status(t) != crate::dag::TaskStatus::Waiting {
+            // Duplicate queue entry (e.g. a shipment raced a failure
+            // re-queue): the other copy is authoritative — drop this one.
+            if let Some(jm) = rt.jms.get_mut(&dc) {
+                jm.running.remove(&t);
+            }
+            return;
+        }
+        rt.progress.mark_running(t);
+        let attempt = {
+            let e = rt.attempts.entry(t).or_insert(0);
+            *e += 1;
+            *e
+        };
+        w.cluster.start_task(a.container, t, a.task.r, now_ms);
+        w.metrics.record_launch(job, now);
+
+        let dst = w.cluster.container(a.container).node.dc;
+        let sources = rt.task_sources.get(&t).cloned().unwrap_or_default();
+        let mut fetch_ms: SimTime = 0;
+        let mut any_remote = false;
+        let mut links: Vec<(DcId, DcId)> = Vec::new();
+        for (src, bytes) in sources {
+            if bytes == 0 {
+                continue;
+            }
+            if src != dst {
+                any_remote = true;
+            }
+            let d = w.wan.begin_transfer(src, dst, bytes);
+            links.push((src, dst));
+            fetch_ms = fetch_ms.max(d);
+        }
+        if any_remote {
+            w.metrics.remote_input_tasks += 1;
+        } else {
+            w.metrics.local_input_tasks += 1;
+        }
+        rt.started_at.insert(t, now);
+        // True processing time comes from the spec; a.task.p is the
+        // scheduler's *estimate* (§5) and only gates delay thresholds.
+        let mut true_p = rt.spec.stage(t.stage).tasks[t.index as usize].p;
+        // §2.2 changeable environment at task granularity: some tasks
+        // straggle (contention, slow disks); speculation catches them.
+        if w.rng.chance(w.cfg.workload.straggler_prob) {
+            true_p *= w.cfg.workload.straggler_factor;
+        }
+        (t, a.container, attempt, fetch_ms, links, true_p)
+    };
+    let run_ms = secs_f(true_p);
+    for (s, d) in links {
+        sim.schedule_in(fetch_ms, move |sim| sim.state.wan.end_transfer(s, d));
+    }
+    sim.schedule_in(fetch_ms + run_ms, move |sim| task_finished(sim, job, dc, t, cid, attempt));
+}
+
+/// Completion: free the container, record the output partition, replicate
+/// the partitionList, release dependent stages, finish the job.
+pub fn task_finished(
+    sim: &mut WorldSim,
+    job: JobId,
+    dc: DcId,
+    t: TaskId,
+    cid: ContainerId,
+    attempt: u32,
+) {
+    let now_ms = sim.now();
+    enum After {
+        JobDone,
+        StageDone,
+        TaskDone,
+    }
+    let after = {
+        let w = &mut sim.state;
+        let Some(rt) = w.jobs.get_mut(&job) else { return };
+        if rt.done || rt.attempts.get(&t) != Some(&attempt) {
+            return; // stale event (container died / job restarted)
+        }
+        if !w.cluster.containers.get(&cid).map(|c| c.alive).unwrap_or(false) {
+            return; // container died mid-flight; failure path re-queues
+        }
+        w.cluster.finish_task(cid, t, now_ms);
+        let node = w.cluster.container(cid).node;
+        let finished_spec = &rt.spec.stage(t.stage).tasks[t.index as usize];
+        let out_bytes = finished_spec.output_bytes;
+        rt.estimator.record(t.stage, finished_spec.p, finished_spec.r);
+        rt.outputs.insert(t, (node, out_bytes));
+        rt.info.partition_list.push(PartitionEntry { task: t, node, bytes: out_bytes });
+        if let Some(jm) = rt.jms.get_mut(&dc) {
+            jm.task_done(t);
+        }
+        let stage_done = rt.progress.mark_done(t);
+        let kind = rt.spec.kind;
+        if let Some(hook) = w.hook.as_mut() {
+            hook.on_task_finished(job, kind, t.stage, t.index, dc);
+            if stage_done {
+                hook.on_stage_done(job, kind, t.stage);
+            }
+            if rt.progress.job_done() {
+                hook.on_job_done(job, kind);
+            }
+        }
+        if rt.progress.job_done() {
+            After::JobDone
+        } else if stage_done {
+            After::StageDone
+        } else {
+            After::TaskDone
+        }
+    };
+    match after {
+        After::JobDone => {
+            finish_job(sim, job);
+        }
+        After::StageDone => {
+            sim.defer(move |sim| release_ready(sim, job));
+            replicate_info(sim, job);
+            sim.defer(move |sim| container_update(sim, job, dc, cid));
+        }
+        After::TaskDone => {
+            replicate_info(sim, job);
+            sim.defer(move |sim| container_update(sim, job, dc, cid));
+        }
+    }
+}
+
+/// All stages complete: JMs release their resources and themselves
+/// (§3.2.1), the job is recorded.
+pub fn finish_job(sim: &mut WorldSim, job: JobId) {
+    let now_ms = sim.now();
+    let now = sim.now_secs();
+    let w = &mut sim.state;
+    let Some(rt) = w.jobs.get_mut(&job) else { return };
+    rt.done = true;
+    let dcs: Vec<DcId> = rt.jms.keys().copied().collect();
+    let centralized = w.mode.centralized();
+    for dc in dcs {
+        let jm_id = JmId { job, dc };
+        let master = if centralized { &mut w.masters[0] } else { &mut w.masters[dc.0] };
+        let held = master.unregister(jm_id);
+        for cid in held {
+            if w.cluster.containers.get(&cid).map(|c| c.alive).unwrap_or(false) {
+                w.cluster.release(cid, now_ms);
+            }
+        }
+        let jm = rt.jms.get_mut(&dc).unwrap();
+        if jm.alive && w.cluster.containers.get(&jm.container).map(|c| c.alive).unwrap_or(false) {
+            w.cluster.release(jm.container, now_ms);
+        }
+        jm.alive = false;
+        if let Some(s) = rt.sessions.get(&dc) {
+            w.zk.expire_session(*s);
+        }
+    }
+    w.metrics.complete(job, now);
+    w.metrics.record_containers(job, now, 0);
+}
+
+/// Re-encode the intermediate info, push it through zk (accounting the
+/// quorum traffic + latency) and sample its size for Fig 12a.
+pub fn replicate_info(sim: &mut WorldSim, job: JobId) {
+    let w = &mut sim.state;
+    let Some(rt) = w.jobs.get_mut(&job) else { return };
+    rt.info.executor_list =
+        rt.jms.values().filter(|j| j.alive).flat_map(JobManager::executor_entries).collect();
+    let bytes = rt.info.encode();
+    let kind = rt.spec.kind;
+    let size = bytes.len();
+    let from = rt.primary;
+    let session = rt.sessions.get(&from).copied();
+    let path = format!("/jobs/j{}/info", job.0);
+    let _lat = w.zk.write_latency(&mut w.wan, from, size as u64);
+    if w.zk.exists(&path) {
+        let _ = w.zk.set_data(&path, bytes);
+    } else if let Some(s) = session {
+        let _ = w.zk.create(s, &path, bytes, false, false);
+    }
+    w.metrics.record_info_size(kind, size);
+}

@@ -1,0 +1,273 @@
+//! Deployment assemblies and experiment drivers.
+//!
+//! Wires the substrates (cluster, WAN, zk, spot market, masters) and the
+//! HOUTU coordinator (replicated JMs with Af + Parades) into the four
+//! systems evaluated in §6.1 — `houtu`, `cent-dyna` (COBRA), `cent-stat`,
+//! `decent-stat` — and drives online job traces through them on the
+//! deterministic DES.
+
+pub mod failure;
+pub mod lifecycle;
+pub mod scheduling;
+pub mod world;
+
+pub use failure::{inject_hogs, kill_jm_host, kill_node};
+pub use lifecycle::submit_job;
+pub use scheduling::install_timers;
+pub use world::{JobRt, World, WorldSim};
+
+use crate::config::{Config, Deployment};
+use crate::dag::{SizeClass, WorkloadKind};
+use crate::ids::DcId;
+use crate::sim::{secs, secs_f, Sim, SimTime};
+use crate::workloads::TraceEntry;
+
+/// Build a simulation with timers installed up to `horizon`.
+pub fn build_sim(cfg: Config, mode: Deployment, horizon: SimTime) -> WorldSim {
+    let world = World::new(cfg, mode);
+    let mut sim = Sim::new(world);
+    install_timers(&mut sim, horizon);
+    sim
+}
+
+/// Schedule an online trace of submissions.
+pub fn schedule_trace(sim: &mut WorldSim, trace: &[TraceEntry]) {
+    for e in trace {
+        let (kind, size, home) = (e.kind, e.size, e.home_dc);
+        sim.schedule_at(secs_f(e.arrival_secs), move |sim| {
+            submit_job(sim, kind, size, home);
+        });
+    }
+}
+
+/// Run the standard Fig-8 style experiment: `cfg.workload.num_jobs` jobs
+/// arriving online, on the given deployment. Returns the finished world
+/// (metrics, cost, WAN stats). Panics if jobs fail to complete within the
+/// (generous) horizon — that would be a scheduler bug, not load.
+pub fn run_trace_experiment(cfg: &Config, mode: Deployment) -> World {
+    let mut cfg = cfg.clone();
+    cfg.deployment = mode;
+    let trace = {
+        // Use an identical trace for every deployment: derive it from a
+        // fixed-seed generator independent of the world's RNG.
+        let mut gen = crate::workloads::WorkloadGen::new(&cfg, crate::util::Pcg::new(cfg.seed, 777));
+        gen.trace(&cfg, cfg.workload.num_jobs)
+    };
+    let last_arrival = trace.last().map(|e| e.arrival_secs).unwrap_or(0.0);
+    let horizon = secs((last_arrival + 14_400.0) as u64);
+    let mut sim = build_sim(cfg, mode, horizon);
+    schedule_trace(&mut sim, &trace);
+    sim.run_until(horizon);
+    let makespan = sim.state.metrics.makespan();
+    let done = sim.state.metrics.completed_jobs();
+    let total = sim.state.metrics.jobs.len();
+    assert_eq!(done, total, "{mode:?}: {done}/{total} jobs completed within horizon");
+    sim.state.bill_machines(makespan);
+    sim.state
+}
+
+/// Single-job experiment support (Figs 9 & 11): submit one job, optionally
+/// inject hogs or kill a JM, run to completion, return the world.
+pub struct SingleJobPlan {
+    pub kind: WorkloadKind,
+    pub size: SizeClass,
+    pub home: DcId,
+    /// Inject resource hogs into these DCs at `t` seconds after submission.
+    pub inject_at: Option<(f64, Vec<DcId>)>,
+    /// Kill the JM replica in this DC at `t` seconds after submission.
+    pub kill_jm_at: Option<(f64, DcId)>,
+}
+
+pub fn run_single_job(cfg: &Config, mode: Deployment, plan: SingleJobPlan) -> World {
+    let mut cfg = cfg.clone();
+    cfg.deployment = mode;
+    let horizon = secs(14_400);
+    let mut sim = build_sim(cfg, mode, horizon);
+    let kind = plan.kind;
+    let size = plan.size;
+    let home = plan.home;
+    sim.schedule_at(1, move |sim| {
+        let job = submit_job(sim, kind, size, home);
+        debug_assert_eq!(job.0, 0);
+    });
+    if let Some((t, dcs)) = plan.inject_at {
+        sim.schedule_at(secs_f(t), move |sim| inject_hogs(sim, &dcs));
+    }
+    if let Some((t, dc)) = plan.kill_jm_at {
+        sim.schedule_at(secs_f(t), move |sim| {
+            kill_jm_host(sim, crate::ids::JobId(0), dc)
+        });
+    }
+    sim.run_until(horizon);
+    sim.state
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ids::JobId;
+
+    fn small_cfg() -> Config {
+        let mut cfg = Config::default();
+        cfg.workload.num_jobs = 6;
+        cfg.workload.mean_interarrival_secs = 30.0;
+        cfg.cloud.revocations = false;
+        cfg
+    }
+
+    #[test]
+    fn single_wordcount_completes_on_houtu() {
+        let cfg = small_cfg();
+        let w = run_single_job(
+            &cfg,
+            Deployment::Houtu,
+            SingleJobPlan {
+                kind: WorkloadKind::WordCount,
+                size: SizeClass::Small,
+                home: DcId(0),
+                inject_at: None,
+                kill_jm_at: None,
+            },
+        );
+        assert_eq!(w.metrics.completed_jobs(), 1);
+        let jrt = w.metrics.jobs[&JobId(0)].jrt().unwrap();
+        assert!(jrt > 1.0 && jrt < 600.0, "jrt {jrt}");
+        // All containers returned to the pool.
+        for d in 0..4 {
+            assert_eq!(
+                w.cluster.free_pool(DcId(d)).len(),
+                w.cluster.dc_capacity(DcId(d)),
+                "dc{d} pool leaked"
+            );
+        }
+    }
+
+    #[test]
+    fn single_job_completes_on_every_deployment() {
+        let cfg = small_cfg();
+        for mode in Deployment::ALL {
+            for kind in [WorkloadKind::TpcH, WorkloadKind::IterativeMl] {
+                let w = run_single_job(
+                    &cfg,
+                    mode,
+                    SingleJobPlan {
+                        kind,
+                        size: SizeClass::Medium,
+                        home: DcId(1),
+                        inject_at: None,
+                        kill_jm_at: None,
+                    },
+                );
+                assert_eq!(w.metrics.completed_jobs(), 1, "{mode:?}/{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn trace_completes_and_is_deterministic() {
+        let cfg = small_cfg();
+        let w1 = run_trace_experiment(&cfg, Deployment::Houtu);
+        let w2 = run_trace_experiment(&cfg, Deployment::Houtu);
+        assert_eq!(w1.metrics.completed_jobs(), 6);
+        assert_eq!(w1.metrics.avg_jrt(), w2.metrics.avg_jrt());
+        assert_eq!(w1.metrics.makespan(), w2.metrics.makespan());
+        assert_eq!(
+            w1.wan.stats.cross_dc_total_bytes(),
+            w2.wan.stats.cross_dc_total_bytes()
+        );
+    }
+
+    #[test]
+    fn houtu_beats_decent_stat_on_the_trace() {
+        let cfg = small_cfg();
+        let houtu = run_trace_experiment(&cfg, Deployment::Houtu);
+        let stat = run_trace_experiment(&cfg, Deployment::DecentStat);
+        assert!(
+            houtu.metrics.avg_jrt() < stat.metrics.avg_jrt() * 1.10,
+            "houtu {:.1}s vs decent-stat {:.1}s",
+            houtu.metrics.avg_jrt(),
+            stat.metrics.avg_jrt()
+        );
+    }
+
+    #[test]
+    fn stealing_happens_under_injected_load() {
+        let cfg = small_cfg();
+        let w = run_single_job(
+            &cfg,
+            Deployment::Houtu,
+            SingleJobPlan {
+                kind: WorkloadKind::PageRank,
+                size: SizeClass::Large,
+                home: DcId(1),
+                inject_at: Some((10.0, vec![DcId(0), DcId(2), DcId(3)])),
+                kill_jm_at: None,
+            },
+        );
+        assert_eq!(w.metrics.completed_jobs(), 1);
+        let stolen: u64 = w.jobs[&JobId(0)]
+            .jms
+            .values()
+            .map(|jm| jm.stats.tasks_stolen_in)
+            .sum();
+        assert!(stolen > 0, "no tasks were stolen despite resource-tense DCs");
+    }
+
+    #[test]
+    fn sjm_failure_recovers_and_job_finishes() {
+        let cfg = small_cfg();
+        let w = run_single_job(
+            &cfg,
+            Deployment::Houtu,
+            SingleJobPlan {
+                kind: WorkloadKind::WordCount,
+                size: SizeClass::Medium,
+                home: DcId(0),
+                inject_at: None,
+                kill_jm_at: Some((15.0, DcId(2))), // an sJM
+            },
+        );
+        assert_eq!(w.metrics.completed_jobs(), 1);
+        assert!(!w.metrics.recovery_intervals_secs.is_empty(), "no recovery recorded");
+        let iv = w.metrics.recovery_intervals_secs[0];
+        assert!(iv < 20.0, "recovery interval {iv}s (paper: < 20 s)");
+    }
+
+    #[test]
+    fn pjm_failure_elects_new_primary() {
+        let cfg = small_cfg();
+        let w = run_single_job(
+            &cfg,
+            Deployment::Houtu,
+            SingleJobPlan {
+                kind: WorkloadKind::WordCount,
+                size: SizeClass::Medium,
+                home: DcId(0),
+                inject_at: None,
+                kill_jm_at: Some((15.0, DcId(0))), // the pJM
+            },
+        );
+        assert_eq!(w.metrics.completed_jobs(), 1);
+        assert!(!w.metrics.election_delays_secs.is_empty(), "no election recorded");
+        let rt = &w.jobs[&JobId(0)];
+        assert_ne!(rt.primary, DcId(0), "primary moved off the killed DC");
+    }
+
+    #[test]
+    fn centralized_jm_failure_restarts_job() {
+        let cfg = small_cfg();
+        let w = run_single_job(
+            &cfg,
+            Deployment::CentDyna,
+            SingleJobPlan {
+                kind: WorkloadKind::WordCount,
+                size: SizeClass::Medium,
+                home: DcId(0),
+                inject_at: None,
+                kill_jm_at: Some((15.0, DcId(0))),
+            },
+        );
+        assert_eq!(w.metrics.completed_jobs(), 1);
+        assert_eq!(w.metrics.jobs[&JobId(0)].restarts, 1, "centralized must resubmit");
+    }
+}

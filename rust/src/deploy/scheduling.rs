@@ -1,0 +1,385 @@
+//! Periodic machinery: the scheduling-period tick (Af feedback → desires →
+//! fair allocation → surplus release), JM heartbeats, WAN re-sampling, and
+//! the cross-DC work-stealing protocol.
+
+use crate::ids::{ContainerId, DcId, JmId, JobId};
+use crate::jm::{Assignment, ContainerView};
+use crate::sim::{secs_f, SimTime};
+
+use super::lifecycle::{container_update, poke_executors, start_assignment};
+use super::world::WorldSim;
+
+/// Install the recurring world timers: period ticks, heartbeats, WAN
+/// resampling, spot-market steps. Call once after building the sim.
+pub fn install_timers(sim: &mut WorldSim, horizon: SimTime) {
+    let period = secs_f(sim.state.cfg.scheduler.period_l_secs);
+    let heartbeat = secs_f(sim.state.cfg.scheduler.heartbeat_secs);
+    let resample = sim.state.wan.resample_period();
+    let market = secs_f(sim.state.cfg.cloud.market_period_secs);
+    schedule_recurring(sim, period, horizon, period_tick);
+    schedule_recurring(sim, heartbeat, horizon, heartbeat_tick);
+    schedule_recurring(sim, resample, horizon, |sim| sim.state.wan.resample());
+    schedule_recurring(sim, market, horizon, super::failure::market_tick);
+}
+
+fn schedule_recurring(
+    sim: &mut WorldSim,
+    period: SimTime,
+    horizon: SimTime,
+    tick: impl Fn(&mut WorldSim) + Clone + 'static,
+) {
+    fn arm(
+        sim: &mut WorldSim,
+        period: SimTime,
+        horizon: SimTime,
+        tick: impl Fn(&mut WorldSim) + Clone + 'static,
+    ) {
+        if sim.now() + period > horizon {
+            return;
+        }
+        sim.schedule_in(period, move |sim| {
+            tick(sim);
+            arm(sim, period, horizon, tick);
+        });
+    }
+    arm(sim, period, horizon, tick);
+}
+
+/// The scheduling-period boundary for every master (§4.2 / Appendix A):
+/// 1. each live JM measures utilization, runs Af (or holds its static
+///    desire) and pushes the new desire;
+/// 2. JMs whose allocation exceeds the new desire return their idle
+///    surplus containers ("aggressively kill the ones first free", §5);
+/// 3. each master water-fills free containers to the unsatisfied
+///    sub-jobs; fresh grants trigger UPDATE events.
+pub fn period_tick(sim: &mut WorldSim) {
+    let now_ms = sim.now();
+    let adaptive = sim.state.mode.adaptive();
+    let delta = sim.state.cfg.scheduler.delta;
+    let rho = sim.state.cfg.scheduler.rho;
+    let now = sim.now_secs();
+
+    // Phase 1+2: desires & surplus release.
+    let keys = sim.state.live_jm_keys();
+    for (job, dc) in keys.clone() {
+        let w = &mut sim.state;
+        let jm_id = JmId { job, dc };
+        let centralized = w.mode.centralized();
+        let capacity: usize = if centralized {
+            (0..w.cfg.topology.num_dcs()).map(|d| w.cluster.dc_capacity(DcId(d))).sum()
+        } else {
+            w.cluster.dc_capacity(dc)
+        };
+        let static_desire = w.static_desire();
+        let Some(rt) = w.jobs.get_mut(&job) else { continue };
+        if rt.done {
+            continue;
+        }
+        let Some(jm) = rt.jms.get_mut(&dc) else { continue };
+        if !jm.alive {
+            continue;
+        }
+        let executors = jm.executors.clone();
+        let allocation = executors.len();
+        let util = w.cluster.take_period_utilization(&executors, now_ms);
+        let desire = if adaptive {
+            let (req, _decision) = jm.period_tick(util, allocation, delta, rho, capacity);
+            req
+        } else {
+            jm.period_tick(util, allocation, delta, rho, capacity); // keep period count moving
+            static_desire
+        };
+        // Surplus: only adaptive JMs proactively shrink.
+        let surplus = if adaptive && allocation > desire {
+            let cl = &w.cluster;
+            jm.surplus_idle_containers(desire, |c| {
+                cl.containers.get(&c).map(|cc| if cc.alive { cc.free } else { 0.0 }).unwrap_or(0.0)
+            })
+        } else {
+            Vec::new()
+        };
+        for cid in &surplus {
+            jm.executors.retain(|c| c != cid);
+        }
+        let master = if centralized { &mut w.masters[0] } else { &mut w.masters[dc.0] };
+        master.set_desire(jm_id, desire);
+        for cid in surplus {
+            master.return_container(jm_id, cid, &mut w.cluster, now_ms);
+        }
+    }
+
+    // Phase 3: allocation per master.
+    let n_masters = sim.state.masters.len();
+    let mut pokes: Vec<(JobId, DcId)> = Vec::new();
+    for mi in 0..n_masters {
+        let grants = {
+            let w = &mut sim.state;
+            let (masters, cluster) = (&mut w.masters, &mut w.cluster);
+            masters[mi].allocate(cluster)
+        };
+        let w = &mut sim.state;
+        for (jm_id, cids) in grants {
+            let Some(rt) = w.jobs.get_mut(&jm_id.job) else {
+                // Hog pseudo-jobs: containers stay parked (Fig 9 injection).
+                continue;
+            };
+            let Some(jm) = rt.jms.get_mut(&jm_id.dc) else { continue };
+            jm.executors.extend(cids.iter().copied());
+            let count = rt.container_count();
+            w.metrics.record_containers(jm_id.job, now, count);
+            pokes.push((jm_id.job, jm_id.dc));
+        }
+    }
+    for (job, dc) in pokes {
+        poke_executors(sim, job, dc);
+    }
+}
+
+/// Heartbeat: every live JM re-offers its non-full executors (catching
+/// tasks whose delay thresholds elapsed) and turns thief when idle.
+pub fn heartbeat_tick(sim: &mut WorldSim) {
+    let keys = sim.state.live_jm_keys();
+    for (job, dc) in keys {
+        // Offer free capacity to the queue.
+        let cids: Vec<ContainerId> = {
+            let w = &sim.state;
+            let Some(rt) = w.jobs.get(&job) else { continue };
+            let Some(jm) = rt.jms.get(&dc) else { continue };
+            if !jm.alive {
+                continue;
+            }
+            jm.executors
+                .iter()
+                .copied()
+                .filter(|c| {
+                    w.cluster
+                        .containers
+                        .get(c)
+                        .map(|cc| cc.alive && cc.free > 0.0)
+                        .unwrap_or(false)
+                })
+                .collect()
+        };
+        for cid in &cids {
+            container_update(sim, job, dc, *cid);
+        }
+        check_stragglers(sim, job, dc);
+        maybe_steal(sim, job, dc);
+    }
+}
+
+/// Task-level straggler mitigation (§7): a running task whose elapsed
+/// time exceeds `speculation_factor` × its estimated processing time is
+/// aborted and relaunched — the re-queued copy has already "waited" past
+/// every delay threshold, so Parades places it at the first opportunity.
+pub fn check_stragglers(sim: &mut WorldSim, job: JobId, dc: DcId) {
+    if !sim.state.cfg.failures.speculation {
+        return;
+    }
+    let now = sim.now_secs();
+    let now_ms = sim.now();
+    let w = &mut sim.state;
+    let factor = w.cfg.failures.speculation_factor;
+    let Some(rt) = w.jobs.get_mut(&job) else { return };
+    if rt.done {
+        return;
+    }
+    let relaunch: Vec<(crate::ids::TaskId, ContainerId)> = {
+        let Some(jm) = rt.jms.get(&dc) else { return };
+        if !jm.alive {
+            return;
+        }
+        jm.running
+            .iter()
+            .filter(|(t, _)| {
+                let Some(&started) = rt.started_at.get(t) else { return false };
+                // Only speculate once siblings have been measured (§5
+                // estimator warmup) — pre-warmup priors are too coarse.
+                if rt.estimator.samples(t.stage) < 2 {
+                    return false;
+                }
+                let spec = &rt.spec.stage(t.stage).tasks[t.index as usize];
+                let est = rt.estimator.estimate_p(t.stage, spec.input_bytes).max(1.0);
+                // +30 s slack absorbs input-fetch time over the WAN.
+                now - started > factor * est + 30.0
+            })
+            .map(|(&t, &cid)| (t, cid))
+            .collect()
+    };
+    let racks = w.cfg.topology.racks_per_dc.max(1);
+    let tau = w.params.tau;
+    for (t, cid) in relaunch {
+        let spec = rt.spec.stage(t.stage).tasks[t.index as usize].clone();
+        // Abort the running attempt: free resources, invalidate its
+        // completion event, re-queue with its waiting time preserved so
+        // locality thresholds are already satisfied.
+        if w.cluster.containers.get(&cid).map(|c| c.alive).unwrap_or(false) {
+            w.cluster.finish_task(cid, t, now_ms);
+        }
+        *rt.attempts.entry(t).or_insert(0) += 1;
+        rt.progress.mark_waiting(t);
+        rt.started_at.remove(&t);
+        rt.speculative_relaunches += 1;
+        let est_p = rt.estimator.estimate_p(t.stage, spec.input_bytes);
+        let jm = rt.jms.get_mut(&dc).unwrap();
+        jm.running.remove(&t);
+        jm.enqueue([crate::jm::WaitingTask {
+            id: t,
+            r: spec.r,
+            p: est_p,
+            input_bytes: spec.input_bytes,
+            pref_node: spec.pref_node,
+            pref_rack: spec.pref_node.map(|n| (n.dc, n.idx % racks)),
+            wait: 2.0 * tau * est_p + 1.0,
+        }]);
+    }
+}
+
+/// Work stealing (Algorithm 2, STEAL): if this JM has no waiting task but
+/// a (nearly) idle executor, offer it to a victim JM of the same job.
+pub fn maybe_steal(sim: &mut WorldSim, job: JobId, dc: DcId) {
+    if !sim.state.mode.stealing() || !sim.state.cfg.scheduler.work_stealing {
+        return;
+    }
+    let now = sim.now_secs();
+    let Some((victim, view, delay)) = ({
+        let w = &mut sim.state;
+        let Some(rt) = w.jobs.get_mut(&job) else { return };
+        if rt.done {
+            return;
+        }
+        let Some(jm) = rt.jms.get(&dc) else { return };
+        if !jm.alive || jm.has_waiting() {
+            return;
+        }
+        if *rt.steal_inflight.get(&dc).unwrap_or(&false) {
+            return;
+        }
+        // An idle-enough executor to offer (free >= 1 - delta so the any
+        // clause can fire at the victim).
+        let idle = jm.executors.iter().copied().find(|c| {
+            w.cluster
+                .containers
+                .get(c)
+                .map(|cc| cc.alive && cc.free + 1e-9 >= 1.0 - w.params.delta)
+                .unwrap_or(false)
+        });
+        let Some(cid) = idle else { return };
+        // Victim: round-robin over other live JMs with waiting tasks.
+        let candidates: Vec<DcId> = rt
+            .jms
+            .iter()
+            .filter(|(&d, v)| d != dc && v.alive && v.has_waiting())
+            .map(|(&d, _)| d)
+            .collect();
+        if candidates.is_empty() {
+            return;
+        }
+        let victim = candidates[rt.steal_rr % candidates.len()];
+        rt.steal_rr = rt.steal_rr.wrapping_add(1);
+        rt.steal_inflight.insert(dc, true);
+        let c = &w.cluster.containers[&cid];
+        let view = ContainerView { id: cid, node: c.node, rack: c.rack, free: c.free };
+        let delay = w.wan.message_delay(dc, victim, 256);
+        let rtjm = rt.jms.get_mut(&dc).unwrap();
+        rtjm.stats.steal_requests_sent += 1;
+        Some((victim, view, delay))
+    }) else {
+        return;
+    };
+    let sent_at = now;
+    sim.schedule_in(delay, move |sim| {
+        steal_at_victim(sim, job, victim, dc, view, sent_at);
+    });
+}
+
+/// ONRECEIVESTEAL at the victim: treat the thief's container as an UPDATE
+/// event; ship any stolen tasks back.
+fn steal_at_victim(
+    sim: &mut WorldSim,
+    job: JobId,
+    victim: DcId,
+    thief: DcId,
+    view: ContainerView,
+    sent_at: f64,
+) {
+    let now = sim.now_secs();
+    let (stolen, delay): (Vec<Assignment>, SimTime) = {
+        let w = &mut sim.state;
+        let Some(rt) = w.jobs.get_mut(&job) else { return };
+        let params = w.params;
+        let picks = match rt.jms.get_mut(&victim) {
+            Some(vjm) if vjm.alive => vjm.handle_steal_request(view, now, params),
+            _ => Vec::new(),
+        };
+        let delay = w.wan.message_delay(victim, thief, 256 + 64 * picks.len() as u64);
+        (picks, delay)
+    };
+    sim.schedule_in(delay, move |sim| {
+        steal_response(sim, job, thief, victim, stolen, sent_at);
+    });
+}
+
+/// The thief receives the stolen tasks: start what still fits, queue the
+/// rest locally; update the taskMap.
+fn steal_response(
+    sim: &mut WorldSim,
+    job: JobId,
+    thief: DcId,
+    victim: DcId,
+    stolen: Vec<Assignment>,
+    sent_at: f64,
+) {
+    let now = sim.now_secs();
+    let start_now: Vec<Assignment> = {
+        let w = &mut sim.state;
+        let Some(rt) = w.jobs.get_mut(&job) else { return };
+        rt.steal_inflight.insert(thief, false);
+        w.metrics.steal_delays_ms.push((now - sent_at) * 1000.0);
+        if rt.done || stolen.is_empty() {
+            return;
+        }
+        let thief_alive = rt.jms.get(&thief).map(|j| j.alive).unwrap_or(false);
+        if !thief_alive {
+            // Thief died mid-steal: bounce the tasks back to the victim.
+            let tasks: Vec<_> = stolen.into_iter().map(|a| a.task).collect();
+            if let Some(vjm) = rt.jms.get_mut(&victim) {
+                vjm.enqueue(tasks);
+            }
+            return;
+        }
+        // Re-own the tasks in the taskMap.
+        for a in &stolen {
+            if let Some(e) = rt.info.task_map.iter_mut().find(|(t, _)| *t == a.task.id) {
+                e.1 = thief;
+            }
+        }
+        let jm = rt.jms.get_mut(&thief).unwrap();
+        jm.accept_stolen(&stolen);
+        let mut start_now = Vec::new();
+        for a in stolen {
+            let fits = w
+                .cluster
+                .containers
+                .get(&a.container)
+                .map(|c| c.alive && c.free + 1e-9 >= a.task.r)
+                .unwrap_or(false);
+            if fits {
+                start_now.push(a);
+            } else {
+                // Container got busy meanwhile: keep the task, queue it.
+                jm.running.remove(&a.task.id);
+                jm.enqueue([a.task]);
+            }
+        }
+        start_now
+    };
+    for a in start_now {
+        start_assignment(sim, job, thief, a);
+    }
+    replicate_after_steal(sim, job);
+}
+
+fn replicate_after_steal(sim: &mut WorldSim, job: JobId) {
+    super::lifecycle::replicate_info(sim, job);
+}

@@ -1,0 +1,270 @@
+//! World state: everything the discrete-event simulation mutates, plus
+//! construction for each of the four deployments (§6.1 Baselines).
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::cloud::{CostMeter, InstanceClass, SpotMarket};
+use crate::cluster::Cluster;
+use crate::config::{Config, Deployment};
+use crate::consensus::{SessionId, ZkEnsemble};
+use crate::dag::{JobProgress, JobSpec, TaskStatus};
+use crate::ids::{DcId, JmId, JobId, NodeId, TaskId};
+use crate::jm::{JobManager, ParadesParams, Role, IntermediateInfo};
+use crate::master::Master;
+use crate::metrics::Metrics;
+use crate::net::Wan;
+use crate::sim::Sim;
+use crate::storage::Dfs;
+use crate::util::Pcg;
+use crate::workloads::WorkloadGen;
+
+/// Hook for attaching *real* computation to the simulated schedule: the
+/// e2e example implements this with the PJRT [`crate::runtime::Runtime`]
+/// so every completed gradient/PageRank stage executes genuine numerics
+/// in exactly the order and sharding the coordinator chose.
+pub trait ComputeHook {
+    /// A task of (job, stage) finished on a container in `dc`.
+    fn on_task_finished(&mut self, job: JobId, kind: crate::dag::WorkloadKind, stage: crate::ids::StageId, index: u32, dc: DcId);
+    /// All tasks of (job, stage) finished.
+    fn on_stage_done(&mut self, job: JobId, kind: crate::dag::WorkloadKind, stage: crate::ids::StageId);
+    /// The whole job finished.
+    fn on_job_done(&mut self, job: JobId, kind: crate::dag::WorkloadKind);
+    /// Down-cast support so drivers can read results back out.
+    fn as_any(&self) -> &dyn std::any::Any;
+}
+
+/// Per-job runtime state.
+pub struct JobRt {
+    pub spec: JobSpec,
+    pub progress: JobProgress,
+    /// JM replicas: one per DC (decentralized) or a single entry at the
+    /// home DC (centralized).
+    pub jms: BTreeMap<DcId, JobManager>,
+    /// Which DC hosts the primary JM.
+    pub primary: DcId,
+    /// Zookeeper session per JM replica.
+    pub sessions: BTreeMap<DcId, SessionId>,
+    /// Replicated intermediate information (authoritative copy; the zk
+    /// layer provides its replication cost/latency/failure semantics).
+    pub info: IntermediateInfo,
+    /// Completed-task outputs: task -> (location, bytes). Mirrors
+    /// info.partition_list in a query-friendly form.
+    pub outputs: HashMap<TaskId, (NodeId, u64)>,
+    /// Resolved input sources per released task: (src DC, bytes).
+    pub task_sources: HashMap<TaskId, Vec<(DcId, u64)>>,
+    /// Attempt counter per task — stale completion events are dropped.
+    pub attempts: HashMap<TaskId, u32>,
+    pub submitted_secs: f64,
+    pub done: bool,
+    /// Set while a steal request is in flight from the keyed thief DC.
+    pub steal_inflight: BTreeMap<DcId, bool>,
+    /// Round-robin pointer for victim selection.
+    pub steal_rr: usize,
+    /// Bumped on every full restart; events born under an older
+    /// generation are dropped on arrival.
+    pub generation: u32,
+    /// §5: per-stage (p, r) estimator fed by finished tasks; Parades'
+    /// τ·p thresholds consume *estimates*, not oracle values.
+    pub estimator: crate::jm::StageEstimator,
+    /// Start time (secs) of each running attempt, for straggler checks.
+    pub started_at: HashMap<TaskId, f64>,
+    /// Tasks relaunched by speculation (metric).
+    pub speculative_relaunches: u32,
+}
+
+impl JobRt {
+    /// Containers currently belonging to the job (JM hosts + executors)
+    /// across all replicas — the Fig 11 quantity.
+    pub fn container_count(&self) -> usize {
+        self.jms
+            .values()
+            .filter(|jm| jm.alive)
+            .map(|jm| 1 + jm.executors.len())
+            .sum()
+    }
+
+    /// The primary JM (panics if the primary DC has no replica).
+    pub fn pjm(&self) -> &JobManager {
+        &self.jms[&self.primary]
+    }
+}
+
+/// The whole simulated testbed.
+pub struct World {
+    pub cfg: Config,
+    pub mode: Deployment,
+    pub params: ParadesParams,
+    pub cluster: Cluster,
+    pub wan: Wan,
+    pub zk: ZkEnsemble,
+    pub markets: Vec<SpotMarket>,
+    pub cost: CostMeter,
+    /// One master per DC (decentralized) or a single monolithic master
+    /// (centralized) — indexed by [`World::master_of`].
+    pub masters: Vec<Master>,
+    pub dfs: Dfs,
+    pub gen: WorkloadGen,
+    pub jobs: BTreeMap<JobId, JobRt>,
+    pub metrics: Metrics,
+    pub rng: Pcg,
+    next_job: u64,
+    /// Node bids (spot), for revocation checks.
+    pub bids: HashMap<NodeId, f64>,
+    /// Hog sub-jobs for the Fig-9 injection (kept registered forever).
+    pub hogs: Vec<JmId>,
+    /// Wall-clock guard: stop submitting after the trace ends.
+    pub trace_done: bool,
+    /// Optional real-compute hook (e2e example).
+    pub hook: Option<Box<dyn ComputeHook>>,
+}
+
+pub type WorldSim = Sim<World>;
+
+impl World {
+    pub fn new(cfg: Config, mode: Deployment) -> World {
+        let mut cfg = cfg;
+        cfg.deployment = mode;
+        cfg.resize_bandwidth();
+        cfg.validate().expect("invalid config");
+        let mut rng = Pcg::seeded(cfg.seed);
+        let wan = Wan::new(cfg.wan.clone(), rng.split(1));
+        let zk = ZkEnsemble::new(cfg.topology.num_dcs());
+        let mut markets: Vec<SpotMarket> = (0..cfg.topology.num_dcs())
+            .map(|i| SpotMarket::new(&cfg.cloud, rng.split(100 + i as u64)))
+            .collect();
+        // Workers: spot for decentralized deployments (§6.3), on-demand for
+        // the centralized baselines.
+        let spot_workers = !mode.centralized();
+        let mut bids = HashMap::new();
+        let cloud_cfg = cfg.cloud.clone();
+        let cluster = Cluster::build(
+            &cfg.topology.regions,
+            cfg.topology.workers_per_dc,
+            cfg.topology.containers_per_worker,
+            cfg.topology.racks_per_dc,
+            |dc, idx| {
+                // §2.3 extension: worker 0 per region can be pinned
+                // On-demand so JM containers (spawned from the lowest
+                // container ids = node 0) sit on reliable instances.
+                let reliable = cloud_cfg.reliable_jm_hosts && idx == 0;
+                if spot_workers && !reliable {
+                    let bid = markets[dc.0].draw_bid(&cloud_cfg);
+                    bids.insert(NodeId { dc, idx }, bid);
+                    InstanceClass::Spot { bid }
+                } else {
+                    InstanceClass::OnDemand
+                }
+            },
+        );
+        let mut masters = if mode.centralized() {
+            vec![Master::centralized((0..cfg.topology.num_dcs()).map(DcId).collect())]
+        } else {
+            (0..cfg.topology.num_dcs()).map(|d| Master::new(DcId(d))).collect::<Vec<_>>()
+        };
+        if !mode.adaptive() && cfg.scheduler.static_fifo {
+            // Stock YARN default queue for the static baselines.
+            for m in &mut masters {
+                m.policy = crate::master::AllocPolicy::Fifo;
+            }
+        }
+        let gen = WorkloadGen::new(&cfg, rng.split(2));
+        World {
+            params: ParadesParams { delta: cfg.scheduler.delta, tau: cfg.scheduler.tau },
+            mode,
+            cluster,
+            wan,
+            zk,
+            markets,
+            cost: CostMeter::default(),
+            masters,
+            dfs: Dfs::default(),
+            gen,
+            jobs: BTreeMap::new(),
+            metrics: Metrics::default(),
+            rng,
+            next_job: 0,
+            bids,
+            hogs: Vec::new(),
+            trace_done: false,
+            hook: None,
+            cfg,
+        }
+    }
+
+    /// Index of the master responsible for `dc`.
+    pub fn master_of(&mut self, dc: DcId) -> &mut Master {
+        if self.mode.centralized() {
+            &mut self.masters[0]
+        } else {
+            &mut self.masters[dc.0]
+        }
+    }
+
+    pub fn alloc_job_id(&mut self) -> JobId {
+        let id = JobId(self.next_job);
+        self.next_job += 1;
+        id
+    }
+
+    /// The DCs where a job keeps JM replicas.
+    pub fn jm_dcs(&self, home: DcId) -> Vec<DcId> {
+        if self.mode.centralized() {
+            vec![home]
+        } else {
+            (0..self.cfg.topology.num_dcs()).map(DcId).collect()
+        }
+    }
+
+    /// Desired container count for a sub-job under *static* scheduling.
+    pub fn static_desire(&self) -> usize {
+        if self.mode.centralized() {
+            self.cfg.scheduler.static_executors * self.cfg.topology.num_dcs()
+        } else {
+            self.cfg.scheduler.static_executors
+        }
+    }
+
+    /// Count of released-but-waiting + running tasks (diagnostics).
+    pub fn active_tasks(&self, job: JobId) -> (usize, usize) {
+        let rt = &self.jobs[&job];
+        (rt.progress.count(TaskStatus::Waiting), rt.progress.count(TaskStatus::Running))
+    }
+
+    /// All live (job, dc) JM keys, for iteration without borrow fights.
+    pub fn live_jm_keys(&self) -> Vec<(JobId, DcId)> {
+        self.jobs
+            .iter()
+            .filter(|(_, rt)| !rt.done)
+            .flat_map(|(&id, rt)| {
+                rt.jms.iter().filter(|(_, jm)| jm.alive).map(move |(&d, _)| (id, d))
+            })
+            .collect()
+    }
+
+    /// Bill machines for `makespan_secs` of cluster time (§6.3 model:
+    /// the whole testbed is rented for the duration of the workload).
+    pub fn bill_machines(&mut self, makespan_secs: f64) {
+        let hours = makespan_secs / 3600.0;
+        let num_dcs = self.cfg.topology.num_dcs();
+        // One on-demand master VM per region (all deployments).
+        for _ in 0..num_dcs {
+            self.cost.charge_machine(InstanceClass::OnDemand, hours, self.cfg.cloud.on_demand_hourly);
+        }
+        for dc in &self.cluster.dcs {
+            for node in &dc.nodes {
+                let price = match node.class {
+                    InstanceClass::OnDemand => self.cfg.cloud.on_demand_hourly,
+                    InstanceClass::Spot { .. } => self.cfg.cloud.spot_hourly_mean,
+                };
+                self.cost.charge_machine(node.class, hours, price);
+            }
+        }
+        let bytes = self.wan.stats.cross_dc_total_bytes();
+        self.cost.charge_transfer(bytes, self.cfg.cloud.transfer_per_gb);
+    }
+
+    /// Role of the JM at (job, dc), if alive.
+    pub fn jm_role(&self, job: JobId, dc: DcId) -> Option<Role> {
+        self.jobs.get(&job)?.jms.get(&dc).filter(|j| j.alive).map(|j| j.role)
+    }
+}

@@ -1,0 +1,453 @@
+//! Experiment harness: one function per paper table/figure, each returning
+//! a formatted report (and structured numbers where benches need them).
+//! The `benches/` binaries and the CLI both call through here, so
+//! `cargo bench` regenerates every row the paper reports.
+
+use std::fmt::Write as _;
+
+use crate::cloud::fig3_prices;
+use crate::config::{Config, Deployment};
+use crate::dag::{SizeClass, WorkloadKind};
+use crate::deploy::{run_single_job, run_trace_experiment, SingleJobPlan, World};
+use crate::ids::{DcId, JobId};
+use crate::net::Wan;
+use crate::util::stats::Summary;
+use crate::util::Pcg;
+use crate::workloads::input_bytes;
+
+/// Fig 2: measured WAN bandwidth between region pairs, (mean, std) Mbps.
+pub fn fig2_wan(cfg: &Config) -> String {
+    let mut wan = Wan::new(cfg.wan.clone(), Pcg::seeded(cfg.seed));
+    let names = &cfg.topology.regions;
+    let n = names.len();
+    let mut out = String::new();
+    writeln!(out, "Fig 2 — WAN bandwidth between regions, (mean, std) Mbps").unwrap();
+    write!(out, "{:>8}", "").unwrap();
+    for name in names {
+        write!(out, "{name:>14}").unwrap();
+    }
+    writeln!(out).unwrap();
+    for i in 0..n {
+        write!(out, "{:>8}", names[i]).unwrap();
+        for j in 0..n {
+            if j < i {
+                write!(out, "{:>14}", "").unwrap();
+            } else {
+                // 3 rounds x 5 minutes at 1 sample/s, as in §2.2.
+                let (m, s) = wan.measure_pair(DcId(i), DcId(j), 3, 300);
+                write!(out, "{:>14}", format!("({m:.0},{s:.0})")).unwrap();
+            }
+        }
+        writeln!(out).unwrap();
+    }
+    out
+}
+
+/// Fig 3: the pricing table.
+pub fn fig3_table() -> String {
+    let mut out = String::new();
+    writeln!(out, "Fig 3 — price of a <4 vCPU, 16 GB> instance (USD)").unwrap();
+    writeln!(out, "{:>10} {:>14} {:>14} {:>10}", "provider", "Reserved/yr", "OnDemand/hr", "Spot/hr").unwrap();
+    for r in fig3_prices() {
+        writeln!(
+            out,
+            "{:>10} {:>14.0} {:>14.3} {:>10.3}",
+            r.provider, r.reserved_yearly, r.on_demand_hourly, r.spot_hourly
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// Fig 7: workload input sizes.
+pub fn fig7_table() -> String {
+    let mut out = String::new();
+    writeln!(out, "Fig 7 — input sizes per workload").unwrap();
+    writeln!(out, "{:>12} {:>10} {:>10} {:>10}", "workload", "small", "medium", "large").unwrap();
+    for kind in WorkloadKind::ALL {
+        let cell = |s: SizeClass| crate::util::fmt_bytes(input_bytes(kind, s));
+        writeln!(
+            out,
+            "{:>12} {:>10} {:>10} {:>10}",
+            kind.name(),
+            if kind == WorkloadKind::TpcH { "-".into() } else { cell(SizeClass::Small) },
+            cell(SizeClass::Medium),
+            cell(SizeClass::Large)
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// One deployment's Fig-8/Fig-10 numbers.
+pub struct DeploymentResult {
+    pub mode: Deployment,
+    pub avg_jrt: f64,
+    pub makespan: f64,
+    pub jrt_cdf: Vec<(f64, f64)>,
+    pub machine_usd: f64,
+    pub transfer_usd: f64,
+    pub cross_dc_gb: f64,
+    pub world: World,
+}
+
+/// Run the Fig-8 online trace on one deployment.
+pub fn run_deployment(cfg: &Config, mode: Deployment) -> DeploymentResult {
+    let world = run_trace_experiment(cfg, mode);
+    DeploymentResult {
+        mode,
+        avg_jrt: world.metrics.avg_jrt(),
+        makespan: world.metrics.makespan(),
+        jrt_cdf: world.metrics.jrt_cdf(&[0.1, 0.25, 0.5, 0.75, 0.9, 1.0]),
+        machine_usd: world.cost.machine_usd,
+        transfer_usd: world.cost.transfer_usd,
+        cross_dc_gb: world.wan.stats.cross_dc_total_bytes() as f64 / (1 << 30) as f64,
+        world,
+    }
+}
+
+/// Fig 8: job performance across the four deployments.
+pub fn fig8_performance(cfg: &Config) -> (String, Vec<DeploymentResult>) {
+    let results: Vec<DeploymentResult> =
+        Deployment::ALL.iter().map(|&m| run_deployment(cfg, m)).collect();
+    let mut out = String::new();
+    writeln!(out, "Fig 8(b) — avg job response time and makespan ({} jobs)", cfg.workload.num_jobs)
+        .unwrap();
+    writeln!(out, "{:>12} {:>14} {:>12}", "deployment", "avg JRT (s)", "makespan (s)").unwrap();
+    for r in &results {
+        writeln!(out, "{:>12} {:>14.0} {:>12.0}", r.mode.name(), r.avg_jrt, r.makespan).unwrap();
+    }
+    writeln!(out, "\nFig 8(a) — JRT CDF (seconds at fraction)").unwrap();
+    write!(out, "{:>12}", "fraction").unwrap();
+    for f in [0.1, 0.25, 0.5, 0.75, 0.9, 1.0] {
+        write!(out, "{f:>10.2}").unwrap();
+    }
+    writeln!(out).unwrap();
+    for r in &results {
+        write!(out, "{:>12}", r.mode.name()).unwrap();
+        for (v, _) in &r.jrt_cdf {
+            write!(out, "{v:>10.0}").unwrap();
+        }
+        writeln!(out).unwrap();
+    }
+    (out, results)
+}
+
+/// Fig 10: normalized machine + communication cost vs cent-stat.
+pub fn fig10_cost(results: &[DeploymentResult]) -> String {
+    let baseline = results
+        .iter()
+        .find(|r| r.mode == Deployment::CentStat)
+        .expect("cent-stat baseline required");
+    let mut out = String::new();
+    writeln!(out, "Fig 10 — cost normalized to cent-stat").unwrap();
+    writeln!(
+        out,
+        "{:>12} {:>14} {:>18} {:>12} {:>14}",
+        "deployment", "machine cost", "communication cost", "machine $", "cross-DC GB"
+    )
+    .unwrap();
+    let order = [Deployment::Houtu, Deployment::CentDyna, Deployment::DecentStat, Deployment::CentStat];
+    for mode in order {
+        let r = results.iter().find(|r| r.mode == mode).unwrap();
+        writeln!(
+            out,
+            "{:>12} {:>14.2} {:>18.2} {:>12.2} {:>14.2}",
+            r.mode.name(),
+            r.machine_usd / baseline.machine_usd,
+            r.transfer_usd / baseline.transfer_usd,
+            r.machine_usd,
+            r.cross_dc_gb
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// Fig 9: cumulative running tasks of one job under (a) normal operation,
+/// (b) injected load with stealing, (c) injected load without stealing.
+pub fn fig9_stealing(cfg: &Config) -> (String, [Vec<(f64, f64)>; 3]) {
+    let plan = |inject| SingleJobPlan {
+        kind: WorkloadKind::PageRank,
+        size: SizeClass::Large,
+        home: DcId(1),
+        inject_at: inject,
+        kill_jm_at: None,
+    };
+    let inject_dcs = vec![DcId(0), DcId(2), DcId(3)];
+
+    let normal = run_single_job(cfg, Deployment::Houtu, plan(None));
+    let steal = run_single_job(cfg, Deployment::Houtu, plan(Some((100.0, inject_dcs.clone()))));
+    let mut no_steal_cfg = cfg.clone();
+    no_steal_cfg.scheduler.work_stealing = false;
+    let nosteal = run_single_job(&no_steal_cfg, Deployment::Houtu, plan(Some((100.0, inject_dcs))));
+
+    let tl = |w: &World| w.metrics.task_launches.get(&JobId(0)).cloned().unwrap_or_default();
+    let jrt = |w: &World| w.metrics.jobs[&JobId(0)].jrt().unwrap_or(f64::NAN);
+    let mut out = String::new();
+    writeln!(out, "Fig 9 — cumulative running tasks of one job (PageRank large)").unwrap();
+    writeln!(
+        out,
+        "(a) normal: JRT {:.0}s   (b) inject@100s + stealing: JRT {:.0}s   (c) inject@100s, no stealing: JRT {:.0}s",
+        jrt(&normal),
+        jrt(&steal),
+        jrt(&nosteal)
+    )
+    .unwrap();
+    let stolen: u64 =
+        steal.jobs[&JobId(0)].jms.values().map(|j| j.stats.tasks_stolen_in).sum();
+    writeln!(out, "tasks stolen cross-DC in (b): {stolen}").unwrap();
+    writeln!(out, "\n{:>8} {:>10} {:>12} {:>14}", "t (s)", "normal", "steal", "no-steal").unwrap();
+    let series = [tl(&normal), tl(&steal), tl(&nosteal)];
+    let max_t = series
+        .iter()
+        .filter_map(|s| s.last().map(|&(t, _)| t))
+        .fold(0.0, f64::max);
+    let sample = |s: &[(f64, f64)], t: f64| {
+        s.iter().take_while(|&&(ts, _)| ts <= t).last().map(|&(_, c)| c).unwrap_or(0.0)
+    };
+    let steps = 12usize;
+    for k in 0..=steps {
+        let t = max_t * k as f64 / steps as f64;
+        writeln!(
+            out,
+            "{:>8.0} {:>10.0} {:>12.0} {:>14.0}",
+            t,
+            sample(&series[0], t),
+            sample(&series[1], t),
+            sample(&series[2], t)
+        )
+        .unwrap();
+    }
+    (out, series)
+}
+
+/// Fig 11: job recovery from JM failures — containers over time and JRTs
+/// for pJM kill, sJM kill (HOUTU) and JM kill (centralized restart).
+pub fn fig11_recovery(cfg: &Config) -> String {
+    let plan = |dc| SingleJobPlan {
+        kind: WorkloadKind::WordCount,
+        size: SizeClass::Large,
+        home: DcId(0),
+        inject_at: None,
+        kill_jm_at: Some((70.0, dc)),
+    };
+    let pjm = run_single_job(cfg, Deployment::Houtu, plan(DcId(0)));
+    let sjm = run_single_job(cfg, Deployment::Houtu, plan(DcId(2)));
+    let cent = run_single_job(cfg, Deployment::CentDyna, plan(DcId(0)));
+
+    let jrt = |w: &World| w.metrics.jobs[&JobId(0)].jrt().unwrap_or(f64::NAN);
+    let mut out = String::new();
+    writeln!(out, "Fig 11 — JM failure at t=70 s (WordCount large)").unwrap();
+    writeln!(out, "(a) HOUTU, kill pJM : JRT {:.0}s, recoveries: {}", jrt(&pjm),
+        pjm.metrics.recovery_intervals_secs.len()).unwrap();
+    writeln!(out, "(b) HOUTU, kill sJM : JRT {:.0}s, recoveries: {}", jrt(&sjm),
+        sjm.metrics.recovery_intervals_secs.len()).unwrap();
+    writeln!(out, "(c) centralized, kill JM → resubmission: JRT {:.0}s, restarts: {}",
+        jrt(&cent), cent.metrics.jobs[&JobId(0)].restarts).unwrap();
+    for (label, w) in [("pJM-kill", &pjm), ("sJM-kill", &sjm)] {
+        let ivs = &w.metrics.recovery_intervals_secs;
+        if !ivs.is_empty() {
+            writeln!(out, "{label}: recovery interval {:.1}s (paper: < 20 s)", ivs[0]).unwrap();
+        }
+        if !w.metrics.election_delays_secs.is_empty() {
+            writeln!(out, "{label}: election delay {:.2}s", w.metrics.election_delays_secs[0])
+                .unwrap();
+        }
+    }
+    writeln!(out, "\ncontainers belonging to the job over time:").unwrap();
+    writeln!(out, "{:>8} {:>10} {:>10} {:>12}", "t (s)", "pJM-kill", "sJM-kill", "centralized").unwrap();
+    let tls = [
+        pjm.metrics.containers.get(&JobId(0)).cloned().unwrap_or_default(),
+        sjm.metrics.containers.get(&JobId(0)).cloned().unwrap_or_default(),
+        cent.metrics.containers.get(&JobId(0)).cloned().unwrap_or_default(),
+    ];
+    let max_t = tls.iter().filter_map(|s| s.last().map(|&(t, _)| t)).fold(0.0, f64::max);
+    let sample = |s: &[(f64, f64)], t: f64| {
+        s.iter().take_while(|&&(ts, _)| ts <= t).last().map(|&(_, c)| c).unwrap_or(0.0)
+    };
+    for k in 0..=14 {
+        let t = max_t * k as f64 / 14.0;
+        writeln!(
+            out,
+            "{:>8.0} {:>10.0} {:>10.0} {:>12.0}",
+            t,
+            sample(&tls[0], t),
+            sample(&tls[1], t),
+            sample(&tls[2], t)
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// Fig 12: overheads — (a) intermediate-info sizes on large inputs,
+/// (b) time costs of HOUTU's mechanisms.
+pub fn fig12_overhead(cfg: &Config) -> String {
+    // (a) run each workload on its large input and sample info sizes.
+    let mut out = String::new();
+    writeln!(out, "Fig 12(a) — intermediate info size per workload (large inputs)").unwrap();
+    writeln!(out, "{:>12} {:>10} {:>10} {:>10} {:>10}", "workload", "p25 KB", "median KB", "p75 KB", "mean KB").unwrap();
+    let mut steal_delays = Vec::new();
+    for kind in WorkloadKind::ALL {
+        let w = run_single_job(
+            cfg,
+            Deployment::Houtu,
+            SingleJobPlan {
+                kind,
+                size: SizeClass::Large,
+                home: DcId(0),
+                inject_at: None,
+                kill_jm_at: None,
+            },
+        );
+        let sizes = w.metrics.info_sizes.get(&kind).cloned().unwrap_or_default();
+        let s = Summary::of(&sizes);
+        writeln!(
+            out,
+            "{:>12} {:>10.1} {:>10.1} {:>10.1} {:>10.1}",
+            kind.name(),
+            s.p25 / 1024.0,
+            s.p50 / 1024.0,
+            s.p75 / 1024.0,
+            s.mean / 1024.0
+        )
+        .unwrap();
+        steal_delays.extend(w.metrics.steal_delays_ms.iter().copied());
+    }
+    // (b) mechanism time costs: steal delay under load + recovery numbers.
+    let mut loaded = cfg.clone();
+    loaded.workload.num_jobs = cfg.workload.num_jobs.max(8);
+    let w = run_trace_experiment(&loaded, Deployment::Houtu);
+    steal_delays.extend(w.metrics.steal_delays_ms.iter().copied());
+    let kill = run_single_job(
+        cfg,
+        Deployment::Houtu,
+        SingleJobPlan {
+            kind: WorkloadKind::WordCount,
+            size: SizeClass::Large,
+            home: DcId(0),
+            inject_at: None,
+            kill_jm_at: Some((70.0, DcId(2))),
+        },
+    );
+    writeln!(out, "\nFig 12(b) — time cost of mechanisms").unwrap();
+    let sd = Summary::of(&steal_delays);
+    writeln!(out, "steal message delay      : mean {:.2} ms (n={}, paper: 63.53 ms)", sd.mean, sd.n)
+        .unwrap();
+    let rec = Summary::of(&kill.metrics.recovery_intervals_secs);
+    writeln!(out, "sJM recovery interval    : mean {:.1} s (paper: < 20 s)", rec.mean).unwrap();
+    let zk_writes = w.zk.stats.writes;
+    writeln!(out, "zk writes on the trace   : {zk_writes} (Af bookkeeping itself is negligible)")
+        .unwrap();
+    out
+}
+
+/// Theorem 1 check: makespan vs the T1/|P| lower bound over the trace —
+/// the competitive ratio should be a small constant.
+pub fn theorem1_bound(cfg: &Config) -> (String, f64) {
+    let w = run_trace_experiment(cfg, Deployment::Houtu);
+    let total_work: f64 = w.jobs.values().map(|rt| rt.spec.work()).sum();
+    let p: usize = (0..w.cfg.topology.num_dcs())
+        .map(|d| w.cluster.dc_capacity(DcId(d)))
+        .sum();
+    // Lower bounds on the optimal makespan: work bound and span bound.
+    let arrival_span = w
+        .jobs
+        .values()
+        .map(|rt| rt.submitted_secs)
+        .fold(0.0_f64, f64::max);
+    let critical: f64 = w.jobs.values().map(|rt| rt.spec.critical_path()).fold(0.0, f64::max);
+    let lb = (total_work / p as f64).max(critical).max(1.0) + 0.0;
+    let makespan = w.metrics.makespan();
+    let ratio = makespan / (lb + arrival_span * 0.0).max(1.0);
+    let mut out = String::new();
+    writeln!(out, "Theorem 1 — competitive makespan check").unwrap();
+    writeln!(out, "T1(J)/|P| = {:.1}s, max T∞ = {critical:.1}s, lower bound = {lb:.1}s", total_work / p as f64).unwrap();
+    writeln!(out, "achieved makespan = {makespan:.1}s  →  ratio = {ratio:.2}x (O(1) expected)").unwrap();
+    (out, ratio)
+}
+
+/// Export the plot data behind every figure as CSV files under `dir`
+/// (for regenerating the paper's plots outside the terminal).
+pub fn export_csv(cfg: &Config, dir: &std::path::Path) -> std::io::Result<Vec<String>> {
+    use std::io::Write;
+    std::fs::create_dir_all(dir)?;
+    let mut written = Vec::new();
+    let mut save = |name: &str, header: &str, rows: &[String]| -> std::io::Result<()> {
+        let path = dir.join(name);
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{header}")?;
+        for r in rows {
+            writeln!(f, "{r}")?;
+        }
+        written.push(name.to_string());
+        Ok(())
+    };
+
+    // Fig 8: full per-job JRTs per deployment (the CDF's raw data).
+    let (_, results) = fig8_performance(cfg);
+    let mut rows = Vec::new();
+    for r in &results {
+        for (job, rec) in &r.world.metrics.jobs {
+            if let Some(jrt) = rec.jrt() {
+                rows.push(format!("{},{},{},{:.2}", r.mode.name(), job.0, rec.kind.name(), jrt));
+            }
+        }
+    }
+    save("fig8_jrt.csv", "deployment,job,workload,jrt_secs", &rows)?;
+    let rows: Vec<String> = results
+        .iter()
+        .map(|r| {
+            format!(
+                "{},{:.2},{:.2},{:.4},{:.4},{:.3}",
+                r.mode.name(), r.avg_jrt, r.makespan, r.machine_usd, r.transfer_usd, r.cross_dc_gb
+            )
+        })
+        .collect();
+    save(
+        "fig8_fig10_summary.csv",
+        "deployment,avg_jrt_secs,makespan_secs,machine_usd,transfer_usd,cross_dc_gb",
+        &rows,
+    )?;
+
+    // Fig 9: cumulative launched tasks timelines.
+    let (_, series) = fig9_stealing(cfg);
+    let mut rows = Vec::new();
+    for (label, s) in ["normal", "steal", "no_steal"].iter().zip(&series) {
+        for (t, c) in s {
+            rows.push(format!("{label},{t:.2},{c}"));
+        }
+    }
+    save("fig9_tasks.csv", "scenario,t_secs,cumulative_tasks", &rows)?;
+
+    // Fig 11: container timelines per kill scenario.
+    let mk = |dc, mode| {
+        crate::deploy::run_single_job(
+            cfg,
+            mode,
+            crate::deploy::SingleJobPlan {
+                kind: WorkloadKind::WordCount,
+                size: SizeClass::Large,
+                home: DcId(0),
+                inject_at: None,
+                kill_jm_at: Some((70.0, dc)),
+            },
+        )
+    };
+    let worlds = [
+        ("pjm_kill", mk(DcId(0), Deployment::Houtu)),
+        ("sjm_kill", mk(DcId(2), Deployment::Houtu)),
+        ("centralized", mk(DcId(0), Deployment::CentDyna)),
+    ];
+    let mut rows = Vec::new();
+    for (label, w) in &worlds {
+        if let Some(tl) = w.metrics.containers.get(&JobId(0)) {
+            for (t, c) in tl {
+                rows.push(format!("{label},{t:.2},{c}"));
+            }
+        }
+    }
+    save("fig11_containers.csv", "scenario,t_secs,containers", &rows)?;
+    Ok(written)
+}

@@ -1,0 +1,109 @@
+//! Typed identifiers shared across the stack. Everything is `Copy` and
+//! displays compactly for traces (`dc2`, `j3.s1.t07`, `jm[j3@dc1]`, ...).
+
+use std::fmt;
+
+/// Data center (region) index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DcId(pub usize);
+
+impl fmt::Display for DcId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "dc{}", self.0)
+    }
+}
+
+/// A worker machine within a data center.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId {
+    pub dc: DcId,
+    pub idx: usize,
+}
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}.n{}", self.dc, self.idx)
+    }
+}
+
+/// A container (executor slot). Globally unique across the run — container
+/// ids are never reused even after spot revocations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ContainerId(pub u64);
+
+impl fmt::Display for ContainerId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "c{}", self.0)
+    }
+}
+
+/// A submitted job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl fmt::Display for JobId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "j{}", self.0)
+    }
+}
+
+/// A stage within a job's DAG.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StageId(pub u32);
+
+impl fmt::Display for StageId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "s{}", self.0)
+    }
+}
+
+/// A task = (job, stage, index-within-stage).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId {
+    pub job: JobId,
+    pub stage: StageId,
+    pub index: u32,
+}
+
+impl fmt::Display for TaskId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}.{}.t{:02}", self.job, self.stage, self.index)
+    }
+}
+
+/// A job manager replica: one per (job, dc).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JmId {
+    pub job: JobId,
+    pub dc: DcId,
+}
+
+impl fmt::Display for JmId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "jm[{}@{}]", self.job, self.dc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let t = TaskId { job: JobId(3), stage: StageId(1), index: 7 };
+        assert_eq!(t.to_string(), "j3.s1.t07");
+        assert_eq!(DcId(2).to_string(), "dc2");
+        assert_eq!(NodeId { dc: DcId(0), idx: 4 }.to_string(), "dc0.n4");
+        assert_eq!(JmId { job: JobId(3), dc: DcId(1) }.to_string(), "jm[j3@dc1]");
+    }
+
+    #[test]
+    fn ids_are_ordered_and_hashable() {
+        use std::collections::HashSet;
+        let a = TaskId { job: JobId(1), stage: StageId(0), index: 0 };
+        let b = TaskId { job: JobId(1), stage: StageId(0), index: 1 };
+        assert!(a < b);
+        let set: HashSet<TaskId> = [a, b, a].into_iter().collect();
+        assert_eq!(set.len(), 2);
+    }
+}

@@ -1,0 +1,221 @@
+//! Af — the Adaptive feedback algorithm (Algorithm 1, §4.2).
+//!
+//! Each job manager runs Af independently at every period boundary to set
+//! its *desire* `d(q)` — how many containers to request from its local
+//! master — from pure feedback: last period's desire, allocation and
+//! measured utilization, plus whether tasks are waiting. No future job
+//! characteristics are used (semi-clairvoyance).
+//!
+//! Period classification (after [12] / COBRA [53]):
+//! * **inefficient**  — `u(q−1) < δ` and no waiting tasks → shrink by ρ;
+//! * **efficient & deprived** — allocation fell short of desire
+//!   (`a < d`): the sub-job used what it got, keep the desire;
+//! * **efficient & satisfied** — got all it asked and used it → grow by ρ.
+
+/// Af state carried by a job manager for one sub-job.
+#[derive(Debug, Clone)]
+pub struct AfState {
+    /// Continuous desire; the request pushed to the master is
+    /// `ceil(desire)` clamped to [1, capacity].
+    pub desire: f64,
+    /// Period counter `q` (1-based; q=1 bootstraps d=1).
+    pub period: u64,
+}
+
+impl Default for AfState {
+    fn default() -> Self {
+        AfState { desire: 1.0, period: 0 }
+    }
+}
+
+/// Inputs measured over the closing period `q−1`.
+#[derive(Debug, Clone, Copy)]
+pub struct PeriodFeedback {
+    /// Average utilization of the sub-job's containers, in [0, 1].
+    pub utilization: f64,
+    /// Containers actually allocated by the master for the period.
+    pub allocation: usize,
+    /// Whether any task of the sub-job waited during the period.
+    pub had_waiting_tasks: bool,
+}
+
+/// Why Af chose what it chose (for traces / tests / Fig 9 narration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AfDecision {
+    Bootstrap,
+    Inefficient,
+    EfficientDeprived,
+    EfficientSatisfied,
+}
+
+impl AfState {
+    /// Advance one period (Algorithm 1). Returns the decision taken.
+    /// `delta` = utilization threshold δ, `rho` = adjustment factor ρ > 1,
+    /// `capacity` = |P_j|, the ceiling on any desire.
+    pub fn step(
+        &mut self,
+        fb: PeriodFeedback,
+        delta: f64,
+        rho: f64,
+        capacity: usize,
+    ) -> AfDecision {
+        self.period += 1;
+        let decision = if self.period == 1 {
+            self.desire = 1.0;
+            AfDecision::Bootstrap
+        } else if fb.utilization < delta && !fb.had_waiting_tasks {
+            self.desire /= rho;
+            AfDecision::Inefficient
+        } else if self.request() > fb.allocation {
+            AfDecision::EfficientDeprived
+        } else {
+            self.desire *= rho;
+            AfDecision::EfficientSatisfied
+        };
+        self.desire = self.desire.clamp(1.0, capacity.max(1) as f64);
+        decision
+    }
+
+    /// The integral container request pushed to the master.
+    pub fn request(&self) -> usize {
+        self.desire.ceil() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DELTA: f64 = 0.7;
+    const RHO: f64 = 1.5;
+    const CAP: usize = 16;
+
+    fn fb(u: f64, a: usize, waiting: bool) -> PeriodFeedback {
+        PeriodFeedback { utilization: u, allocation: a, had_waiting_tasks: waiting }
+    }
+
+    #[test]
+    fn first_period_bootstraps_to_one() {
+        let mut af = AfState::default();
+        let d = af.step(fb(0.0, 0, false), DELTA, RHO, CAP);
+        assert_eq!(d, AfDecision::Bootstrap);
+        assert_eq!(af.request(), 1);
+    }
+
+    #[test]
+    fn efficient_satisfied_grows_geometrically() {
+        let mut af = AfState::default();
+        af.step(fb(0.0, 0, false), DELTA, RHO, CAP); // q=1
+        // Fully used, fully granted -> multiply by rho each period.
+        let mut seen = vec![af.request()];
+        for _ in 0..6 {
+            let a = af.request();
+            let d = af.step(fb(0.9, a, true), DELTA, RHO, CAP);
+            assert_eq!(d, AfDecision::EfficientSatisfied);
+            seen.push(af.request());
+        }
+        assert!(seen.windows(2).all(|w| w[1] >= w[0]), "monotone growth {seen:?}");
+        assert_eq!(*seen.last().unwrap(), CAP.min(seen.last().copied().unwrap()));
+        // 1 * 1.5^6 ≈ 11.4 -> request 12.
+        assert_eq!(af.request(), 12);
+    }
+
+    #[test]
+    fn deprived_holds_desire() {
+        let mut af = AfState::default();
+        af.step(fb(0.0, 0, false), DELTA, RHO, CAP);
+        af.step(fb(0.9, 1, true), DELTA, RHO, CAP); // grow to 1.5 -> req 2
+        let before = af.desire;
+        // Master gave less than requested, sub-job stayed busy.
+        let d = af.step(fb(0.95, af.request() - 1, true), DELTA, RHO, CAP);
+        assert_eq!(d, AfDecision::EfficientDeprived);
+        assert_eq!(af.desire, before, "desire held");
+    }
+
+    #[test]
+    fn inefficient_shrinks() {
+        let mut af = AfState::default();
+        af.step(fb(0.0, 0, false), DELTA, RHO, CAP);
+        for _ in 0..4 {
+            let a = af.request();
+            af.step(fb(1.0, a, true), DELTA, RHO, CAP);
+        }
+        let grown = af.desire;
+        assert!(grown > 3.0);
+        let d = af.step(fb(0.1, af.request(), false), DELTA, RHO, CAP);
+        assert_eq!(d, AfDecision::Inefficient);
+        assert!((af.desire - grown / RHO).abs() < 1e-9);
+    }
+
+    #[test]
+    fn low_utilization_with_waiting_tasks_is_not_inefficient() {
+        // Waiting tasks mean the sub-job *wants* resources even if current
+        // containers idle (e.g. locality delays) — Af must not shrink.
+        let mut af = AfState::default();
+        af.step(fb(0.0, 0, false), DELTA, RHO, CAP);
+        af.step(fb(0.9, 1, true), DELTA, RHO, CAP);
+        let before = af.desire;
+        let d = af.step(fb(0.2, af.request(), true), DELTA, RHO, CAP);
+        assert_ne!(d, AfDecision::Inefficient);
+        assert!(af.desire >= before);
+    }
+
+    #[test]
+    fn desire_bounded_by_capacity_and_floor() {
+        let mut af = AfState::default();
+        af.step(fb(0.0, 0, false), DELTA, RHO, CAP);
+        for _ in 0..50 {
+            let a = af.request();
+            af.step(fb(1.0, a, true), DELTA, RHO, CAP);
+        }
+        assert_eq!(af.request(), CAP, "capped at capacity");
+        for _ in 0..50 {
+            af.step(fb(0.0, af.request(), false), DELTA, RHO, CAP);
+        }
+        assert_eq!(af.request(), 1, "never below one");
+    }
+
+    /// Property: desire stays in [1, cap] and reacts in the right
+    /// direction for random feedback sequences.
+    #[test]
+    fn prop_af_bounds_and_monotonicity() {
+        use crate::testkit::{forall, F64In, Gen, VecOf};
+        use crate::util::Pcg;
+        struct FbGen;
+        impl Gen<(f64, usize, bool)> for FbGen {
+            fn generate(&self, rng: &mut Pcg) -> (f64, usize, bool) {
+                (rng.f64(), rng.index(17), rng.chance(0.5))
+            }
+        }
+        let gen = VecOf { elem: FbGen, min_len: 1, max_len: 40 };
+        let _ = F64In(0.0, 1.0); // (kept for symmetry with other props)
+        forall(0xAF, &gen, |seq: &Vec<(f64, usize, bool)>| {
+            let mut af = AfState::default();
+            for &(u, a, w) in seq {
+                let before = af.desire;
+                let dec = af.step(fb(u, a, w), DELTA, RHO, CAP);
+                crate::prop_assert!(
+                    (1.0..=CAP as f64 + 1e-9).contains(&af.desire),
+                    "desire {} out of bounds",
+                    af.desire
+                );
+                match dec {
+                    AfDecision::Inefficient => crate::prop_assert!(
+                        af.desire <= before + 1e-12,
+                        "inefficient must not grow"
+                    ),
+                    AfDecision::EfficientSatisfied => crate::prop_assert!(
+                        af.desire + 1e-12 >= before,
+                        "satisfied must not shrink"
+                    ),
+                    AfDecision::EfficientDeprived => crate::prop_assert!(
+                        (af.desire - before.clamp(1.0, CAP as f64)).abs() < 1e-9,
+                        "deprived must hold"
+                    ),
+                    AfDecision::Bootstrap => {}
+                }
+            }
+            Ok(())
+        });
+    }
+}

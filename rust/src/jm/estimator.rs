@@ -1,0 +1,142 @@
+//! Task-characteristic estimation (§5 "Parameterized delay scheduling").
+//!
+//! The paper does not assume oracle task knowledge: "we estimate the
+//! requirements using the measured statistics from the first few
+//! executions of tasks in a stage. We continue to refine these
+//! estimations as more tasks have been measured. We estimate task
+//! processing time as the average processing time of all finished tasks
+//! in the same stage."
+//!
+//! [`StageEstimator`] implements exactly that contract per (job, stage):
+//! until `warmup` samples exist, it returns a prior (scaled from the
+//! task's input size); afterwards the running mean of measured values.
+//! Parades consumes the *estimated* `p` for its τ·p thresholds, so the
+//! scheduler stays semi-clairvoyant even about processing times.
+
+use std::collections::HashMap;
+
+use crate::ids::StageId;
+
+/// Running mean of (p, r) per stage.
+#[derive(Debug, Clone, Default)]
+struct StageStats {
+    n: u64,
+    p_sum: f64,
+    r_sum: f64,
+}
+
+/// Per-job estimator over its stages.
+#[derive(Debug, Default)]
+pub struct StageEstimator {
+    stages: HashMap<StageId, StageStats>,
+    /// Samples needed before trusting the measurement over the prior.
+    warmup: u64,
+    /// Prior processing rate (seconds per MB of input) used pre-warmup.
+    prior_secs_per_mb: f64,
+    /// Prior resource requirement.
+    prior_r: f64,
+}
+
+impl StageEstimator {
+    pub fn new(warmup: u64, prior_secs_per_mb: f64, prior_r: f64) -> Self {
+        StageEstimator {
+            stages: HashMap::new(),
+            warmup: warmup.max(1),
+            prior_secs_per_mb,
+            prior_r,
+        }
+    }
+
+    /// Defaults matching the calibrated workload rates.
+    pub fn standard() -> Self {
+        Self::new(2, 0.3, 0.5)
+    }
+
+    /// Record a finished task's measured processing time and footprint.
+    pub fn record(&mut self, stage: StageId, measured_p: f64, measured_r: f64) {
+        let s = self.stages.entry(stage).or_default();
+        s.n += 1;
+        s.p_sum += measured_p;
+        s.r_sum += measured_r;
+    }
+
+    /// Estimated processing time for a task of `input_bytes` in `stage`.
+    /// Pre-warmup: size-scaled prior. Post-warmup: stage mean (§5 — tasks
+    /// in a stage share characteristics).
+    pub fn estimate_p(&self, stage: StageId, input_bytes: u64) -> f64 {
+        match self.stages.get(&stage) {
+            Some(s) if s.n >= self.warmup => s.p_sum / s.n as f64,
+            _ => (input_bytes as f64 / (1024.0 * 1024.0) * self.prior_secs_per_mb).max(0.5),
+        }
+    }
+
+    /// Estimated resource requirement for `stage`.
+    pub fn estimate_r(&self, stage: StageId) -> f64 {
+        match self.stages.get(&stage) {
+            Some(s) if s.n >= self.warmup => (s.r_sum / s.n as f64).clamp(0.01, 1.0),
+            _ => self.prior_r,
+        }
+    }
+
+    /// Number of measurements for a stage (diagnostics).
+    pub fn samples(&self, stage: StageId) -> u64 {
+        self.stages.get(&stage).map(|s| s.n).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prior_scales_with_input_size_before_warmup() {
+        let e = StageEstimator::new(2, 0.5, 0.4);
+        let small = e.estimate_p(StageId(0), 10 * 1024 * 1024);
+        let large = e.estimate_p(StageId(0), 100 * 1024 * 1024);
+        assert!((small - 5.0).abs() < 1e-9);
+        assert!((large - 50.0).abs() < 1e-9);
+        assert_eq!(e.estimate_r(StageId(0)), 0.4);
+    }
+
+    #[test]
+    fn measurements_take_over_after_warmup() {
+        let mut e = StageEstimator::new(2, 0.5, 0.4);
+        e.record(StageId(1), 20.0, 0.6);
+        // One sample < warmup: still the prior.
+        assert!((e.estimate_p(StageId(1), 1024) - 0.5f64.max(0.5)).abs() < 1e-9);
+        e.record(StageId(1), 30.0, 0.8);
+        assert!((e.estimate_p(StageId(1), 1024) - 25.0).abs() < 1e-9);
+        assert!((e.estimate_r(StageId(1)) - 0.7).abs() < 1e-9);
+        assert_eq!(e.samples(StageId(1)), 2);
+    }
+
+    #[test]
+    fn estimates_refine_with_more_samples() {
+        let mut e = StageEstimator::new(1, 0.5, 0.4);
+        for i in 1..=10 {
+            e.record(StageId(2), i as f64, 0.5);
+        }
+        assert!((e.estimate_p(StageId(2), 0) - 5.5).abs() < 1e-9, "mean of 1..=10");
+    }
+
+    #[test]
+    fn stages_are_independent() {
+        let mut e = StageEstimator::new(1, 0.5, 0.4);
+        e.record(StageId(0), 100.0, 0.9);
+        assert_eq!(e.samples(StageId(1)), 0);
+        assert_eq!(e.estimate_r(StageId(1)), 0.4, "other stage keeps prior");
+    }
+
+    #[test]
+    fn r_estimate_is_clamped() {
+        let mut e = StageEstimator::new(1, 0.5, 0.4);
+        e.record(StageId(0), 1.0, 7.5); // bogus measurement
+        assert_eq!(e.estimate_r(StageId(0)), 1.0);
+    }
+
+    #[test]
+    fn tiny_inputs_floor_at_half_second() {
+        let e = StageEstimator::standard();
+        assert_eq!(e.estimate_p(StageId(0), 1), 0.5);
+    }
+}

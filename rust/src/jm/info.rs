@@ -1,0 +1,367 @@
+//! The job's intermediate information (Fig 4(b), §3.2.1) and its wire
+//! encoding.
+//!
+//! HOUTU replicates, per job, exactly the state needed to *continue* (not
+//! restart) after a JM failure: jobId, the released stages, the
+//! executorList (available executors from all DCs plus JM roles), the
+//! taskMap (which JM owns which task) and the partitionList (output
+//! partition locations reported by finished tasks). The paper measures
+//! these at 30–45 KB for large jobs (Fig 12a) — small enough for
+//! Zookeeper. We serialize with a fixed little-endian layout (no serde in
+//! the image) and measure real encoded sizes for the Fig 12a
+//! reproduction.
+
+use crate::ids::{ContainerId, DcId, JobId, NodeId, StageId, TaskId};
+
+/// Role of a JM replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Primary,
+    SemiActive,
+}
+
+impl Role {
+    fn to_byte(self) -> u8 {
+        match self {
+            Role::Primary => 0,
+            Role::SemiActive => 1,
+        }
+    }
+    fn from_byte(b: u8) -> Result<Role, String> {
+        match b {
+            0 => Ok(Role::Primary),
+            1 => Ok(Role::SemiActive),
+            _ => Err(format!("bad role byte {b}")),
+        }
+    }
+}
+
+/// One executorList entry: a container granted somewhere, plus whether a
+/// JM (and which role) runs in it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExecutorEntry {
+    pub container: ContainerId,
+    pub dc: DcId,
+    pub jm_role: Option<Role>,
+}
+
+/// One partitionList entry: a finished task's output location and size.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PartitionEntry {
+    pub task: TaskId,
+    pub node: NodeId,
+    pub bytes: u64,
+}
+
+/// The replicated intermediate information of one job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntermediateInfo {
+    pub job: JobId,
+    /// Highest released stage per the pJM (stageId in Fig 4b).
+    pub released_stages: Vec<StageId>,
+    pub executor_list: Vec<ExecutorEntry>,
+    /// task -> owning JM's DC.
+    pub task_map: Vec<(TaskId, DcId)>,
+    pub partition_list: Vec<PartitionEntry>,
+}
+
+impl Default for IntermediateInfo {
+    fn default() -> Self {
+        IntermediateInfo {
+            job: JobId(0),
+            released_stages: Vec::new(),
+            executor_list: Vec::new(),
+            task_map: Vec::new(),
+            partition_list: Vec::new(),
+        }
+    }
+}
+
+struct Writer(Vec<u8>);
+
+impl Writer {
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn task(&mut self, t: TaskId) {
+        self.u64(t.job.0);
+        self.u32(t.stage.0);
+        self.u32(t.index);
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!("truncated at {}+{n}/{}", self.pos, self.buf.len()));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn task(&mut self) -> Result<TaskId, String> {
+        Ok(TaskId { job: JobId(self.u64()?), stage: StageId(self.u32()?), index: self.u32()? })
+    }
+}
+
+const MAGIC: u32 = 0x484F5554; // "HOUT"
+const VERSION: u8 = 1;
+
+impl IntermediateInfo {
+    /// Serialize to the replicated wire format.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer(Vec::with_capacity(
+            64 + 20 * self.task_map.len() + 36 * self.partition_list.len(),
+        ));
+        w.u32(MAGIC);
+        w.u8(VERSION);
+        w.u64(self.job.0);
+        w.u32(self.released_stages.len() as u32);
+        for s in &self.released_stages {
+            w.u32(s.0);
+        }
+        w.u32(self.executor_list.len() as u32);
+        for e in &self.executor_list {
+            w.u64(e.container.0);
+            w.u32(e.dc.0 as u32);
+            match e.jm_role {
+                None => w.u8(0xFF),
+                Some(r) => w.u8(r.to_byte()),
+            }
+        }
+        w.u32(self.task_map.len() as u32);
+        for (t, dc) in &self.task_map {
+            w.task(*t);
+            w.u32(dc.0 as u32);
+        }
+        w.u32(self.partition_list.len() as u32);
+        for p in &self.partition_list {
+            w.task(p.task);
+            w.u32(p.node.dc.0 as u32);
+            w.u32(p.node.idx as u32);
+            w.u64(p.bytes);
+        }
+        w.0
+    }
+
+    /// Deserialize; strict — any trailing/truncated bytes are an error.
+    pub fn decode(buf: &[u8]) -> Result<IntermediateInfo, String> {
+        let mut r = Reader { buf, pos: 0 };
+        if r.u32()? != MAGIC {
+            return Err("bad magic".into());
+        }
+        let v = r.u8()?;
+        if v != VERSION {
+            return Err(format!("unsupported version {v}"));
+        }
+        let job = JobId(r.u64()?);
+        let ns = r.u32()? as usize;
+        let mut released_stages = Vec::with_capacity(ns);
+        for _ in 0..ns {
+            released_stages.push(StageId(r.u32()?));
+        }
+        let ne = r.u32()? as usize;
+        let mut executor_list = Vec::with_capacity(ne);
+        for _ in 0..ne {
+            let container = ContainerId(r.u64()?);
+            let dc = DcId(r.u32()? as usize);
+            let role = match r.u8()? {
+                0xFF => None,
+                b => Some(Role::from_byte(b)?),
+            };
+            executor_list.push(ExecutorEntry { container, dc, jm_role: role });
+        }
+        let nt = r.u32()? as usize;
+        let mut task_map = Vec::with_capacity(nt);
+        for _ in 0..nt {
+            let t = r.task()?;
+            task_map.push((t, DcId(r.u32()? as usize)));
+        }
+        let np = r.u32()? as usize;
+        let mut partition_list = Vec::with_capacity(np);
+        for _ in 0..np {
+            let task = r.task()?;
+            let dc = DcId(r.u32()? as usize);
+            let idx = r.u32()? as usize;
+            let bytes = r.u64()?;
+            partition_list.push(PartitionEntry { task, node: NodeId { dc, idx }, bytes });
+        }
+        if r.pos != buf.len() {
+            return Err(format!("{} trailing bytes", buf.len() - r.pos));
+        }
+        Ok(IntermediateInfo { job, released_stages, executor_list, task_map, partition_list })
+    }
+
+    /// Encoded size in bytes (what Fig 12a plots).
+    pub fn encoded_size(&self) -> usize {
+        13 + 4
+            + 4 * self.released_stages.len()
+            + 4
+            + 13 * self.executor_list.len()
+            + 4
+            + 20 * self.task_map.len()
+            + 4
+            + 32 * self.partition_list.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> IntermediateInfo {
+        let job = JobId(3);
+        IntermediateInfo {
+            job,
+            released_stages: vec![StageId(0), StageId(1)],
+            executor_list: vec![
+                ExecutorEntry { container: ContainerId(5), dc: DcId(0), jm_role: Some(Role::Primary) },
+                ExecutorEntry { container: ContainerId(9), dc: DcId(2), jm_role: Some(Role::SemiActive) },
+                ExecutorEntry { container: ContainerId(11), dc: DcId(1), jm_role: None },
+            ],
+            task_map: vec![
+                (TaskId { job, stage: StageId(0), index: 0 }, DcId(0)),
+                (TaskId { job, stage: StageId(0), index: 1 }, DcId(3)),
+            ],
+            partition_list: vec![PartitionEntry {
+                task: TaskId { job, stage: StageId(0), index: 0 },
+                node: NodeId { dc: DcId(0), idx: 2 },
+                bytes: 123456,
+            }],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let info = sample();
+        let bytes = info.encode();
+        let back = IntermediateInfo::decode(&bytes).unwrap();
+        assert_eq!(info, back);
+    }
+
+    #[test]
+    fn encoded_size_matches_actual() {
+        let info = sample();
+        assert_eq!(info.encode().len(), info.encoded_size());
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let info = sample();
+        let mut bytes = info.encode();
+        assert!(IntermediateInfo::decode(&bytes[..bytes.len() - 1]).is_err(), "truncated");
+        bytes.push(0);
+        assert!(IntermediateInfo::decode(&bytes).is_err(), "trailing");
+        let mut bad = info.encode();
+        bad[0] ^= 0xFF;
+        assert!(IntermediateInfo::decode(&bad).is_err(), "bad magic");
+        let mut badv = info.encode();
+        badv[4] = 99;
+        assert!(IntermediateInfo::decode(&badv).is_err(), "bad version");
+    }
+
+    #[test]
+    fn empty_info_roundtrips() {
+        let info = IntermediateInfo { job: JobId(0), ..Default::default() };
+        assert_eq!(IntermediateInfo::decode(&info.encode()).unwrap(), info);
+    }
+
+    /// Property: arbitrary intermediate info round-trips exactly.
+    #[test]
+    fn prop_roundtrip_random() {
+        use crate::testkit::{forall, Gen};
+        use crate::util::Pcg;
+        struct InfoGen;
+        impl Gen<IntermediateInfo> for InfoGen {
+            fn generate(&self, rng: &mut Pcg) -> IntermediateInfo {
+                let job = JobId(rng.below(1000));
+                let tid = |rng: &mut Pcg| TaskId {
+                    job,
+                    stage: StageId(rng.below(8) as u32),
+                    index: rng.below(200) as u32,
+                };
+                IntermediateInfo {
+                    job,
+                    released_stages: (0..rng.index(6)).map(|i| StageId(i as u32)).collect(),
+                    executor_list: (0..rng.index(70))
+                        .map(|_| ExecutorEntry {
+                            container: ContainerId(rng.below(1 << 40)),
+                            dc: DcId(rng.index(4)),
+                            jm_role: match rng.index(3) {
+                                0 => None,
+                                1 => Some(Role::Primary),
+                                _ => Some(Role::SemiActive),
+                            },
+                        })
+                        .collect(),
+                    task_map: (0..rng.index(150)).map(|_| { let t = tid(rng); (t, DcId(rng.index(4))) }).collect(),
+                    partition_list: (0..rng.index(150))
+                        .map(|_| PartitionEntry {
+                            task: tid(rng),
+                            node: NodeId { dc: DcId(rng.index(4)), idx: rng.index(5) },
+                            bytes: rng.next_u64() >> 20,
+                        })
+                        .collect(),
+                }
+            }
+        }
+        forall(0x1F0, &InfoGen, |info: &IntermediateInfo| {
+            let bytes = info.encode();
+            crate::prop_assert!(bytes.len() == info.encoded_size(), "size prediction");
+            let back = IntermediateInfo::decode(&bytes).map_err(|e| e)?;
+            crate::prop_assert!(&back == info, "roundtrip mismatch");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn large_job_info_is_tens_of_kb() {
+        // Shape check against Fig 12a: a large job (hundreds of tasks, 64
+        // executors) encodes to the tens-of-KB range, small enough for zk.
+        let job = JobId(1);
+        let tid = |s: u32, i: u32| TaskId { job, stage: StageId(s), index: i };
+        let info = IntermediateInfo {
+            job,
+            released_stages: (0..7).map(StageId).collect(),
+            executor_list: (0..64)
+                .map(|i| ExecutorEntry {
+                    container: ContainerId(i),
+                    dc: DcId((i % 4) as usize),
+                    jm_role: if i < 4 { Some(Role::SemiActive) } else { None },
+                })
+                .collect(),
+            task_map: (0..7).flat_map(|s| (0..80).map(move |i| (tid(s, i), DcId(0)))).collect(),
+            partition_list: (0..7)
+                .flat_map(|s| {
+                    (0..80).map(move |i| PartitionEntry {
+                        task: tid(s, i),
+                        node: NodeId { dc: DcId(0), idx: 0 },
+                        bytes: 1,
+                    })
+                })
+                .collect(),
+        };
+        let kb = info.encode().len() as f64 / 1024.0;
+        assert!((10.0..100.0).contains(&kb), "{kb} KB");
+    }
+}

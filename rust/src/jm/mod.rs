@@ -1,0 +1,356 @@
+//! The replicated job manager (§3.2): one JM per (job, data center).
+//!
+//! The *primary* JM (pJM) decides the initial cross-DC task assignment
+//! (proportional to input data per DC) and coordinates stage releases;
+//! every JM — primary or semi-active — *individually* manages its own
+//! sub-job: it requests containers from its local master via [`af`],
+//! assigns tasks via [`parades`], and participates in cross-DC work
+//! stealing. The replicated [`info::IntermediateInfo`] lets any replica
+//! take over and *continue* the job after a failure.
+//!
+//! This module is deliberately simulator-agnostic: the deployment layer
+//! (`deploy/`) owns the event loop and calls into these methods, which
+//! makes every scheduling decision unit- and property-testable.
+
+pub mod af;
+pub mod estimator;
+pub mod info;
+pub mod parades;
+
+use std::collections::HashMap;
+
+use crate::ids::{ContainerId, DcId, JmId, TaskId};
+
+pub use af::{AfDecision, AfState, PeriodFeedback};
+pub use estimator::StageEstimator;
+pub use info::{ExecutorEntry, IntermediateInfo, PartitionEntry, Role};
+pub use parades::{age_queue, on_update, Assignment, ContainerView, Locality, ParadesParams, WaitingTask};
+
+/// Per-JM counters (Fig 9 / Fig 12b reporting).
+#[derive(Debug, Default, Clone)]
+pub struct JmStats {
+    pub assigned_node_local: u64,
+    pub assigned_rack_local: u64,
+    pub assigned_any: u64,
+    pub tasks_stolen_in: u64,
+    pub tasks_stolen_out: u64,
+    pub steal_requests_sent: u64,
+}
+
+/// One job manager replica.
+#[derive(Debug)]
+pub struct JobManager {
+    pub id: JmId,
+    pub role: Role,
+    /// Container hosting this JM process itself.
+    pub container: ContainerId,
+    /// Containers granted by the local master for task execution.
+    pub executors: Vec<ContainerId>,
+    /// Released tasks waiting for assignment in this DC.
+    pub queue: Vec<WaitingTask>,
+    /// Running tasks -> container.
+    pub running: HashMap<TaskId, ContainerId>,
+    pub af: AfState,
+    /// Time (secs) of the last UPDATE event — Algorithm 2's aging clock.
+    last_update_secs: f64,
+    /// Whether any task waited at some point during the current period
+    /// (Af's "no waiting tasks" input).
+    had_waiting_this_period: bool,
+    pub stats: JmStats,
+    pub alive: bool,
+}
+
+impl JobManager {
+    pub fn new(id: JmId, role: Role, container: ContainerId, now_secs: f64) -> Self {
+        JobManager {
+            id,
+            role,
+            container,
+            executors: Vec::new(),
+            queue: Vec::new(),
+            running: HashMap::new(),
+            af: AfState::default(),
+            last_update_secs: now_secs,
+            had_waiting_this_period: false,
+            stats: JmStats::default(),
+            alive: true,
+        }
+    }
+
+    pub fn dc(&self) -> DcId {
+        self.id.dc
+    }
+
+    /// Add released tasks to the waiting queue (initial assignment or
+    /// re-queue after failure). Waits start at zero.
+    pub fn enqueue(&mut self, tasks: impl IntoIterator<Item = WaitingTask>) {
+        self.queue.extend(tasks);
+        if !self.queue.is_empty() {
+            self.had_waiting_this_period = true;
+        }
+    }
+
+    pub fn has_waiting(&self) -> bool {
+        !self.queue.is_empty()
+    }
+
+    /// The UPDATE event (Algorithm 2): a container reported free capacity.
+    /// Ages the queue by the time since the last event, then matches.
+    /// Returns assignments the caller must commit (start tasks, move
+    /// queue entries to running).
+    pub fn handle_update(
+        &mut self,
+        n: ContainerView,
+        now_secs: f64,
+        params: ParadesParams,
+    ) -> Vec<Assignment> {
+        let elapsed = (now_secs - self.last_update_secs).max(0.0);
+        age_queue(&mut self.queue, elapsed);
+        self.last_update_secs = now_secs;
+        if !self.queue.is_empty() {
+            self.had_waiting_this_period = true;
+        }
+        let picks = on_update(&mut self.queue, n, params, false);
+        for a in &picks {
+            match a.locality {
+                Locality::NodeLocal => self.stats.assigned_node_local += 1,
+                Locality::RackLocal => self.stats.assigned_rack_local += 1,
+                Locality::Any => self.stats.assigned_any += 1,
+                Locality::Stolen => unreachable!("local update can't steal"),
+            }
+            self.running.insert(a.task.id, a.container);
+        }
+        picks
+    }
+
+    /// ONRECEIVESTEAL (Algorithm 2 line 15): a thief JM of the same job
+    /// offers a remote container. Only long-waiting tasks leak out; the
+    /// caller transfers returned tasks to the thief.
+    pub fn handle_steal_request(
+        &mut self,
+        thief_container: ContainerView,
+        now_secs: f64,
+        params: ParadesParams,
+    ) -> Vec<Assignment> {
+        let elapsed = (now_secs - self.last_update_secs).max(0.0);
+        age_queue(&mut self.queue, elapsed);
+        self.last_update_secs = now_secs;
+        let picks = on_update(&mut self.queue, thief_container, params, true);
+        self.stats.tasks_stolen_out += picks.len() as u64;
+        picks
+    }
+
+    /// The thief side: record tasks stolen from a victim as running here.
+    pub fn accept_stolen(&mut self, assignments: &[Assignment]) {
+        for a in assignments {
+            self.running.insert(a.task.id, a.container);
+        }
+        self.stats.tasks_stolen_in += assignments.len() as u64;
+    }
+
+    /// Task finished on a container.
+    pub fn task_done(&mut self, t: TaskId) -> Option<ContainerId> {
+        self.running.remove(&t)
+    }
+
+    /// A container died: forget it and return the tasks to re-queue
+    /// (caller re-enqueues with fresh waits, possibly on another JM).
+    pub fn container_lost(&mut self, cid: ContainerId) -> Vec<TaskId> {
+        self.executors.retain(|&c| c != cid);
+        let mut lost: Vec<TaskId> =
+            self.running.iter().filter(|(_, &c)| c == cid).map(|(&t, _)| t).collect();
+        lost.sort_unstable(); // HashMap order must not leak into event order
+        for t in &lost {
+            self.running.remove(t);
+        }
+        lost
+    }
+
+    /// Period boundary: compute Af feedback, advance desire, and return
+    /// the new request to push to the master. `utilization` is the
+    /// cluster-measured average over this JM's executors.
+    pub fn period_tick(
+        &mut self,
+        utilization: f64,
+        allocation: usize,
+        delta: f64,
+        rho: f64,
+        capacity: usize,
+    ) -> (usize, AfDecision) {
+        let fb = PeriodFeedback {
+            utilization,
+            allocation,
+            had_waiting_tasks: self.had_waiting_this_period || !self.queue.is_empty(),
+        };
+        let decision = self.af.step(fb, delta, rho, capacity);
+        self.had_waiting_this_period = !self.queue.is_empty();
+        (self.af.request(), decision)
+    }
+
+    /// Containers this JM would give back when its desire dropped below
+    /// its allocation: the idle ones first (§5 "aggressively kill the
+    /// several containers which firstly become free").
+    pub fn surplus_idle_containers(
+        &self,
+        target: usize,
+        container_free: impl Fn(ContainerId) -> f64,
+    ) -> Vec<ContainerId> {
+        if self.executors.len() <= target {
+            return Vec::new();
+        }
+        let mut idle: Vec<ContainerId> = self
+            .executors
+            .iter()
+            .copied()
+            .filter(|&c| container_free(c) >= 1.0 - 1e-9)
+            .collect();
+        idle.sort_unstable();
+        idle.truncate(self.executors.len() - target);
+        idle
+    }
+
+    /// Snapshot this JM's contribution to the executorList.
+    pub fn executor_entries(&self) -> Vec<ExecutorEntry> {
+        let mut out = vec![ExecutorEntry {
+            container: self.container,
+            dc: self.dc(),
+            jm_role: Some(self.role),
+        }];
+        out.extend(self.executors.iter().map(|&c| ExecutorEntry {
+            container: c,
+            dc: self.dc(),
+            jm_role: None,
+        }));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ids::{JobId, NodeId, StageId};
+
+    const PARAMS: ParadesParams = ParadesParams { delta: 0.7, tau: 0.5 };
+
+    fn jm_at(dc: usize) -> JobManager {
+        JobManager::new(
+            JmId { job: JobId(1), dc: DcId(dc) },
+            if dc == 0 { Role::Primary } else { Role::SemiActive },
+            ContainerId(100 + dc as u64),
+            0.0,
+        )
+    }
+
+    fn wt(i: u32, pref: Option<NodeId>) -> WaitingTask {
+        WaitingTask {
+            id: TaskId { job: JobId(1), stage: StageId(0), index: i },
+            r: 0.5,
+            p: 4.0,
+            input_bytes: 1,
+            pref_node: pref,
+            pref_rack: pref.map(|n| (n.dc, n.idx % 2)),
+            wait: 0.0,
+        }
+    }
+
+    fn view(dc: usize, idx: usize, free: f64) -> ContainerView {
+        ContainerView {
+            id: ContainerId(7),
+            node: NodeId { dc: DcId(dc), idx },
+            rack: idx % 2,
+            free,
+        }
+    }
+
+    #[test]
+    fn update_ages_then_assigns_and_tracks_running() {
+        let mut jm = jm_at(0);
+        jm.enqueue([wt(0, Some(NodeId { dc: DcId(0), idx: 1 }))]);
+        // First update at t=3 on the wrong node: task ages to 3 s but
+        // 3 < tau*p=2? no: tau*p = 2 -> rack threshold passed; wrong rack
+        // though (node 0 rack 0 vs pref rack 1). Any needs 4 s.
+        let picks = jm.handle_update(view(0, 0, 1.0), 3.0, PARAMS);
+        assert!(picks.is_empty());
+        // t=5: wait=5 ≥ 2*tau*p=4 -> any placement.
+        let picks = jm.handle_update(view(0, 0, 1.0), 5.0, PARAMS);
+        assert_eq!(picks.len(), 1);
+        assert_eq!(jm.running.len(), 1);
+        assert!(!jm.has_waiting());
+        assert_eq!(jm.stats.assigned_any, 1);
+        // Completion clears it.
+        let c = jm.task_done(picks[0].task.id).unwrap();
+        assert_eq!(c, ContainerId(7));
+        assert!(jm.running.is_empty());
+    }
+
+    #[test]
+    fn steal_roundtrip_between_jms() {
+        let mut victim = jm_at(1);
+        let mut thief = jm_at(2);
+        let pref = NodeId { dc: DcId(1), idx: 0 };
+        victim.enqueue([wt(0, Some(pref)), wt(1, Some(pref))]);
+        // Long wait so the steal gate (2*tau*p = 4 s) passes.
+        let picks = victim.handle_steal_request(view(2, 0, 1.0), 10.0, PARAMS);
+        assert_eq!(picks.len(), 2);
+        assert_eq!(victim.stats.tasks_stolen_out, 2);
+        assert_eq!(victim.queue.len(), 0);
+        thief.accept_stolen(&picks);
+        assert_eq!(thief.stats.tasks_stolen_in, 2);
+        assert_eq!(thief.running.len(), 2);
+    }
+
+    #[test]
+    fn container_lost_requeues_tasks() {
+        let mut jm = jm_at(0);
+        jm.executors = vec![ContainerId(7), ContainerId(8)];
+        jm.enqueue([wt(0, None)]);
+        let picks = jm.handle_update(view(0, 0, 1.0), 100.0, PARAMS);
+        assert_eq!(picks.len(), 1);
+        let lost = jm.container_lost(ContainerId(7));
+        assert_eq!(lost, vec![picks[0].task.id]);
+        assert_eq!(jm.executors, vec![ContainerId(8)]);
+        assert!(jm.running.is_empty());
+    }
+
+    #[test]
+    fn period_tick_tracks_waiting_flag() {
+        let mut jm = jm_at(0);
+        // Bootstrap.
+        let (req, dec) = jm.period_tick(0.0, 0, 0.7, 1.5, 16);
+        assert_eq!((req, dec), (1, AfDecision::Bootstrap));
+        // Tasks queued during the period -> not inefficient even if idle.
+        jm.enqueue([wt(0, None)]);
+        let picks = jm.handle_update(view(0, 0, 1.0), 100.0, PARAMS);
+        assert_eq!(picks.len(), 1);
+        let (_, dec) = jm.period_tick(0.1, 1, 0.7, 1.5, 16);
+        assert_ne!(dec, AfDecision::Inefficient, "waiting happened this period");
+        // Next period: nothing waited, idle -> inefficient.
+        let (_, dec) = jm.period_tick(0.1, 1, 0.7, 1.5, 16);
+        assert_eq!(dec, AfDecision::Inefficient);
+    }
+
+    #[test]
+    fn surplus_returns_only_idle_containers() {
+        let mut jm = jm_at(0);
+        jm.executors = vec![ContainerId(1), ContainerId(2), ContainerId(3), ContainerId(4)];
+        // Containers 1 and 3 are idle, 2 and 4 busy.
+        let free = |c: ContainerId| if c.0 % 2 == 1 { 1.0 } else { 0.4 };
+        let surplus = jm.surplus_idle_containers(1, free);
+        assert_eq!(surplus, vec![ContainerId(1), ContainerId(3)]);
+        // Target met already -> nothing.
+        assert!(jm.surplus_idle_containers(4, free).is_empty());
+        // Can't return busy ones even if target is 0.
+        assert_eq!(jm.surplus_idle_containers(0, free).len(), 2);
+    }
+
+    #[test]
+    fn executor_entries_include_self_with_role() {
+        let mut jm = jm_at(3);
+        jm.executors = vec![ContainerId(50)];
+        let entries = jm.executor_entries();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].jm_role, Some(Role::SemiActive));
+        assert_eq!(entries[1].jm_role, None);
+        assert!(entries.iter().all(|e| e.dc == DcId(3)));
+    }
+}

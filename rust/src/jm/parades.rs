@@ -1,0 +1,428 @@
+//! Parades — Parameterized delay scheduling with work stealing
+//! (Algorithm 2, §4.3).
+//!
+//! Applied by every job manager on each container-update event. Extends
+//! classic delay scheduling [50] in two ways:
+//!
+//! 1. **Parameterized thresholds**: a task may relax from node-local to
+//!    rack-local after waiting `τ·p` (its own processing time scales the
+//!    patience — long tasks can afford to wait for locality), and to
+//!    *any* placement after `2τ·p` provided the container is nearly empty
+//!    (`free ≥ 1 − δ`, which with the assumption `r + δ ≤ 1` guarantees
+//!    fit).
+//! 2. **Work stealing**: a JM whose queue is empty turns thief and offers
+//!    its free container to the other JMs of the same job; each victim
+//!    treats the offer as an UPDATE event on a remote container — only
+//!    tasks that already waited past `2τ·p` leak across DCs, so steals
+//!    happen only after the thief exhausted its own work (§6.3).
+//!
+//! This module is pure scheduling logic over a waiting queue and a
+//! container view — no simulator types — so the invariants (no
+//! over-commit, threshold gating, conservation) are directly
+//! property-testable.
+
+use crate::ids::{ContainerId, DcId, NodeId, TaskId};
+
+/// A released-but-unassigned task as the JM sees it.
+#[derive(Debug, Clone)]
+pub struct WaitingTask {
+    pub id: TaskId,
+    /// Peak resource requirement (normalized).
+    pub r: f64,
+    /// Known processing time (tasks in a stage share characteristics; the
+    /// implementation estimates from finished siblings, §5).
+    pub p: f64,
+    pub input_bytes: u64,
+    /// Preferred node (input block location); None = no locality
+    /// preference (shuffle task whose inputs are spread out).
+    pub pref_node: Option<NodeId>,
+    /// Preferred rack within the preferred node's DC.
+    pub pref_rack: Option<(DcId, usize)>,
+    /// Accumulated waiting time (seconds since release / last failure).
+    pub wait: f64,
+}
+
+/// The free container as seen at an UPDATE event (Algorithm 2's `n`).
+#[derive(Debug, Clone, Copy)]
+pub struct ContainerView {
+    pub id: ContainerId,
+    pub node: NodeId,
+    pub rack: usize,
+    pub free: f64,
+}
+
+/// How a task matched its container.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Locality {
+    NodeLocal,
+    RackLocal,
+    Any,
+    /// Assigned to a *remote* JM's container through a steal.
+    Stolen,
+}
+
+/// One assignment decided by Parades.
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    pub task: WaitingTask,
+    pub container: ContainerId,
+    pub locality: Locality,
+}
+
+/// Tunables lifted from the config.
+#[derive(Debug, Clone, Copy)]
+pub struct ParadesParams {
+    pub delta: f64,
+    pub tau: f64,
+}
+
+/// Add `elapsed` seconds of waiting to every queued task (Algorithm 2
+/// line 2: "increase t_ij.wait by the time since last event UPDATE").
+pub fn age_queue(queue: &mut [WaitingTask], elapsed: f64) {
+    debug_assert!(elapsed >= 0.0);
+    for t in queue {
+        t.wait += elapsed;
+    }
+}
+
+fn fits(free: f64, r: f64) -> bool {
+    free + 1e-9 >= r
+}
+
+/// The task-assignment procedure of ONUPDATE (lines 5–14): repeatedly
+/// match the free container against the queue until nothing fits.
+/// Matched tasks are removed from `queue` and returned with their
+/// locality level; `steal` marks assignments made on behalf of a remote
+/// thief (ONRECEIVESTEAL), which go through the *any* clause only.
+pub fn on_update(
+    queue: &mut Vec<WaitingTask>,
+    n: ContainerView,
+    params: ParadesParams,
+    steal: bool,
+) -> Vec<Assignment> {
+    let mut free = n.free;
+    let mut out = Vec::new();
+    loop {
+        let pick = pick_one(queue, n, free, params, steal);
+        let Some((idx, locality)) = pick else { break };
+        let task = queue.swap_remove(idx);
+        free -= task.r;
+        out.push(Assignment { task, container: n.id, locality });
+        if free <= 1e-9 {
+            break;
+        }
+    }
+    out
+}
+
+/// One round of the matching cascade. Returns (queue index, locality).
+/// Ties break toward the longest-waiting task, then smallest id, for
+/// determinism and FIFO fairness.
+fn pick_one(
+    queue: &[WaitingTask],
+    n: ContainerView,
+    free: f64,
+    params: ParadesParams,
+    steal: bool,
+) -> Option<(usize, Locality)> {
+    let better = |a: (f64, TaskId), b: (f64, TaskId)| -> bool {
+        // Longer wait wins; tie -> smaller TaskId.
+        a.0 > b.0 + 1e-12 || ((a.0 - b.0).abs() <= 1e-12 && a.1 < b.1)
+    };
+    if !steal {
+        // 1. Node-local.
+        let mut best: Option<(usize, f64, TaskId)> = None;
+        for (i, t) in queue.iter().enumerate() {
+            if t.pref_node == Some(n.node) && fits(free, t.r) {
+                let key = (t.wait, t.id);
+                if best.is_none() || better(key, (best.unwrap().1, best.unwrap().2)) {
+                    best = Some((i, t.wait, t.id));
+                }
+            }
+        }
+        if let Some((i, _, _)) = best {
+            return Some((i, Locality::NodeLocal));
+        }
+        // 2. Rack-local, gated by wait >= tau * p.
+        let mut best: Option<(usize, f64, TaskId)> = None;
+        for (i, t) in queue.iter().enumerate() {
+            let rack_match = t.pref_rack == Some((n.node.dc, n.rack));
+            if rack_match && fits(free, t.r) && t.wait + 1e-12 >= params.tau * t.p {
+                let key = (t.wait, t.id);
+                if best.is_none() || better(key, (best.unwrap().1, best.unwrap().2)) {
+                    best = Some((i, t.wait, t.id));
+                }
+            }
+        }
+        if let Some((i, _, _)) = best {
+            return Some((i, Locality::RackLocal));
+        }
+    }
+    // 3. Any placement: wait >= 2 tau p AND container nearly free
+    //    (free >= 1 - delta). For steals this is the only clause.
+    if free + 1e-9 >= 1.0 - params.delta {
+        let mut best: Option<(usize, f64, TaskId)> = None;
+        for (i, t) in queue.iter().enumerate() {
+            if fits(free, t.r) && t.wait + 1e-12 >= 2.0 * params.tau * t.p {
+                let key = (t.wait, t.id);
+                if best.is_none() || better(key, (best.unwrap().1, best.unwrap().2)) {
+                    best = Some((i, t.wait, t.id));
+                }
+            }
+        }
+        if let Some((i, _, _)) = best {
+            return Some((i, if steal { Locality::Stolen } else { Locality::Any }));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ids::{JobId, StageId};
+
+    const PARAMS: ParadesParams = ParadesParams { delta: 0.7, tau: 0.5 };
+
+    fn tid(i: u32) -> TaskId {
+        TaskId { job: JobId(1), stage: StageId(0), index: i }
+    }
+
+    fn node(dc: usize, idx: usize) -> NodeId {
+        NodeId { dc: DcId(dc), idx }
+    }
+
+    fn task(i: u32, r: f64, p: f64, pref: Option<NodeId>, wait: f64) -> WaitingTask {
+        WaitingTask {
+            id: tid(i),
+            r,
+            p,
+            input_bytes: 1 << 20,
+            pref_node: pref,
+            pref_rack: pref.map(|nd| (nd.dc, nd.idx % 2)),
+            wait,
+        }
+    }
+
+    fn container(dc: usize, idx: usize, free: f64) -> ContainerView {
+        ContainerView { id: ContainerId(9), node: node(dc, idx), rack: idx % 2, free }
+    }
+
+    #[test]
+    fn node_local_assigned_immediately() {
+        let mut q = vec![task(0, 0.5, 10.0, Some(node(0, 0)), 0.0)];
+        let picks = on_update(&mut q, container(0, 0, 1.0), PARAMS, false);
+        assert_eq!(picks.len(), 1);
+        assert_eq!(picks[0].locality, Locality::NodeLocal);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn rack_local_waits_for_tau_p() {
+        // Task prefers node 0; container is node 2, same rack (both even).
+        let mk = |wait| vec![task(0, 0.5, 10.0, Some(node(0, 0)), wait)];
+        // tau*p = 5 s: below -> refuse rack-local.
+        let mut q = mk(4.9);
+        assert!(on_update(&mut q, container(0, 2, 1.0), PARAMS, false).is_empty());
+        // Past the threshold -> rack-local.
+        let mut q = mk(5.1);
+        let picks = on_update(&mut q, container(0, 2, 1.0), PARAMS, false);
+        assert_eq!(picks[0].locality, Locality::RackLocal);
+    }
+
+    #[test]
+    fn any_placement_needs_double_threshold_and_empty_container() {
+        // Container in a different DC & rack entirely.
+        let mk = |wait| vec![task(0, 0.2, 10.0, Some(node(0, 0)), wait)];
+        let mut q = mk(9.0); // < 2*tau*p = 10
+        assert!(on_update(&mut q, container(1, 1, 1.0), PARAMS, false).is_empty());
+        let mut q = mk(10.5);
+        let picks = on_update(&mut q, container(1, 1, 1.0), PARAMS, false);
+        assert_eq!(picks[0].locality, Locality::Any);
+        // Same wait but container too full: free < 1 - delta = 0.3.
+        let mut q = mk(10.5);
+        assert!(on_update(&mut q, container(1, 1, 0.25), PARAMS, false).is_empty());
+    }
+
+    #[test]
+    fn no_preference_tasks_use_any_clause() {
+        // Shuffle task (no pref): scheduled via the any clause once waited.
+        let mut q = vec![WaitingTask {
+            id: tid(0),
+            r: 0.3,
+            p: 2.0,
+            input_bytes: 0,
+            pref_node: None,
+            pref_rack: None,
+            wait: 2.1, // 2*tau*p = 2.0
+        }];
+        let picks = on_update(&mut q, container(3, 1, 1.0), PARAMS, false);
+        assert_eq!(picks.len(), 1);
+        assert_eq!(picks[0].locality, Locality::Any);
+    }
+
+    #[test]
+    fn packs_multiple_tasks_until_full() {
+        let mut q = vec![
+            task(0, 0.4, 10.0, Some(node(0, 0)), 0.0),
+            task(1, 0.4, 10.0, Some(node(0, 0)), 0.0),
+            task(2, 0.4, 10.0, Some(node(0, 0)), 0.0),
+        ];
+        let picks = on_update(&mut q, container(0, 0, 1.0), PARAMS, false);
+        assert_eq!(picks.len(), 2, "only 2×0.4 fit");
+        assert_eq!(q.len(), 1);
+        let total: f64 = picks.iter().map(|a| a.task.r).sum();
+        assert!(total <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn longest_waiting_wins_ties_deterministic() {
+        let mut q = vec![
+            task(5, 0.5, 10.0, Some(node(0, 0)), 3.0),
+            task(2, 0.5, 10.0, Some(node(0, 0)), 8.0),
+            task(9, 0.5, 10.0, Some(node(0, 0)), 8.0),
+        ];
+        let picks = on_update(&mut q, container(0, 0, 1.0), PARAMS, false);
+        assert_eq!(picks[0].task.id, tid(2), "longest wait, smallest id first");
+        assert_eq!(picks[1].task.id, tid(9));
+    }
+
+    #[test]
+    fn steal_only_takes_long_waiting_tasks() {
+        // Victim queue: one fresh node-local task, one long-waiting task.
+        let mut q = vec![
+            task(0, 0.3, 10.0, Some(node(0, 0)), 0.5),
+            task(1, 0.3, 10.0, Some(node(0, 1)), 11.0), // > 2*tau*p
+        ];
+        // Thief's container is in DC 2 — steal path.
+        let picks = on_update(&mut q, container(2, 0, 1.0), PARAMS, true);
+        assert_eq!(picks.len(), 1);
+        assert_eq!(picks[0].task.id, tid(1));
+        assert_eq!(picks[0].locality, Locality::Stolen);
+        assert_eq!(q.len(), 1, "fresh task stays home");
+    }
+
+    #[test]
+    fn steal_ignores_node_and_rack_clauses() {
+        // Even a would-be node-local match must pass the 2τp gate when the
+        // update is a steal (the thief's container can never be local —
+        // guard against id collisions across DCs).
+        let mut q = vec![task(0, 0.3, 10.0, Some(node(2, 0)), 0.0)];
+        let picks = on_update(&mut q, container(2, 0, 1.0), PARAMS, true);
+        assert!(picks.is_empty());
+    }
+
+    #[test]
+    fn aging_accumulates() {
+        let mut q = vec![task(0, 0.5, 10.0, None, 0.0), task(1, 0.5, 10.0, None, 2.0)];
+        age_queue(&mut q, 3.0);
+        assert_eq!(q[0].wait, 3.0);
+        assert_eq!(q[1].wait, 5.0);
+    }
+
+    /// Property: over random queues/containers, Parades (1) never
+    /// over-commits the container, (2) conserves tasks, (3) every
+    /// non-node-local assignment satisfies its waiting-time gate, and
+    /// (4) the any-clause only fires on nearly-free containers.
+    #[test]
+    fn prop_parades_invariants() {
+        use crate::testkit::{forall_cases, Gen};
+        use crate::util::Pcg;
+
+        #[derive(Clone, Debug)]
+        struct Case {
+            tasks: Vec<WaitingTask>,
+            n: ContainerView,
+            steal: bool,
+        }
+        struct CaseGen;
+        impl Gen<Case> for CaseGen {
+            fn generate(&self, rng: &mut Pcg) -> Case {
+                let ntasks = rng.index(12);
+                let tasks = (0..ntasks)
+                    .map(|i| {
+                        let pref = if rng.chance(0.7) {
+                            Some(NodeId { dc: DcId(rng.index(3)), idx: rng.index(4) })
+                        } else {
+                            None
+                        };
+                        WaitingTask {
+                            id: TaskId { job: JobId(1), stage: StageId(0), index: i as u32 },
+                            r: {
+                                let hi = 0.3 + rng.f64() * 0.65;
+                                rng.uniform(0.05, hi)
+                            },
+                            p: rng.uniform(0.5, 30.0),
+                            input_bytes: 1,
+                            pref_node: pref,
+                            pref_rack: pref.map(|nd| (nd.dc, nd.idx % 2)),
+                            wait: rng.uniform(0.0, 40.0),
+                        }
+                    })
+                    .collect();
+                let nd = NodeId { dc: DcId(rng.index(3)), idx: rng.index(4) };
+                Case {
+                    tasks,
+                    n: ContainerView {
+                        id: ContainerId(1),
+                        node: nd,
+                        rack: nd.idx % 2,
+                        free: rng.uniform(0.0, 1.0),
+                    },
+                    steal: rng.chance(0.3),
+                }
+            }
+        }
+        forall_cases(0x9A2A, 512, &CaseGen, |case: &Case| {
+            let mut q = case.tasks.clone();
+            let before = q.len();
+            let picks = on_update(&mut q, case.n, PARAMS, case.steal);
+            let committed: f64 = picks.iter().map(|a| a.task.r).sum();
+            crate::prop_assert!(
+                committed <= case.n.free + 1e-6,
+                "over-commit: {committed} > free {}",
+                case.n.free
+            );
+            crate::prop_assert!(q.len() + picks.len() == before, "task conservation");
+            for a in &picks {
+                match a.locality {
+                    Locality::NodeLocal => {
+                        crate::prop_assert!(
+                            a.task.pref_node == Some(case.n.node),
+                            "node-local mismatch"
+                        );
+                        crate::prop_assert!(!case.steal, "steal can't be node-local");
+                    }
+                    Locality::RackLocal => crate::prop_assert!(
+                        a.task.wait >= PARAMS.tau * a.task.p - 1e-9,
+                        "rack gate violated"
+                    ),
+                    Locality::Any | Locality::Stolen => {
+                        crate::prop_assert!(
+                            a.task.wait >= 2.0 * PARAMS.tau * a.task.p - 1e-9,
+                            "any gate violated"
+                        );
+                    }
+                }
+                crate::prop_assert!(
+                    (a.locality == Locality::Stolen) == case.steal,
+                    "steal labeling"
+                );
+            }
+            // The any clause requires a nearly-free container at pick time;
+            // the *first* such pick must satisfy it w.r.t. the original free.
+            if let Some(first_any) = picks
+                .iter()
+                .position(|a| matches!(a.locality, Locality::Any | Locality::Stolen))
+            {
+                let free_before: f64 =
+                    case.n.free - picks[..first_any].iter().map(|a| a.task.r).sum::<f64>();
+                crate::prop_assert!(
+                    free_before + 1e-6 >= 1.0 - PARAMS.delta,
+                    "any clause on busy container"
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,27 @@
+//! HOUTU — a reproduction of "Towards Reliable (and Efficient) Job
+//! Executions in a Practical Geo-distributed Data Analytics System"
+//! (Zhang et al., 2018) as a Rust coordinator over JAX/Pallas-compiled
+//! compute artifacts executed through PJRT.
+//!
+//! See DESIGN.md for the system inventory and the per-figure experiment
+//! index, and EXPERIMENTS.md for measured results.
+
+pub mod cli;
+pub mod cloud;
+pub mod dag;
+pub mod deploy;
+pub mod exp;
+pub mod cluster;
+pub mod config;
+pub mod consensus;
+pub mod ids;
+pub mod jm;
+pub mod master;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod sim;
+pub mod storage;
+pub mod testkit;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,4 @@
+//! HOUTU launcher — see `houtu help`.
+fn main() {
+    houtu::cli::main();
+}

@@ -1,0 +1,410 @@
+//! Per-data-center master: the YARN-style resource manager each autonomous
+//! system runs (§3.1 steps 3–4).
+//!
+//! Sub-jobs (via their JM) register a *desire* — the container count Af
+//! computed for the next period — and at each period boundary the master
+//! runs the **fair scheduler** (§4.4): repeatedly hand one free container
+//! to the registered sub-job that currently occupies the smallest share,
+//! unless its desire is met. Allocation never exceeds desire (`a ≤ d`,
+//! Appendix A) and does not change within a period; between boundaries the
+//! master only *reclaims* containers the JM proactively returns.
+//!
+//! The master also spawns JM containers (step 2/2b) and re-grants a failed
+//! JM's containers to its replacement via jobId-keyed tokens (§5).
+
+use std::collections::BTreeMap;
+
+use crate::cluster::Cluster;
+
+/// How free containers are handed to unsatisfied sub-jobs.
+///
+/// * `FairShare` — max-min water-filling (the fair scheduler the Af
+///   analysis assumes, §4.4).
+/// * `Fifo` — oldest job first (stock YARN's default queue, used by the
+///   static baselines; this is what serializes cent-stat's makespan in
+///   Fig 8/10).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocPolicy {
+    FairShare,
+    Fifo,
+}
+use crate::ids::{ContainerId, DcId, JmId, JobId};
+use crate::sim::SimTime;
+
+/// A token authorizing a (replacement) JM to access a job's containers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ContainerToken {
+    pub job: JobId,
+    pub containers: Vec<ContainerId>,
+}
+
+#[derive(Debug)]
+pub struct Master {
+    /// DCs whose container pools this master controls. A per-DC master
+    /// (decentralized) holds one; the centralized baselines' monolithic
+    /// master holds all of them.
+    pub dcs: Vec<DcId>,
+    /// Home DC: where this master itself runs (JM spawn preference).
+    pub home: DcId,
+    /// Registered sub-jobs and their desires for the coming period.
+    desires: BTreeMap<JmId, usize>,
+    /// Containers currently granted per sub-job (excluding the JM's own).
+    granted: BTreeMap<JmId, Vec<ContainerId>>,
+    pub policy: AllocPolicy,
+}
+
+impl Master {
+    /// A per-DC (autonomous) master.
+    pub fn new(dc: DcId) -> Self {
+        Master {
+            dcs: vec![dc],
+            home: dc,
+            desires: BTreeMap::new(),
+            granted: BTreeMap::new(),
+            policy: AllocPolicy::FairShare,
+        }
+    }
+
+    /// The centralized baselines' monolithic master over all regions.
+    pub fn centralized(dcs: Vec<DcId>) -> Self {
+        let home = dcs[0];
+        Master {
+            dcs,
+            home,
+            desires: BTreeMap::new(),
+            granted: BTreeMap::new(),
+            policy: AllocPolicy::FairShare,
+        }
+    }
+
+    /// Union free pool over every DC this master controls, interleaved
+    /// round-robin across DCs so a centralized master's grants spread over
+    /// all regions (it "controls the worker machines from all data
+    /// centers", Fig 1a) instead of draining one region first.
+    fn pool(&self, cluster: &Cluster) -> Vec<ContainerId> {
+        let mut per_dc: Vec<Vec<ContainerId>> = self
+            .dcs
+            .iter()
+            .map(|&d| {
+                let mut p = cluster.free_pool(d);
+                p.sort_unstable();
+                p
+            })
+            .collect();
+        let mut pool = Vec::with_capacity(per_dc.iter().map(Vec::len).sum());
+        let ndc = per_dc.len();
+        let mut i = 0;
+        while per_dc.iter().any(|p| !p.is_empty()) {
+            if let Some(c) = per_dc[i % ndc].pop() {
+                pool.push(c);
+            }
+            i += 1;
+        }
+        pool.reverse(); // allocate() pops from the back
+        pool
+    }
+
+    /// Register a sub-job (JM generated). Initial desire is set by the
+    /// first `set_desire` call (Af starts at 1).
+    pub fn register(&mut self, jm: JmId) {
+        self.desires.entry(jm).or_insert(0);
+        self.granted.entry(jm).or_default();
+    }
+
+    pub fn is_registered(&self, jm: JmId) -> bool {
+        self.desires.contains_key(&jm)
+    }
+
+    /// Update a sub-job's desire (the JM pushes d(q) at period end).
+    pub fn set_desire(&mut self, jm: JmId, d: usize) {
+        if let Some(v) = self.desires.get_mut(&jm) {
+            *v = d;
+        }
+    }
+
+    pub fn desire(&self, jm: JmId) -> usize {
+        self.desires.get(&jm).copied().unwrap_or(0)
+    }
+
+    pub fn granted(&self, jm: JmId) -> &[ContainerId] {
+        self.granted.get(&jm).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    pub fn allocation(&self, jm: JmId) -> usize {
+        self.granted(jm).len()
+    }
+
+    /// Deregister a finished sub-job; caller releases the returned
+    /// containers back to the cluster pool.
+    pub fn unregister(&mut self, jm: JmId) -> Vec<ContainerId> {
+        self.desires.remove(&jm);
+        self.granted.remove(&jm).unwrap_or_default()
+    }
+
+    /// A JM proactively returns a container (Af decrease path).
+    pub fn return_container(&mut self, jm: JmId, cid: ContainerId, cluster: &mut Cluster, t: SimTime) {
+        if let Some(v) = self.granted.get_mut(&jm) {
+            v.retain(|&c| c != cid);
+        }
+        cluster.release(cid, t);
+    }
+
+    /// A granted container died (spot revocation): forget it.
+    pub fn forget_container(&mut self, cid: ContainerId) {
+        for v in self.granted.values_mut() {
+            v.retain(|&c| c != cid);
+        }
+    }
+
+    /// Spawn a JM container from the free pool of `prefer` (falling back
+    /// to any controlled DC). Returns None when out of capacity.
+    pub fn spawn_jm_container_at(
+        &mut self,
+        jm: JmId,
+        cluster: &mut Cluster,
+        prefer: DcId,
+    ) -> Option<ContainerId> {
+        let cid = cluster
+            .free_pool(prefer)
+            .first()
+            .copied()
+            .or_else(|| self.pool(cluster).first().copied())?;
+        cluster.grant(cid, jm);
+        Some(cid)
+    }
+
+    /// Spawn a JM container in the master's home DC.
+    pub fn spawn_jm_container(&mut self, jm: JmId, cluster: &mut Cluster) -> Option<ContainerId> {
+        self.spawn_jm_container_at(jm, cluster, self.home)
+    }
+
+    /// Period-boundary allocation: max-min (water-filling) over desires
+    /// with one-container granularity. Returns the fresh grants per
+    /// sub-job. Deterministic: ties break by JmId order.
+    pub fn allocate(&mut self, cluster: &mut Cluster) -> Vec<(JmId, Vec<ContainerId>)> {
+        let mut pool = self.pool(cluster); // sorted => deterministic grants
+        let mut fresh: BTreeMap<JmId, Vec<ContainerId>> = BTreeMap::new();
+        while let Some(&cid) = pool.last() {
+            // FairShare: unsatisfied sub-job with the fewest grants.
+            // Fifo: oldest unsatisfied job (stock YARN default queue).
+            let next = match self.policy {
+                AllocPolicy::FairShare => self
+                    .desires
+                    .iter()
+                    .filter(|(jm, &d)| self.granted[jm].len() < d)
+                    .min_by_key(|(jm, _)| (self.granted[jm].len(), **jm)),
+                AllocPolicy::Fifo => self
+                    .desires
+                    .iter()
+                    .filter(|(jm, &d)| self.granted[jm].len() < d)
+                    .min_by_key(|(jm, _)| **jm),
+            };
+            let Some((&jm, _)) = next else { break };
+            pool.pop();
+            cluster.grant(cid, jm);
+            self.granted.get_mut(&jm).unwrap().push(cid);
+            fresh.entry(jm).or_default().push(cid);
+        }
+        fresh.into_iter().collect()
+    }
+
+    /// Token re-grant after JM failure (§5): transfer every container of
+    /// `job` in this DC to the replacement JM identity.
+    pub fn reissue_tokens(&mut self, job: JobId, new_jm: JmId, cluster: &mut Cluster) -> ContainerToken {
+        // Collect containers held by any JM identity of this job in this DC
+        // (the replacement usually reuses the same (job, dc) identity).
+        let old_keys: Vec<JmId> = self
+            .granted
+            .keys()
+            .filter(|k| k.job == job)
+            .copied()
+            .collect();
+        let mut containers = Vec::new();
+        for k in old_keys {
+            let mut v = self.granted.remove(&k).unwrap_or_default();
+            self.desires.remove(&k);
+            containers.append(&mut v);
+        }
+        containers.retain(|c| cluster.containers[c].alive);
+        for &c in &containers {
+            cluster.regrant(c, new_jm);
+        }
+        self.register(new_jm);
+        self.granted.get_mut(&new_jm).unwrap().extend(containers.iter().copied());
+        ContainerToken { job, containers }
+    }
+
+    /// All registered sub-jobs (deterministic order).
+    pub fn sub_jobs(&self) -> Vec<JmId> {
+        self.desires.keys().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::InstanceClass;
+    use crate::ids::StageId;
+    use crate::sim::secs;
+
+    fn cluster_with(n_containers: usize) -> Cluster {
+        // One DC, n nodes of 1 container each.
+        Cluster::build(&["A".into()], n_containers, 1, 2, |_, _| InstanceClass::OnDemand)
+    }
+
+    fn jm(j: u64) -> JmId {
+        JmId { job: JobId(j), dc: DcId(0) }
+    }
+
+    #[test]
+    fn water_filling_splits_evenly() {
+        let mut cluster = cluster_with(10);
+        let mut m = Master::new(DcId(0));
+        for j in 0..2 {
+            m.register(jm(j));
+            m.set_desire(jm(j), 10);
+        }
+        let fresh = m.allocate(&mut cluster);
+        assert_eq!(fresh.len(), 2);
+        assert_eq!(m.allocation(jm(0)), 5);
+        assert_eq!(m.allocation(jm(1)), 5);
+        assert!(cluster.free_pool(DcId(0)).is_empty());
+    }
+
+    #[test]
+    fn allocation_never_exceeds_desire() {
+        let mut cluster = cluster_with(10);
+        let mut m = Master::new(DcId(0));
+        m.register(jm(0));
+        m.set_desire(jm(0), 3);
+        m.register(jm(1));
+        m.set_desire(jm(1), 100);
+        m.allocate(&mut cluster);
+        assert_eq!(m.allocation(jm(0)), 3, "a <= d");
+        assert_eq!(m.allocation(jm(1)), 7, "rest goes to the hungry job");
+    }
+
+    #[test]
+    fn incremental_allocation_tops_up() {
+        let mut cluster = cluster_with(8);
+        let mut m = Master::new(DcId(0));
+        m.register(jm(0));
+        m.set_desire(jm(0), 2);
+        m.allocate(&mut cluster);
+        assert_eq!(m.allocation(jm(0)), 2);
+        // Next period: desire rises (Af increase), master tops up.
+        m.set_desire(jm(0), 5);
+        let fresh = m.allocate(&mut cluster);
+        assert_eq!(fresh[0].1.len(), 3);
+        assert_eq!(m.allocation(jm(0)), 5);
+    }
+
+    #[test]
+    fn return_container_frees_pool() {
+        let mut cluster = cluster_with(4);
+        let mut m = Master::new(DcId(0));
+        m.register(jm(0));
+        m.set_desire(jm(0), 4);
+        m.allocate(&mut cluster);
+        let cid = m.granted(jm(0))[0];
+        m.return_container(jm(0), cid, &mut cluster, secs(1));
+        assert_eq!(m.allocation(jm(0)), 3);
+        assert_eq!(cluster.free_pool(DcId(0)).len(), 1);
+    }
+
+    #[test]
+    fn unregister_returns_everything() {
+        let mut cluster = cluster_with(4);
+        let mut m = Master::new(DcId(0));
+        m.register(jm(0));
+        m.set_desire(jm(0), 4);
+        m.allocate(&mut cluster);
+        let held = m.unregister(jm(0));
+        assert_eq!(held.len(), 4);
+        assert!(!m.is_registered(jm(0)));
+    }
+
+    #[test]
+    fn spawn_jm_container_takes_from_pool() {
+        let mut cluster = cluster_with(2);
+        let mut m = Master::new(DcId(0));
+        let c = m.spawn_jm_container(jm(0), &mut cluster).unwrap();
+        assert_eq!(cluster.container(c).owner, Some(jm(0)));
+        assert_eq!(cluster.free_pool(DcId(0)).len(), 1);
+        m.spawn_jm_container(jm(1), &mut cluster).unwrap();
+        assert!(m.spawn_jm_container(jm(2), &mut cluster).is_none(), "pool exhausted");
+    }
+
+    #[test]
+    fn reissue_tokens_transfers_live_containers() {
+        let mut cluster = cluster_with(6);
+        let mut m = Master::new(DcId(0));
+        let old = jm(7);
+        m.register(old);
+        m.set_desire(old, 3);
+        m.allocate(&mut cluster);
+        let held = m.granted(old).to_vec();
+        assert_eq!(held.len(), 3);
+        // Replacement identity is the same (job, dc) in practice; simulate a
+        // re-keyed JM by first renaming: use a different dc id to force a
+        // distinct key.
+        let newer = JmId { job: JobId(7), dc: DcId(0) };
+        // Kill one container's node so only live ones transfer.
+        let node = cluster.container(held[0]).node;
+        cluster.kill_node(node, secs(5));
+        let tok = m.reissue_tokens(JobId(7), newer, &mut cluster);
+        assert_eq!(tok.job, JobId(7));
+        assert_eq!(tok.containers.len(), 2, "dead container filtered");
+        for c in &tok.containers {
+            assert_eq!(cluster.container(*c).owner, Some(newer));
+        }
+        let _ = StageId(0);
+    }
+
+    /// Property: max-min fairness — after allocation, (1) a ≤ d for all,
+    /// (2) pool exhausted or all satisfied, (3) any two *unsatisfied*
+    /// sub-jobs' allocations differ by at most 1, and (4) no satisfied
+    /// sub-job holds more than any unsatisfied one + 1.
+    #[test]
+    fn prop_max_min_invariants() {
+        use crate::testkit::{forall, UsizeIn, VecOf};
+        let gen = VecOf { elem: UsizeIn(0, 12), min_len: 1, max_len: 8 };
+        forall(0xFA1, &gen, |desires: &Vec<usize>| {
+            let mut cluster = cluster_with(10);
+            let mut m = Master::new(DcId(0));
+            for (j, &d) in desires.iter().enumerate() {
+                m.register(jm(j as u64));
+                m.set_desire(jm(j as u64), d);
+            }
+            m.allocate(&mut cluster);
+            let total: usize = (0..desires.len()).map(|j| m.allocation(jm(j as u64))).sum();
+            let pool_left = cluster.free_pool(DcId(0)).len();
+            for (j, &d) in desires.iter().enumerate() {
+                let a = m.allocation(jm(j as u64));
+                crate::prop_assert!(a <= d, "job {j}: a={a} > d={d}");
+            }
+            let unsatisfied: Vec<usize> = (0..desires.len())
+                .filter(|&j| m.allocation(jm(j as u64)) < desires[j])
+                .collect();
+            if !unsatisfied.is_empty() {
+                crate::prop_assert!(pool_left == 0, "unsatisfied jobs but {pool_left} free");
+                let allocs: Vec<usize> =
+                    unsatisfied.iter().map(|&j| m.allocation(jm(j as u64))).collect();
+                let lo = *allocs.iter().min().unwrap();
+                let hi = *allocs.iter().max().unwrap();
+                crate::prop_assert!(hi - lo <= 1, "unsatisfied spread {lo}..{hi}");
+                // No one (satisfied or not) may exceed an unsatisfied job's
+                // share by 2+ — that's what max-min means here.
+                for j in 0..desires.len() {
+                    let a = m.allocation(jm(j as u64));
+                    crate::prop_assert!(
+                        a <= lo + 1 || a <= desires[j],
+                        "job {j} a={a} vs min unsatisfied {lo}"
+                    );
+                }
+            }
+            crate::prop_assert!(total + pool_left == 10, "container conservation");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,185 @@
+//! Run metrics: everything the paper's evaluation section plots.
+//!
+//! * Per-job records → JRT CDF, average JRT and makespan (Fig 8).
+//! * Per-job cumulative task-launch timelines (Fig 9).
+//! * Per-job container-count timelines (Fig 11).
+//! * Steal-message delays, recovery intervals, election delays (Fig 12b).
+//! * Intermediate-information sizes per workload (Fig 12a).
+//! * Cost components come from [`crate::cloud::CostMeter`] + WAN stats.
+
+use std::collections::BTreeMap;
+
+use crate::dag::{SizeClass, WorkloadKind};
+use crate::ids::JobId;
+use crate::util::stats;
+
+/// Outcome of one job.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub id: JobId,
+    pub kind: WorkloadKind,
+    pub size: SizeClass,
+    pub submitted_secs: f64,
+    pub completed_secs: Option<f64>,
+    /// Times the job was restarted from scratch (centralized JM failure).
+    pub restarts: u32,
+    /// JM recoveries survived (HOUTU job-level fault tolerance).
+    pub recoveries: u32,
+    pub tasks_total: usize,
+}
+
+impl JobRecord {
+    /// Job response time (§4.1 footnote: release → completion).
+    pub fn jrt(&self) -> Option<f64> {
+        self.completed_secs.map(|c| c - self.submitted_secs)
+    }
+}
+
+/// A (time, value) step timeline.
+pub type Timeline = Vec<(f64, f64)>;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub jobs: BTreeMap<JobId, JobRecord>,
+    /// Cumulative launched tasks per job (Fig 9).
+    pub task_launches: BTreeMap<JobId, Timeline>,
+    /// Containers held per job over time (Fig 11).
+    pub containers: BTreeMap<JobId, Timeline>,
+    /// One entry per steal round-trip, in milliseconds (Fig 12b).
+    pub steal_delays_ms: Vec<f64>,
+    /// JM failure → successor operating, in seconds (Fig 11 / 12b).
+    pub recovery_intervals_secs: Vec<f64>,
+    /// pJM election delays, seconds.
+    pub election_delays_secs: Vec<f64>,
+    /// Sampled intermediate-info sizes (bytes) per workload (Fig 12a).
+    pub info_sizes: BTreeMap<WorkloadKind, Vec<f64>>,
+    /// Tasks whose input crossed DCs (communication accounting aid).
+    pub remote_input_tasks: u64,
+    pub local_input_tasks: u64,
+}
+
+impl Metrics {
+    pub fn submit(&mut self, id: JobId, kind: WorkloadKind, size: SizeClass, t: f64, tasks: usize) {
+        self.jobs.insert(
+            id,
+            JobRecord {
+                id,
+                kind,
+                size,
+                submitted_secs: t,
+                completed_secs: None,
+                restarts: 0,
+                recoveries: 0,
+                tasks_total: tasks,
+            },
+        );
+    }
+
+    pub fn complete(&mut self, id: JobId, t: f64) {
+        if let Some(r) = self.jobs.get_mut(&id) {
+            r.completed_secs = Some(t);
+        }
+    }
+
+    pub fn record_launch(&mut self, id: JobId, t: f64) {
+        let tl = self.task_launches.entry(id).or_default();
+        let next = tl.last().map(|&(_, c)| c + 1.0).unwrap_or(1.0);
+        tl.push((t, next));
+    }
+
+    pub fn record_containers(&mut self, id: JobId, t: f64, count: usize) {
+        self.containers.entry(id).or_default().push((t, count as f64));
+    }
+
+    pub fn record_info_size(&mut self, kind: WorkloadKind, bytes: usize) {
+        self.info_sizes.entry(kind).or_default().push(bytes as f64);
+    }
+
+    /// Completed-job response times (seconds).
+    pub fn jrts(&self) -> Vec<f64> {
+        self.jobs.values().filter_map(JobRecord::jrt).collect()
+    }
+
+    pub fn avg_jrt(&self) -> f64 {
+        stats::mean(&self.jrts())
+    }
+
+    /// Makespan: first submission → last completion (Definition 1).
+    pub fn makespan(&self) -> f64 {
+        let start = self
+            .jobs
+            .values()
+            .map(|j| j.submitted_secs)
+            .fold(f64::INFINITY, f64::min);
+        let end = self
+            .jobs
+            .values()
+            .filter_map(|j| j.completed_secs)
+            .fold(f64::NEG_INFINITY, f64::max);
+        if end > start {
+            end - start
+        } else {
+            0.0
+        }
+    }
+
+    pub fn completed_jobs(&self) -> usize {
+        self.jobs.values().filter(|j| j.completed_secs.is_some()).count()
+    }
+
+    /// JRT CDF sampled at the given fractions (compact Fig-8a output).
+    pub fn jrt_cdf(&self, fractions: &[f64]) -> Vec<(f64, f64)> {
+        stats::cdf_at(&self.jrts(), fractions)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> Metrics {
+        let mut m = Metrics::default();
+        m.submit(JobId(1), WorkloadKind::WordCount, SizeClass::Small, 0.0, 4);
+        m.submit(JobId(2), WorkloadKind::TpcH, SizeClass::Large, 60.0, 10);
+        m.complete(JobId(1), 100.0);
+        m.complete(JobId(2), 360.0);
+        m
+    }
+
+    #[test]
+    fn jrt_and_makespan() {
+        let m = m();
+        let mut jrts = m.jrts();
+        jrts.sort_by(f64::total_cmp);
+        assert_eq!(jrts, vec![100.0, 300.0]);
+        assert_eq!(m.avg_jrt(), 200.0);
+        assert_eq!(m.makespan(), 360.0);
+        assert_eq!(m.completed_jobs(), 2);
+    }
+
+    #[test]
+    fn incomplete_jobs_excluded_from_jrt() {
+        let mut m = m();
+        m.submit(JobId(3), WorkloadKind::PageRank, SizeClass::Medium, 120.0, 5);
+        assert_eq!(m.jrts().len(), 2);
+        assert_eq!(m.completed_jobs(), 2);
+    }
+
+    #[test]
+    fn launch_timeline_is_cumulative() {
+        let mut m = Metrics::default();
+        for t in [1.0, 2.0, 5.0] {
+            m.record_launch(JobId(1), t);
+        }
+        let tl = &m.task_launches[&JobId(1)];
+        assert_eq!(tl.as_slice(), &[(1.0, 1.0), (2.0, 2.0), (5.0, 3.0)]);
+    }
+
+    #[test]
+    fn empty_metrics_are_safe() {
+        let m = Metrics::default();
+        assert_eq!(m.avg_jrt(), 0.0);
+        assert_eq!(m.makespan(), 0.0);
+        assert!(m.jrt_cdf(&[0.5]).iter().all(|&(v, _)| v == 0.0));
+    }
+}

@@ -1,0 +1,251 @@
+//! WAN fabric between data centers.
+//!
+//! Reproduces the paper's §2.2 observations: inter-DC bandwidth is ~10×
+//! below LAN and *fluctuates* — the measured std is up to 30 % of the mean
+//! (Fig 2). We model each (region, region) pair as an AR(1) mean-reverting
+//! process around the Fig-2 mean with the Fig-2 stationary std:
+//!
+//! `x_t = mean + φ (x_{t-1} − mean) + sqrt(1 − φ²) · std · ε_t`
+//!
+//! resampled every `resample_secs` of virtual time. Concurrent transfers on
+//! a pair fair-share the instantaneous bandwidth (sampled at transfer
+//! start). Control messages pay one-way propagation (rtt/2) plus
+//! serialization, which is what puts the paper's ~63 ms steal-message
+//! delay (Fig 12b) in range.
+
+use crate::config::WanConfig;
+use crate::ids::DcId;
+use crate::sim::{secs_f, SimTime};
+use crate::util::Pcg;
+
+/// Traffic classes, tracked separately for the Fig-10 cost breakdown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Traffic {
+    /// Task input / shuffle data.
+    Data,
+    /// JM coordination: steal messages, intermediate-info replication.
+    Control,
+}
+
+/// Cumulative WAN accounting.
+#[derive(Debug, Default, Clone)]
+pub struct WanStats {
+    pub cross_dc_data_bytes: u64,
+    pub cross_dc_control_bytes: u64,
+    pub transfers: u64,
+    pub messages: u64,
+}
+
+impl WanStats {
+    pub fn cross_dc_total_bytes(&self) -> u64 {
+        self.cross_dc_data_bytes + self.cross_dc_control_bytes
+    }
+}
+
+pub struct Wan {
+    cfg: WanConfig,
+    /// Instantaneous bandwidth per pair (Mbps), AR(1) state.
+    current: Vec<Vec<f64>>,
+    /// Active bulk transfers per pair (for fair sharing).
+    active: Vec<Vec<u32>>,
+    rng: Pcg,
+    pub stats: WanStats,
+}
+
+impl Wan {
+    pub fn new(cfg: WanConfig, rng: Pcg) -> Self {
+        let n = cfg.bandwidth.len();
+        let current = cfg
+            .bandwidth
+            .iter()
+            .map(|row| row.iter().map(|&(m, _)| m).collect())
+            .collect();
+        Wan { cfg, current, active: vec![vec![0; n]; n], rng, stats: WanStats::default() }
+    }
+
+    pub fn num_dcs(&self) -> usize {
+        self.current.len()
+    }
+
+    /// Seconds between AR(1) re-samples (driven by the world's timer).
+    pub fn resample_period(&self) -> SimTime {
+        secs_f(self.cfg.resample_secs)
+    }
+
+    /// Advance the AR(1) bandwidth process one step for every pair.
+    pub fn resample(&mut self) {
+        let phi = self.cfg.ar1_phi;
+        let innov = (1.0 - phi * phi).sqrt();
+        let n = self.num_dcs();
+        for i in 0..n {
+            for j in i..n {
+                let (mean, std) = self.cfg.bandwidth[i][j];
+                let x = self.current[i][j];
+                let eps = self.rng.std_normal();
+                let next = (mean + phi * (x - mean) + innov * std * eps).max(mean * 0.05);
+                self.current[i][j] = next;
+                self.current[j][i] = next; // symmetric links
+            }
+        }
+    }
+
+    /// Instantaneous bandwidth between two DCs (Mbps).
+    pub fn bandwidth_mbps(&self, a: DcId, b: DcId) -> f64 {
+        self.current[a.0][b.0]
+    }
+
+    /// One-way latency between two DCs (ms of virtual time).
+    pub fn latency_ms(&self, a: DcId, b: DcId) -> f64 {
+        if a == b {
+            0.5
+        } else {
+            self.cfg.rtt_ms / 2.0
+        }
+    }
+
+    /// Delay for a small control message of `bytes` from `a` to `b`.
+    /// Control messages don't contend with bulk transfers (they are tiny),
+    /// but they do ride the fluctuating bandwidth.
+    pub fn message_delay(&mut self, a: DcId, b: DcId, bytes: u64) -> SimTime {
+        self.stats.messages += 1;
+        if a != b {
+            self.stats.cross_dc_control_bytes += bytes;
+        }
+        let bw = self.bandwidth_mbps(a, b); // Mbps
+        let ser_ms = (bytes as f64 * 8.0) / (bw * 1000.0); // ms
+        secs_f((self.latency_ms(a, b) + ser_ms) / 1000.0).max(1)
+    }
+
+    /// Begin a bulk data transfer; returns its duration. Caller must call
+    /// [`Wan::end_transfer`] when the scheduled completion event fires.
+    /// Effective bandwidth = instantaneous pair bandwidth fair-shared
+    /// across transfers active at start (including this one).
+    pub fn begin_transfer(&mut self, a: DcId, b: DcId, bytes: u64) -> SimTime {
+        self.stats.transfers += 1;
+        if a != b {
+            self.stats.cross_dc_data_bytes += bytes;
+        }
+        self.active[a.0][b.0] += 1;
+        if a != b {
+            self.active[b.0][a.0] += 1;
+        }
+        let share = self.active[a.0][b.0].max(1) as f64;
+        let bw = self.bandwidth_mbps(a, b) / share; // Mbps
+        let xfer_ms = (bytes as f64 * 8.0) / (bw * 1000.0);
+        secs_f((self.latency_ms(a, b) + xfer_ms) / 1000.0).max(1)
+    }
+
+    /// Release the slot taken by [`Wan::begin_transfer`].
+    pub fn end_transfer(&mut self, a: DcId, b: DcId) {
+        let x = &mut self.active[a.0][b.0];
+        *x = x.saturating_sub(1);
+        if a != b {
+            let y = &mut self.active[b.0][a.0];
+            *y = y.saturating_sub(1);
+        }
+    }
+
+    /// iperf-style measurement of a pair: sample the AR(1) process
+    /// `rounds × samples_per_round` times (advancing it), return
+    /// (mean, std) Mbps — regenerates Fig 2.
+    pub fn measure_pair(&mut self, a: DcId, b: DcId, rounds: usize, samples: usize) -> (f64, f64) {
+        let mut xs = Vec::with_capacity(rounds * samples);
+        for _ in 0..rounds {
+            for _ in 0..samples {
+                self.resample();
+                xs.push(self.bandwidth_mbps(a, b));
+            }
+        }
+        (crate::util::stats::mean(&xs), crate::util::stats::std_dev(&xs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn wan() -> Wan {
+        let cfg = Config::default();
+        Wan::new(cfg.wan, Pcg::seeded(1))
+    }
+
+    #[test]
+    fn lan_is_much_faster_than_wan() {
+        let w = wan();
+        assert!(w.bandwidth_mbps(DcId(0), DcId(0)) > 8.0 * w.bandwidth_mbps(DcId(0), DcId(1)));
+    }
+
+    #[test]
+    fn ar1_stays_near_mean_with_right_spread() {
+        let mut w = wan();
+        let (mean, std) = w.measure_pair(DcId(0), DcId(1), 3, 1000);
+        // Fig 2: NC-3 <-> NC-5 is (79, 22) Mbps.
+        assert!((mean - 79.0).abs() < 5.0, "mean {mean}");
+        assert!((std - 22.0).abs() < 5.0, "std {std}");
+    }
+
+    #[test]
+    fn bandwidth_never_collapses_to_zero() {
+        let mut w = wan();
+        for _ in 0..10_000 {
+            w.resample();
+            assert!(w.bandwidth_mbps(DcId(1), DcId(3)) > 0.0);
+        }
+    }
+
+    #[test]
+    fn symmetric_links() {
+        let mut w = wan();
+        for _ in 0..100 {
+            w.resample();
+            assert_eq!(w.bandwidth_mbps(DcId(0), DcId(2)), w.bandwidth_mbps(DcId(2), DcId(0)));
+        }
+    }
+
+    #[test]
+    fn message_delay_scales_with_distance() {
+        let mut w = wan();
+        let local = w.message_delay(DcId(0), DcId(0), 1024);
+        let remote = w.message_delay(DcId(0), DcId(1), 1024);
+        assert!(remote > local, "remote {remote} <= local {local}");
+        // rtt/2 = 15 ms dominates small messages.
+        assert!((14..=40).contains(&remote), "remote {remote} ms");
+    }
+
+    #[test]
+    fn transfers_fair_share_bandwidth() {
+        let mut w = wan();
+        let bytes = 100 * 1024 * 1024; // 100 MB
+        let solo = w.begin_transfer(DcId(0), DcId(1), bytes);
+        // A second concurrent transfer sees half the bandwidth.
+        let shared = w.begin_transfer(DcId(0), DcId(1), bytes);
+        assert!(shared > solo + solo / 2, "shared {shared} vs solo {solo}");
+        w.end_transfer(DcId(0), DcId(1));
+        w.end_transfer(DcId(0), DcId(1));
+        let again = w.begin_transfer(DcId(0), DcId(1), bytes);
+        assert_eq!(again, solo);
+    }
+
+    #[test]
+    fn stats_track_cross_dc_traffic_only() {
+        let mut w = wan();
+        w.begin_transfer(DcId(0), DcId(0), 500);
+        assert_eq!(w.stats.cross_dc_data_bytes, 0);
+        w.begin_transfer(DcId(0), DcId(2), 500);
+        assert_eq!(w.stats.cross_dc_data_bytes, 500);
+        w.message_delay(DcId(1), DcId(2), 100);
+        assert_eq!(w.stats.cross_dc_control_bytes, 100);
+        assert_eq!(w.stats.transfers, 2);
+        assert_eq!(w.stats.messages, 1);
+    }
+
+    #[test]
+    fn hundred_mb_transfer_is_seconds_over_wan() {
+        let mut w = wan();
+        let d = w.begin_transfer(DcId(0), DcId(1), 100 * 1024 * 1024);
+        let secs = d as f64 / 1000.0;
+        // 100 MB at ~79 Mbps ≈ 10.6 s.
+        assert!((8.0..16.0).contains(&secs), "{secs}s");
+    }
+}

@@ -1,0 +1,337 @@
+//! Deterministic discrete-event simulation core.
+//!
+//! The whole geo-distributed testbed (four data centers, WAN, spot market,
+//! masters, job managers) runs on this engine: a virtual millisecond clock
+//! and a binary-heap event queue with a monotone tie-breaking sequence
+//! number, so a run is a pure function of (config, seed). Events are boxed
+//! `FnOnce(&mut Sim<S>)` closures over the world state `S`; an event may
+//! freely inspect/mutate the state and schedule further events.
+//!
+//! Events can be cancelled (heartbeat timers, speculative timeouts) via the
+//! [`EventId`] returned by `schedule_*`; cancelled entries are lazily
+//! skipped at pop time.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashSet};
+
+/// Virtual time in milliseconds since simulation start.
+pub type SimTime = u64;
+
+/// Convert seconds (paper units) to [`SimTime`].
+pub const fn secs(s: u64) -> SimTime {
+    s * 1000
+}
+
+/// Convert fractional seconds to [`SimTime`] (rounded).
+pub fn secs_f(s: f64) -> SimTime {
+    (s * 1000.0).round().max(0.0) as SimTime
+}
+
+/// [`SimTime`] to fractional seconds.
+pub fn to_secs(t: SimTime) -> f64 {
+    t as f64 / 1000.0
+}
+
+/// Handle for cancelling a scheduled event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EventId(u64);
+
+type EventFn<S> = Box<dyn FnOnce(&mut Sim<S>)>;
+
+struct Entry<S> {
+    time: SimTime,
+    seq: u64,
+    f: EventFn<S>,
+}
+
+impl<S> PartialEq for Entry<S> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<S> Eq for Entry<S> {}
+impl<S> PartialOrd for Entry<S> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<S> Ord for Entry<S> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert so the earliest (time, seq) pops
+        // first. seq keeps same-time events FIFO => deterministic replay.
+        other.time.cmp(&self.time).then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// The simulation engine over world state `S`.
+pub struct Sim<S> {
+    /// The world; event closures mutate it.
+    pub state: S,
+    now: SimTime,
+    seq: u64,
+    queue: BinaryHeap<Entry<S>>,
+    cancelled: HashSet<u64>,
+    /// Total events executed (for perf accounting / runaway detection).
+    pub events_processed: u64,
+}
+
+impl<S> Sim<S> {
+    pub fn new(state: S) -> Self {
+        Sim {
+            state,
+            now: 0,
+            seq: 0,
+            queue: BinaryHeap::new(),
+            cancelled: HashSet::new(),
+            events_processed: 0,
+        }
+    }
+
+    /// Current virtual time (ms).
+    #[inline]
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Current virtual time in seconds.
+    #[inline]
+    pub fn now_secs(&self) -> f64 {
+        to_secs(self.now)
+    }
+
+    /// Number of pending (non-cancelled) events, counting lazily-cancelled
+    /// entries still in the heap.
+    pub fn pending(&self) -> usize {
+        self.queue.len() - self.cancelled.len()
+    }
+
+    /// Schedule `f` at absolute virtual time `t` (clamped to now).
+    pub fn schedule_at(&mut self, t: SimTime, f: impl FnOnce(&mut Sim<S>) + 'static) -> EventId {
+        let t = t.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(Entry { time: t, seq, f: Box::new(f) });
+        EventId(seq)
+    }
+
+    /// Schedule `f` after `delay` ms.
+    pub fn schedule_in(
+        &mut self,
+        delay: SimTime,
+        f: impl FnOnce(&mut Sim<S>) + 'static,
+    ) -> EventId {
+        self.schedule_at(self.now + delay, f)
+    }
+
+    /// Schedule `f` to run "immediately" (after currently-queued same-time
+    /// events — useful for decoupling call stacks).
+    pub fn defer(&mut self, f: impl FnOnce(&mut Sim<S>) + 'static) -> EventId {
+        self.schedule_at(self.now, f)
+    }
+
+    /// Cancel a scheduled event. Safe to call after the event has fired
+    /// (no-op). Returns whether the id was newly cancelled.
+    pub fn cancel(&mut self, id: EventId) -> bool {
+        if id.0 >= self.seq {
+            return false;
+        }
+        self.cancelled.insert(id.0)
+    }
+
+    fn pop_live(&mut self) -> Option<Entry<S>> {
+        while let Some(e) = self.queue.pop() {
+            if self.cancelled.remove(&e.seq) {
+                continue;
+            }
+            return Some(e);
+        }
+        None
+    }
+
+    /// Execute the next event; returns false when the queue is empty.
+    pub fn step(&mut self) -> bool {
+        match self.pop_live() {
+            Some(e) => {
+                debug_assert!(e.time >= self.now, "time went backwards");
+                self.now = e.time;
+                self.events_processed += 1;
+                (e.f)(self);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Run until the queue is empty or `max_events` have been processed.
+    /// Returns the number of events executed.
+    pub fn run(&mut self, max_events: u64) -> u64 {
+        let start = self.events_processed;
+        while self.events_processed - start < max_events {
+            if !self.step() {
+                break;
+            }
+        }
+        self.events_processed - start
+    }
+
+    /// Run until virtual time reaches `t` (events at exactly `t` included)
+    /// or the queue empties. The clock is advanced to `t` at the end.
+    pub fn run_until(&mut self, t: SimTime) {
+        loop {
+            let next = loop {
+                match self.queue.peek() {
+                    Some(e) if self.cancelled.contains(&e.seq) => {
+                        let e = self.queue.pop().unwrap();
+                        self.cancelled.remove(&e.seq);
+                    }
+                    Some(e) => break Some(e.time),
+                    None => break None,
+                }
+            };
+            match next {
+                Some(nt) if nt <= t => {
+                    self.step();
+                }
+                _ => break,
+            }
+        }
+        self.now = self.now.max(t);
+    }
+
+    /// Drain the queue entirely (with a generous runaway guard).
+    pub fn run_to_completion(&mut self) {
+        let n = self.run(u64::MAX / 2);
+        let _ = n;
+    }
+}
+
+/// Periodic timer helper: reschedules itself every `period` ms until the
+/// predicate returns false. The closure receives the sim.
+pub fn every<S: 'static>(
+    sim: &mut Sim<S>,
+    period: SimTime,
+    mut tick: impl FnMut(&mut Sim<S>) -> bool + 'static,
+) {
+    fn arm<S: 'static>(
+        sim: &mut Sim<S>,
+        period: SimTime,
+        mut tick: impl FnMut(&mut Sim<S>) -> bool + 'static,
+    ) {
+        sim.schedule_in(period, move |sim| {
+            if tick(sim) {
+                arm(sim, period, tick);
+            }
+        });
+    }
+    if tick(sim) {
+        arm(sim, period, tick);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut sim = Sim::new(Vec::<u32>::new());
+        sim.schedule_at(secs(3), |s| s.state.push(3));
+        sim.schedule_at(secs(1), |s| s.state.push(1));
+        sim.schedule_at(secs(2), |s| s.state.push(2));
+        sim.run_to_completion();
+        assert_eq!(sim.state, vec![1, 2, 3]);
+        assert_eq!(sim.now(), secs(3));
+    }
+
+    #[test]
+    fn same_time_events_are_fifo() {
+        let mut sim = Sim::new(Vec::<u32>::new());
+        for i in 0..100 {
+            sim.schedule_at(secs(5), move |s| s.state.push(i));
+        }
+        sim.run_to_completion();
+        assert_eq!(sim.state, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn events_can_schedule_events() {
+        let mut sim = Sim::new(0u64);
+        sim.schedule_at(10, |s| {
+            s.state += 1;
+            s.schedule_in(5, |s| s.state += 10);
+        });
+        sim.run_to_completion();
+        assert_eq!(sim.state, 11);
+        assert_eq!(sim.now(), 15);
+    }
+
+    #[test]
+    fn cancellation_skips_event() {
+        let mut sim = Sim::new(0u64);
+        let id = sim.schedule_at(10, |s| s.state += 1);
+        sim.schedule_at(5, |s| s.state += 100);
+        assert!(sim.cancel(id));
+        assert!(!sim.cancel(id), "double-cancel is a no-op");
+        sim.run_to_completion();
+        assert_eq!(sim.state, 100);
+    }
+
+    #[test]
+    fn run_until_stops_at_boundary() {
+        let mut sim = Sim::new(Vec::<u64>::new());
+        for t in [5u64, 10, 15, 20] {
+            sim.schedule_at(t, move |s| {
+                let now = s.now();
+                s.state.push(now);
+            });
+        }
+        sim.run_until(12);
+        assert_eq!(sim.state, vec![5, 10]);
+        assert_eq!(sim.now(), 12);
+        sim.run_until(20);
+        assert_eq!(sim.state, vec![5, 10, 15, 20]);
+    }
+
+    #[test]
+    fn periodic_timer_repeats_until_false() {
+        let counter = Rc::new(RefCell::new(0));
+        let c2 = counter.clone();
+        let mut sim = Sim::new(());
+        every(&mut sim, secs(1), move |_| {
+            *c2.borrow_mut() += 1;
+            *c2.borrow() < 5
+        });
+        sim.run_to_completion();
+        assert_eq!(*counter.borrow(), 5);
+        assert_eq!(sim.now(), secs(4));
+    }
+
+    #[test]
+    fn determinism_across_runs() {
+        fn run_once() -> (Vec<u32>, SimTime) {
+            let mut sim = Sim::new(Vec::new());
+            let mut rng = crate::util::Pcg::seeded(99);
+            for i in 0..500u32 {
+                let t = rng.below(10_000);
+                sim.schedule_at(t, move |s| s.state.push(i));
+            }
+            sim.run_to_completion();
+            let now = sim.now();
+            (sim.state, now)
+        }
+        assert_eq!(run_once(), run_once());
+    }
+
+    #[test]
+    fn run_respects_event_budget() {
+        let mut sim = Sim::new(0u64);
+        for t in 0..100 {
+            sim.schedule_at(t, |s| s.state += 1);
+        }
+        let n = sim.run(10);
+        assert_eq!(n, 10);
+        assert_eq!(sim.state, 10);
+    }
+}

@@ -1,0 +1,182 @@
+//! DFS substrate: HDFS-like datasets partitioned across data centers.
+//!
+//! The paper's jobs read tables "as if" centralized but with per-DC
+//! masters (`hdfs://master1:9000/tpch/lineitem.tbl`, Fig 5); raw data may
+//! not cross borders, so inputs stay put and tasks prefer the nodes that
+//! host their partition. Each partition records its (dc, node) placement —
+//! the locality preference Parades schedules against — plus its size,
+//! which drives both transfer times and the initial task assignment
+//! (proportional to per-DC data, §4.3).
+
+use std::collections::HashMap;
+
+use crate::ids::{DcId, NodeId};
+use crate::util::Pcg;
+
+/// One block/partition of a dataset.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub dataset: String,
+    pub index: usize,
+    pub bytes: u64,
+    pub dc: DcId,
+    pub node: NodeId,
+}
+
+/// A named dataset (input table / file).
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub name: String,
+    pub partitions: Vec<Partition>,
+}
+
+impl Dataset {
+    pub fn total_bytes(&self) -> u64 {
+        self.partitions.iter().map(|p| p.bytes).sum()
+    }
+
+    /// Bytes per DC (the initial-assignment weights).
+    pub fn bytes_per_dc(&self, num_dcs: usize) -> Vec<u64> {
+        let mut out = vec![0u64; num_dcs];
+        for p in &self.partitions {
+            out[p.dc.0] += p.bytes;
+        }
+        out
+    }
+}
+
+/// The geo-distributed file system: one logical namespace, physical blocks
+/// pinned to regions.
+#[derive(Debug, Default)]
+pub struct Dfs {
+    pub datasets: HashMap<String, Dataset>,
+}
+
+/// Standard HDFS block size (128 MB) — partition granularity.
+pub const BLOCK_BYTES: u64 = 128 * 1024 * 1024;
+
+impl Dfs {
+    /// Ingest a dataset of `total_bytes`, split into ≥1 blocks of at most
+    /// [`BLOCK_BYTES`], distributed over DCs proportionally to `weights`
+    /// (e.g. `[1,1,1,1]` = even split; `[1,1,0,0]` = two regions only).
+    /// Blocks land on nodes round-robin with a random rotation so
+    /// placements differ across datasets.
+    pub fn ingest(
+        &mut self,
+        name: &str,
+        total_bytes: u64,
+        weights: &[f64],
+        nodes_per_dc: usize,
+        rng: &mut Pcg,
+    ) -> &Dataset {
+        let wsum: f64 = weights.iter().sum();
+        assert!(wsum > 0.0, "dataset {name} has zero placement weight");
+        let mut ds = Dataset { name: name.to_string(), partitions: Vec::new() };
+        let mut index = 0;
+        for (d, &w) in weights.iter().enumerate() {
+            if w <= 0.0 {
+                continue;
+            }
+            let dc_bytes = (total_bytes as f64 * w / wsum).round() as u64;
+            if dc_bytes == 0 {
+                continue;
+            }
+            let nblocks = dc_bytes.div_ceil(BLOCK_BYTES).max(1);
+            let rot = rng.index(nodes_per_dc.max(1));
+            let mut remaining = dc_bytes;
+            for b in 0..nblocks {
+                let bytes = remaining.min(BLOCK_BYTES);
+                remaining -= bytes;
+                let node_idx = (rot + b as usize) % nodes_per_dc.max(1);
+                ds.partitions.push(Partition {
+                    dataset: name.to_string(),
+                    index,
+                    bytes,
+                    dc: DcId(d),
+                    node: NodeId { dc: DcId(d), idx: node_idx },
+                });
+                index += 1;
+            }
+        }
+        self.datasets.insert(name.to_string(), ds);
+        &self.datasets[name]
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Dataset> {
+        self.datasets.get(name)
+    }
+
+    /// Drop a dataset (intermediate cleanup).
+    pub fn remove(&mut self, name: &str) -> Option<Dataset> {
+        self.datasets.remove(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ingest_splits_into_blocks() {
+        let mut dfs = Dfs::default();
+        let mut rng = Pcg::seeded(1);
+        let gb = 1024 * 1024 * 1024;
+        let ds = dfs.ingest("wordcount", 5 * gb, &[1.0; 4], 4, &mut rng);
+        // 5 GB over 4 DCs = 1.25 GB/DC = 10 blocks of 128 MB each.
+        assert_eq!(ds.partitions.len(), 40);
+        let total = ds.total_bytes();
+        assert!((total as i64 - (5 * gb) as i64).unsigned_abs() < 8, "total {total}");
+    }
+
+    #[test]
+    fn weights_control_placement() {
+        let mut dfs = Dfs::default();
+        let mut rng = Pcg::seeded(2);
+        let ds = dfs.ingest("orders", 512 * 1024 * 1024, &[1.0, 0.0, 1.0, 0.0], 4, &mut rng);
+        let per_dc = ds.bytes_per_dc(4);
+        assert_eq!(per_dc[1], 0);
+        assert_eq!(per_dc[3], 0);
+        assert!(per_dc[0] > 0 && per_dc[2] > 0);
+        assert!((per_dc[0] as f64 / per_dc[2] as f64 - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn small_dataset_is_one_block() {
+        let mut dfs = Dfs::default();
+        let mut rng = Pcg::seeded(3);
+        let ds = dfs.ingest("tiny", 1000, &[1.0, 0.0], 4, &mut rng);
+        assert_eq!(ds.partitions.len(), 1);
+        assert_eq!(ds.partitions[0].bytes, 1000);
+        assert_eq!(ds.partitions[0].dc, DcId(0));
+    }
+
+    #[test]
+    fn partitions_carry_node_locality() {
+        let mut dfs = Dfs::default();
+        let mut rng = Pcg::seeded(4);
+        let gb = 1024 * 1024 * 1024u64;
+        let ds = dfs.ingest("pr", 2 * gb, &[1.0; 4], 4, &mut rng);
+        for p in &ds.partitions {
+            assert_eq!(p.node.dc, p.dc, "node must live in the partition's DC");
+            assert!(p.node.idx < 4);
+        }
+        // Blocks within a DC spread across nodes.
+        let dc0_nodes: std::collections::HashSet<usize> = ds
+            .partitions
+            .iter()
+            .filter(|p| p.dc == DcId(0))
+            .map(|p| p.node.idx)
+            .collect();
+        assert!(dc0_nodes.len() > 1);
+    }
+
+    #[test]
+    fn remove_deletes() {
+        let mut dfs = Dfs::default();
+        let mut rng = Pcg::seeded(5);
+        dfs.ingest("x", 1, &[1.0], 1, &mut rng);
+        assert!(dfs.get("x").is_some());
+        assert!(dfs.remove("x").is_some());
+        assert!(dfs.get("x").is_none());
+    }
+}

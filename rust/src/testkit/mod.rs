@@ -1,0 +1,228 @@
+//! Minimal in-repo property-testing kit.
+//!
+//! The offline image does not ship `proptest`, so this module provides the
+//! subset we need: seeded random generators, a `forall` runner that reports
+//! the failing seed + case, and greedy shrinking for integer/vec cases.
+//! All property tests in this repo (scheduler invariants, consensus log
+//! consistency, DAG topology, Af bounds) run through this kit, so a failure
+//! is always reproducible by re-running with the printed seed.
+
+use crate::util::Pcg;
+
+/// Number of cases per property (kept modest; every case is deterministic).
+pub const DEFAULT_CASES: usize = 256;
+
+/// A generator of random values of type `T`.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Pcg) -> T;
+    /// Candidate smaller values to try when shrinking a failing case.
+    fn shrink(&self, value: &T) -> Vec<T> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Functions are generators.
+impl<T, F: Fn(&mut Pcg) -> T> Gen<T> for F {
+    fn generate(&self, rng: &mut Pcg) -> T {
+        self(rng)
+    }
+}
+
+/// Generator of usize in [lo, hi] with halving shrink.
+pub struct UsizeIn(pub usize, pub usize);
+
+impl Gen<usize> for UsizeIn {
+    fn generate(&self, rng: &mut Pcg) -> usize {
+        self.0 + rng.index(self.1 - self.0 + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Generator of f64 in [lo, hi) (no shrinking — ranges are small).
+pub struct F64In(pub f64, pub f64);
+
+impl Gen<f64> for F64In {
+    fn generate(&self, rng: &mut Pcg) -> f64 {
+        rng.uniform(self.0, self.1)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        if (*v - self.0).abs() > 1e-9 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2.0);
+        }
+        out
+    }
+}
+
+/// Generator of vectors with length in [min_len, max_len], shrinking by
+/// halving the vector and element-wise shrinking the first failing slot.
+pub struct VecOf<G> {
+    pub elem: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<T: Clone, G: Gen<T>> Gen<Vec<T>> for VecOf<G> {
+    fn generate(&self, rng: &mut Pcg) -> Vec<T> {
+        let len = self.min_len + rng.index(self.max_len - self.min_len + 1);
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+
+    fn shrink(&self, v: &Vec<T>) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            // Drop the back half, drop one element.
+            let keep = (v.len() / 2).max(self.min_len);
+            out.push(v[..keep].to_vec());
+            out.push(v[1..].to_vec());
+            let mut minus_last = v.clone();
+            minus_last.pop();
+            out.push(minus_last);
+        }
+        // Shrink each position once.
+        for (i, x) in v.iter().enumerate().take(8) {
+            for sx in self.elem.shrink(x) {
+                let mut v2 = v.clone();
+                v2[i] = sx;
+                out.push(v2);
+            }
+        }
+        out
+    }
+}
+
+/// Outcome carried by a failed property for reporting.
+#[derive(Debug)]
+pub struct Failure {
+    pub seed: u64,
+    pub case: String,
+    pub message: String,
+    pub shrunk_iterations: usize,
+}
+
+/// Run `prop` on `cases` generated inputs. On failure, greedily shrink and
+/// panic with the smallest failing case and the seed to reproduce.
+pub fn forall_cases<T, G>(seed: u64, cases: usize, gen: &G, prop: impl Fn(&T) -> Result<(), String>)
+where
+    T: Clone + std::fmt::Debug,
+    G: Gen<T>,
+{
+    let mut rng = Pcg::seeded(seed);
+    for case_idx in 0..cases {
+        let input = gen.generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink loop.
+            let mut best = input;
+            let mut best_msg = msg;
+            let mut iters = 0;
+            'outer: loop {
+                for cand in gen.shrink(&best) {
+                    iters += 1;
+                    if iters > 2000 {
+                        break 'outer;
+                    }
+                    if let Err(m2) = prop(&cand) {
+                        best = cand;
+                        best_msg = m2;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (seed={seed}, case #{case_idx}, {iters} shrink steps)\n\
+                 input: {best:?}\nerror: {best_msg}"
+            );
+        }
+    }
+}
+
+/// `forall` with the default case count.
+pub fn forall<T, G>(seed: u64, gen: &G, prop: impl Fn(&T) -> Result<(), String>)
+where
+    T: Clone + std::fmt::Debug,
+    G: Gen<T>,
+{
+    forall_cases(seed, DEFAULT_CASES, gen, prop)
+}
+
+/// Assertion helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(1, &UsizeIn(0, 100), |&x| {
+            if x <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(2, &UsizeIn(0, 1000), |&x| {
+            if x < 500 {
+                Ok(())
+            } else {
+                Err(format!("{x} too big"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_small_case() {
+        // Capture the panic message and check the shrunk case is minimal-ish.
+        let result = std::panic::catch_unwind(|| {
+            forall(3, &UsizeIn(0, 10_000), |&x| {
+                if x < 123 {
+                    Ok(())
+                } else {
+                    Err("boom".into())
+                }
+            });
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().expect("panic payload"),
+            Ok(()) => panic!("property should have failed"),
+        };
+        // Greedy halving shrink should land well below the original range.
+        let input_line = msg.lines().find(|l| l.starts_with("input:")).unwrap();
+        let value: usize = input_line.trim_start_matches("input: ").parse().unwrap();
+        assert!((123..=1000).contains(&value), "shrunk to {value}");
+    }
+
+    #[test]
+    fn vec_generator_respects_bounds() {
+        let gen = VecOf { elem: UsizeIn(1, 5), min_len: 2, max_len: 9 };
+        forall(4, &gen, |v: &Vec<usize>| {
+            prop_assert!((2..=9).contains(&v.len()), "len {}", v.len());
+            prop_assert!(v.iter().all(|&x| (1..=5).contains(&x)), "elem out of range");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,247 @@
+//! Small statistics helpers used by the metrics layer and the experiment
+//! harness: summary stats, percentiles, CDFs, time-weighted averages and a
+//! fixed-width histogram. All pure functions over `f64` slices.
+
+/// Mean of a slice; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation; 0.0 for slices shorter than 2.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile via linear interpolation (p in [0, 100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Percentile over an already-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0).clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Empirical CDF: returns (value, fraction ≤ value) pairs, one per sample.
+pub fn cdf(xs: &[f64]) -> Vec<(f64, f64)> {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len() as f64;
+    v.iter()
+        .enumerate()
+        .map(|(i, &x)| (x, (i + 1) as f64 / n))
+        .collect()
+}
+
+/// Sample the empirical CDF at fixed fractions (for compact table output).
+pub fn cdf_at(xs: &[f64], fractions: &[f64]) -> Vec<(f64, f64)> {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    fractions
+        .iter()
+        .map(|&f| (percentile_sorted(&v, f * 100.0), f))
+        .collect()
+}
+
+/// Five-number-ish summary used by the overhead boxplots (Fig 12a).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p25: f64,
+    pub p50: f64,
+    pub p75: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n: v.len(),
+            mean: mean(&v),
+            std: std_dev(&v),
+            min: if v.is_empty() { 0.0 } else { v[0] },
+            p25: percentile_sorted(&v, 25.0),
+            p50: percentile_sorted(&v, 50.0),
+            p75: percentile_sorted(&v, 75.0),
+            max: if v.is_empty() { 0.0 } else { v[v.len() - 1] },
+        }
+    }
+}
+
+/// Accumulates a time-weighted average of a step function — e.g. container
+/// utilization over a scheduling period, where the value changes whenever a
+/// task starts or finishes.
+#[derive(Debug, Clone)]
+pub struct TimeWeighted {
+    last_t: f64,
+    value: f64,
+    area: f64,
+    start_t: f64,
+}
+
+impl TimeWeighted {
+    pub fn new(t0: f64, v0: f64) -> Self {
+        TimeWeighted { last_t: t0, value: v0, area: 0.0, start_t: t0 }
+    }
+
+    /// The step function changed to `v` at time `t`.
+    pub fn set(&mut self, t: f64, v: f64) {
+        debug_assert!(t >= self.last_t, "time must be monotonic");
+        self.area += self.value * (t - self.last_t);
+        self.last_t = t;
+        self.value = v;
+    }
+
+    /// Current value of the step function.
+    pub fn current(&self) -> f64 {
+        self.value
+    }
+
+    /// Average over [start, t], then reset the window to begin at `t`.
+    pub fn take_average(&mut self, t: f64) -> f64 {
+        self.set(t, self.value);
+        let span = t - self.start_t;
+        let avg = if span > 0.0 { self.area / span } else { self.value };
+        self.area = 0.0;
+        self.start_t = t;
+        avg
+    }
+}
+
+/// Fixed-width histogram over [lo, hi) with `bins` buckets (under/overflow
+/// clamp to the edge buckets).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins] }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let idx = ((x - self.lo) / (self.hi - self.lo) * bins as f64)
+            .floor()
+            .clamp(0.0, (bins - 1) as f64) as usize;
+        self.counts[idx] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_slices_are_safe() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert!(cdf(&[]).is_empty());
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_is_monotone_and_ends_at_one() {
+        let xs = [5.0, 1.0, 3.0, 3.0, 2.0];
+        let c = cdf(&xs);
+        assert_eq!(c.len(), 5);
+        for w in c.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            assert!(w[0].1 <= w[1].1);
+        }
+        assert!((c.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_quartiles() {
+        let xs: Vec<f64> = (1..=101).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.p50, 51.0);
+        assert_eq!(s.p25, 26.0);
+        assert_eq!(s.p75, 76.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 101.0);
+    }
+
+    #[test]
+    fn time_weighted_average() {
+        // value 1.0 on [0,10), 3.0 on [10,20) -> avg 2.0
+        let mut tw = TimeWeighted::new(0.0, 1.0);
+        tw.set(10.0, 3.0);
+        let avg = tw.take_average(20.0);
+        assert!((avg - 2.0).abs() < 1e-12);
+        // window resets: 3.0 on [20,30) -> avg 3.0
+        let avg2 = tw.take_average(30.0);
+        assert!((avg2 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_clamps() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.add(-5.0);
+        h.add(0.5);
+        h.add(9.9);
+        h.add(100.0);
+        assert_eq!(h.counts[0], 2);
+        assert_eq!(h.counts[9], 2);
+        assert_eq!(h.total(), 4);
+    }
+}

@@ -1,0 +1,669 @@
+//! Workload generators (§6.1): WordCount, TPC-H (Q3-shaped), Iterative ML
+//! and PageRank, with the Fig-7 input sizes and the 46/40/14
+//! small/medium/large job mix, arriving online with exponential
+//! inter-arrival times.
+//!
+//! DAG shapes:
+//! * WordCount — map-per-block → reduce (shuffle).
+//! * TPC-H Q3 — scan(customer) ∥ scan(orders) ∥ scan(lineitem) →
+//!   join(C⋈O) → join(⋈L) → group-by/agg. Tables are pinned to specific
+//!   regions ("two tables per data center").
+//! * IterativeML — load → K gradient stages over cached partitions (the
+//!   L2 `logreg_grad` artifact computes these numerics in the e2e run) →
+//!   model collect.
+//! * PageRank — load graph → K damped power-iteration stages (L2
+//!   `pagerank_step`) → rank collect.
+//!
+//! Map tasks prefer the node holding their block; shuffle tasks resolve
+//! their preference at release time from the partitionList (handled by the
+//! job managers).
+
+use crate::config::{Config, TopologyConfig};
+use crate::dag::{JobSpec, SizeClass, StageSpec, TaskSpec, WorkloadKind};
+use crate::ids::{DcId, JobId, StageId, TaskId};
+use crate::storage::{Dfs, BLOCK_BYTES};
+use crate::util::Pcg;
+
+const MB: u64 = 1024 * 1024;
+const GB: u64 = 1024 * MB;
+
+/// Fig 7: input bytes per (workload, size class). TPC-H has no "small"
+/// class in the paper; callers should upgrade small→medium for TPC-H
+/// (`WorkloadGen::sample_class` does).
+pub fn input_bytes(kind: WorkloadKind, size: SizeClass) -> u64 {
+    use SizeClass::*;
+    use WorkloadKind::*;
+    match (kind, size) {
+        (WordCount, Small) => 200 * MB,
+        (WordCount, Medium) => GB,
+        (WordCount, Large) => 5 * GB,
+        (TpcH, Small) | (TpcH, Medium) => GB,
+        (TpcH, Large) => 10 * GB,
+        (IterativeMl, Small) => 170 * MB,
+        (IterativeMl, Medium) => GB,
+        (IterativeMl, Large) => 3 * GB,
+        (PageRank, Small) => 150 * MB,
+        (PageRank, Medium) => GB,
+        (PageRank, Large) => 6 * GB,
+    }
+}
+
+/// Per-task scan/processing rate (MB/s) by workload — calibrated so job
+/// response times land in the paper's tens-to-hundreds-of-seconds range on
+/// a 64-container testbed.
+fn scan_rate(kind: WorkloadKind) -> f64 {
+    match kind {
+        WorkloadKind::WordCount => 3.0,
+        WorkloadKind::TpcH => 3.6,
+        WorkloadKind::IterativeMl => 2.2,
+        WorkloadKind::PageRank => 2.6,
+    }
+}
+
+/// Map-output selectivity (output bytes / input bytes).
+fn selectivity(kind: WorkloadKind) -> f64 {
+    match kind {
+        WorkloadKind::WordCount => 0.30,
+        WorkloadKind::TpcH => 0.45,
+        WorkloadKind::IterativeMl => 0.03,
+        WorkloadKind::PageRank => 0.12,
+    }
+}
+
+/// Iteration counts for the iterative workloads.
+pub const ML_ITERATIONS: usize = 4;
+pub const PAGERANK_ITERATIONS: usize = 5;
+
+/// One entry of an online submission trace.
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    pub arrival_secs: f64,
+    pub kind: WorkloadKind,
+    pub size: SizeClass,
+    pub home_dc: DcId,
+}
+
+/// Generator state (deterministic given its RNG stream).
+pub struct WorkloadGen {
+    rng: Pcg,
+    topo: TopologyConfig,
+}
+
+impl WorkloadGen {
+    pub fn new(cfg: &Config, rng: Pcg) -> Self {
+        WorkloadGen { rng, topo: cfg.topology.clone() }
+    }
+
+    /// Dataset name shared by all jobs of a (kind, size).
+    pub fn dataset_name(kind: WorkloadKind, size: SizeClass) -> String {
+        format!("{}-{}", kind.name(), size.name())
+    }
+
+    /// Per-DC placement weights for a workload's input (§6.1: TPC-H pins
+    /// two tables per DC; the rest partition evenly).
+    fn placement(&self, kind: WorkloadKind) -> Vec<f64> {
+        let n = self.topo.num_dcs();
+        match kind {
+            // Q3's three tables live in specific regions (see tpch_job);
+            // the combined dataset weight reflects |lineitem| ≈ 2(|C|+|O|).
+            WorkloadKind::TpcH => {
+                let mut w = vec![0.0; n];
+                w[0] = 1.0; // customer
+                w[1 % n] = 1.0; // orders
+                w[2 % n] = 2.0; // lineitem (larger)
+                w
+            }
+            _ => vec![1.0; n],
+        }
+    }
+
+    /// Ensure the shared input dataset exists in the DFS.
+    pub fn ensure_dataset(&mut self, dfs: &mut Dfs, kind: WorkloadKind, size: SizeClass) {
+        let name = Self::dataset_name(kind, size);
+        if dfs.get(&name).is_none() {
+            let weights = self.placement(kind);
+            dfs.ingest(&name, input_bytes(kind, size), &weights, self.topo.workers_per_dc, &mut self.rng);
+        }
+    }
+
+    /// Draw a size class from the paper's 46/40/14 mix (TPC-H upgrades
+    /// small → medium since Fig 7 defines no small TPC-H input).
+    pub fn sample_class(&mut self, mix: &[f64; 3], kind: WorkloadKind) -> SizeClass {
+        let c = match self.rng.weighted(&mix[..]) {
+            0 => SizeClass::Small,
+            1 => SizeClass::Medium,
+            _ => SizeClass::Large,
+        };
+        if kind == WorkloadKind::TpcH && c == SizeClass::Small {
+            SizeClass::Medium
+        } else {
+            c
+        }
+    }
+
+    /// Build the online submission trace (Fig 8 methodology): `n` jobs,
+    /// kinds round-robin over the four workloads, sizes from the mix,
+    /// exponential inter-arrivals, homes round-robin over regions.
+    pub fn trace(&mut self, cfg: &Config, n: usize) -> Vec<TraceEntry> {
+        let mut t = 0.0;
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let kind = WorkloadKind::ALL[i % 4];
+            let size = self.sample_class(&cfg.workload.mix, kind);
+            out.push(TraceEntry {
+                arrival_secs: t,
+                kind,
+                size,
+                home_dc: DcId(i % self.topo.num_dcs()),
+            });
+            t += self.rng.exp(cfg.workload.mean_interarrival_secs);
+        }
+        out
+    }
+
+    /// Instantiate the DAG for one job. The dataset must already be in the
+    /// DFS (call [`WorkloadGen::ensure_dataset`] first).
+    pub fn make_job(
+        &mut self,
+        id: JobId,
+        kind: WorkloadKind,
+        size: SizeClass,
+        home_dc: DcId,
+        dfs: &Dfs,
+    ) -> JobSpec {
+        let name = Self::dataset_name(kind, size);
+        let ds = dfs.get(&name).unwrap_or_else(|| panic!("dataset {name} not ingested"));
+        match kind {
+            WorkloadKind::WordCount => self.two_stage_job(id, kind, size, home_dc, ds),
+            // Rotate the TPC-H query shape by job id: Q1 (single-table
+            // aggregate), Q3 (3-way join, the paper's Fig 5 example),
+            // Q12 (2-way join) — same regional table pinning.
+            WorkloadKind::TpcH => match id.0 % 3 {
+                0 => self.tpch_q3(id, size, home_dc, ds),
+                1 => self.tpch_q1(id, size, home_dc, ds),
+                _ => self.tpch_q12(id, size, home_dc, ds),
+            },
+            WorkloadKind::IterativeMl => {
+                self.iterative_job(id, kind, size, home_dc, ds, ML_ITERATIONS)
+            }
+            WorkloadKind::PageRank => {
+                self.iterative_job(id, kind, size, home_dc, ds, PAGERANK_ITERATIONS)
+            }
+        }
+    }
+
+    /// Stage-level r: tasks in a stage share characteristics (§4.1).
+    fn stage_r(&mut self) -> f64 {
+        self.rng.uniform(0.3, 0.7)
+    }
+
+    /// ±10 % per-task jitter on processing time.
+    fn jitter(&mut self) -> f64 {
+        self.rng.uniform(0.9, 1.1)
+    }
+
+    /// A map stage with one task per dataset block, node-local preference.
+    fn map_stage(
+        &mut self,
+        job: JobId,
+        sid: u32,
+        parents: Vec<StageId>,
+        ds: &crate::storage::Dataset,
+        rate: f64,
+        sel: f64,
+    ) -> StageSpec {
+        let r = self.stage_r();
+        let tasks = ds
+            .partitions
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let p_secs = (p.bytes as f64 / MB as f64) / rate * self.jitter();
+                TaskSpec {
+                    id: TaskId { job, stage: StageId(sid), index: i as u32 },
+                    r,
+                    p: p_secs.max(0.5),
+                    input_bytes: p.bytes,
+                    output_bytes: (p.bytes as f64 * sel) as u64,
+                    pref_node: Some(p.node),
+                    pref_dc: p.dc,
+                }
+            })
+            .collect();
+        StageSpec { id: StageId(sid), parents, tasks }
+    }
+
+    /// A shuffle stage: width derived from total parent output, preference
+    /// unresolved (None) until the partitionList is known.
+    #[allow(clippy::too_many_arguments)]
+    fn shuffle_stage(
+        &mut self,
+        job: JobId,
+        sid: u32,
+        parents: Vec<StageId>,
+        parent_out_bytes: u64,
+        width: usize,
+        rate: f64,
+        sel: f64,
+    ) -> StageSpec {
+        let r = self.stage_r();
+        let per_task = parent_out_bytes / width.max(1) as u64;
+        let tasks = (0..width.max(1))
+            .map(|i| {
+                let p_secs = (per_task as f64 / MB as f64) / rate * self.jitter();
+                TaskSpec {
+                    id: TaskId { job, stage: StageId(sid), index: i as u32 },
+                    r,
+                    p: p_secs.max(0.5),
+                    input_bytes: per_task,
+                    output_bytes: (per_task as f64 * sel) as u64,
+                    pref_node: None,
+                    pref_dc: DcId(0), // resolved at release
+                }
+            })
+            .collect();
+        StageSpec { id: StageId(sid), parents, tasks }
+    }
+
+    /// WordCount: map → reduce.
+    fn two_stage_job(
+        &mut self,
+        id: JobId,
+        kind: WorkloadKind,
+        size: SizeClass,
+        home_dc: DcId,
+        ds: &crate::storage::Dataset,
+    ) -> JobSpec {
+        let rate = scan_rate(kind);
+        let sel = selectivity(kind);
+        let s0 = self.map_stage(id, 0, vec![], ds, rate, sel);
+        let map_out: u64 = s0.tasks.iter().map(|t| t.output_bytes).sum();
+        let width = (s0.tasks.len() / 2).clamp(1, 8);
+        let s1 = self.shuffle_stage(id, 1, vec![StageId(0)], map_out, width, rate * 2.0, 0.1);
+        JobSpec { id, kind, size, home_dc, stages: vec![s0, s1] }
+    }
+
+    /// Regional scan stage over the partitions pinned to `dc`.
+    fn tpch_scan_stage(
+        &mut self,
+        id: JobId,
+        sid: u32,
+        dc: DcId,
+        ds: &crate::storage::Dataset,
+        rate: f64,
+        sel: f64,
+    ) -> StageSpec {
+        let r = self.stage_r();
+        let tasks: Vec<TaskSpec> = ds
+            .partitions
+            .iter()
+            .filter(|p| p.dc == dc)
+            .enumerate()
+            .map(|(i, p)| {
+                let p_secs = (p.bytes as f64 / MB as f64) / rate * self.jitter();
+                TaskSpec {
+                    id: TaskId { job: id, stage: StageId(sid), index: i as u32 },
+                    r,
+                    p: p_secs.max(0.5),
+                    input_bytes: p.bytes,
+                    output_bytes: (p.bytes as f64 * sel) as u64,
+                    pref_node: Some(p.node),
+                    pref_dc: p.dc,
+                }
+            })
+            .collect();
+        let tasks = if tasks.is_empty() {
+            vec![TaskSpec {
+                id: TaskId { job: id, stage: StageId(sid), index: 0 },
+                r,
+                p: 1.0,
+                input_bytes: MB,
+                output_bytes: MB / 5,
+                pref_node: None,
+                pref_dc: dc,
+            }]
+        } else {
+            tasks
+        };
+        StageSpec { id: StageId(sid), parents: vec![], tasks }
+    }
+
+    /// TPC-H Q1: scan lineitem (the big table in DC2) -> group-by agg.
+    fn tpch_q1(
+        &mut self,
+        id: JobId,
+        size: SizeClass,
+        home_dc: DcId,
+        ds: &crate::storage::Dataset,
+    ) -> JobSpec {
+        let kind = WorkloadKind::TpcH;
+        let rate = scan_rate(kind);
+        let n = self.topo.num_dcs();
+        let s0 = self.tpch_scan_stage(id, 0, DcId(2 % n), ds, rate, 0.25);
+        let o0: u64 = s0.tasks.iter().map(|t| t.output_bytes).sum();
+        let w = (s0.tasks.len() / 2).clamp(1, 8);
+        let s1 = self.shuffle_stage(id, 1, vec![StageId(0)], o0, w, rate * 2.0, 0.05);
+        JobSpec { id, kind, size, home_dc, stages: vec![s0, s1] }
+    }
+
+    /// TPC-H Q12: orders (DC1) join lineitem (DC2) -> agg.
+    fn tpch_q12(
+        &mut self,
+        id: JobId,
+        size: SizeClass,
+        home_dc: DcId,
+        ds: &crate::storage::Dataset,
+    ) -> JobSpec {
+        let kind = WorkloadKind::TpcH;
+        let rate = scan_rate(kind);
+        let n = self.topo.num_dcs();
+        let s0 = self.tpch_scan_stage(id, 0, DcId(1 % n), ds, rate, 0.4);
+        let s1 = self.tpch_scan_stage(id, 1, DcId(2 % n), ds, rate, 0.4);
+        let mut s1 = s1;
+        s1.id = StageId(1);
+        for (i, t) in s1.tasks.iter_mut().enumerate() {
+            t.id = TaskId { job: id, stage: StageId(1), index: i as u32 };
+        }
+        let out = |s: &StageSpec| s.tasks.iter().map(|t| t.output_bytes).sum::<u64>();
+        let (o0, o1) = (out(&s0), out(&s1));
+        let jw = ((s0.tasks.len() + s1.tasks.len()) / 2).clamp(2, 12);
+        let s2 = self.shuffle_stage(id, 2, vec![StageId(0), StageId(1)], o0 + o1, jw, rate, 0.3);
+        let o2 = out(&s2);
+        let s3 = self.shuffle_stage(id, 3, vec![StageId(2)], o2, (jw / 2).max(1), rate * 2.0, 0.05);
+        JobSpec { id, kind, size, home_dc, stages: vec![s0, s1, s2, s3] }
+    }
+
+    /// TPC-H Q3: three regional scans, two joins, one aggregation.
+    fn tpch_q3(
+        &mut self,
+        id: JobId,
+        size: SizeClass,
+        home_dc: DcId,
+        ds: &crate::storage::Dataset,
+    ) -> JobSpec {
+        let kind = WorkloadKind::TpcH;
+        let rate = scan_rate(kind);
+        let sel = selectivity(kind);
+        let n = self.topo.num_dcs();
+        // Slice the shared dataset's partitions by table region: customer
+        // in DC0, orders in DC1, lineitem in DC2 (mod #regions).
+        let table_dc = [DcId(0), DcId(1 % n), DcId(2 % n)];
+        let mut stages = Vec::new();
+        for (tbl, &dc) in table_dc.iter().enumerate() {
+            let r = self.stage_r();
+            let tasks: Vec<TaskSpec> = ds
+                .partitions
+                .iter()
+                .filter(|p| p.dc == dc)
+                .enumerate()
+                .map(|(i, p)| {
+                    let p_secs = (p.bytes as f64 / MB as f64) / rate * self.jitter();
+                    TaskSpec {
+                        id: TaskId { job: id, stage: StageId(tbl as u32), index: i as u32 },
+                        r,
+                        p: p_secs.max(0.5),
+                        input_bytes: p.bytes,
+                        output_bytes: (p.bytes as f64 * sel) as u64,
+                        pref_node: Some(p.node),
+                        pref_dc: p.dc,
+                    }
+                })
+                .collect();
+            // A region may hold no partitions for tiny inputs; synthesize a
+            // single small scan task so the DAG shape is stable.
+            let tasks = if tasks.is_empty() {
+                vec![TaskSpec {
+                    id: TaskId { job: id, stage: StageId(tbl as u32), index: 0 },
+                    r,
+                    p: 1.0,
+                    input_bytes: MB,
+                    output_bytes: MB / 5,
+                    pref_node: None,
+                    pref_dc: dc,
+                }]
+            } else {
+                tasks
+            };
+            stages.push(StageSpec { id: StageId(tbl as u32), parents: vec![], tasks });
+        }
+        let out = |s: &StageSpec| s.tasks.iter().map(|t| t.output_bytes).sum::<u64>();
+        let (o0, o1, o2) = (out(&stages[0]), out(&stages[1]), out(&stages[2]));
+        // join1 = C ⋈ O, join2 = join1 ⋈ L, then aggregate.
+        let j1w = ((stages[0].tasks.len() + stages[1].tasks.len()) / 2).clamp(2, 12);
+        let s3 = self.shuffle_stage(id, 3, vec![StageId(0), StageId(1)], o0 + o1, j1w, rate, 0.5);
+        let o3 = out(&s3);
+        let j2w = ((s3.tasks.len() + stages[2].tasks.len()) / 2).clamp(2, 12);
+        let s4 = self.shuffle_stage(id, 4, vec![StageId(3), StageId(2)], o3 + o2, j2w, rate, 0.3);
+        let o4 = out(&s4);
+        let s5 = self.shuffle_stage(id, 5, vec![StageId(4)], o4, (j2w / 2).max(1), rate * 2.0, 0.05);
+        stages.extend([s3, s4, s5]);
+        JobSpec { id, kind, size, home_dc, stages }
+    }
+
+    /// Iterative ML / PageRank: load → K iteration stages over the cached
+    /// partitions → collect.
+    #[allow(clippy::too_many_arguments)]
+    fn iterative_job(
+        &mut self,
+        id: JobId,
+        kind: WorkloadKind,
+        size: SizeClass,
+        home_dc: DcId,
+        ds: &crate::storage::Dataset,
+        iters: usize,
+    ) -> JobSpec {
+        let rate = scan_rate(kind);
+        let sel = selectivity(kind);
+        let mut stages = vec![self.map_stage(id, 0, vec![], ds, rate * 1.5, sel)];
+        // Per-iteration exchanged state (model weights / rank vector).
+        let state_bytes = ((ds.total_bytes() as f64 * sel) as u64).clamp(MB, 160 * MB);
+        for k in 0..iters {
+            let sid = (k + 1) as u32;
+            let r = self.stage_r();
+            let tasks: Vec<TaskSpec> = ds
+                .partitions
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    let p_secs = (p.bytes as f64 / MB as f64) / rate * self.jitter();
+                    TaskSpec {
+                        id: TaskId { job: id, stage: StageId(sid), index: i as u32 },
+                        r,
+                        // Iterations run over cached data: cheaper than load.
+                        p: (p_secs * 0.6).max(0.5),
+                        input_bytes: state_bytes / ds.partitions.len().max(1) as u64,
+                        output_bytes: state_bytes / ds.partitions.len().max(1) as u64,
+                        pref_node: Some(p.node),
+                        pref_dc: p.dc,
+                    }
+                })
+                .collect();
+            stages.push(StageSpec { id: StageId(sid), parents: vec![StageId(sid - 1)], tasks });
+        }
+        // Collect stage: single small task gathering the final state.
+        let last = StageId(iters as u32);
+        let r = self.stage_r();
+        stages.push(StageSpec {
+            id: StageId((iters + 1) as u32),
+            parents: vec![last],
+            tasks: vec![TaskSpec {
+                id: TaskId { job: id, stage: StageId((iters + 1) as u32), index: 0 },
+                r,
+                p: 2.0,
+                input_bytes: state_bytes,
+                output_bytes: MB,
+                pref_node: None,
+                pref_dc: home_dc,
+            }],
+        });
+        JobSpec { id, kind, size, home_dc, stages }
+    }
+}
+
+/// Expected block count for an input size (for tests / sanity).
+pub fn expected_blocks(total_bytes: u64, num_dcs: usize) -> usize {
+    let per_dc = total_bytes / num_dcs as u64;
+    (per_dc.div_ceil(BLOCK_BYTES).max(1) as usize) * num_dcs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Config, Dfs, WorkloadGen) {
+        let cfg = Config::default();
+        let dfs = Dfs::default();
+        let gen = WorkloadGen::new(&cfg, Pcg::seeded(7));
+        (cfg, dfs, gen)
+    }
+
+    #[test]
+    fn fig7_sizes_match_paper() {
+        use SizeClass::*;
+        use WorkloadKind::*;
+        assert_eq!(input_bytes(WordCount, Small), 200 * MB);
+        assert_eq!(input_bytes(WordCount, Large), 5 * GB);
+        assert_eq!(input_bytes(TpcH, Large), 10 * GB);
+        assert_eq!(input_bytes(IterativeMl, Small), 170 * MB);
+        assert_eq!(input_bytes(PageRank, Large), 6 * GB);
+    }
+
+    #[test]
+    fn wordcount_is_map_reduce() {
+        let (cfg, mut dfs, mut gen) = setup();
+        gen.ensure_dataset(&mut dfs, WorkloadKind::WordCount, SizeClass::Medium);
+        let j = gen.make_job(JobId(1), WorkloadKind::WordCount, SizeClass::Medium, DcId(0), &dfs);
+        j.validate(cfg.scheduler.theta).unwrap();
+        assert_eq!(j.stages.len(), 2);
+        // 1 GB over 4 DCs = 2 blocks per DC = 8 map tasks.
+        assert_eq!(j.stages[0].tasks.len(), 8);
+        assert!(j.stages[0].tasks.iter().all(|t| t.pref_node.is_some()));
+        assert!(j.stages[1].tasks.iter().all(|t| t.pref_node.is_none()));
+        assert!(j.work() > 0.0);
+    }
+
+    #[test]
+    fn tpch_dag_has_join_structure() {
+        let (cfg, mut dfs, mut gen) = setup();
+        gen.ensure_dataset(&mut dfs, WorkloadKind::TpcH, SizeClass::Large);
+        // JobId % 3 == 0 selects the Q3 shape.
+        let j = gen.make_job(JobId(3), WorkloadKind::TpcH, SizeClass::Large, DcId(1), &dfs);
+        j.validate(cfg.scheduler.theta).unwrap();
+        assert_eq!(j.stages.len(), 6);
+        assert_eq!(j.stages[3].parents, vec![StageId(0), StageId(1)]);
+        assert_eq!(j.stages[4].parents, vec![StageId(3), StageId(2)]);
+        assert_eq!(j.stages[5].parents, vec![StageId(4)]);
+        // Scans are regional: every customer-scan task prefers DC0.
+        assert!(j.stages[0].tasks.iter().all(|t| t.pref_dc == DcId(0)));
+        assert!(j.stages[1].tasks.iter().all(|t| t.pref_dc == DcId(1)));
+        assert!(j.stages[2].tasks.iter().all(|t| t.pref_dc == DcId(2)));
+    }
+
+    #[test]
+    fn tpch_q1_is_scan_agg() {
+        let (cfg, mut dfs, mut gen) = setup();
+        gen.ensure_dataset(&mut dfs, WorkloadKind::TpcH, SizeClass::Medium);
+        let j = gen.make_job(JobId(1), WorkloadKind::TpcH, SizeClass::Medium, DcId(0), &dfs);
+        j.validate(cfg.scheduler.theta).unwrap();
+        assert_eq!(j.stages.len(), 2, "Q1 = scan + aggregate");
+        assert!(j.stages[0].tasks.iter().all(|t| t.pref_dc == DcId(2)), "lineitem is in EC-1");
+    }
+
+    #[test]
+    fn tpch_q12_is_two_way_join() {
+        let (cfg, mut dfs, mut gen) = setup();
+        gen.ensure_dataset(&mut dfs, WorkloadKind::TpcH, SizeClass::Medium);
+        let j = gen.make_job(JobId(2), WorkloadKind::TpcH, SizeClass::Medium, DcId(0), &dfs);
+        j.validate(cfg.scheduler.theta).unwrap();
+        assert_eq!(j.stages.len(), 4, "Q12 = 2 scans + join + agg");
+        assert_eq!(j.stages[2].parents, vec![StageId(0), StageId(1)]);
+        assert!(j.stages[0].tasks.iter().all(|t| t.pref_dc == DcId(1)), "orders in NC-5");
+        assert!(j.stages[1].tasks.iter().all(|t| t.pref_dc == DcId(2)), "lineitem in EC-1");
+    }
+
+    #[test]
+    fn iterative_jobs_chain_stages() {
+        let (cfg, mut dfs, mut gen) = setup();
+        gen.ensure_dataset(&mut dfs, WorkloadKind::IterativeMl, SizeClass::Small);
+        let j = gen.make_job(JobId(3), WorkloadKind::IterativeMl, SizeClass::Small, DcId(2), &dfs);
+        j.validate(cfg.scheduler.theta).unwrap();
+        assert_eq!(j.stages.len(), ML_ITERATIONS + 2);
+        for k in 1..=ML_ITERATIONS {
+            assert_eq!(j.stages[k].parents, vec![StageId(k as u32 - 1)]);
+            // Iterations keep data locality of the cached partitions.
+            assert!(j.stages[k].tasks.iter().all(|t| t.pref_node.is_some()));
+        }
+        // Critical path grows with iterations.
+        let cp = j.critical_path();
+        assert!(cp > ML_ITERATIONS as f64 * 0.5, "cp {cp}");
+    }
+
+    #[test]
+    fn pagerank_has_five_iterations() {
+        let (_, mut dfs, mut gen) = setup();
+        gen.ensure_dataset(&mut dfs, WorkloadKind::PageRank, SizeClass::Medium);
+        let j = gen.make_job(JobId(4), WorkloadKind::PageRank, SizeClass::Medium, DcId(0), &dfs);
+        assert_eq!(j.stages.len(), PAGERANK_ITERATIONS + 2);
+    }
+
+    #[test]
+    fn trace_follows_mix_and_arrivals() {
+        let (cfg, _, mut gen) = setup();
+        let trace = gen.trace(&cfg, 400);
+        assert_eq!(trace.len(), 400);
+        // Arrivals increase; mean gap ≈ 60 s.
+        let mut gaps = Vec::new();
+        for w in trace.windows(2) {
+            assert!(w[1].arrival_secs >= w[0].arrival_secs);
+            gaps.push(w[1].arrival_secs - w[0].arrival_secs);
+        }
+        // Default calibrated inter-arrival is 30 s (see config defaults).
+        let mean_gap = crate::util::stats::mean(&gaps);
+        assert!((mean_gap - 30.0).abs() < 5.0, "mean gap {mean_gap}");
+        // Size mix roughly 46/40/14 (TPC-H upgrades small→medium).
+        let small = trace.iter().filter(|e| e.size == SizeClass::Small).count() as f64 / 400.0;
+        let large = trace.iter().filter(|e| e.size == SizeClass::Large).count() as f64 / 400.0;
+        assert!((small - 0.46 * 0.75).abs() < 0.12, "small {small}");
+        assert!((large - 0.14).abs() < 0.07, "large {large}");
+        // All four kinds cycle.
+        assert_eq!(trace[0].kind, WorkloadKind::WordCount);
+        assert_eq!(trace[1].kind, WorkloadKind::TpcH);
+    }
+
+    #[test]
+    fn tpch_small_upgrades_to_medium() {
+        let (cfg, _, mut gen) = setup();
+        for _ in 0..200 {
+            let c = gen.sample_class(&cfg.workload.mix, WorkloadKind::TpcH);
+            assert_ne!(c, SizeClass::Small);
+        }
+    }
+
+    #[test]
+    fn jobs_are_deterministic_given_seed() {
+        let build = || {
+            let cfg = Config::default();
+            let mut dfs = Dfs::default();
+            let mut gen = WorkloadGen::new(&cfg, Pcg::seeded(99));
+            gen.ensure_dataset(&mut dfs, WorkloadKind::TpcH, SizeClass::Medium);
+            let j = gen.make_job(JobId(5), WorkloadKind::TpcH, SizeClass::Medium, DcId(0), &dfs);
+            (j.work(), j.num_tasks())
+        };
+        assert_eq!(build(), build());
+    }
+
+    #[test]
+    fn all_workloads_validate_at_all_sizes() {
+        let (cfg, mut dfs, mut gen) = setup();
+        let mut id = 0;
+        for kind in WorkloadKind::ALL {
+            for size in [SizeClass::Small, SizeClass::Medium, SizeClass::Large] {
+                gen.ensure_dataset(&mut dfs, kind, size);
+                let j = gen.make_job(JobId(id), kind, size, DcId(0), &dfs);
+                j.validate(cfg.scheduler.theta)
+                    .unwrap_or_else(|e| panic!("{} {}: {e}", kind.name(), size.name()));
+                id += 1;
+            }
+        }
+    }
+}

@@ -1,0 +1,298 @@
+//! Cross-deployment integration tests: paper-shape assertions, chaos
+//! (spot revocations) survival, topology variations, determinism.
+
+use houtu::config::{Config, Deployment};
+use houtu::dag::{SizeClass, WorkloadKind};
+use houtu::deploy::{run_single_job, run_trace_experiment, SingleJobPlan};
+use houtu::ids::DcId;
+
+fn cfg() -> Config {
+    let mut c = Config::default();
+    c.workload.num_jobs = 8;
+    c
+}
+
+#[test]
+fn paper_shape_houtu_beats_static_baselines() {
+    let c = cfg();
+    let houtu = run_trace_experiment(&c, Deployment::Houtu);
+    let decent = run_trace_experiment(&c, Deployment::DecentStat);
+    let cent_stat = run_trace_experiment(&c, Deployment::CentStat);
+    // Fig 8 shape: houtu < decent-stat < ~cent-stat on avg JRT; makespan too.
+    assert!(
+        houtu.metrics.avg_jrt() < decent.metrics.avg_jrt(),
+        "houtu {:.0} !< decent-stat {:.0}",
+        houtu.metrics.avg_jrt(),
+        decent.metrics.avg_jrt()
+    );
+    assert!(
+        houtu.metrics.makespan() < cent_stat.metrics.makespan(),
+        "houtu {:.0} !< cent-stat {:.0}",
+        houtu.metrics.makespan(),
+        cent_stat.metrics.makespan()
+    );
+}
+
+#[test]
+fn paper_shape_houtu_near_cent_dyna() {
+    let c = cfg();
+    let houtu = run_trace_experiment(&c, Deployment::Houtu);
+    let dyna = run_trace_experiment(&c, Deployment::CentDyna);
+    // §6.2: "approximate performance compared with the centralized
+    // architecture with state-of-the-art dynamic scheduling".
+    let ratio = houtu.metrics.avg_jrt() / dyna.metrics.avg_jrt();
+    assert!(ratio < 1.15, "houtu/cent-dyna JRT ratio {ratio:.2}");
+}
+
+#[test]
+fn paper_shape_spot_deployments_are_much_cheaper() {
+    let c = Config::default(); // the calibrated 12-job trace
+    let houtu = run_trace_experiment(&c, Deployment::Houtu);
+    let cent_stat = run_trace_experiment(&c, Deployment::CentStat);
+    // Fig 10: houtu machine cost way below the on-demand baseline.
+    assert!(
+        houtu.cost.machine_usd < cent_stat.cost.machine_usd * 0.5,
+        "houtu ${:.2} vs cent-stat ${:.2}",
+        houtu.cost.machine_usd,
+        cent_stat.cost.machine_usd
+    );
+    // And it saves communication, not spends more.
+    assert!(houtu.wan.stats.cross_dc_total_bytes() < cent_stat.wan.stats.cross_dc_total_bytes());
+}
+
+#[test]
+fn survives_spot_revocation_chaos() {
+    // Aggressive spot market: instances die mid-run; every job must still
+    // complete through task re-queue + JM recovery.
+    let mut c = cfg();
+    c.workload.num_jobs = 6;
+    c.cloud.revocations = true;
+    c.cloud.spot_volatility = 0.6; // spiky market
+    c.cloud.market_period_secs = 60.0;
+    c.cloud.bid_multiplier = 1.3; // tight bids -> more revocations
+    let w = run_trace_experiment(&c, Deployment::Houtu);
+    assert_eq!(w.metrics.completed_jobs(), 6, "jobs lost to revocations");
+    // Chaos must actually have happened for the test to mean anything.
+    let recoveries = w.metrics.recovery_intervals_secs.len();
+    let restarts: u32 = w.metrics.jobs.values().map(|j| j.restarts).sum();
+    assert!(
+        recoveries > 0 || restarts == 0,
+        "expected JM recoveries under chaos (got {recoveries} recoveries, {restarts} restarts)"
+    );
+}
+
+#[test]
+fn chaos_versus_no_recovery_shows_the_mechanism_matters() {
+    let mut c = cfg();
+    c.workload.num_jobs = 6;
+    c.cloud.revocations = true;
+    c.cloud.spot_volatility = 0.6;
+    c.cloud.market_period_secs = 60.0;
+    c.cloud.bid_multiplier = 1.3;
+    let with = run_trace_experiment(&c, Deployment::Houtu);
+    // recovery_enabled=false degrades JM failures to full restarts.
+    c.failures.recovery_enabled = false;
+    let without = run_trace_experiment(&c, Deployment::Houtu);
+    assert_eq!(with.metrics.completed_jobs(), 6);
+    assert_eq!(without.metrics.completed_jobs(), 6);
+    assert!(
+        with.metrics.avg_jrt() <= without.metrics.avg_jrt() * 1.05,
+        "recovery {:.0}s should not lose to restart {:.0}s",
+        with.metrics.avg_jrt(),
+        without.metrics.avg_jrt()
+    );
+}
+
+#[test]
+fn two_region_topology_works() {
+    let mut c = cfg();
+    c.topology.regions = vec!["A".into(), "B".into()];
+    c.resize_bandwidth();
+    c.workload.num_jobs = 4;
+    for mode in [Deployment::Houtu, Deployment::CentStat] {
+        let w = run_trace_experiment(&c, mode);
+        assert_eq!(w.metrics.completed_jobs(), 4, "{mode:?}");
+    }
+}
+
+#[test]
+fn eight_region_topology_works() {
+    let mut c = cfg();
+    c.topology.regions = (0..8).map(|i| format!("R{i}")).collect();
+    c.resize_bandwidth();
+    c.workload.num_jobs = 4;
+    let w = run_trace_experiment(&c, Deployment::Houtu);
+    assert_eq!(w.metrics.completed_jobs(), 4);
+    // 8 JM replicas per job.
+    assert_eq!(w.jobs.values().next().unwrap().jms.len(), 8);
+}
+
+#[test]
+fn deterministic_across_identical_runs_all_modes() {
+    let c = cfg();
+    for mode in Deployment::ALL {
+        let a = run_trace_experiment(&c, mode);
+        let b = run_trace_experiment(&c, mode);
+        assert_eq!(a.metrics.avg_jrt(), b.metrics.avg_jrt(), "{mode:?}");
+        assert_eq!(
+            a.wan.stats.cross_dc_total_bytes(),
+            b.wan.stats.cross_dc_total_bytes(),
+            "{mode:?}"
+        );
+        assert_eq!(a.zk.stats.writes, b.zk.stats.writes, "{mode:?}");
+    }
+}
+
+#[test]
+fn different_seeds_give_different_schedules() {
+    let mut c = cfg();
+    let a = run_trace_experiment(&c, Deployment::Houtu);
+    c.seed = 1234;
+    let b = run_trace_experiment(&c, Deployment::Houtu);
+    assert_ne!(a.metrics.avg_jrt(), b.metrics.avg_jrt());
+}
+
+#[test]
+fn stealing_improves_injected_load_jrt() {
+    let c = Config::default();
+    let plan = || SingleJobPlan {
+        kind: WorkloadKind::PageRank,
+        size: SizeClass::Large,
+        home: DcId(1),
+        inject_at: Some((100.0, vec![DcId(0), DcId(2), DcId(3)])),
+        kill_jm_at: None,
+    };
+    let with = run_single_job(&c, Deployment::Houtu, plan());
+    let mut c2 = c.clone();
+    c2.scheduler.work_stealing = false;
+    let without = run_single_job(&c2, Deployment::Houtu, plan());
+    let jrt = |w: &houtu::deploy::World| {
+        w.metrics.jobs[&houtu::ids::JobId(0)].jrt().unwrap()
+    };
+    assert!(
+        jrt(&with) < jrt(&without) * 0.9,
+        "stealing {:.0}s !<< no-steal {:.0}s",
+        jrt(&with),
+        jrt(&without)
+    );
+}
+
+#[test]
+fn af_ablation_adaptive_releases_resources() {
+    // Single small job on an empty cluster: with Af the job's containers
+    // shrink back after stages drain; static holds them to the end.
+    let c = Config::default();
+    let w = run_single_job(
+        &c,
+        Deployment::Houtu,
+        SingleJobPlan {
+            kind: WorkloadKind::WordCount,
+            size: SizeClass::Small,
+            home: DcId(0),
+            inject_at: None,
+            kill_jm_at: None,
+        },
+    );
+    // All pools fully restored after completion.
+    for d in 0..4 {
+        assert_eq!(
+            w.cluster.free_pool(DcId(d)).len(),
+            w.cluster.dc_capacity(DcId(d))
+        );
+    }
+}
+
+#[test]
+fn zk_accumulates_replication_traffic() {
+    let c = cfg();
+    let w = run_trace_experiment(&c, Deployment::Houtu);
+    assert!(w.zk.stats.writes > 100, "zk writes {}", w.zk.stats.writes);
+    assert!(w.zk.stats.bytes_written > 10_000);
+    assert!(w.wan.stats.cross_dc_control_bytes > 0, "control traffic accounted");
+}
+
+#[test]
+fn killing_idle_node_is_harmless() {
+    use houtu::deploy::{build_sim, kill_node};
+    use houtu::ids::NodeId;
+    use houtu::sim::secs;
+    let c = cfg();
+    let mut sim = build_sim(c, Deployment::Houtu, secs(100));
+    kill_node(&mut sim, NodeId { dc: DcId(3), idx: 2 });
+    sim.run_until(secs(100));
+    // Node respawns after the re-acquisition delay.
+    assert!(sim.state.cluster.dcs[3].nodes[2].alive);
+    assert_eq!(sim.state.cluster.dc_capacity(DcId(3)), 16);
+}
+
+#[test]
+fn double_jm_kill_still_recovers() {
+    use houtu::dag::{SizeClass, WorkloadKind};
+    use houtu::deploy::{build_sim, kill_jm_host, submit_job};
+    use houtu::ids::JobId;
+    use houtu::sim::{secs, secs_f};
+    let c = cfg();
+    let mut sim = build_sim(c, Deployment::Houtu, secs(14_400));
+    sim.schedule_at(1, |sim| {
+        submit_job(sim, WorkloadKind::WordCount, SizeClass::Large, DcId(0));
+    });
+    // Kill two different sJMs in quick succession.
+    sim.schedule_at(secs_f(20.0), |sim| kill_jm_host(sim, JobId(0), DcId(1)));
+    sim.schedule_at(secs_f(25.0), |sim| kill_jm_host(sim, JobId(0), DcId(3)));
+    sim.run_until(secs(14_400));
+    assert_eq!(sim.state.metrics.completed_jobs(), 1);
+    assert!(sim.state.metrics.recovery_intervals_secs.len() >= 2);
+}
+
+#[test]
+fn kill_pjm_then_new_pjm_too() {
+    use houtu::dag::{SizeClass, WorkloadKind};
+    use houtu::deploy::{build_sim, kill_jm_host, submit_job};
+    use houtu::ids::JobId;
+    use houtu::sim::{secs, secs_f};
+    let c = cfg();
+    let mut sim = build_sim(c, Deployment::Houtu, secs(14_400));
+    sim.schedule_at(1, |sim| {
+        submit_job(sim, WorkloadKind::WordCount, SizeClass::Large, DcId(0));
+    });
+    sim.schedule_at(secs_f(20.0), |sim| kill_jm_host(sim, JobId(0), DcId(0)));
+    // After the election (primary moves), kill whoever is primary now.
+    sim.schedule_at(secs_f(45.0), |sim| {
+        let p = sim.state.jobs[&JobId(0)].primary;
+        kill_jm_host(sim, JobId(0), p);
+    });
+    sim.run_until(secs(14_400));
+    assert_eq!(sim.state.metrics.completed_jobs(), 1, "job must survive two elections");
+    assert!(sim.state.metrics.election_delays_secs.len() >= 2);
+}
+
+#[test]
+fn speculation_mitigates_stragglers() {
+    // 25% of tasks run 6x slow; speculation should recover most of it.
+    let mut c = cfg();
+    c.workload.num_jobs = 6;
+    c.workload.straggler_prob = 0.25;
+    c.workload.straggler_factor = 6.0;
+    c.failures.speculation = true;
+    let with = run_trace_experiment(&c, Deployment::Houtu);
+    c.failures.speculation = false;
+    let without = run_trace_experiment(&c, Deployment::Houtu);
+    assert_eq!(with.metrics.completed_jobs(), 6);
+    assert_eq!(without.metrics.completed_jobs(), 6);
+    let relaunches: u32 = with.jobs.values().map(|rt| rt.speculative_relaunches).sum();
+    assert!(relaunches > 0, "stragglers present but nothing speculated");
+    assert!(
+        with.metrics.avg_jrt() < without.metrics.avg_jrt(),
+        "speculation {:.0}s !< no-speculation {:.0}s",
+        with.metrics.avg_jrt(),
+        without.metrics.avg_jrt()
+    );
+}
+
+#[test]
+fn no_speculation_without_stragglers() {
+    let c = cfg(); // straggler_prob = 0
+    let w = run_trace_experiment(&c, Deployment::Houtu);
+    let relaunches: u32 = w.jobs.values().map(|rt| rt.speculative_relaunches).sum();
+    assert_eq!(relaunches, 0, "false-positive speculations");
+}

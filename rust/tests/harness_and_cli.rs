@@ -1,0 +1,138 @@
+//! Tests for the experiment harness, CLI parsing, CSV export and the
+//! pure scheduling helpers in the lifecycle layer.
+
+use houtu::cli;
+use houtu::config::{Config, Deployment};
+use houtu::deploy::lifecycle::proportional_targets;
+use houtu::ids::DcId;
+
+#[test]
+fn cli_parses_flags_and_overrides() {
+    let args: Vec<String> = [
+        "fig8", "--set", "scheduler.tau=0.25", "--set", "workload.num_jobs=3",
+        "--deployment", "cent-dyna", "--workload", "pagerank", "--size", "large",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    let cli = cli::parse(&args);
+    assert_eq!(cli.command, "fig8");
+    assert_eq!(cli.cfg.scheduler.tau, 0.25);
+    assert_eq!(cli.cfg.workload.num_jobs, 3);
+    assert_eq!(cli.deployment, Deployment::CentDyna);
+}
+
+#[test]
+fn proportional_targets_sum_and_proportionality() {
+    // 60/30/10 weights over 10 tasks -> 6/3/1.
+    let t = proportional_targets(&[60, 30, 10], 10, DcId(0));
+    assert_eq!(t.len(), 10);
+    let count = |d: usize| t.iter().filter(|x| x.0 == d).count();
+    assert_eq!(count(0), 6);
+    assert_eq!(count(1), 3);
+    assert_eq!(count(2), 1);
+}
+
+#[test]
+fn proportional_targets_zero_weights_fall_back_home() {
+    let t = proportional_targets(&[0, 0, 0], 4, DcId(2));
+    assert!(t.iter().all(|&d| d == DcId(2)));
+    assert!(proportional_targets(&[1, 2], 0, DcId(0)).is_empty());
+}
+
+#[test]
+fn proportional_targets_property_exact_total() {
+    use houtu::testkit::{forall, Gen};
+    use houtu::util::Pcg;
+    struct CaseGen;
+    impl Gen<(Vec<u64>, usize)> for CaseGen {
+        fn generate(&self, rng: &mut Pcg) -> (Vec<u64>, usize) {
+            let n = 1 + rng.index(6);
+            let weights = (0..n).map(|_| rng.below(1000)).collect();
+            (weights, rng.index(50))
+        }
+    }
+    forall(0xA110C, &CaseGen, |(weights, n): &(Vec<u64>, usize)| {
+        let t = proportional_targets(weights, *n, DcId(0));
+        if t.len() != *n {
+            return Err(format!("len {} != {n}", t.len()));
+        }
+        // Any DC with zero weight must get zero tasks (unless all zero).
+        if weights.iter().sum::<u64>() > 0 {
+            for (d, &w) in weights.iter().enumerate() {
+                let c = t.iter().filter(|x| x.0 == d).count();
+                if w == 0 && c > 0 {
+                    return Err(format!("dc{d} weight 0 got {c} tasks"));
+                }
+                // Largest-remainder: within 1 of the exact share.
+                let exact = w as f64 / weights.iter().sum::<u64>() as f64 * *n as f64;
+                if (c as f64 - exact).abs() > 1.0 + 1e-9 {
+                    return Err(format!("dc{d}: {c} vs exact {exact:.2}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn csv_export_writes_well_formed_files() {
+    let mut cfg = Config::default();
+    cfg.workload.num_jobs = 4;
+    let dir = std::env::temp_dir().join(format!("houtu_csv_{}", std::process::id()));
+    let files = houtu::exp::export_csv(&cfg, &dir).unwrap();
+    assert_eq!(files.len(), 4);
+    for f in &files {
+        let text = std::fs::read_to_string(dir.join(f)).unwrap();
+        let mut lines = text.lines();
+        let header = lines.next().unwrap();
+        assert!(header.contains(','), "{f}: no header");
+        let cols = header.split(',').count();
+        let mut rows = 0;
+        for l in lines {
+            assert_eq!(l.split(',').count(), cols, "{f}: ragged row {l:?}");
+            rows += 1;
+        }
+        assert!(rows > 0, "{f}: empty");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fig2_report_contains_all_regions() {
+    let cfg = Config::default();
+    let r = houtu::exp::fig2_wan(&cfg);
+    for region in &cfg.topology.regions {
+        assert!(r.contains(region.as_str()), "missing {region}");
+    }
+}
+
+#[test]
+fn random_single_jobs_complete_on_random_deployments() {
+    // Mini-fuzz over (kind, size, deployment, home): every combination
+    // must complete and return all containers to the pool.
+    use houtu::dag::{SizeClass, WorkloadKind};
+    use houtu::deploy::{run_single_job, SingleJobPlan};
+    use houtu::util::Pcg;
+    let mut rng = Pcg::seeded(0xF022);
+    let cfg = Config::default();
+    for _ in 0..10 {
+        let kind = WorkloadKind::ALL[rng.index(4)];
+        let size = [SizeClass::Small, SizeClass::Medium][rng.index(2)];
+        let mode = Deployment::ALL[rng.index(4)];
+        let home = DcId(rng.index(4));
+        let w = run_single_job(
+            &cfg,
+            mode,
+            SingleJobPlan { kind, size, home, inject_at: None, kill_jm_at: None },
+        );
+        assert_eq!(w.metrics.completed_jobs(), 1, "{kind:?} {size:?} {mode:?} {home}");
+        for d in 0..4 {
+            assert_eq!(
+                w.cluster.free_pool(DcId(d)).len(),
+                w.cluster.dc_capacity(DcId(d)),
+                "pool leak: {kind:?} {size:?} {mode:?}"
+            );
+        }
+    }
+}

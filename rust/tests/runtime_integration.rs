@@ -1,0 +1,100 @@
+//! Integration tests: the PJRT runtime executes the AOT artifacts with
+//! correct numerics (requires `make artifacts`).
+
+use houtu::runtime::{default_artifact_dir, Runtime, LOGREG_D, LOGREG_N, PAGERANK_N, SEG_K, SEG_N, SEG_V};
+use houtu::util::Pcg;
+
+fn runtime() -> Runtime {
+    Runtime::load(&default_artifact_dir()).expect("artifacts missing — run `make artifacts`")
+}
+
+#[test]
+fn logreg_training_reduces_loss_through_pjrt() {
+    let rt = runtime();
+    let mut rng = Pcg::seeded(7);
+    // Separable synthetic data: y = 1 iff x . w_true > 0.
+    let w_true: Vec<f32> = (0..LOGREG_D).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+    let x: Vec<f32> = (0..LOGREG_N * LOGREG_D).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+    let y: Vec<f32> = (0..LOGREG_N)
+        .map(|i| {
+            let dot: f32 = (0..LOGREG_D).map(|j| x[i * LOGREG_D + j] * w_true[j]).sum();
+            if dot > 0.0 { 1.0 } else { 0.0 }
+        })
+        .collect();
+    let mut w = vec![0.0f32; LOGREG_D];
+    let mut losses = Vec::new();
+    for _ in 0..25 {
+        let (w2, loss) = rt.logreg_step(&w, &x, &y, 0.5).unwrap();
+        w = w2;
+        losses.push(loss);
+    }
+    assert!(losses[0] > 0.68 && losses[0] < 0.71, "initial loss ~ln2, got {}", losses[0]);
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.5),
+        "loss did not halve: {losses:?}"
+    );
+    assert_eq!(rt.executions.get(), 25);
+}
+
+#[test]
+fn pagerank_converges_and_preserves_mass_through_pjrt() {
+    let rt = runtime();
+    let mut rng = Pcg::seeded(11);
+    let n = PAGERANK_N;
+    // Random link structure, column-normalized (transposed convention).
+    let mut adj = vec![0.0f32; n * n];
+    for c in 0..n {
+        let mut outdeg = 0;
+        for r in 0..n {
+            if rng.chance(0.05) {
+                adj[r * n + c] = 1.0;
+                outdeg += 1;
+            }
+        }
+        if outdeg == 0 {
+            adj[c] = 1.0;
+            outdeg = 1;
+        }
+        for r in 0..n {
+            adj[r * n + c] /= outdeg as f32;
+        }
+    }
+    let mut ranks = vec![1.0 / n as f32; n];
+    let mut resid = f32::MAX;
+    for _ in 0..40 {
+        let (r2, res) = rt.pagerank_step(&adj, &ranks, 0.85).unwrap();
+        ranks = r2;
+        resid = res;
+    }
+    assert!(resid < 1e-4, "residual {resid}");
+    let mass: f32 = ranks.iter().sum();
+    assert!((mass - 1.0).abs() < 1e-3, "mass {mass}");
+    assert!(ranks.iter().all(|&r| r > 0.0), "teleport keeps all ranks positive");
+}
+
+#[test]
+fn wordcount_agg_counts_through_pjrt() {
+    let rt = runtime();
+    let mut rng = Pcg::seeded(13);
+    let mut onehot = vec![0.0f32; SEG_N * SEG_K];
+    let mut expected = vec![0.0f32; SEG_K];
+    for i in 0..SEG_N {
+        let k = rng.index(SEG_K);
+        onehot[i * SEG_K + k] = 1.0;
+        expected[k] += 1.0;
+    }
+    let values: Vec<f32> = (0..SEG_N * SEG_V).map(|i| if i % SEG_V == 0 { 1.0 } else { 0.5 }).collect();
+    let out = rt.wordcount_agg(&onehot, &values).unwrap();
+    assert_eq!(out.len(), SEG_K * SEG_V);
+    for k in 0..SEG_K {
+        assert!((out[k * SEG_V] - expected[k]).abs() < 1e-3, "count mismatch at {k}");
+    }
+}
+
+#[test]
+fn missing_artifacts_give_actionable_error() {
+    match Runtime::load(std::path::Path::new("/nonexistent")) {
+        Ok(_) => panic!("load should fail"),
+        Err(err) => assert!(err.to_string().contains("make artifacts"), "{err}"),
+    }
+}

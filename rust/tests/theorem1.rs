@@ -1,0 +1,45 @@
+//! Theorem 1 (O(1)-competitive makespan for Af + Parades under fair
+//! per-DC schedulers) — empirical check across seeds and topologies.
+
+use houtu::config::{Config, Deployment};
+use houtu::exp::theorem1_bound;
+
+#[test]
+fn competitive_ratio_is_small_constant_across_seeds() {
+    let mut cfg = Config::default();
+    cfg.workload.num_jobs = 8;
+    for seed in [1, 2, 3] {
+        cfg.seed = seed;
+        let (_, ratio) = theorem1_bound(&cfg);
+        assert!(ratio < 10.0, "seed {seed}: ratio {ratio:.2}");
+        assert!(ratio >= 1.0, "seed {seed}: makespan below lower bound?!");
+    }
+}
+
+#[test]
+fn ratio_stays_bounded_when_cluster_shrinks() {
+    // Half the containers: more contention, the bound's T1/|P| term grows
+    // proportionally, so the *ratio* must stay in the same constant range.
+    let mut cfg = Config::default();
+    cfg.workload.num_jobs = 8;
+    cfg.topology.containers_per_worker = 2;
+    let (_, ratio) = theorem1_bound(&cfg);
+    assert!(ratio < 10.0, "ratio {ratio:.2}");
+}
+
+#[test]
+fn houtu_makespan_tracks_added_work() {
+    // Doubling the job count should not blow the per-job efficiency: the
+    // makespan grows sublinearly x2 (arrival spread dominates).
+    let mut cfg = Config::default();
+    cfg.workload.num_jobs = 6;
+    let w6 = houtu::deploy::run_trace_experiment(&cfg, Deployment::Houtu);
+    cfg.workload.num_jobs = 12;
+    let w12 = houtu::deploy::run_trace_experiment(&cfg, Deployment::Houtu);
+    assert!(
+        w12.metrics.makespan() < w6.metrics.makespan() * 3.0,
+        "6 jobs: {:.0}s, 12 jobs: {:.0}s",
+        w6.metrics.makespan(),
+        w12.metrics.makespan()
+    );
+}
