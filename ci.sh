@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 verify in one command: build, full test suite, then a smoke
+# scenario campaign through the real CLI (seconds, not minutes).
+set -euo pipefail
+cd "$(dirname "$0")"
+
+cargo build --release
+cargo test -q
+cargo run --release --quiet -- campaign --smoke
+echo "ci.sh: all green"

@@ -8,6 +8,7 @@
 //!   theorem1                                     check the makespan bound
 //!   run --deployment D --workload W --size S     run one job
 //!   trace --deployment D                         run the online trace
+//!   campaign [--spec FILE | --smoke]             run a scenario-matrix campaign
 //!   all                                          every figure in sequence
 //! ```
 
@@ -19,8 +20,9 @@ use crate::ids::DcId;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: houtu <fig2|fig3|fig7|fig8|fig9|fig10|fig11|fig12|theorem1|run|trace|export|all> \
-         [--config FILE] [--set section.key=value]... [--deployment D] [--workload W] [--size S]"
+        "usage: houtu <fig2|fig3|fig7|fig8|fig9|fig10|fig11|fig12|theorem1|run|trace|campaign|export|all> \
+         [--config FILE] [--set section.key=value]... [--deployment D] [--workload W] [--size S] \
+         [--spec FILE] [--smoke]"
     );
     std::process::exit(2);
 }
@@ -32,6 +34,10 @@ pub struct Cli {
     pub deployment: Deployment,
     pub workload: WorkloadKind,
     pub size: SizeClass,
+    /// Campaign spec file (`campaign --spec FILE`).
+    pub spec: Option<String>,
+    /// Built-in smoke campaign (`campaign --smoke`).
+    pub smoke: bool,
 }
 
 pub fn parse(args: &[String]) -> Cli {
@@ -43,6 +49,8 @@ pub fn parse(args: &[String]) -> Cli {
     let mut deployment = Deployment::Houtu;
     let mut workload = WorkloadKind::WordCount;
     let mut size = SizeClass::Medium;
+    let mut spec = None;
+    let mut smoke = false;
     let mut i = 1;
     while i < args.len() {
         match args[i].as_str() {
@@ -89,6 +97,13 @@ pub fn parse(args: &[String]) -> Cli {
                     _ => usage(),
                 };
             }
+            "--spec" => {
+                i += 1;
+                spec = Some(args.get(i).unwrap_or_else(|| usage()).clone());
+            }
+            "--smoke" => {
+                smoke = true;
+            }
             other => {
                 eprintln!("unknown flag {other:?}");
                 usage();
@@ -96,7 +111,7 @@ pub fn parse(args: &[String]) -> Cli {
         }
         i += 1;
     }
-    Cli { command, cfg, deployment, workload, size }
+    Cli { command, cfg, deployment, workload, size, spec, smoke }
 }
 
 /// Entry point used by `main.rs`.
@@ -165,6 +180,30 @@ pub fn run(cli: &Cli) {
                     eprintln!("export failed: {e}");
                     std::process::exit(1);
                 }
+            }
+        }
+        "campaign" => {
+            use crate::scenario::{self, CampaignSpec};
+            let load = |path: &str| -> CampaignSpec {
+                CampaignSpec::from_file(path).unwrap_or_else(|e| {
+                    eprintln!("error: {e:#}");
+                    std::process::exit(1);
+                })
+            };
+            let spec = if cli.smoke {
+                scenario::smoke_campaign()
+            } else if let Some(path) = &cli.spec {
+                load(path)
+            } else if std::path::Path::new("configs/campaign.toml").exists() {
+                load("configs/campaign.toml")
+            } else {
+                scenario::standard_campaign()
+            };
+            let report = scenario::run_campaign(cfg, &spec);
+            print!("{}", report.render());
+            if !report.all_pass() {
+                eprintln!("campaign FAILED: {} violations", report.total_violations());
+                std::process::exit(1);
             }
         }
         "trace" => {

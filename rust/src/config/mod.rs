@@ -10,7 +10,8 @@
 
 pub mod toml;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
 
 use self::toml::Doc;
 
@@ -343,7 +344,7 @@ impl Config {
     /// Load from a TOML file path, overlaying onto the defaults.
     pub fn from_file(path: &str) -> Result<Config> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-        let doc = toml::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let doc = toml::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
         let mut cfg = Config::default();
         cfg.apply_doc(&doc)?;
         Ok(cfg)
@@ -362,7 +363,7 @@ impl Config {
         let doc = match toml::parse(&text) {
             Ok(d) => d,
             Err(_) => toml::parse(&format!("[{section}]\n{key} = \"{value}\"\n"))
-                .map_err(|e| anyhow::anyhow!("bad override {kv:?}: {e}"))?,
+                .map_err(|e| anyhow!("bad override {kv:?}: {e}"))?,
         };
         self.apply_doc(&doc)
     }

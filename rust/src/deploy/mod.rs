@@ -13,7 +13,7 @@ pub mod world;
 
 pub use failure::{inject_hogs, kill_jm_host, kill_node};
 pub use lifecycle::submit_job;
-pub use scheduling::install_timers;
+pub use scheduling::{install_timers, should_steal};
 pub use world::{JobRt, World, WorldSim};
 
 use crate::config::{Config, Deployment};
@@ -40,6 +40,21 @@ pub fn schedule_trace(sim: &mut WorldSim, trace: &[TraceEntry]) {
     }
 }
 
+/// Deterministic online trace + run horizon for a config: the identical
+/// trace for every deployment/scenario at a given seed (generator stream
+/// 777 is independent of the world's RNG), with a generous completion
+/// pad. Shared by [`run_trace_experiment`] and the scenario engine so the
+/// two can never drift apart.
+pub fn online_trace(cfg: &Config) -> (Vec<TraceEntry>, SimTime) {
+    let trace = {
+        let mut gen = crate::workloads::WorkloadGen::new(cfg, crate::util::Pcg::new(cfg.seed, 777));
+        gen.trace(cfg, cfg.workload.num_jobs)
+    };
+    let last_arrival = trace.last().map(|e| e.arrival_secs).unwrap_or(0.0);
+    let horizon = secs((last_arrival + 14_400.0) as u64);
+    (trace, horizon)
+}
+
 /// Run the standard Fig-8 style experiment: `cfg.workload.num_jobs` jobs
 /// arriving online, on the given deployment. Returns the finished world
 /// (metrics, cost, WAN stats). Panics if jobs fail to complete within the
@@ -47,14 +62,7 @@ pub fn schedule_trace(sim: &mut WorldSim, trace: &[TraceEntry]) {
 pub fn run_trace_experiment(cfg: &Config, mode: Deployment) -> World {
     let mut cfg = cfg.clone();
     cfg.deployment = mode;
-    let trace = {
-        // Use an identical trace for every deployment: derive it from a
-        // fixed-seed generator independent of the world's RNG.
-        let mut gen = crate::workloads::WorkloadGen::new(&cfg, crate::util::Pcg::new(cfg.seed, 777));
-        gen.trace(&cfg, cfg.workload.num_jobs)
-    };
-    let last_arrival = trace.last().map(|e| e.arrival_secs).unwrap_or(0.0);
-    let horizon = secs((last_arrival + 14_400.0) as u64);
+    let (trace, horizon) = online_trace(&cfg);
     let mut sim = build_sim(cfg, mode, horizon);
     schedule_trace(&mut sim, &trace);
     sim.run_until(horizon);

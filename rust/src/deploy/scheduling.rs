@@ -235,6 +235,14 @@ pub fn check_stragglers(sim: &mut WorldSim, job: JobId, dc: DcId) {
     }
 }
 
+/// Algorithm 2's STEAL gate, kept pure for property testing: a JM turns
+/// thief only when it has no waiting task of its own, no steal request
+/// already in flight, and a nearly-idle container to offer
+/// (`free ≥ 1 − δ`, so the victim's *any* clause can fire on it).
+pub fn should_steal(has_waiting: bool, steal_inflight: bool, offered_free: f64, delta: f64) -> bool {
+    !has_waiting && !steal_inflight && offered_free + 1e-9 >= 1.0 - delta
+}
+
 /// Work stealing (Algorithm 2, STEAL): if this JM has no waiting task but
 /// a (nearly) idle executor, offer it to a victim JM of the same job.
 pub fn maybe_steal(sim: &mut WorldSim, job: JobId, dc: DcId) {
@@ -249,19 +257,26 @@ pub fn maybe_steal(sim: &mut WorldSim, job: JobId, dc: DcId) {
             return;
         }
         let Some(jm) = rt.jms.get(&dc) else { return };
-        if !jm.alive || jm.has_waiting() {
+        if !jm.alive {
             return;
         }
-        if *rt.steal_inflight.get(&dc).unwrap_or(&false) {
+        // Cheap gates first — the common busy-JM case must not pay the
+        // executor scan below.
+        let has_waiting = jm.has_waiting();
+        let inflight = *rt.steal_inflight.get(&dc).unwrap_or(&false);
+        if has_waiting || inflight {
             return;
         }
-        // An idle-enough executor to offer (free >= 1 - delta so the any
+        // An executor the full gate accepts: should_steal is the single
+        // source of the idle threshold (free >= 1 - delta, so the any
         // clause can fire at the victim).
         let idle = jm.executors.iter().copied().find(|c| {
             w.cluster
                 .containers
                 .get(c)
-                .map(|cc| cc.alive && cc.free + 1e-9 >= 1.0 - w.params.delta)
+                .map(|cc| {
+                    cc.alive && should_steal(has_waiting, inflight, cc.free, w.params.delta)
+                })
                 .unwrap_or(false)
         });
         let Some(cid) = idle else { return };

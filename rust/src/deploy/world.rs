@@ -116,6 +116,9 @@ pub struct World {
     pub trace_done: bool,
     /// Optional real-compute hook (e2e example).
     pub hook: Option<Box<dyn ComputeHook>>,
+    /// Invariant violations recorded by the scenario engine's runtime
+    /// probe (capped; empty on healthy runs and outside campaigns).
+    pub probe_violations: Vec<String>,
 }
 
 pub type WorldSim = Sim<World>;
@@ -187,6 +190,7 @@ impl World {
             hogs: Vec::new(),
             trace_done: false,
             hook: None,
+            probe_violations: Vec::new(),
             cfg,
         }
     }

@@ -166,21 +166,17 @@ pub fn fig10_cost(results: &[DeploymentResult]) -> String {
 
 /// Fig 9: cumulative running tasks of one job under (a) normal operation,
 /// (b) injected load with stealing, (c) injected load without stealing.
+/// The three situations are scenario-engine presets, so the figure and
+/// `houtu campaign` exercise the same machinery (parity is pinned by the
+/// `scenarios` integration tests).
 pub fn fig9_stealing(cfg: &Config) -> (String, [Vec<(f64, f64)>; 3]) {
-    let plan = |inject| SingleJobPlan {
-        kind: WorkloadKind::PageRank,
-        size: SizeClass::Large,
-        home: DcId(1),
-        inject_at: inject,
-        kill_jm_at: None,
+    use crate::scenario::{presets, run_scenario};
+    let run = |spec: &crate::scenario::ScenarioSpec| {
+        run_scenario(cfg, spec, cfg.seed).expect("fig9 scenario").world
     };
-    let inject_dcs = vec![DcId(0), DcId(2), DcId(3)];
-
-    let normal = run_single_job(cfg, Deployment::Houtu, plan(None));
-    let steal = run_single_job(cfg, Deployment::Houtu, plan(Some((100.0, inject_dcs.clone()))));
-    let mut no_steal_cfg = cfg.clone();
-    no_steal_cfg.scheduler.work_stealing = false;
-    let nosteal = run_single_job(&no_steal_cfg, Deployment::Houtu, plan(Some((100.0, inject_dcs))));
+    let normal = run(&presets::fig9_normal());
+    let steal = run(&presets::fig9_inject_steal());
+    let nosteal = run(&presets::fig9_inject_nosteal());
 
     let tl = |w: &World| w.metrics.task_launches.get(&JobId(0)).cloned().unwrap_or_default();
     let jrt = |w: &World| w.metrics.jobs[&JobId(0)].jrt().unwrap_or(f64::NAN);
@@ -224,17 +220,17 @@ pub fn fig9_stealing(cfg: &Config) -> (String, [Vec<(f64, f64)>; 3]) {
 
 /// Fig 11: job recovery from JM failures — containers over time and JRTs
 /// for pJM kill, sJM kill (HOUTU) and JM kill (centralized restart).
+/// All three kills run through the scenario engine's `fig11_kill` preset.
 pub fn fig11_recovery(cfg: &Config) -> String {
-    let plan = |dc| SingleJobPlan {
-        kind: WorkloadKind::WordCount,
-        size: SizeClass::Large,
-        home: DcId(0),
-        inject_at: None,
-        kill_jm_at: Some((70.0, dc)),
+    use crate::scenario::{presets, run_scenario};
+    let run = |dc, mode| {
+        run_scenario(cfg, &presets::fig11_kill(dc, mode), cfg.seed)
+            .expect("fig11 scenario")
+            .world
     };
-    let pjm = run_single_job(cfg, Deployment::Houtu, plan(DcId(0)));
-    let sjm = run_single_job(cfg, Deployment::Houtu, plan(DcId(2)));
-    let cent = run_single_job(cfg, Deployment::CentDyna, plan(DcId(0)));
+    let pjm = run(DcId(0), Deployment::Houtu);
+    let sjm = run(DcId(2), Deployment::Houtu);
+    let cent = run(DcId(0), Deployment::CentDyna);
 
     let jrt = |w: &World| w.metrics.jobs[&JobId(0)].jrt().unwrap_or(f64::NAN);
     let mut out = String::new();
@@ -320,17 +316,13 @@ pub fn fig12_overhead(cfg: &Config) -> String {
     loaded.workload.num_jobs = cfg.workload.num_jobs.max(8);
     let w = run_trace_experiment(&loaded, Deployment::Houtu);
     steal_delays.extend(w.metrics.steal_delays_ms.iter().copied());
-    let kill = run_single_job(
+    let kill = crate::scenario::run_scenario(
         cfg,
-        Deployment::Houtu,
-        SingleJobPlan {
-            kind: WorkloadKind::WordCount,
-            size: SizeClass::Large,
-            home: DcId(0),
-            inject_at: None,
-            kill_jm_at: Some((70.0, DcId(2))),
-        },
-    );
+        &crate::scenario::presets::fig11_kill(DcId(2), Deployment::Houtu),
+        cfg.seed,
+    )
+    .expect("fig12 kill scenario")
+    .world;
     writeln!(out, "\nFig 12(b) — time cost of mechanisms").unwrap();
     let sd = Summary::of(&steal_delays);
     writeln!(out, "steal message delay      : mean {:.2} ms (n={}, paper: 63.53 ms)", sd.mean, sd.n)
@@ -421,19 +413,11 @@ pub fn export_csv(cfg: &Config, dir: &std::path::Path) -> std::io::Result<Vec<St
     }
     save("fig9_tasks.csv", "scenario,t_secs,cumulative_tasks", &rows)?;
 
-    // Fig 11: container timelines per kill scenario.
+    // Fig 11: container timelines per kill scenario (engine presets).
     let mk = |dc, mode| {
-        crate::deploy::run_single_job(
-            cfg,
-            mode,
-            crate::deploy::SingleJobPlan {
-                kind: WorkloadKind::WordCount,
-                size: SizeClass::Large,
-                home: DcId(0),
-                inject_at: None,
-                kill_jm_at: Some((70.0, dc)),
-            },
-        )
+        crate::scenario::run_scenario(cfg, &crate::scenario::presets::fig11_kill(dc, mode), cfg.seed)
+            .expect("fig11 scenario")
+            .world
     };
     let worlds = [
         ("pjm_kill", mk(DcId(0), Deployment::Houtu)),

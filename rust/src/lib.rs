@@ -20,6 +20,7 @@ pub mod master;
 pub mod metrics;
 pub mod net;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod storage;
 pub mod testkit;

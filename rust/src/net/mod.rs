@@ -48,6 +48,10 @@ pub struct Wan {
     current: Vec<Vec<f64>>,
     /// Active bulk transfers per pair (for fair sharing).
     active: Vec<Vec<u32>>,
+    /// Scenario-injected cross-DC degradation (brownout) multiplier:
+    /// 1.0 = nominal; applied on top of the AR(1) process to *inter*-DC
+    /// links only. The chaos engine toggles this for WAN-window events.
+    degrade: f64,
     rng: Pcg,
     pub stats: WanStats,
 }
@@ -60,7 +64,18 @@ impl Wan {
             .iter()
             .map(|row| row.iter().map(|&(m, _)| m).collect())
             .collect();
-        Wan { cfg, current, active: vec![vec![0; n]; n], rng, stats: WanStats::default() }
+        Wan { cfg, current, active: vec![vec![0; n]; n], degrade: 1.0, rng, stats: WanStats::default() }
+    }
+
+    /// Set the cross-DC degradation multiplier (clamped away from zero so
+    /// transfers always terminate). 1.0 restores nominal behaviour.
+    pub fn set_degrade(&mut self, factor: f64) {
+        self.degrade = factor.max(0.01);
+    }
+
+    /// Current cross-DC degradation multiplier.
+    pub fn degrade_factor(&self) -> f64 {
+        self.degrade
     }
 
     pub fn num_dcs(&self) -> usize {
@@ -89,9 +104,14 @@ impl Wan {
         }
     }
 
-    /// Instantaneous bandwidth between two DCs (Mbps).
+    /// Instantaneous bandwidth between two DCs (Mbps). Cross-DC links are
+    /// additionally scaled by the scenario degradation multiplier.
     pub fn bandwidth_mbps(&self, a: DcId, b: DcId) -> f64 {
-        self.current[a.0][b.0]
+        if a == b {
+            self.current[a.0][b.0]
+        } else {
+            self.current[a.0][b.0] * self.degrade
+        }
     }
 
     /// One-way latency between two DCs (ms of virtual time).
@@ -238,6 +258,22 @@ mod tests {
         assert_eq!(w.stats.cross_dc_control_bytes, 100);
         assert_eq!(w.stats.transfers, 2);
         assert_eq!(w.stats.messages, 1);
+    }
+
+    #[test]
+    fn degrade_scales_wan_but_not_lan() {
+        let mut w = wan();
+        let lan = w.bandwidth_mbps(DcId(0), DcId(0));
+        let wan_bw = w.bandwidth_mbps(DcId(0), DcId(1));
+        w.set_degrade(0.25);
+        assert_eq!(w.bandwidth_mbps(DcId(0), DcId(0)), lan, "LAN untouched");
+        assert!((w.bandwidth_mbps(DcId(0), DcId(1)) - wan_bw * 0.25).abs() < 1e-9);
+        let slow = w.begin_transfer(DcId(0), DcId(1), 10 * 1024 * 1024);
+        w.end_transfer(DcId(0), DcId(1));
+        w.set_degrade(1.0);
+        assert_eq!(w.bandwidth_mbps(DcId(0), DcId(1)), wan_bw, "restored exactly");
+        let fast = w.begin_transfer(DcId(0), DcId(1), 10 * 1024 * 1024);
+        assert!(slow > 3 * fast, "degraded transfer {slow}ms vs nominal {fast}ms");
     }
 
     #[test]

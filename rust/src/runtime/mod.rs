@@ -6,10 +6,23 @@
 //! by `HloModuleProto::from_text_file`, compiled once per process on the
 //! PJRT CPU client, then executed with concrete buffers. Shapes are fixed
 //! at export: the constants below must stay in sync with `aot.py`.
+//!
+//! The real runtime depends on the `xla` bindings, which the offline image
+//! does not vendor — it is gated behind the `pjrt` cargo feature. The
+//! default build ships an API-identical stub whose [`Runtime::load`]
+//! fails fast with an actionable message, so the coordinator, examples
+//! and benches all compile (and the simulator runs) without PJRT.
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::Result;
+#[cfg(feature = "pjrt")]
+use crate::anyhow;
+#[cfg(feature = "pjrt")]
+use crate::ensure;
+#[cfg(feature = "pjrt")]
+use crate::util::error::Context;
 
 /// Export shapes — keep in sync with python/compile/aot.py.
 pub const LOGREG_N: usize = 1024;
@@ -18,52 +31,6 @@ pub const PAGERANK_N: usize = 256;
 pub const SEG_N: usize = 1024;
 pub const SEG_K: usize = 64;
 pub const SEG_V: usize = 4;
-
-/// A loaded, compiled artifact.
-struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    name: &'static str,
-}
-
-impl Executable {
-    fn load(client: &xla::PjRtClient, dir: &Path, name: &'static str) -> Result<Executable> {
-        let path = dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
-        Ok(Executable { exe, name })
-    }
-
-    fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let mut result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", self.name))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching {} result: {e:?}", self.name))?;
-        // aot.py lowers with return_tuple=True.
-        let tuple = result
-            .decompose_tuple()
-            .map_err(|e| anyhow::anyhow!("untupling {}: {e:?}", self.name))?;
-        Ok(tuple)
-    }
-}
-
-/// The compute engine backing real-numerics tasks in the coordinator.
-pub struct Runtime {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    logreg: Executable,
-    pagerank: Executable,
-    wordcount: Executable,
-    /// Executions served (perf accounting).
-    pub executions: std::cell::Cell<u64>,
-}
 
 /// Locate `artifacts/` relative to the current dir or the repo root.
 pub fn default_artifact_dir() -> PathBuf {
@@ -76,6 +43,56 @@ pub fn default_artifact_dir() -> PathBuf {
     PathBuf::from("artifacts")
 }
 
+/// A loaded, compiled artifact.
+#[cfg(feature = "pjrt")]
+struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: &'static str,
+}
+
+#[cfg(feature = "pjrt")]
+impl Executable {
+    fn load(client: &xla::PjRtClient, dir: &Path, name: &'static str) -> Result<Executable> {
+        let path = dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        Ok(Executable { exe, name })
+    }
+
+    fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let mut result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {} result: {e:?}", self.name))?;
+        // aot.py lowers with return_tuple=True.
+        let tuple = result
+            .decompose_tuple()
+            .map_err(|e| anyhow!("untupling {}: {e:?}", self.name))?;
+        Ok(tuple)
+    }
+}
+
+/// The compute engine backing real-numerics tasks in the coordinator.
+#[cfg(feature = "pjrt")]
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    logreg: Executable,
+    pagerank: Executable,
+    wordcount: Executable,
+    /// Executions served (perf accounting).
+    pub executions: std::cell::Cell<u64>,
+}
+
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Load and compile every artifact. Fails fast with a pointer to
     /// `make artifacts` when they are missing.
@@ -87,7 +104,7 @@ impl Runtime {
             );
         }
         let client =
-            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
         Ok(Runtime {
             logreg: Executable::load(&client, dir, "logreg_step")?,
             pagerank: Executable::load(&client, dir, "pagerank_step")?,
@@ -100,52 +117,107 @@ impl Runtime {
     /// One SGD step of logistic regression over a (LOGREG_N, LOGREG_D)
     /// shard. Returns (new weights, loss).
     pub fn logreg_step(&self, w: &[f32], x: &[f32], y: &[f32], lr: f32) -> Result<(Vec<f32>, f32)> {
-        anyhow::ensure!(w.len() == LOGREG_D, "w must be {LOGREG_D}, got {}", w.len());
-        anyhow::ensure!(x.len() == LOGREG_N * LOGREG_D, "x shard shape mismatch");
-        anyhow::ensure!(y.len() == LOGREG_N, "y shard shape mismatch");
+        ensure!(w.len() == LOGREG_D, "w must be {LOGREG_D}, got {}", w.len());
+        ensure!(x.len() == LOGREG_N * LOGREG_D, "x shard shape mismatch");
+        ensure!(y.len() == LOGREG_N, "y shard shape mismatch");
         let w_l = xla::Literal::vec1(w);
         let x_l = xla::Literal::vec1(x)
             .reshape(&[LOGREG_N as i64, LOGREG_D as i64])
-            .map_err(|e| anyhow::anyhow!("reshape x: {e:?}"))?;
+            .map_err(|e| anyhow!("reshape x: {e:?}"))?;
         let y_l = xla::Literal::vec1(y);
         let lr_l = xla::Literal::from(lr);
         let out = self.logreg.run(&[w_l, x_l, y_l, lr_l])?;
         self.executions.set(self.executions.get() + 1);
-        let new_w = out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
-        let loss = out[1].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?[0];
+        let new_w = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let loss = out[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0];
         Ok((new_w, loss))
     }
 
     /// One damped PageRank iteration over a PAGERANK_N-node graph.
     /// Returns (new ranks, L1 residual).
     pub fn pagerank_step(&self, m: &[f32], r: &[f32], damping: f32) -> Result<(Vec<f32>, f32)> {
-        anyhow::ensure!(m.len() == PAGERANK_N * PAGERANK_N, "matrix shape mismatch");
-        anyhow::ensure!(r.len() == PAGERANK_N, "rank shape mismatch");
+        ensure!(m.len() == PAGERANK_N * PAGERANK_N, "matrix shape mismatch");
+        ensure!(r.len() == PAGERANK_N, "rank shape mismatch");
         let m_l = xla::Literal::vec1(m)
             .reshape(&[PAGERANK_N as i64, PAGERANK_N as i64])
-            .map_err(|e| anyhow::anyhow!("reshape m: {e:?}"))?;
+            .map_err(|e| anyhow!("reshape m: {e:?}"))?;
         let r_l = xla::Literal::vec1(r);
         let d_l = xla::Literal::from(damping);
         let out = self.pagerank.run(&[m_l, r_l, d_l])?;
         self.executions.set(self.executions.get() + 1);
-        let ranks = out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
-        let resid = out[1].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?[0];
+        let ranks = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let resid = out[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0];
         Ok((ranks, resid))
     }
 
     /// Segment-sum aggregation over a (SEG_N, SEG_K) one-hot and
     /// (SEG_N, SEG_V) values. Returns flattened (SEG_K, SEG_V) totals.
     pub fn wordcount_agg(&self, onehot: &[f32], values: &[f32]) -> Result<Vec<f32>> {
-        anyhow::ensure!(onehot.len() == SEG_N * SEG_K, "onehot shape mismatch");
-        anyhow::ensure!(values.len() == SEG_N * SEG_V, "values shape mismatch");
+        ensure!(onehot.len() == SEG_N * SEG_K, "onehot shape mismatch");
+        ensure!(values.len() == SEG_N * SEG_V, "values shape mismatch");
         let h_l = xla::Literal::vec1(onehot)
             .reshape(&[SEG_N as i64, SEG_K as i64])
-            .map_err(|e| anyhow::anyhow!("reshape onehot: {e:?}"))?;
+            .map_err(|e| anyhow!("reshape onehot: {e:?}"))?;
         let v_l = xla::Literal::vec1(values)
             .reshape(&[SEG_N as i64, SEG_V as i64])
-            .map_err(|e| anyhow::anyhow!("reshape values: {e:?}"))?;
+            .map_err(|e| anyhow!("reshape values: {e:?}"))?;
         let out = self.wordcount.run(&[h_l, v_l])?;
         self.executions.set(self.executions.get() + 1);
-        out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))
+        out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+}
+
+/// API-identical stub for builds without the `xla` crate: every
+/// constructor fails fast, so nothing downstream needs cfg churn.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    /// Executions served (perf accounting).
+    pub executions: std::cell::Cell<u64>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Always fails: points at `make artifacts` when the HLO inputs are
+    /// missing, and at the `pjrt` feature otherwise.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        if !dir.join("logreg_step.hlo.txt").exists() {
+            bail!(
+                "artifacts not found in {dir:?} — run `make artifacts` first \
+                 (python lowers the L2 graphs to HLO text exactly once)"
+            );
+        }
+        bail!(
+            "the PJRT runtime is gated behind the `pjrt` cargo feature (the \
+             offline build carries no xla crate) — rebuild with --features pjrt"
+        );
+    }
+
+    /// See the `pjrt` build; unreachable here because `load` always fails.
+    pub fn logreg_step(&self, w: &[f32], x: &[f32], y: &[f32], lr: f32) -> Result<(Vec<f32>, f32)> {
+        let _ = (w, x, y, lr);
+        bail!("PJRT runtime disabled (build with --features pjrt)");
+    }
+
+    /// See the `pjrt` build; unreachable here because `load` always fails.
+    pub fn pagerank_step(&self, m: &[f32], r: &[f32], damping: f32) -> Result<(Vec<f32>, f32)> {
+        let _ = (m, r, damping);
+        bail!("PJRT runtime disabled (build with --features pjrt)");
+    }
+
+    /// See the `pjrt` build; unreachable here because `load` always fails.
+    pub fn wordcount_agg(&self, onehot: &[f32], values: &[f32]) -> Result<Vec<f32>> {
+        let _ = (onehot, values);
+        bail!("PJRT runtime disabled (build with --features pjrt)");
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_gives_actionable_errors() {
+        let err = Runtime::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
     }
 }

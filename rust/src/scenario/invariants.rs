@@ -1,0 +1,193 @@
+//! Invariant checkers: what must hold of *every* finished scenario run,
+//! no matter which failures were injected. Each campaign run passes
+//! through [`check_world`] (post-run, on the final [`World`]) and the
+//! periodic [`probe_world`] (installed by the runner at every scheduling
+//! period), which together turn every scenario execution into a test.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::dag::TaskStatus;
+use crate::deploy::World;
+use crate::ids::{ContainerId, DcId, JmId, TaskId};
+
+/// One invariant breach, with enough detail to debug the run.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub check: &'static str,
+    pub detail: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.check, self.detail)
+    }
+}
+
+fn push(v: &mut Vec<Violation>, check: &'static str, detail: String) {
+    v.push(Violation { check, detail });
+}
+
+/// Post-run checks over the final world state.
+///
+/// * **job-terminates** — every submitted job completed within the
+///   horizon (liveness under failures, §6.4).
+/// * **exactly-once** — per completed job, each task is Done exactly
+///   once: no lost task, no double completion (outputs, the replicated
+///   partitionList and the DAG progress all agree on the task count).
+/// * **quiescence** — no task left Waiting/Running after completion.
+/// * **pool-restored** — all containers returned to the free pools
+///   (skipped when hog pseudo-jobs hold containers by design).
+/// * **master-leak** — no sub-job stays registered after its job ended.
+/// * **steal-conservation** — tasks stolen in never exceed tasks stolen
+///   out; with no JM disruption the two are equal.
+/// * **runtime-probe** — anything [`probe_world`] recorded during the run.
+pub fn check_world(w: &World) -> Vec<Violation> {
+    let mut v = Vec::new();
+    let total = w.metrics.jobs.len();
+    let done = w.metrics.completed_jobs();
+    if done != total {
+        push(&mut v, "job-terminates", format!("{done}/{total} jobs completed within horizon"));
+    }
+
+    for (&id, rt) in &w.jobs {
+        if !rt.done {
+            continue;
+        }
+        let n = rt.spec.num_tasks();
+        let d = rt.progress.count(TaskStatus::Done);
+        if d != n {
+            push(&mut v, "exactly-once", format!("{id}: {d}/{n} tasks Done"));
+        }
+        if rt.outputs.len() != n {
+            push(&mut v, "exactly-once", format!("{id}: {} outputs for {n} tasks", rt.outputs.len()));
+        }
+        let distinct: HashSet<TaskId> =
+            rt.info.partition_list.iter().map(|p| p.task).collect();
+        if rt.info.partition_list.len() != n || distinct.len() != n {
+            push(
+                &mut v,
+                "exactly-once",
+                format!(
+                    "{id}: partitionList has {} entries / {} distinct for {n} tasks",
+                    rt.info.partition_list.len(),
+                    distinct.len()
+                ),
+            );
+        }
+        let (waiting, running) =
+            (rt.progress.count(TaskStatus::Waiting), rt.progress.count(TaskStatus::Running));
+        if waiting != 0 || running != 0 {
+            push(&mut v, "quiescence", format!("{id}: {waiting} waiting, {running} running after done"));
+        }
+        if let Some(rec) = w.metrics.jobs.get(&id) {
+            if let Some(jrt) = rec.jrt() {
+                if !(jrt > 0.0) {
+                    push(&mut v, "jrt-sanity", format!("{id}: non-positive JRT {jrt}"));
+                }
+            }
+        }
+    }
+
+    if w.hogs.is_empty() && done == total {
+        for dcid in 0..w.cfg.topology.num_dcs() {
+            let dc = DcId(dcid);
+            let free = w.cluster.free_pool(dc).len();
+            let cap = w.cluster.dc_capacity(dc);
+            if free != cap {
+                push(&mut v, "pool-restored", format!("{dc}: {free} free of {cap} capacity"));
+            }
+        }
+        for (i, m) in w.masters.iter().enumerate() {
+            let leftover = m.sub_jobs();
+            if !leftover.is_empty() {
+                push(&mut v, "master-leak", format!("master {i} still tracks {leftover:?}"));
+            }
+        }
+    }
+
+    let stolen_in: u64 = w
+        .jobs
+        .values()
+        .flat_map(|rt| rt.jms.values())
+        .map(|jm| jm.stats.tasks_stolen_in)
+        .sum();
+    let stolen_out: u64 = w
+        .jobs
+        .values()
+        .flat_map(|rt| rt.jms.values())
+        .map(|jm| jm.stats.tasks_stolen_out)
+        .sum();
+    if stolen_in > stolen_out {
+        push(
+            &mut v,
+            "steal-conservation",
+            format!("{stolen_in} stolen in > {stolen_out} stolen out"),
+        );
+    }
+    let restarts: u32 = w.metrics.jobs.values().map(|j| j.restarts).sum();
+    let disrupted = restarts > 0
+        || !w.metrics.recovery_intervals_secs.is_empty()
+        || !w.metrics.election_delays_secs.is_empty();
+    if !disrupted && stolen_in != stolen_out {
+        // A deficit is legal only when a thief died mid-steal, which
+        // always leaves a recovery/election/restart trace.
+        push(
+            &mut v,
+            "steal-conservation",
+            format!("undisrupted run lost steals: in {stolen_in} != out {stolen_out}"),
+        );
+    }
+
+    for p in &w.probe_violations {
+        push(&mut v, "runtime-probe", p.clone());
+    }
+    v
+}
+
+/// Periodic runtime probe, called by the campaign runner right after each
+/// scheduling-period tick. Checks the fair-share/Af contract and grant
+/// bookkeeping *while the system runs*:
+///
+/// * a sub-job's allocation may exceed its desire only by keeping busy
+///   containers it already held (the §5 "return the idle ones" rule) —
+///   fresh grants must never push `a` past `d`;
+/// * every granted container is alive and owned by the sub-job it is
+///   booked to, and no container is booked to two sub-jobs.
+///
+/// `prev` carries last period's allocations (the probe owns it).
+pub fn probe_world(w: &mut World, prev: &mut HashMap<JmId, usize>) {
+    let mut seen: HashSet<ContainerId> = HashSet::new();
+    let mut found: Vec<String> = Vec::new();
+    for m in &w.masters {
+        for jm in m.sub_jobs() {
+            let a = m.allocation(jm);
+            let d = m.desire(jm);
+            let prev_a = prev.get(&jm).copied().unwrap_or(0);
+            if a > d && a > prev_a {
+                found.push(format!(
+                    "fair-share: {jm} allocation {a} > desire {d} grew from {prev_a}"
+                ));
+            }
+            for &cid in m.granted(jm) {
+                match w.cluster.containers.get(&cid) {
+                    Some(c) if c.alive && c.owner == Some(jm) => {}
+                    Some(c) => found.push(format!(
+                        "grant-consistency: {cid} booked to {jm} but alive={} owner={:?}",
+                        c.alive, c.owner
+                    )),
+                    None => found.push(format!("grant-consistency: {cid} unknown to the cluster")),
+                }
+                if !seen.insert(cid) {
+                    found.push(format!("double-grant: {cid} booked twice"));
+                }
+            }
+            prev.insert(jm, a);
+        }
+    }
+    prev.retain(|jm, _| w.masters.iter().any(|m| m.is_registered(*jm)));
+    for f in found {
+        if w.probe_violations.len() < 64 {
+            w.probe_violations.push(f);
+        }
+    }
+}

@@ -1,0 +1,269 @@
+//! Scenario-matrix chaos engine: declarative reliability campaigns.
+//!
+//! HOUTU's claim is *reliable* job execution under spot revocations, JM
+//! failures and WAN variability. Hand-coding each situation (as `exp/`
+//! historically did) caps the explored space at however many functions we
+//! write; this subsystem makes scenario count a **config knob**: a TOML
+//! file describes a matrix of (scenario × seed) runs, a parallel runner
+//! executes them on the deterministic DES, and an invariant layer turns
+//! every run into a test.
+//!
+//! # Spec schema
+//!
+//! A campaign file has one `[campaign]` section and any number of
+//! `[scenario.<name>]` sections (the TOML subset parser has no nested
+//! tables, so chaos events use the `kind@time:args` string DSL of
+//! [`ChaosEvent::parse`]):
+//!
+//! ```toml
+//! [campaign]
+//! name = "reliability-matrix"
+//! seeds = [42, 7, 1234]        # every scenario runs at every seed
+//! # parallelism = 8            # worker threads; default = cores
+//!
+//! [scenario.steal-under-pressure]
+//! deployment = "houtu"         # houtu|cent-dyna|cent-stat|decent-stat
+//! workload = "pagerank"        # wordcount|tpch|ml|pagerank|trace
+//! size = "large"               # single-job only: small|medium|large
+//! home = 1                     # single-job only: submitting DC
+//! events = ["hogs@100:0,2,3"]  # chaos DSL, see below
+//!
+//! [scenario.spot-chaos]
+//! workload = "trace"           # the online Fig-8 shape
+//! num_jobs = 4
+//! regions = 8                  # topology axis (0/omitted = paper's 4)
+//! overrides = ["cloud.revocations=true", "cloud.spot_volatility=0.5"]
+//! ```
+//!
+//! Event DSL: `hogs@T:0,2,3` (resource hogs into DCs at `T` seconds),
+//! `kill_jm@T:dc2` (kill job 0's JM replica host), `kill_node@T:dc1.n2`
+//! (spot-style VM termination), `wan@T1-T2:0.25` (degrade cross-DC
+//! bandwidth to 25 % during the window). `overrides` strings reuse the
+//! CLI's `--set section.key=value` surface, so every config knob is a
+//! scenario axis for free.
+//!
+//! Run a campaign with `houtu campaign [--spec FILE | --smoke]`; every
+//! run must pass the [`invariants`] checkers (no task lost or
+//! double-completed, jobs terminate, pools restored, fair-share `a ≤ d`
+//! probe, steal conservation) and gets a deterministic digest — same
+//! (spec, seed) ⇒ identical digest, which the replay regression test
+//! pins down.
+
+pub mod invariants;
+pub mod runner;
+pub mod spec;
+
+pub use invariants::{check_world, probe_world, Violation};
+pub use runner::{
+    run_campaign, run_digest, run_one, run_scenario, CampaignReport, FinishedRun, RunReport,
+};
+pub use spec::{CampaignSpec, ChaosEvent, ScenarioSpec, ScenarioWorkload};
+
+use crate::config::Deployment;
+use crate::dag::{SizeClass, WorkloadKind};
+use crate::ids::DcId;
+
+/// Canned scenarios for the paper figures and the §6.4 chaos experiment —
+/// `exp/` drives its fault-injection figures through these, so the
+/// hand-coded experiments and campaign runs share one engine.
+pub mod presets {
+    use super::*;
+
+    fn single(
+        name: &str,
+        deployment: Deployment,
+        kind: WorkloadKind,
+        size: SizeClass,
+        home: DcId,
+        events: Vec<ChaosEvent>,
+        overrides: Vec<String>,
+    ) -> ScenarioSpec {
+        ScenarioSpec {
+            name: name.to_string(),
+            deployment,
+            regions: 0,
+            workload: ScenarioWorkload::SingleJob { kind, size, home },
+            events,
+            overrides,
+        }
+    }
+
+    /// Fig 9(a): PageRank-large from dc1, no interference.
+    pub fn fig9_normal() -> ScenarioSpec {
+        single(
+            "fig9-normal",
+            Deployment::Houtu,
+            WorkloadKind::PageRank,
+            SizeClass::Large,
+            DcId(1),
+            vec![],
+            vec![],
+        )
+    }
+
+    /// Fig 9(b): resource hogs occupy the other three DCs at t=100 s;
+    /// work stealing pulls the starved tasks to dc1.
+    pub fn fig9_inject_steal() -> ScenarioSpec {
+        single(
+            "fig9-inject-steal",
+            Deployment::Houtu,
+            WorkloadKind::PageRank,
+            SizeClass::Large,
+            DcId(1),
+            vec![ChaosEvent::InjectHogs { at_secs: 100.0, dcs: vec![DcId(0), DcId(2), DcId(3)] }],
+            vec![],
+        )
+    }
+
+    /// Fig 9(c): same injection with stealing disabled.
+    pub fn fig9_inject_nosteal() -> ScenarioSpec {
+        single(
+            "fig9-inject-nosteal",
+            Deployment::Houtu,
+            WorkloadKind::PageRank,
+            SizeClass::Large,
+            DcId(1),
+            vec![ChaosEvent::InjectHogs { at_secs: 100.0, dcs: vec![DcId(0), DcId(2), DcId(3)] }],
+            vec!["scheduler.work_stealing=false".to_string()],
+        )
+    }
+
+    /// Fig 11 / Fig 12(b): WordCount-large from dc0, kill the JM replica
+    /// in `dc` at t=70 s (dc0 = pJM election path, other DCs = sJM
+    /// respawn path, centralized deployments = full restart path).
+    pub fn fig11_kill(dc: DcId, deployment: Deployment) -> ScenarioSpec {
+        single(
+            &format!("fig11-kill-dc{}-{}", dc.0, deployment.name()),
+            deployment,
+            WorkloadKind::WordCount,
+            SizeClass::Large,
+            DcId(0),
+            vec![ChaosEvent::KillJm { at_secs: 70.0, dc }],
+            vec![],
+        )
+    }
+
+    /// §6.4 chaos: spiky spot market with revocations enabled over the
+    /// online trace (the `survives_spot_revocation_chaos` shape).
+    pub fn revocation_chaos(num_jobs: usize) -> ScenarioSpec {
+        ScenarioSpec {
+            name: format!("revocation-chaos-{num_jobs}"),
+            deployment: Deployment::Houtu,
+            regions: 0,
+            workload: ScenarioWorkload::Trace { num_jobs },
+            events: vec![],
+            overrides: vec![
+                "cloud.revocations=true".to_string(),
+                "cloud.spot_volatility=0.6".to_string(),
+                "cloud.market_period_secs=60.0".to_string(),
+                "cloud.bid_multiplier=1.3".to_string(),
+            ],
+        }
+    }
+}
+
+/// The built-in smoke campaign behind `houtu campaign --smoke`: small,
+/// fast (seconds), still chaotic enough to exercise the hog injection and
+/// every invariant checker.
+pub fn smoke_campaign() -> CampaignSpec {
+    CampaignSpec {
+        name: "smoke".to_string(),
+        seeds: vec![42, 99],
+        parallelism: 0,
+        scenarios: vec![
+            ScenarioSpec {
+                name: "baseline-wordcount".to_string(),
+                deployment: Deployment::Houtu,
+                regions: 0,
+                workload: ScenarioWorkload::SingleJob {
+                    kind: WorkloadKind::WordCount,
+                    size: SizeClass::Small,
+                    home: DcId(0),
+                },
+                events: vec![],
+                overrides: vec![],
+            },
+            ScenarioSpec {
+                name: "hogs-pagerank".to_string(),
+                deployment: Deployment::Houtu,
+                regions: 0,
+                workload: ScenarioWorkload::SingleJob {
+                    kind: WorkloadKind::PageRank,
+                    size: SizeClass::Small,
+                    home: DcId(1),
+                },
+                events: vec![ChaosEvent::InjectHogs {
+                    at_secs: 10.0,
+                    dcs: vec![DcId(0), DcId(2), DcId(3)],
+                }],
+                overrides: vec![],
+            },
+        ],
+    }
+}
+
+/// The built-in standard campaign: the same matrix `configs/campaign.toml`
+/// ships (kept in sync by a regression test), used when the CLI finds no
+/// spec file. 4 scenarios × 3 seeds = 12 runs. Scenario order matches the
+/// TOML parse order (sections sort alphabetically in the subset parser).
+pub fn standard_campaign() -> CampaignSpec {
+    CampaignSpec {
+        name: "reliability-matrix".to_string(),
+        seeds: vec![42, 7, 1234],
+        parallelism: 0,
+        scenarios: vec![
+            ScenarioSpec {
+                name: "baseline-wordcount".to_string(),
+                deployment: Deployment::Houtu,
+                regions: 0,
+                workload: ScenarioWorkload::SingleJob {
+                    kind: WorkloadKind::WordCount,
+                    size: SizeClass::Medium,
+                    home: DcId(0),
+                },
+                events: vec![],
+                overrides: vec![],
+            },
+            ScenarioSpec {
+                name: "pjm-kill".to_string(),
+                deployment: Deployment::Houtu,
+                regions: 0,
+                workload: ScenarioWorkload::SingleJob {
+                    kind: WorkloadKind::WordCount,
+                    size: SizeClass::Large,
+                    home: DcId(0),
+                },
+                events: vec![ChaosEvent::KillJm { at_secs: 70.0, dc: DcId(0) }],
+                overrides: vec![],
+            },
+            ScenarioSpec {
+                name: "spot-chaos".to_string(),
+                deployment: Deployment::Houtu,
+                regions: 0,
+                workload: ScenarioWorkload::Trace { num_jobs: 4 },
+                events: vec![],
+                overrides: vec![
+                    "cloud.revocations=true".to_string(),
+                    "cloud.spot_volatility=0.5".to_string(),
+                    "cloud.market_period_secs=120.0".to_string(),
+                    "cloud.bid_multiplier=1.5".to_string(),
+                ],
+            },
+            ScenarioSpec {
+                name: "steal-under-pressure".to_string(),
+                deployment: Deployment::Houtu,
+                regions: 0,
+                workload: ScenarioWorkload::SingleJob {
+                    kind: WorkloadKind::PageRank,
+                    size: SizeClass::Large,
+                    home: DcId(1),
+                },
+                events: vec![ChaosEvent::InjectHogs {
+                    at_secs: 100.0,
+                    dcs: vec![DcId(0), DcId(2), DcId(3)],
+                }],
+                overrides: vec![],
+            },
+        ],
+    }
+}

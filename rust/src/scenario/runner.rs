@@ -1,0 +1,371 @@
+//! Campaign runner: expand a [`CampaignSpec`] into its scenario × seed
+//! matrix and execute the runs in parallel on `std::thread` (the crate is
+//! dependency-free), each run flowing through the invariant checkers and
+//! a deterministic digest. A panic inside a run (a tripped simulator
+//! assertion is itself an invariant failure) is caught and reported as a
+//! violation instead of killing the campaign.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::config::Config;
+use crate::deploy::{build_sim, inject_hogs, kill_jm_host, kill_node, schedule_trace, submit_job, World, WorldSim};
+use crate::ids::{JmId, JobId};
+use crate::sim::{secs, secs_f, SimTime};
+use crate::util::error::Result;
+
+use super::invariants::{check_world, probe_world};
+use super::spec::{CampaignSpec, ChaosEvent, ScenarioSpec, ScenarioWorkload};
+
+/// A finished simulation plus what only the engine knows about it.
+pub struct FinishedRun {
+    pub world: World,
+    pub events_processed: u64,
+}
+
+/// Execute one scenario at one seed and return the finished world.
+/// This is the same machinery `deploy::run_single_job` /
+/// `run_trace_experiment` wire by hand — the experiment harness calls
+/// through here so figure scenarios and campaign scenarios stay one code
+/// path. The runtime probe is always armed (it is read-only and cheap:
+/// one grant-table scan per scheduling period); its findings land in
+/// `World::probe_violations`, which [`check_world`] folds into the
+/// campaign verdict and the preset regression tests assert empty.
+pub fn run_scenario(base: &Config, spec: &ScenarioSpec, seed: u64) -> Result<FinishedRun> {
+    let cfg = spec.build_config(base, seed)?;
+    let mode = cfg.deployment;
+    let (mut sim, horizon) = match spec.workload {
+        ScenarioWorkload::SingleJob { kind, size, home } => {
+            let horizon = secs(14_400);
+            let mut sim = build_sim(cfg, mode, horizon);
+            sim.schedule_at(1, move |sim| {
+                submit_job(sim, kind, size, home);
+            });
+            (sim, horizon)
+        }
+        ScenarioWorkload::Trace { .. } => {
+            let (trace, horizon) = crate::deploy::online_trace(&cfg);
+            let mut sim = build_sim(cfg, mode, horizon);
+            schedule_trace(&mut sim, &trace);
+            (sim, horizon)
+        }
+    };
+    install_probe(&mut sim, horizon);
+    schedule_events(&mut sim, &spec.events);
+    sim.run_until(horizon);
+    let makespan = sim.state.metrics.makespan();
+    sim.state.bill_machines(makespan);
+    Ok(FinishedRun { events_processed: sim.events_processed, world: sim.state })
+}
+
+/// Place the spec's chaos events on the simulation timeline.
+///
+/// WAN windows are scheduled as (set factor, restore 1.0) pairs in
+/// chronological order with restores sorted *before* starts at equal
+/// timestamps — same-time DES events run in scheduling order, so a
+/// window beginning exactly where another ends always wins the
+/// boundary, regardless of the order events appear in the spec.
+fn schedule_events(sim: &mut WorldSim, events: &[ChaosEvent]) {
+    let mut wan_actions: Vec<(f64, bool, f64)> = Vec::new(); // (t, is_start, factor)
+    for ev in events.iter().cloned() {
+        match ev {
+            ChaosEvent::InjectHogs { at_secs, dcs } => {
+                sim.schedule_at(secs_f(at_secs), move |sim| inject_hogs(sim, &dcs));
+            }
+            ChaosEvent::KillJm { at_secs, dc } => {
+                sim.schedule_at(secs_f(at_secs), move |sim| kill_jm_host(sim, JobId(0), dc));
+            }
+            ChaosEvent::KillNode { at_secs, node } => {
+                sim.schedule_at(secs_f(at_secs), move |sim| kill_node(sim, node));
+            }
+            ChaosEvent::WanDegrade { from_secs, until_secs, factor } => {
+                wan_actions.push((from_secs, true, factor));
+                wan_actions.push((until_secs, false, 1.0));
+            }
+        }
+    }
+    wan_actions.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+    for (t, _, factor) in wan_actions {
+        sim.schedule_at(secs_f(t), move |sim| sim.state.wan.set_degrade(factor));
+    }
+}
+
+/// Arm the runtime invariant probe: fires every scheduling period, right
+/// after the period tick (installed later, so its events sort after the
+/// tick's at equal timestamps).
+fn install_probe(sim: &mut WorldSim, horizon: SimTime) {
+    let period = secs_f(sim.state.cfg.scheduler.period_l_secs);
+    arm_probe(sim, period, horizon, HashMap::new());
+}
+
+fn arm_probe(sim: &mut WorldSim, period: SimTime, horizon: SimTime, prev: HashMap<JmId, usize>) {
+    if sim.now() + period > horizon {
+        return;
+    }
+    sim.schedule_in(period, move |sim| {
+        let mut prev = prev;
+        probe_world(&mut sim.state, &mut prev);
+        arm_probe(sim, period, horizon, prev);
+    });
+}
+
+/// FNV-1a accumulator for run digests.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+    fn u64(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+}
+
+/// Deterministic digest of a finished run: same (spec, seed) ⇒ same
+/// digest, byte for byte. Folds in the event count, every job's
+/// submission/completion times and task counts, the WAN/zk traffic and
+/// the failure-handling counters.
+pub fn run_digest(run: &FinishedRun) -> u64 {
+    let w = &run.world;
+    let mut h = Fnv::new();
+    h.u64(run.events_processed);
+    h.u64(w.metrics.jobs.len() as u64);
+    for (id, rec) in &w.metrics.jobs {
+        h.u64(id.0);
+        h.bytes(rec.kind.name().as_bytes());
+        h.u64(rec.submitted_secs.to_bits());
+        h.u64(rec.completed_secs.map(f64::to_bits).unwrap_or(0));
+        h.u64(rec.tasks_total as u64);
+        h.u64(rec.restarts as u64);
+    }
+    for (id, tl) in &w.metrics.task_launches {
+        h.u64(id.0);
+        h.u64(tl.len() as u64);
+    }
+    h.u64(w.wan.stats.cross_dc_total_bytes());
+    h.u64(w.wan.stats.messages);
+    h.u64(w.zk.stats.writes);
+    h.u64(w.metrics.recovery_intervals_secs.len() as u64);
+    h.u64(w.metrics.election_delays_secs.len() as u64);
+    h.u64(w.metrics.steal_delays_ms.len() as u64);
+    h.0
+}
+
+/// Everything a campaign records about one (scenario, seed) run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub scenario: String,
+    pub seed: u64,
+    pub deployment: &'static str,
+    pub completed_jobs: usize,
+    pub total_jobs: usize,
+    pub avg_jrt_secs: f64,
+    pub makespan_secs: f64,
+    pub events_processed: u64,
+    pub tasks_stolen: u64,
+    pub recoveries: usize,
+    pub elections: usize,
+    pub restarts: u32,
+    pub cross_dc_bytes: u64,
+    pub machine_usd: f64,
+    pub digest: u64,
+    pub violations: Vec<String>,
+    pub wall_ms: u64,
+}
+
+impl RunReport {
+    pub fn passed(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    fn broken(spec: &ScenarioSpec, seed: u64, detail: String) -> RunReport {
+        RunReport {
+            scenario: spec.name.clone(),
+            seed,
+            deployment: spec.deployment.name(),
+            completed_jobs: 0,
+            total_jobs: 0,
+            avg_jrt_secs: 0.0,
+            makespan_secs: 0.0,
+            events_processed: 0,
+            tasks_stolen: 0,
+            recoveries: 0,
+            elections: 0,
+            restarts: 0,
+            cross_dc_bytes: 0,
+            machine_usd: 0.0,
+            digest: 0,
+            violations: vec![detail],
+            wall_ms: 0,
+        }
+    }
+}
+
+/// Run one (scenario, seed) cell: execute, check invariants, digest.
+/// Never panics — simulator panics become violations.
+pub fn run_one(base: &Config, spec: &ScenarioSpec, seed: u64) -> RunReport {
+    let t0 = std::time::Instant::now();
+    let outcome = catch_unwind(AssertUnwindSafe(|| run_scenario(base, spec, seed)));
+    let run = match outcome {
+        Ok(Ok(run)) => run,
+        Ok(Err(e)) => return RunReport::broken(spec, seed, format!("spec: {e}")),
+        Err(p) => {
+            let msg = p
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "non-string panic payload".into());
+            return RunReport::broken(spec, seed, format!("panic: {msg}"));
+        }
+    };
+    let w = &run.world;
+    let violations: Vec<String> = check_world(w).iter().map(|v| v.to_string()).collect();
+    let tasks_stolen: u64 = w
+        .jobs
+        .values()
+        .flat_map(|rt| rt.jms.values())
+        .map(|jm| jm.stats.tasks_stolen_in)
+        .sum();
+    RunReport {
+        scenario: spec.name.clone(),
+        seed,
+        deployment: spec.deployment.name(),
+        completed_jobs: w.metrics.completed_jobs(),
+        total_jobs: w.metrics.jobs.len(),
+        avg_jrt_secs: w.metrics.avg_jrt(),
+        makespan_secs: w.metrics.makespan(),
+        events_processed: run.events_processed,
+        tasks_stolen,
+        recoveries: w.metrics.recovery_intervals_secs.len(),
+        elections: w.metrics.election_delays_secs.len(),
+        restarts: w.metrics.jobs.values().map(|j| j.restarts).sum(),
+        cross_dc_bytes: w.wan.stats.cross_dc_total_bytes(),
+        machine_usd: w.cost.machine_usd,
+        digest: run_digest(&run),
+        violations,
+        wall_ms: t0.elapsed().as_millis() as u64,
+    }
+}
+
+/// A whole campaign's outcome.
+pub struct CampaignReport {
+    pub name: String,
+    pub workers: usize,
+    pub runs: Vec<RunReport>,
+    pub campaign_digest: u64,
+}
+
+impl CampaignReport {
+    pub fn all_pass(&self) -> bool {
+        self.runs.iter().all(RunReport::passed)
+    }
+
+    pub fn total_violations(&self) -> usize {
+        self.runs.iter().map(|r| r.violations.len()).sum()
+    }
+
+    /// Human-readable campaign table + violation details.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        writeln!(
+            out,
+            "Campaign {:?} — {} runs on {} workers",
+            self.name,
+            self.runs.len(),
+            self.workers
+        )
+        .unwrap();
+        writeln!(
+            out,
+            "{:>24} {:>6} {:>12} {:>6} {:>10} {:>10} {:>7} {:>6} {:>5}  {:>16}",
+            "scenario", "seed", "deployment", "jobs", "avgJRT(s)", "mkspan(s)", "steals", "recov", "viol", "digest"
+        )
+        .unwrap();
+        for r in &self.runs {
+            writeln!(
+                out,
+                "{:>24} {:>6} {:>12} {:>6} {:>10.1} {:>10.1} {:>7} {:>6} {:>5}  {:016x}",
+                r.scenario,
+                r.seed,
+                r.deployment,
+                format!("{}/{}", r.completed_jobs, r.total_jobs),
+                r.avg_jrt_secs,
+                r.makespan_secs,
+                r.tasks_stolen,
+                r.recoveries + r.elections,
+                r.violations.len(),
+                r.digest
+            )
+            .unwrap();
+        }
+        for r in &self.runs {
+            for v in &r.violations {
+                writeln!(out, "  ! {}/seed{}: {v}", r.scenario, r.seed).unwrap();
+            }
+        }
+        let clean = self.runs.iter().filter(|r| r.passed()).count();
+        writeln!(
+            out,
+            "{clean}/{} runs clean, {} violations, campaign digest {:016x}",
+            self.runs.len(),
+            self.total_violations(),
+            self.campaign_digest
+        )
+        .unwrap();
+        out
+    }
+}
+
+/// Execute the campaign's scenario × seed matrix in parallel and collect
+/// the per-run reports (in stable matrix order, independent of worker
+/// interleaving).
+pub fn run_campaign(base: &Config, spec: &CampaignSpec) -> CampaignReport {
+    let plans = spec.expand();
+    let n = plans.len();
+    let workers = if spec.parallelism > 0 {
+        spec.parallelism
+    } else {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+    }
+    .min(n.max(1));
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<RunReport>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let (sc, seed) = &plans[i];
+                let rep = run_one(base, sc, *seed);
+                slots.lock().unwrap()[i] = Some(rep);
+            });
+        }
+    });
+    let runs: Vec<RunReport> = slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("campaign worker lost a run"))
+        .collect();
+    let mut h = Fnv::new();
+    for r in &runs {
+        h.bytes(r.scenario.as_bytes());
+        h.u64(r.seed);
+        h.u64(r.digest);
+    }
+    CampaignReport { name: spec.name.clone(), workers, runs, campaign_digest: h.0 }
+}

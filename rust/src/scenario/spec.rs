@@ -1,0 +1,554 @@
+//! Declarative scenario and campaign specs, with a TOML surface parsed by
+//! the in-repo [`crate::config::toml`] subset parser.
+//!
+//! A *scenario* is (deployment, topology, workload, chaos events, config
+//! overrides); a *campaign* is a set of scenarios crossed with a set of
+//! seeds. Chaos events use a compact `kind@time:args` DSL (see
+//! [`ChaosEvent::parse`]) because the TOML subset has no nested tables —
+//! each event is one string in a flat array, which also keeps specs
+//! greppable and diffable.
+
+use std::collections::BTreeMap;
+
+use crate::config::toml::{self, Doc, Value};
+use crate::config::{Config, Deployment};
+use crate::dag::{SizeClass, WorkloadKind};
+use crate::ids::{DcId, NodeId};
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail, ensure};
+
+/// One chaos injection, placed on the simulation timeline by the runner.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChaosEvent {
+    /// `hogs@T:0,2,3` — occupy (almost) all spare containers of the DCs
+    /// from `T` seconds on (the Fig-9 resource-tense injection).
+    InjectHogs { at_secs: f64, dcs: Vec<DcId> },
+    /// `kill_jm@T:dc2` — kill the VM hosting job 0's JM replica in a DC
+    /// (the Fig-11 pJM/sJM termination).
+    KillJm { at_secs: f64, dc: DcId },
+    /// `kill_node@T:dc1.n2` — spot-style termination of one worker VM.
+    KillNode { at_secs: f64, node: NodeId },
+    /// `wan@T1-T2:0.25` — degrade all cross-DC bandwidth to the given
+    /// fraction during the window (§2.2 changeable environment).
+    WanDegrade { from_secs: f64, until_secs: f64, factor: f64 },
+}
+
+fn parse_f64(s: &str, whole: &str) -> Result<f64> {
+    s.trim()
+        .parse::<f64>()
+        .ok()
+        .filter(|x| x.is_finite())
+        .with_context(|| format!("event {whole:?}: bad number {s:?}"))
+}
+
+/// A point on the simulation timeline: finite and non-negative, so a
+/// typo'd time can't silently clamp to t=0 and fire at submission.
+fn parse_time(s: &str, whole: &str) -> Result<f64> {
+    let t = parse_f64(s, whole)?;
+    ensure!(t >= 0.0, "event {whole:?}: time {t} must be non-negative");
+    Ok(t)
+}
+
+fn parse_usize(s: &str, whole: &str) -> Result<usize> {
+    s.trim()
+        .parse::<usize>()
+        .map_err(|_| anyhow!("event {whole:?}: bad index {s:?}"))
+}
+
+fn parse_dc(s: &str, whole: &str) -> Result<DcId> {
+    let body = s.trim().strip_prefix("dc").unwrap_or(s.trim());
+    Ok(DcId(parse_usize(body, whole)?))
+}
+
+impl ChaosEvent {
+    /// Parse the `kind@time:args` DSL (see the variant docs for shapes).
+    pub fn parse(s: &str) -> Result<ChaosEvent> {
+        let s = s.trim();
+        let (head, rest) = s
+            .split_once('@')
+            .with_context(|| format!("event {s:?}: expected kind@time:args"))?;
+        let (when, arg) = rest
+            .split_once(':')
+            .with_context(|| format!("event {s:?}: expected kind@time:args"))?;
+        match head {
+            "hogs" => {
+                let at_secs = parse_time(when, s)?;
+                let dcs = arg
+                    .split(',')
+                    .map(|d| parse_dc(d, s))
+                    .collect::<Result<Vec<_>>>()?;
+                ensure!(!dcs.is_empty(), "event {s:?}: need at least one dc");
+                Ok(ChaosEvent::InjectHogs { at_secs, dcs })
+            }
+            "kill_jm" => Ok(ChaosEvent::KillJm {
+                at_secs: parse_time(when, s)?,
+                dc: parse_dc(arg, s)?,
+            }),
+            "kill_node" => {
+                let (dc, idx) = arg
+                    .split_once('.')
+                    .with_context(|| format!("event {s:?}: node must be dcD.nI"))?;
+                let idx = idx.trim().strip_prefix('n').unwrap_or(idx.trim());
+                Ok(ChaosEvent::KillNode {
+                    at_secs: parse_time(when, s)?,
+                    node: NodeId { dc: parse_dc(dc, s)?, idx: parse_usize(idx, s)? },
+                })
+            }
+            "wan" => {
+                let (from, until) = when
+                    .split_once('-')
+                    .with_context(|| format!("event {s:?}: window must be T1-T2"))?;
+                let from_secs = parse_time(from, s)?;
+                let until_secs = parse_time(until, s)?;
+                let factor = parse_f64(arg, s)?;
+                ensure!(until_secs > from_secs, "event {s:?}: empty window");
+                ensure!(factor > 0.0, "event {s:?}: factor must be positive");
+                Ok(ChaosEvent::WanDegrade { from_secs, until_secs, factor })
+            }
+            other => bail!("unknown event kind {other:?} (hogs|kill_jm|kill_node|wan)"),
+        }
+    }
+}
+
+impl std::fmt::Display for ChaosEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ChaosEvent::InjectHogs { at_secs, dcs } => {
+                let list: Vec<String> = dcs.iter().map(|d| d.0.to_string()).collect();
+                write!(f, "hogs@{at_secs}:{}", list.join(","))
+            }
+            ChaosEvent::KillJm { at_secs, dc } => write!(f, "kill_jm@{at_secs}:dc{}", dc.0),
+            ChaosEvent::KillNode { at_secs, node } => {
+                write!(f, "kill_node@{at_secs}:dc{}.n{}", node.dc.0, node.idx)
+            }
+            ChaosEvent::WanDegrade { from_secs, until_secs, factor } => {
+                write!(f, "wan@{from_secs}-{until_secs}:{factor}")
+            }
+        }
+    }
+}
+
+/// What the scenario submits.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScenarioWorkload {
+    /// One job, submitted at t≈0 (the Fig-9/Fig-11 shape).
+    SingleJob { kind: WorkloadKind, size: SizeClass, home: DcId },
+    /// An online trace of `num_jobs` arrivals (the Fig-8 shape).
+    Trace { num_jobs: usize },
+}
+
+/// One fully-described situation to put the system in.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub deployment: Deployment,
+    /// Region count; 0 keeps the base config's topology (the paper's 4).
+    pub regions: usize,
+    pub workload: ScenarioWorkload,
+    pub events: Vec<ChaosEvent>,
+    /// `section.key=value` strings applied through
+    /// [`Config::apply_override`] — the same surface as the CLI `--set`.
+    pub overrides: Vec<String>,
+}
+
+impl ScenarioSpec {
+    /// Materialize the run config: base ⊕ seed ⊕ deployment ⊕ overrides ⊕
+    /// topology ⊕ workload sizing, then validate spec-vs-topology fit.
+    pub fn build_config(&self, base: &Config, seed: u64) -> Result<Config> {
+        let mut cfg = base.clone();
+        cfg.seed = seed;
+        cfg.deployment = self.deployment;
+        for ov in &self.overrides {
+            cfg.apply_override(ov)
+                .with_context(|| format!("scenario {:?} override {ov:?}", self.name))?;
+        }
+        if self.regions > 0 && self.regions != cfg.topology.num_dcs() {
+            cfg.topology.regions = (0..self.regions).map(|i| format!("R{i}")).collect();
+        }
+        if let ScenarioWorkload::Trace { num_jobs } = self.workload {
+            ensure!(num_jobs > 0, "scenario {:?}: trace needs at least one job", self.name);
+            cfg.workload.num_jobs = num_jobs;
+        }
+        cfg.resize_bandwidth();
+        cfg.validate()?;
+        let n = cfg.topology.num_dcs();
+        if let ScenarioWorkload::SingleJob { home, .. } = self.workload {
+            ensure!(home.0 < n, "scenario {:?}: home dc{} out of range (n={n})", self.name, home.0);
+        }
+        for ev in &self.events {
+            let ok = match ev {
+                ChaosEvent::InjectHogs { dcs, .. } => dcs.iter().all(|d| d.0 < n),
+                ChaosEvent::KillJm { dc, .. } => dc.0 < n,
+                ChaosEvent::KillNode { node, .. } => {
+                    node.dc.0 < n && node.idx < cfg.topology.workers_per_dc
+                }
+                ChaosEvent::WanDegrade { .. } => true,
+            };
+            ensure!(ok, "scenario {:?}: event {ev} outside the {n}-region topology", self.name);
+        }
+        // WAN windows restore the factor to nominal at their end, so
+        // overlapping windows would silently cancel each other — reject.
+        let mut windows: Vec<(f64, f64)> = self
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                ChaosEvent::WanDegrade { from_secs, until_secs, .. } => {
+                    Some((*from_secs, *until_secs))
+                }
+                _ => None,
+            })
+            .collect();
+        windows.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for pair in windows.windows(2) {
+            ensure!(
+                pair[0].1 <= pair[1].0,
+                "scenario {:?}: overlapping wan windows {}-{} and {}-{}",
+                self.name,
+                pair[0].0,
+                pair[0].1,
+                pair[1].0,
+                pair[1].1
+            );
+        }
+        Ok(cfg)
+    }
+
+    fn from_keys(name: &str, keys: &BTreeMap<String, Value>) -> Result<ScenarioSpec> {
+        // A typo'd key (e.g. `event` for `events`) must not silently yield
+        // a chaos-free scenario that then passes every invariant.
+        const KNOWN: [&str; 8] =
+            ["deployment", "workload", "size", "home", "num_jobs", "regions", "events", "overrides"];
+        for k in keys.keys() {
+            ensure!(
+                KNOWN.contains(&k.as_str()),
+                "scenario {name:?}: unknown key {k:?} (known: {})",
+                KNOWN.join(", ")
+            );
+        }
+        let get_str = |k: &str| keys.get(k).and_then(Value::as_str);
+        let get_i64 = |k: &str, d: i64| keys.get(k).and_then(Value::as_i64).unwrap_or(d);
+        let deployment = match get_str("deployment") {
+            Some(s) => Deployment::parse(s)?,
+            None => Deployment::Houtu,
+        };
+        let workload = match get_str("workload").unwrap_or("wordcount") {
+            "trace" => ScenarioWorkload::Trace { num_jobs: get_i64("num_jobs", 4).max(1) as usize },
+            w => {
+                let kind = match w {
+                    "wordcount" => WorkloadKind::WordCount,
+                    "tpch" => WorkloadKind::TpcH,
+                    "ml" => WorkloadKind::IterativeMl,
+                    "pagerank" => WorkloadKind::PageRank,
+                    other => bail!(
+                        "scenario {name:?}: unknown workload {other:?} \
+                         (wordcount|tpch|ml|pagerank|trace)"
+                    ),
+                };
+                let size = match get_str("size").unwrap_or("medium") {
+                    "small" => SizeClass::Small,
+                    "medium" => SizeClass::Medium,
+                    "large" => SizeClass::Large,
+                    other => bail!("scenario {name:?}: unknown size {other:?}"),
+                };
+                let home = DcId(get_i64("home", 0).max(0) as usize);
+                ScenarioWorkload::SingleJob { kind, size, home }
+            }
+        };
+        let str_array = |k: &str| -> Result<Vec<String>> {
+            match keys.get(k) {
+                None => Ok(Vec::new()),
+                Some(v) => v
+                    .as_array()
+                    .with_context(|| format!("scenario {name:?}: {k} must be an array"))?
+                    .iter()
+                    .map(|x| {
+                        x.as_str()
+                            .map(str::to_string)
+                            .with_context(|| format!("scenario {name:?}: {k} entries must be strings"))
+                    })
+                    .collect(),
+            }
+        };
+        let events = str_array("events")?
+            .iter()
+            .map(|s| ChaosEvent::parse(s))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ScenarioSpec {
+            name: name.to_string(),
+            deployment,
+            regions: get_i64("regions", 0).max(0) as usize,
+            workload,
+            events,
+            overrides: str_array("overrides")?,
+        })
+    }
+}
+
+/// A scenario × seed matrix.
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    pub name: String,
+    pub seeds: Vec<u64>,
+    pub scenarios: Vec<ScenarioSpec>,
+    /// Worker threads; 0 = one per available core.
+    pub parallelism: usize,
+}
+
+impl CampaignSpec {
+    /// The full run matrix, scenario-major then seed (stable order — run
+    /// indices, reports and campaign digests all follow it).
+    pub fn expand(&self) -> Vec<(ScenarioSpec, u64)> {
+        let mut out = Vec::with_capacity(self.scenarios.len() * self.seeds.len());
+        for sc in &self.scenarios {
+            for &seed in &self.seeds {
+                out.push((sc.clone(), seed));
+            }
+        }
+        out
+    }
+
+    /// Parse from TOML text: a `[campaign]` section (`name`, `seeds`,
+    /// optional `parallelism`) plus one `[scenario.<name>]` section per
+    /// scenario.
+    pub fn from_doc(doc: &Doc) -> Result<CampaignSpec> {
+        let name = doc.str_or("campaign", "name", "campaign");
+        let seeds: Vec<u64> = match doc.get("campaign", "seeds") {
+            None => vec![42],
+            Some(v) => v
+                .as_array()
+                .context("campaign.seeds must be an array")?
+                .iter()
+                .map(|x| {
+                    x.as_i64()
+                        .filter(|&i| i >= 0)
+                        .map(|i| i as u64)
+                        .context("campaign.seeds entries must be non-negative integers")
+                })
+                .collect::<Result<_>>()?,
+        };
+        ensure!(!seeds.is_empty(), "campaign.seeds must not be empty");
+        let mut scenarios = Vec::new();
+        for (section, keys) in &doc.sections {
+            if section.is_empty() {
+                ensure!(
+                    keys.is_empty(),
+                    "top-level keys {:?} are not allowed (use [campaign] or [scenario.<name>])",
+                    keys.keys().collect::<Vec<_>>()
+                );
+                continue;
+            }
+            if section == "campaign" {
+                for k in keys.keys() {
+                    ensure!(
+                        matches!(k.as_str(), "name" | "seeds" | "parallelism"),
+                        "unknown campaign key {k:?} (known: name, seeds, parallelism)"
+                    );
+                }
+                continue;
+            }
+            let Some(sc_name) = section.strip_prefix("scenario.") else {
+                bail!("unknown section [{section}] (expected [campaign] or [scenario.<name>])");
+            };
+            scenarios.push(ScenarioSpec::from_keys(sc_name, keys)?);
+        }
+        ensure!(!scenarios.is_empty(), "campaign has no [scenario.<name>] sections");
+        Ok(CampaignSpec {
+            name,
+            seeds,
+            scenarios,
+            parallelism: doc.i64_or("campaign", "parallelism", 0).max(0) as usize,
+        })
+    }
+
+    /// Parse a campaign TOML file.
+    pub fn from_file(path: &str) -> Result<CampaignSpec> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let doc = toml::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        Self::from_doc(&doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_dsl_parses_every_kind() {
+        assert_eq!(
+            ChaosEvent::parse("hogs@100:0,2,3").unwrap(),
+            ChaosEvent::InjectHogs { at_secs: 100.0, dcs: vec![DcId(0), DcId(2), DcId(3)] }
+        );
+        assert_eq!(
+            ChaosEvent::parse("kill_jm@70:dc2").unwrap(),
+            ChaosEvent::KillJm { at_secs: 70.0, dc: DcId(2) }
+        );
+        assert_eq!(
+            ChaosEvent::parse("kill_node@50:dc1.n2").unwrap(),
+            ChaosEvent::KillNode { at_secs: 50.0, node: NodeId { dc: DcId(1), idx: 2 } }
+        );
+        assert_eq!(
+            ChaosEvent::parse("wan@120-300:0.25").unwrap(),
+            ChaosEvent::WanDegrade { from_secs: 120.0, until_secs: 300.0, factor: 0.25 }
+        );
+    }
+
+    #[test]
+    fn event_dsl_display_roundtrips() {
+        for s in ["hogs@100:0,2,3", "kill_jm@70:dc2", "kill_node@50:dc1.n2", "wan@120-300:0.25"] {
+            let ev = ChaosEvent::parse(s).unwrap();
+            assert_eq!(ChaosEvent::parse(&ev.to_string()).unwrap(), ev, "{s}");
+        }
+    }
+
+    #[test]
+    fn event_dsl_rejects_garbage() {
+        for s in [
+            "hogs100:0",
+            "hogs@x:0",
+            "hogs@10:",
+            "kill_jm@70",
+            "kill_jm@-70:dc0",
+            "kill_jm@NaN:dc0",
+            "kill_jm@inf:dc0",
+            "kill_node@50:dc1",
+            "wan@300-120:0.25",
+            "wan@1-2:0",
+            "wan@1-2:NaN",
+            "meteor@9:dc0",
+        ] {
+            assert!(ChaosEvent::parse(s).is_err(), "{s:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn campaign_doc_parses_matrix() {
+        let doc = toml::parse(
+            r#"
+            [campaign]
+            name = "demo"
+            seeds = [1, 2, 3]
+
+            [scenario.a]
+            workload = "pagerank"
+            size = "large"
+            home = 1
+            events = ["hogs@100:0,2,3"]
+
+            [scenario.b]
+            workload = "trace"
+            num_jobs = 5
+            deployment = "cent-dyna"
+            overrides = ["cloud.revocations=true"]
+            "#,
+        )
+        .unwrap();
+        let c = CampaignSpec::from_doc(&doc).unwrap();
+        assert_eq!(c.name, "demo");
+        assert_eq!(c.expand().len(), 6);
+        let a = &c.scenarios[0];
+        assert_eq!(a.name, "a");
+        assert_eq!(
+            a.workload,
+            ScenarioWorkload::SingleJob {
+                kind: WorkloadKind::PageRank,
+                size: SizeClass::Large,
+                home: DcId(1)
+            }
+        );
+        assert_eq!(a.events.len(), 1);
+        let b = &c.scenarios[1];
+        assert_eq!(b.deployment, Deployment::CentDyna);
+        assert_eq!(b.workload, ScenarioWorkload::Trace { num_jobs: 5 });
+        assert_eq!(b.overrides, vec!["cloud.revocations=true".to_string()]);
+    }
+
+    #[test]
+    fn campaign_doc_requires_scenarios() {
+        let doc = toml::parse("[campaign]\nseeds = [1]\n").unwrap();
+        assert!(CampaignSpec::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn campaign_doc_rejects_typo_keys_and_sections() {
+        // `event` (singular) must not silently produce a chaos-free run.
+        let doc = toml::parse(
+            "[campaign]\nseeds = [1]\n[scenario.x]\nevent = [\"kill_jm@70:dc0\"]\n",
+        )
+        .unwrap();
+        let err = CampaignSpec::from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("unknown key"), "{err}");
+        // Typo'd section name.
+        let doc = toml::parse("[campaign]\nseeds = [1]\n[scenarios.x]\nworkload = \"trace\"\n")
+            .unwrap();
+        assert!(CampaignSpec::from_doc(&doc).is_err());
+        // Typo'd campaign key.
+        let doc = toml::parse("[campaign]\nseed = [1]\n[scenario.x]\nworkload = \"trace\"\n")
+            .unwrap();
+        let err = CampaignSpec::from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("unknown campaign key"), "{err}");
+        // Stray top-level key.
+        let doc = toml::parse("seeds = [1]\n[scenario.x]\nworkload = \"trace\"\n").unwrap();
+        assert!(CampaignSpec::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn overlapping_wan_windows_are_rejected() {
+        let mk = |events| ScenarioSpec {
+            name: "wan".into(),
+            deployment: Deployment::Houtu,
+            regions: 0,
+            workload: ScenarioWorkload::Trace { num_jobs: 1 },
+            events,
+            overrides: vec![],
+        };
+        let sequential = mk(vec![
+            ChaosEvent::WanDegrade { from_secs: 0.0, until_secs: 100.0, factor: 0.5 },
+            ChaosEvent::WanDegrade { from_secs: 100.0, until_secs: 200.0, factor: 0.2 },
+        ]);
+        assert!(sequential.build_config(&Config::default(), 1).is_ok());
+        let overlapping = mk(vec![
+            ChaosEvent::WanDegrade { from_secs: 0.0, until_secs: 500.0, factor: 0.5 },
+            ChaosEvent::WanDegrade { from_secs: 100.0, until_secs: 200.0, factor: 0.1 },
+        ]);
+        let err = overlapping.build_config(&Config::default(), 1).unwrap_err();
+        assert!(err.to_string().contains("overlapping wan windows"), "{err}");
+    }
+
+    #[test]
+    fn build_config_applies_axes_and_checks_fit() {
+        let base = Config::default();
+        let spec = ScenarioSpec {
+            name: "t".into(),
+            deployment: Deployment::DecentStat,
+            regions: 8,
+            workload: ScenarioWorkload::Trace { num_jobs: 3 },
+            events: vec![ChaosEvent::KillJm { at_secs: 10.0, dc: DcId(7) }],
+            overrides: vec!["scheduler.tau=0.25".into()],
+        };
+        let cfg = spec.build_config(&base, 9).unwrap();
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.deployment, Deployment::DecentStat);
+        assert_eq!(cfg.topology.num_dcs(), 8);
+        assert_eq!(cfg.wan.bandwidth.len(), 8);
+        assert_eq!(cfg.workload.num_jobs, 3);
+        assert_eq!(cfg.scheduler.tau, 0.25);
+        // Same spec on the 4-region default topology: the dc7 kill no
+        // longer fits.
+        let narrow = ScenarioSpec { regions: 0, ..spec };
+        assert!(narrow.build_config(&base, 9).is_err());
+    }
+
+    #[test]
+    fn bad_override_is_reported_with_scenario_name() {
+        let spec = ScenarioSpec {
+            name: "oops".into(),
+            deployment: Deployment::Houtu,
+            regions: 0,
+            workload: ScenarioWorkload::Trace { num_jobs: 1 },
+            events: vec![],
+            overrides: vec!["scheduler.rho=0.5".into()],
+        };
+        let err = spec.build_config(&Config::default(), 1).unwrap_err();
+        assert!(err.to_string().contains("oops"), "{err}");
+    }
+}

@@ -1,0 +1,145 @@
+//! Minimal `anyhow`-style error plumbing.
+//!
+//! The offline image ships no external crates, so this module provides
+//! the small subset of `anyhow` the codebase uses: a string-backed
+//! [`Error`], a [`Result`] alias defaulting the error type, a [`Context`]
+//! extension trait for `Result`/`Option`, and the `anyhow!` / `bail!` /
+//! `ensure!` macros (exported at the crate root, as `#[macro_export]`
+//! requires). Like `anyhow::Error`, [`Error`] deliberately does *not*
+//! implement `std::error::Error`, which is what makes the blanket
+//! `From<E: std::error::Error>` conversion coherent.
+
+use std::fmt;
+
+/// A human-readable error message with its context chain pre-rendered.
+pub struct Error(String);
+
+impl Error {
+    /// Build an error from a message (the `anyhow!` macro calls this).
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error(m.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error(e.to_string())
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach human context to failures, `anyhow::Context`-style.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{c}: {e}")))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error(c.to_string()))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($t:tt)*) => {
+        $crate::util::error::Error::msg(format!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// `bail!` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("broke with code {}", 7);
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "broke with code 7");
+        assert_eq!(format!("{e:#}"), "broke with code 7");
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(x: u32) -> Result<u32> {
+            ensure!(x < 10, "{x} too big");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert_eq!(check(30).unwrap_err().to_string(), "30 too big");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<u32, std::num::ParseIntError> = "x".parse();
+        let e = r.context("parsing x").unwrap_err();
+        assert!(e.to_string().starts_with("parsing x: "), "{e}");
+        let o: Option<u32> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+        let e = fails().with_context(|| format!("outer {}", 1)).unwrap_err();
+        assert_eq!(e.to_string(), "outer 1: broke with code 7");
+    }
+
+    #[test]
+    fn from_std_error_via_question_mark() {
+        fn go() -> Result<u32> {
+            let n: u32 = "12".parse()?;
+            let _bad: std::result::Result<u32, _> = "nope".parse::<u32>();
+            Ok(n)
+        }
+        assert_eq!(go().unwrap(), 12);
+        fn go_bad() -> Result<u32> {
+            let n: u32 = "nope".parse()?;
+            Ok(n)
+        }
+        assert!(go_bad().is_err());
+    }
+}

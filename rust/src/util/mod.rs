@@ -1,6 +1,7 @@
 //! Shared utilities: deterministic RNG, statistics, typed ids and
 //! byte/time formatting helpers.
 
+pub mod error;
 pub mod rng;
 pub mod stats;
 

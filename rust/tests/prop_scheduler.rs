@@ -1,0 +1,274 @@
+//! Property tests over the scheduler core, via `testkit::forall`:
+//! Parades assignment invariants (no over-commit, threshold gating),
+//! the work-stealing gate (a JM steals only with an empty queue), and the
+//! master's fair scheduler (a ≤ d, max-min ordering, FIFO vs FairShare
+//! conservation).
+
+use houtu::cloud::InstanceClass;
+use houtu::cluster::Cluster;
+use houtu::deploy::should_steal;
+use houtu::ids::{ContainerId, DcId, JmId, JobId, NodeId, StageId, TaskId};
+use houtu::jm::{on_update, ContainerView, JobManager, Locality, ParadesParams, Role, WaitingTask};
+use houtu::master::{AllocPolicy, Master};
+use houtu::prop_assert;
+use houtu::testkit::{forall, forall_cases, Gen, UsizeIn, VecOf};
+use houtu::util::Pcg;
+
+const PARAMS: ParadesParams = ParadesParams { delta: 0.7, tau: 0.5 };
+
+fn random_task(rng: &mut Pcg, i: u32) -> WaitingTask {
+    let pref = if rng.chance(0.7) {
+        Some(NodeId { dc: DcId(rng.index(3)), idx: rng.index(4) })
+    } else {
+        None
+    };
+    WaitingTask {
+        id: TaskId { job: JobId(1), stage: StageId(0), index: i },
+        r: rng.uniform(0.05, 0.95),
+        p: rng.uniform(0.5, 30.0),
+        input_bytes: 1,
+        pref_node: pref,
+        pref_rack: pref.map(|nd| (nd.dc, nd.idx % 2)),
+        wait: rng.uniform(0.0, 40.0),
+    }
+}
+
+#[derive(Clone, Debug)]
+struct QueueCase {
+    tasks: Vec<WaitingTask>,
+    free: f64,
+    node: NodeId,
+    steal: bool,
+}
+
+struct QueueGen;
+
+impl Gen<QueueCase> for QueueGen {
+    fn generate(&self, rng: &mut Pcg) -> QueueCase {
+        let n = rng.index(10);
+        QueueCase {
+            tasks: (0..n).map(|i| random_task(rng, i as u32)).collect(),
+            free: rng.uniform(0.0, 1.0),
+            node: NodeId { dc: DcId(rng.index(3)), idx: rng.index(4) },
+            steal: rng.chance(0.3),
+        }
+    }
+}
+
+fn view_of(case: &QueueCase) -> ContainerView {
+    ContainerView { id: ContainerId(1), node: case.node, rack: case.node.idx % 2, free: case.free }
+}
+
+/// Parades never commits more than the container's free capacity, and
+/// every single assignment fits the capacity remaining at its turn.
+#[test]
+fn prop_parades_never_overcommits() {
+    forall(0x5EED1, &QueueGen, |case: &QueueCase| {
+        let mut q = case.tasks.clone();
+        let picks = on_update(&mut q, view_of(case), PARAMS, case.steal);
+        let mut free = case.free;
+        for a in &picks {
+            prop_assert!(a.task.r <= free + 1e-6, "r {} > remaining {free}", a.task.r);
+            free -= a.task.r;
+        }
+        prop_assert!(q.len() + picks.len() == case.tasks.len(), "task conservation");
+        Ok(())
+    });
+}
+
+/// Locality relaxation is gated: rack-local only after `τ·p`, any/stolen
+/// placement only after `2τ·p` on a nearly-free container.
+#[test]
+fn prop_parades_locality_gates() {
+    forall(0x5EED2, &QueueGen, |case: &QueueCase| {
+        let mut q = case.tasks.clone();
+        let picks = on_update(&mut q, view_of(case), PARAMS, case.steal);
+        for (k, a) in picks.iter().enumerate() {
+            match a.locality {
+                Locality::NodeLocal => {
+                    prop_assert!(a.task.pref_node == Some(case.node), "node-local mismatch");
+                    prop_assert!(!case.steal, "steal produced a node-local assignment");
+                }
+                Locality::RackLocal => prop_assert!(
+                    a.task.wait + 1e-9 >= PARAMS.tau * a.task.p,
+                    "rack gate: wait {} < {}",
+                    a.task.wait,
+                    PARAMS.tau * a.task.p
+                ),
+                Locality::Any | Locality::Stolen => {
+                    prop_assert!(
+                        a.task.wait + 1e-9 >= 2.0 * PARAMS.tau * a.task.p,
+                        "any gate: wait {} < {}",
+                        a.task.wait,
+                        2.0 * PARAMS.tau * a.task.p
+                    );
+                    let free_then: f64 =
+                        case.free - picks[..k].iter().map(|x| x.task.r).sum::<f64>();
+                    // The *first* any-clause pick needs a nearly-free
+                    // container w.r.t. capacity at its turn.
+                    if !picks[..k]
+                        .iter()
+                        .any(|x| matches!(x.locality, Locality::Any | Locality::Stolen))
+                    {
+                        prop_assert!(
+                            free_then + 1e-6 >= 1.0 - PARAMS.delta,
+                            "any clause on busy container: free {free_then}"
+                        );
+                    }
+                }
+            }
+            prop_assert!(
+                (a.locality == Locality::Stolen) == case.steal,
+                "steal labeling mismatch"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// The steal gate: a thief must have an empty queue, no request already
+/// in flight, and a nearly-idle container to offer.
+#[test]
+fn prop_steal_gate_requires_empty_queue() {
+    struct GateGen;
+    impl Gen<(bool, bool, f64, f64)> for GateGen {
+        fn generate(&self, rng: &mut Pcg) -> (bool, bool, f64, f64) {
+            (rng.chance(0.5), rng.chance(0.5), rng.uniform(-1.0, 1.0), rng.uniform(0.05, 0.95))
+        }
+    }
+    forall(0x5EED3, &GateGen, |&(waiting, inflight, free, delta): &(bool, bool, f64, f64)| {
+        if should_steal(waiting, inflight, free, delta) {
+            prop_assert!(!waiting, "stole with waiting tasks of its own");
+            prop_assert!(!inflight, "stole with a request already in flight");
+            prop_assert!(free + 1e-6 >= 1.0 - delta, "offered container not idle enough");
+        } else {
+            prop_assert!(
+                waiting || inflight || free + 1e-9 < 1.0 - delta,
+                "gate refused a legal steal"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Victim side of a steal: only tasks past the `2τ·p` patience leak out,
+/// and the stolen-out counter tracks exactly what left the queue.
+#[test]
+fn prop_steal_request_takes_only_patient_tasks() {
+    forall(0x5EED4, &QueueGen, |case: &QueueCase| {
+        let mut victim = JobManager::new(
+            JmId { job: JobId(1), dc: DcId(0) },
+            Role::SemiActive,
+            ContainerId(900),
+            0.0,
+        );
+        victim.enqueue(case.tasks.clone());
+        let before = victim.queue.len();
+        // now_secs == last_update (0.0): no extra aging, pure gating.
+        let picks = victim.handle_steal_request(view_of(case), 0.0, PARAMS);
+        prop_assert!(
+            victim.stats.tasks_stolen_out == picks.len() as u64,
+            "stolen-out counter mismatch"
+        );
+        prop_assert!(victim.queue.len() + picks.len() == before, "steal lost tasks");
+        for a in &picks {
+            prop_assert!(a.locality == Locality::Stolen, "steal path mislabeled");
+            prop_assert!(
+                a.task.wait + 1e-9 >= 2.0 * PARAMS.tau * a.task.p,
+                "impatient task stolen"
+            );
+        }
+        Ok(())
+    });
+}
+
+fn cluster_with(n: usize) -> Cluster {
+    Cluster::build(&["A".into()], n, 1, 2, |_, _| InstanceClass::OnDemand)
+}
+
+fn jm(j: usize) -> JmId {
+    JmId { job: JobId(j as u64), dc: DcId(0) }
+}
+
+fn allocate_with(policy: AllocPolicy, desires: &[usize], capacity: usize) -> Vec<usize> {
+    let mut cluster = cluster_with(capacity);
+    let mut m = Master::new(DcId(0));
+    m.policy = policy;
+    for (j, &d) in desires.iter().enumerate() {
+        m.register(jm(j));
+        m.set_desire(jm(j), d);
+    }
+    m.allocate(&mut cluster);
+    (0..desires.len()).map(|j| m.allocation(jm(j))).collect()
+}
+
+/// Both policies: allocation never exceeds desire, and grants never
+/// exceed the pool.
+#[test]
+fn prop_allocation_never_exceeds_desire_under_either_policy() {
+    let gen = VecOf { elem: UsizeIn(0, 15), min_len: 1, max_len: 8 };
+    forall(0xFA2, &gen, |desires: &Vec<usize>| {
+        for policy in [AllocPolicy::FairShare, AllocPolicy::Fifo] {
+            let allocs = allocate_with(policy, desires, 10);
+            for (j, (&a, &d)) in allocs.iter().zip(desires).enumerate() {
+                prop_assert!(a <= d, "{policy:?} job {j}: a={a} > d={d}");
+            }
+            let total: usize = allocs.iter().sum();
+            prop_assert!(total <= 10, "{policy:?}: granted {total} from a pool of 10");
+            let want: usize = desires.iter().sum();
+            prop_assert!(total == want.min(10), "{policy:?}: {total} != min({want}, 10)");
+        }
+        Ok(())
+    });
+}
+
+/// Max-min share ordering: under FairShare, a sub-job never ends more
+/// than one container ahead of a hungrier (higher-desire) sub-job.
+#[test]
+fn prop_fair_share_is_max_min_ordered() {
+    let gen = VecOf { elem: UsizeIn(0, 15), min_len: 2, max_len: 8 };
+    forall(0xFA3, &gen, |desires: &Vec<usize>| {
+        let allocs = allocate_with(AllocPolicy::FairShare, desires, 10);
+        for i in 0..desires.len() {
+            for j in 0..desires.len() {
+                if desires[i] <= desires[j] {
+                    prop_assert!(
+                        allocs[i] <= allocs[j] + 1,
+                        "d{i}={} ≤ d{j}={} but a{i}={} > a{j}={}+1",
+                        desires[i],
+                        desires[j],
+                        allocs[i],
+                        allocs[j]
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// FIFO and FairShare hand out the same *total* (conservation) — they
+/// differ only in ordering; and FIFO's order is strictly by job id:
+/// a prefix of jobs is fully satisfied, at most one is partial, the rest
+/// get nothing.
+#[test]
+fn prop_fifo_vs_fair_share_conserve_grants() {
+    let gen = VecOf { elem: UsizeIn(0, 15), min_len: 1, max_len: 8 };
+    forall_cases(0xFA4, 256, &gen, |desires: &Vec<usize>| {
+        let fair = allocate_with(AllocPolicy::FairShare, desires, 10);
+        let fifo = allocate_with(AllocPolicy::Fifo, desires, 10);
+        prop_assert!(
+            fair.iter().sum::<usize>() == fifo.iter().sum::<usize>(),
+            "totals differ: fair {fair:?} vs fifo {fifo:?}"
+        );
+        let mut exhausted = false;
+        for (j, (&a, &d)) in fifo.iter().zip(desires).enumerate() {
+            if exhausted {
+                prop_assert!(a == 0, "fifo job {j} got {a} after the pool ran dry");
+            } else if a < d {
+                exhausted = true; // the one partial job; everything after gets 0
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,5 +1,7 @@
 //! Integration tests: the PJRT runtime executes the AOT artifacts with
-//! correct numerics (requires `make artifacts`).
+//! correct numerics (requires `make artifacts` and a build with
+//! `--features pjrt`; the default offline build ships a stub runtime).
+#![cfg(feature = "pjrt")]
 
 use houtu::runtime::{default_artifact_dir, Runtime, LOGREG_D, LOGREG_N, PAGERANK_N, SEG_K, SEG_N, SEG_V};
 use houtu::util::Pcg;

@@ -1,0 +1,322 @@
+//! Scenario-matrix chaos engine: campaign parsing, engine-vs-hand-coded
+//! parity, invariant checkers, deterministic replay, and end-to-end
+//! campaign runs.
+
+use houtu::config::{Config, Deployment};
+use houtu::dag::{SizeClass, WorkloadKind};
+use houtu::deploy::{run_single_job, SingleJobPlan};
+use houtu::ids::{DcId, JobId};
+use houtu::scenario::{
+    check_world, presets, run_campaign, run_one, run_scenario, smoke_campaign, standard_campaign,
+    CampaignSpec, ScenarioSpec, ScenarioWorkload,
+};
+
+fn stolen_in(w: &houtu::deploy::World) -> u64 {
+    w.jobs
+        .values()
+        .flat_map(|rt| rt.jms.values())
+        .map(|jm| jm.stats.tasks_stolen_in)
+        .sum()
+}
+
+#[test]
+fn shipped_campaign_toml_defines_the_full_matrix() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/configs/campaign.toml");
+    let spec = CampaignSpec::from_file(path).unwrap();
+    assert!(spec.scenarios.len() >= 4, "{} scenarios", spec.scenarios.len());
+    assert!(spec.seeds.len() >= 3, "{} seeds", spec.seeds.len());
+    assert!(spec.expand().len() >= 12, "{} runs", spec.expand().len());
+    // The built-in fallback stays in sync with the shipped file — full
+    // structural equality, so edits to events/overrides can't drift.
+    let builtin = standard_campaign();
+    assert_eq!(builtin.name, spec.name);
+    assert_eq!(builtin.seeds, spec.seeds);
+    assert_eq!(builtin.scenarios, spec.scenarios);
+    // Every scenario builds a valid config at every seed.
+    for (sc, seed) in spec.expand() {
+        sc.build_config(&Config::default(), seed).unwrap();
+    }
+}
+
+#[test]
+fn cli_parses_campaign_flags() {
+    let args: Vec<String> =
+        ["campaign", "--spec", "configs/campaign.toml"].iter().map(|s| s.to_string()).collect();
+    let cli = houtu::cli::parse(&args);
+    assert_eq!(cli.command, "campaign");
+    assert_eq!(cli.spec.as_deref(), Some("configs/campaign.toml"));
+    assert!(!cli.smoke);
+    let args: Vec<String> = ["campaign", "--smoke"].iter().map(|s| s.to_string()).collect();
+    assert!(houtu::cli::parse(&args).smoke);
+}
+
+/// Parity with the hand-coded Fig-9 injection experiment: the engine
+/// preset must reproduce `run_single_job` exactly (same DES trajectory),
+/// and the original assertions must keep holding.
+#[test]
+fn fig9_injection_parity_with_run_single_job() {
+    let cfg = Config::default();
+    let direct = run_single_job(
+        &cfg,
+        Deployment::Houtu,
+        SingleJobPlan {
+            kind: WorkloadKind::PageRank,
+            size: SizeClass::Large,
+            home: DcId(1),
+            inject_at: Some((100.0, vec![DcId(0), DcId(2), DcId(3)])),
+            kill_jm_at: None,
+        },
+    );
+    let engine = run_scenario(&cfg, &presets::fig9_inject_steal(), cfg.seed).unwrap().world;
+    // Unchanged assertions from the hand-coded experiment...
+    assert_eq!(engine.metrics.completed_jobs(), 1);
+    assert!(stolen_in(&engine) > 0, "no tasks stolen despite resource-tense DCs");
+    // ...and bit-exact parity with the direct run.
+    let jrt = |w: &houtu::deploy::World| w.metrics.jobs[&JobId(0)].jrt().unwrap();
+    assert_eq!(jrt(&direct).to_bits(), jrt(&engine).to_bits(), "JRT diverged");
+    assert_eq!(stolen_in(&direct), stolen_in(&engine));
+    assert_eq!(
+        direct.wan.stats.cross_dc_total_bytes(),
+        engine.wan.stats.cross_dc_total_bytes()
+    );
+    assert_eq!(
+        direct.metrics.task_launches[&JobId(0)],
+        engine.metrics.task_launches[&JobId(0)]
+    );
+}
+
+/// Parity with the hand-coded Fig-11 pJM-kill experiment.
+#[test]
+fn fig11_pjm_kill_parity_with_run_single_job() {
+    let cfg = Config::default();
+    let direct = run_single_job(
+        &cfg,
+        Deployment::Houtu,
+        SingleJobPlan {
+            kind: WorkloadKind::WordCount,
+            size: SizeClass::Large,
+            home: DcId(0),
+            inject_at: None,
+            kill_jm_at: Some((70.0, DcId(0))),
+        },
+    );
+    let engine =
+        run_scenario(&cfg, &presets::fig11_kill(DcId(0), Deployment::Houtu), cfg.seed)
+            .unwrap()
+            .world;
+    // Unchanged assertions from the hand-coded experiment...
+    assert_eq!(engine.metrics.completed_jobs(), 1);
+    assert!(!engine.metrics.election_delays_secs.is_empty(), "no election recorded");
+    assert_ne!(engine.jobs[&JobId(0)].primary, DcId(0), "primary stayed on the killed DC");
+    // ...and parity with the direct run.
+    let jrt = |w: &houtu::deploy::World| w.metrics.jobs[&JobId(0)].jrt().unwrap();
+    assert_eq!(jrt(&direct).to_bits(), jrt(&engine).to_bits());
+    assert_eq!(
+        direct.metrics.recovery_intervals_secs.len(),
+        engine.metrics.recovery_intervals_secs.len()
+    );
+    assert_eq!(
+        direct.metrics.election_delays_secs.len(),
+        engine.metrics.election_delays_secs.len()
+    );
+}
+
+/// The §6.4 revocation-chaos experiment ported onto the engine, with the
+/// original assertions unchanged.
+#[test]
+fn revocation_chaos_survives_through_engine() {
+    let mut base = Config::default();
+    base.workload.num_jobs = 8; // overridden by the preset's Trace { 6 }
+    let run = run_scenario(&base, &presets::revocation_chaos(6), 42).unwrap();
+    let w = &run.world;
+    assert_eq!(w.metrics.completed_jobs(), 6, "jobs lost to revocations");
+    let recoveries = w.metrics.recovery_intervals_secs.len();
+    let restarts: u32 = w.metrics.jobs.values().map(|j| j.restarts).sum();
+    assert!(
+        recoveries > 0 || restarts == 0,
+        "expected JM recoveries under chaos (got {recoveries} recoveries, {restarts} restarts)"
+    );
+    let violations = check_world(w);
+    assert!(violations.is_empty(), "{violations:?}");
+}
+
+#[test]
+fn invariants_pass_on_clean_and_chaotic_presets() {
+    let cfg = Config::default();
+    for spec in [
+        presets::fig9_normal(),
+        presets::fig9_inject_steal(),
+        presets::fig11_kill(DcId(2), Deployment::Houtu),
+        presets::fig11_kill(DcId(0), Deployment::CentDyna),
+    ] {
+        let run = run_scenario(&cfg, &spec, cfg.seed).unwrap();
+        let violations = check_world(&run.world);
+        assert!(violations.is_empty(), "{}: {violations:?}", spec.name);
+        assert_eq!(run.world.metrics.completed_jobs(), 1, "{}", spec.name);
+    }
+}
+
+#[test]
+fn invariant_checker_detects_tampering() {
+    let cfg = Config::default();
+    let mut run = run_scenario(&cfg, &presets::fig9_normal(), cfg.seed).unwrap();
+    assert!(check_world(&run.world).is_empty());
+    // Forge a lost completion: the checker must notice.
+    run.world.metrics.jobs.get_mut(&JobId(0)).unwrap().completed_secs = None;
+    let violations = check_world(&run.world);
+    assert!(
+        violations.iter().any(|v| v.check == "job-terminates"),
+        "{violations:?}"
+    );
+    // Forge a duplicated partition entry: exactly-once must notice.
+    let mut run = run_scenario(&cfg, &presets::fig9_normal(), cfg.seed).unwrap();
+    let dup = run.world.jobs.get_mut(&JobId(0)).unwrap();
+    let first = dup.info.partition_list[0].clone();
+    dup.info.partition_list.push(first);
+    let violations = check_world(&run.world);
+    assert!(violations.iter().any(|v| v.check == "exactly-once"), "{violations:?}");
+}
+
+/// Deterministic replay: same (scenario, seed) ⇒ byte-identical digests
+/// (event count included); different seeds ⇒ different digests.
+#[test]
+fn campaign_digests_replay_deterministically() {
+    let base = Config::default();
+    let spec = ScenarioSpec {
+        name: "replay".into(),
+        deployment: Deployment::Houtu,
+        regions: 0,
+        workload: ScenarioWorkload::Trace { num_jobs: 8 },
+        events: vec![],
+        overrides: vec![],
+    };
+    let a = run_one(&base, &spec, 42);
+    let b = run_one(&base, &spec, 42);
+    assert!(a.passed(), "{:?}", a.violations);
+    assert_eq!(a.digest, b.digest, "same (spec, seed) must replay identically");
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(a.avg_jrt_secs.to_bits(), b.avg_jrt_secs.to_bits());
+    let c = run_one(&base, &spec, 1234);
+    assert!(c.passed(), "{:?}", c.violations);
+    assert_ne!(a.digest, c.digest, "different seeds must differ");
+}
+
+#[test]
+fn smoke_campaign_runs_clean_in_parallel() {
+    let report = run_campaign(&Config::default(), &smoke_campaign());
+    assert_eq!(report.runs.len(), 4, "2 scenarios × 2 seeds");
+    assert!(report.all_pass(), "{}", report.render());
+    // Matrix order is stable regardless of worker interleaving.
+    let labels: Vec<(String, u64)> =
+        report.runs.iter().map(|r| (r.scenario.clone(), r.seed)).collect();
+    assert_eq!(
+        labels,
+        vec![
+            ("baseline-wordcount".to_string(), 42),
+            ("baseline-wordcount".to_string(), 99),
+            ("hogs-pagerank".to_string(), 42),
+            ("hogs-pagerank".to_string(), 99),
+        ]
+    );
+    let rendered = report.render();
+    assert!(rendered.contains("runs clean"), "{rendered}");
+}
+
+/// The shipped campaign's chaotic cells at its non-default seeds: JM
+/// kills and the spot storm must recover cleanly wherever the seed lands
+/// them in the job's lifetime.
+#[test]
+fn standard_campaign_risky_cells_run_clean() {
+    let base = Config::default();
+    let std_campaign = standard_campaign();
+    let by_name = |n: &str| -> ScenarioSpec {
+        std_campaign.scenarios.iter().find(|s| s.name == n).unwrap().clone()
+    };
+    for seed in [7u64, 1234] {
+        for name in ["pjm-kill", "spot-chaos"] {
+            let rep = run_one(&base, &by_name(name), seed);
+            assert!(rep.passed(), "{name}/seed{seed}: {:?}", rep.violations);
+            assert_eq!(rep.completed_jobs, rep.total_jobs, "{name}/seed{seed}");
+        }
+    }
+}
+
+#[test]
+fn broken_scenario_reports_instead_of_crashing() {
+    let base = Config::default();
+    let spec = ScenarioSpec {
+        name: "bad-override".into(),
+        deployment: Deployment::Houtu,
+        regions: 0,
+        workload: ScenarioWorkload::Trace { num_jobs: 1 },
+        events: vec![],
+        overrides: vec!["scheduler.delta=7".into()],
+    };
+    let rep = run_one(&base, &spec, 1);
+    assert!(!rep.passed());
+    assert!(rep.violations[0].contains("spec:"), "{:?}", rep.violations);
+}
+
+/// The topology axis: the same scenario runs on 2 and 8 regions.
+#[test]
+fn topology_axis_expands_regions() {
+    let base = Config::default();
+    for regions in [2usize, 8] {
+        let spec = ScenarioSpec {
+            name: format!("topo-{regions}"),
+            deployment: Deployment::Houtu,
+            regions,
+            workload: ScenarioWorkload::SingleJob {
+                kind: WorkloadKind::WordCount,
+                size: SizeClass::Small,
+                home: DcId(0),
+            },
+            events: vec![],
+            overrides: vec![],
+        };
+        let run = run_scenario(&base, &spec, 7).unwrap();
+        assert_eq!(run.world.cfg.topology.num_dcs(), regions);
+        assert_eq!(run.world.metrics.completed_jobs(), 1);
+        let violations = check_world(&run.world);
+        assert!(violations.is_empty(), "{regions} regions: {violations:?}");
+    }
+}
+
+/// WAN degradation windows slow a job down and restore cleanly.
+#[test]
+fn wan_degrade_window_slows_the_job() {
+    let base = Config::default();
+    let mk = |events| ScenarioSpec {
+        name: "wan-brownout".into(),
+        deployment: Deployment::Houtu,
+        regions: 0,
+        workload: ScenarioWorkload::SingleJob {
+            kind: WorkloadKind::TpcH,
+            size: SizeClass::Medium,
+            home: DcId(0),
+        },
+        events,
+        overrides: vec![],
+    };
+    let calm = run_scenario(&base, &mk(vec![]), 42).unwrap();
+    let stormy = run_scenario(
+        &base,
+        &mk(vec![houtu::scenario::ChaosEvent::WanDegrade {
+            from_secs: 5.0,
+            until_secs: 400.0,
+            factor: 0.05,
+        }]),
+        42,
+    )
+    .unwrap();
+    assert_eq!(stormy.world.metrics.completed_jobs(), 1);
+    assert!(check_world(&stormy.world).is_empty());
+    assert!((stormy.world.wan.degrade_factor() - 1.0).abs() < 1e-12, "degradation not restored");
+    let jrt = |w: &houtu::deploy::World| w.metrics.jobs[&JobId(0)].jrt().unwrap();
+    assert!(
+        jrt(&stormy) > jrt(&calm),
+        "brownout {:.1}s should exceed calm {:.1}s",
+        jrt(&stormy),
+        jrt(&calm)
+    );
+}
