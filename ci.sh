@@ -1,10 +1,13 @@
 #!/usr/bin/env bash
-# Tier-1 verify in one command: build, full test suite, then a smoke
-# scenario campaign through the real CLI (seconds, not minutes).
+# Tier-1 verify in one command: build everything (lib, bin, tests,
+# benches, examples), run the full test suite, then a smoke scenario
+# campaign through the real CLI with a report export whose round-trip
+# the CLI asserts (it re-reads and re-parses the file, exiting non-zero
+# on any mismatch) — so the export path stays wired.
 set -euo pipefail
 cd "$(dirname "$0")"
 
-cargo build --release
+cargo build --release --all-targets
 cargo test -q
-cargo run --release --quiet -- campaign --smoke
+cargo run --release --quiet -- campaign --smoke --report /tmp/smoke.json
 echo "ci.sh: all green"

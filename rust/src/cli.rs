@@ -9,6 +9,7 @@
 //!   run --deployment D --workload W --size S     run one job
 //!   trace --deployment D                         run the online trace
 //!   campaign [--spec FILE | --smoke]             run a scenario-matrix campaign
+//!            [--report out.json|out.csv]         ... and export the report
 //!   all                                          every figure in sequence
 //! ```
 
@@ -22,7 +23,7 @@ fn usage() -> ! {
     eprintln!(
         "usage: houtu <fig2|fig3|fig7|fig8|fig9|fig10|fig11|fig12|theorem1|run|trace|campaign|export|all> \
          [--config FILE] [--set section.key=value]... [--deployment D] [--workload W] [--size S] \
-         [--spec FILE] [--smoke]"
+         [--spec FILE] [--smoke] [--report out.json|out.csv]"
     );
     std::process::exit(2);
 }
@@ -38,6 +39,8 @@ pub struct Cli {
     pub spec: Option<String>,
     /// Built-in smoke campaign (`campaign --smoke`).
     pub smoke: bool,
+    /// Campaign report export path (`campaign --report out.json|out.csv`).
+    pub report: Option<String>,
 }
 
 pub fn parse(args: &[String]) -> Cli {
@@ -51,6 +54,7 @@ pub fn parse(args: &[String]) -> Cli {
     let mut size = SizeClass::Medium;
     let mut spec = None;
     let mut smoke = false;
+    let mut report = None;
     let mut i = 1;
     while i < args.len() {
         match args[i].as_str() {
@@ -104,6 +108,10 @@ pub fn parse(args: &[String]) -> Cli {
             "--smoke" => {
                 smoke = true;
             }
+            "--report" => {
+                i += 1;
+                report = Some(args.get(i).unwrap_or_else(|| usage()).clone());
+            }
             other => {
                 eprintln!("unknown flag {other:?}");
                 usage();
@@ -111,7 +119,7 @@ pub fn parse(args: &[String]) -> Cli {
         }
         i += 1;
     }
-    Cli { command, cfg, deployment, workload, size, spec, smoke }
+    Cli { command, cfg, deployment, workload, size, spec, smoke, report }
 }
 
 /// Entry point used by `main.rs`.
@@ -201,6 +209,22 @@ pub fn run(cli: &Cli) {
             };
             let report = scenario::run_campaign(cfg, &spec);
             print!("{}", report.render());
+            // Export before the pass/fail gate so failing campaigns
+            // still leave their report (violations included) behind.
+            if let Some(path) = &cli.report {
+                match scenario::write_and_verify(&report, path) {
+                    Ok(format) => {
+                        println!(
+                            "wrote {path} ({format}, {} runs, round-trip OK)",
+                            report.runs.len()
+                        );
+                    }
+                    Err(e) => {
+                        eprintln!("report export failed: {e:#}");
+                        std::process::exit(1);
+                    }
+                }
+            }
             if !report.all_pass() {
                 eprintln!("campaign FAILED: {} violations", report.total_violations());
                 std::process::exit(1);

@@ -14,6 +14,7 @@ use crate::dag::{SizeClass, WorkloadKind};
 use crate::ids::{ContainerId, DcId, JmId, JobId, NodeId, TaskId};
 use crate::jm::{Assignment, ContainerView, IntermediateInfo, JobManager, PartitionEntry, Role, WaitingTask};
 use crate::sim::{secs_f, SimTime};
+use crate::trace::{TraceEvent, TraceSink as _};
 
 use super::world::{JobRt, WorldSim};
 
@@ -36,7 +37,7 @@ pub fn submit_job(sim: &mut WorldSim, kind: WorkloadKind, size: SizeClass, home:
         w.gen.ensure_dataset(&mut w.dfs, kind, size);
         let spec = w.gen.make_job(job, kind, size, home, &w.dfs);
         spec.validate(w.cfg.scheduler.theta).expect("generated job invalid");
-        w.metrics.submit(job, kind, size, now, spec.num_tasks());
+        w.emit(TraceEvent::JobSubmitted { job, kind, size, tasks: spec.num_tasks() });
         let rt = JobRt {
             progress: crate::dag::JobProgress::new(&spec),
             spec,
@@ -114,7 +115,8 @@ pub fn spawn_jm(sim: &mut WorldSim, job: JobId, dc: DcId) {
                         rt.sessions.insert(dc, session);
                         rt.jms.insert(dc, jm);
                         let count = rt.container_count();
-                        w.metrics.record_containers(job, now, count);
+                        w.emit(TraceEvent::JmSpawned { job, dc, primary: role == Role::Primary });
+                        w.emit(TraceEvent::ContainerCount { job, count });
                         Next::Done(role == Role::Primary)
                     }
                 }
@@ -138,7 +140,7 @@ pub fn spawn_jm(sim: &mut WorldSim, job: JobId, dc: DcId) {
 /// sources, run the initial assignment (proportional to data per DC) and
 /// ship the tasks to the owning JMs (taskMap).
 pub fn release_ready(sim: &mut WorldSim, job: JobId) {
-    let shipments = {
+    let (shipments, released) = {
         let w = &mut sim.state;
         let Some(rt) = w.jobs.get_mut(&job) else { return };
         if rt.done {
@@ -148,6 +150,8 @@ pub fn release_ready(sim: &mut WorldSim, job: JobId) {
         if fresh.is_empty() {
             return;
         }
+        let released: Vec<(crate::ids::StageId, usize)> =
+            fresh.iter().map(|&sid| (sid, rt.spec.stage(sid).tasks.len())).collect();
         let num_dcs = w.cfg.topology.num_dcs();
         let racks = w.cfg.topology.racks_per_dc.max(1);
         let centralized = w.mode.centralized();
@@ -220,14 +224,18 @@ pub fn release_ready(sim: &mut WorldSim, job: JobId) {
         }
 
         let generation = rt.generation;
-        per_dc
+        let shipments = per_dc
             .into_iter()
             .map(|(dc, tasks)| {
                 let delay = if dc == home { 1 } else { w.wan.message_delay(home, dc, 8 * 1024) };
                 (dc, tasks, delay, generation)
             })
-            .collect::<Vec<_>>()
+            .collect::<Vec<_>>();
+        (shipments, released)
     };
+    for (stage, tasks) in released {
+        sim.state.emit(TraceEvent::StageReleased { job, stage, tasks });
+    }
     for (dc, tasks, delay, generation) in shipments {
         sim.schedule_in(delay, move |sim| enqueue_tasks(sim, job, dc, tasks, generation));
     }
@@ -367,7 +375,6 @@ pub fn start_assignment(sim: &mut WorldSim, job: JobId, dc: DcId, a: Assignment)
             *e
         };
         w.cluster.start_task(a.container, t, a.task.r, now_ms);
-        w.metrics.record_launch(job, now);
 
         let dst = w.cluster.container(a.container).node.dc;
         let sources = rt.task_sources.get(&t).cloned().unwrap_or_default();
@@ -385,11 +392,14 @@ pub fn start_assignment(sim: &mut WorldSim, job: JobId, dc: DcId, a: Assignment)
             links.push((src, dst));
             fetch_ms = fetch_ms.max(d);
         }
-        if any_remote {
-            w.metrics.remote_input_tasks += 1;
-        } else {
-            w.metrics.local_input_tasks += 1;
-        }
+        let st = w.tracer.publish(TraceEvent::TaskLaunched {
+            job,
+            task: t,
+            dc: dst,
+            locality: a.locality.name(),
+            remote_input: any_remote,
+        });
+        w.metrics.on_event(&st);
         rt.started_at.insert(t, now);
         // True processing time comes from the spec; a.task.p is the
         // scheduler's *estimate* (§5) and only gates delay thresholds.
@@ -434,6 +444,8 @@ pub fn task_finished(
             return; // container died mid-flight; failure path re-queues
         }
         w.cluster.finish_task(cid, t, now_ms);
+        let st = w.tracer.publish(TraceEvent::TaskFinished { job, task: t, dc });
+        w.metrics.on_event(&st);
         let node = w.cluster.container(cid).node;
         let finished_spec = &rt.spec.stage(t.stage).tasks[t.index as usize];
         let out_bytes = finished_spec.output_bytes;
@@ -482,7 +494,6 @@ pub fn task_finished(
 /// (§3.2.1), the job is recorded.
 pub fn finish_job(sim: &mut WorldSim, job: JobId) {
     let now_ms = sim.now();
-    let now = sim.now_secs();
     let w = &mut sim.state;
     let Some(rt) = w.jobs.get_mut(&job) else { return };
     rt.done = true;
@@ -506,8 +517,8 @@ pub fn finish_job(sim: &mut WorldSim, job: JobId) {
             w.zk.expire_session(*s);
         }
     }
-    w.metrics.complete(job, now);
-    w.metrics.record_containers(job, now, 0);
+    w.emit(TraceEvent::JobCompleted { job });
+    w.emit(TraceEvent::ContainerCount { job, count: 0 });
 }
 
 /// Re-encode the intermediate info, push it through zk (accounting the
@@ -529,5 +540,5 @@ pub fn replicate_info(sim: &mut WorldSim, job: JobId) {
     } else if let Some(s) = session {
         let _ = w.zk.create(s, &path, bytes, false, false);
     }
-    w.metrics.record_info_size(kind, size);
+    w.emit(TraceEvent::InfoReplicated { job, kind, bytes: size });
 }

@@ -22,10 +22,14 @@ use crate::ids::DcId;
 use crate::sim::{secs, secs_f, Sim, SimTime};
 use crate::workloads::TraceEntry;
 
-/// Build a simulation with timers installed up to `horizon`.
+/// Build a simulation with timers installed up to `horizon`. The sim's
+/// step hook drives the trace bus clock: the tracer sees each event's
+/// time (and counts the step) before the event closure runs, so every
+/// emission inside the closure carries the right stamp.
 pub fn build_sim(cfg: Config, mode: Deployment, horizon: SimTime) -> WorldSim {
     let world = World::new(cfg, mode);
     let mut sim = Sim::new(world);
+    sim.set_step_hook(|w: &mut World, now| w.tracer.on_step(now));
     install_timers(&mut sim, horizon);
     sim
 }

@@ -5,6 +5,7 @@
 use crate::ids::{ContainerId, DcId, JmId, JobId};
 use crate::jm::{Assignment, ContainerView};
 use crate::sim::{secs_f, SimTime};
+use crate::trace::{TraceEvent, TraceSink as _};
 
 use super::lifecycle::{container_update, poke_executors, start_assignment};
 use super::world::WorldSim;
@@ -57,7 +58,6 @@ pub fn period_tick(sim: &mut WorldSim) {
     let adaptive = sim.state.mode.adaptive();
     let delta = sim.state.cfg.scheduler.delta;
     let rho = sim.state.cfg.scheduler.rho;
-    let now = sim.now_secs();
 
     // Phase 1+2: desires & surplus release.
     let keys = sim.state.live_jm_keys();
@@ -101,6 +101,12 @@ pub fn period_tick(sim: &mut WorldSim) {
         for cid in &surplus {
             jm.executors.retain(|c| c != cid);
         }
+        if !surplus.is_empty() {
+            let st = w
+                .tracer
+                .publish(TraceEvent::ContainersReturned { jm: jm_id, count: surplus.len() });
+            w.metrics.on_event(&st);
+        }
         let master = if centralized { &mut w.masters[0] } else { &mut w.masters[dc.0] };
         master.set_desire(jm_id, desire);
         for cid in surplus {
@@ -126,7 +132,8 @@ pub fn period_tick(sim: &mut WorldSim) {
             let Some(jm) = rt.jms.get_mut(&jm_id.dc) else { continue };
             jm.executors.extend(cids.iter().copied());
             let count = rt.container_count();
-            w.metrics.record_containers(jm_id.job, now, count);
+            w.emit(TraceEvent::ContainersGranted { jm: jm_id, count: cids.len() });
+            w.emit(TraceEvent::ContainerCount { job: jm_id.job, count });
             pokes.push((jm_id.job, jm_id.dc));
         }
     }
@@ -220,6 +227,8 @@ pub fn check_stragglers(sim: &mut WorldSim, job: JobId, dc: DcId) {
         rt.progress.mark_waiting(t);
         rt.started_at.remove(&t);
         rt.speculative_relaunches += 1;
+        let st = w.tracer.publish(TraceEvent::SpeculativeRelaunch { job, task: t, dc });
+        w.metrics.on_event(&st);
         let est_p = rt.estimator.estimate_p(t.stage, spec.input_bytes);
         let jm = rt.jms.get_mut(&dc).unwrap();
         jm.running.remove(&t);
@@ -298,6 +307,8 @@ pub fn maybe_steal(sim: &mut WorldSim, job: JobId, dc: DcId) {
         let delay = w.wan.message_delay(dc, victim, 256);
         let rtjm = rt.jms.get_mut(&dc).unwrap();
         rtjm.stats.steal_requests_sent += 1;
+        let st = w.tracer.publish(TraceEvent::StealRequested { job, thief: dc, victim });
+        w.metrics.on_event(&st);
         Some((victim, view, delay))
     }) else {
         return;
@@ -328,6 +339,10 @@ fn steal_at_victim(
             _ => Vec::new(),
         };
         let delay = w.wan.message_delay(victim, thief, 256 + 64 * picks.len() as u64);
+        let st = w
+            .tracer
+            .publish(TraceEvent::StealGranted { job, victim, thief, tasks: picks.len() });
+        w.metrics.on_event(&st);
         (picks, delay)
     };
     sim.schedule_in(delay, move |sim| {
@@ -350,7 +365,14 @@ fn steal_response(
         let w = &mut sim.state;
         let Some(rt) = w.jobs.get_mut(&job) else { return };
         rt.steal_inflight.insert(thief, false);
-        w.metrics.steal_delays_ms.push((now - sent_at) * 1000.0);
+        let st = w.tracer.publish(TraceEvent::StealCompleted {
+            job,
+            thief,
+            victim,
+            tasks: stolen.len(),
+            delay_ms: (now - sent_at) * 1000.0,
+        });
+        w.metrics.on_event(&st);
         if rt.done || stolen.is_empty() {
             return;
         }

@@ -15,6 +15,7 @@ use crate::metrics::Metrics;
 use crate::net::Wan;
 use crate::sim::Sim;
 use crate::storage::Dfs;
+use crate::trace::{TraceEvent, TraceSink, Tracer};
 use crate::util::Pcg;
 use crate::workloads::WorkloadGen;
 
@@ -106,6 +107,10 @@ pub struct World {
     pub gen: WorkloadGen,
     pub jobs: BTreeMap<JobId, JobRt>,
     pub metrics: Metrics,
+    /// Flight-recorder bus: every emission site publishes typed events
+    /// through this handle (the WAN fabric holds a clone); `metrics` is
+    /// fed from the same stream via [`World::emit`].
+    pub tracer: Tracer,
     pub rng: Pcg,
     next_job: u64,
     /// Node bids (spot), for revocation checks.
@@ -130,7 +135,9 @@ impl World {
         cfg.resize_bandwidth();
         cfg.validate().expect("invalid config");
         let mut rng = Pcg::seeded(cfg.seed);
-        let wan = Wan::new(cfg.wan.clone(), rng.split(1));
+        let tracer = Tracer::new();
+        let mut wan = Wan::new(cfg.wan.clone(), rng.split(1));
+        wan.attach_tracer(tracer.clone());
         let zk = ZkEnsemble::new(cfg.topology.num_dcs());
         let mut markets: Vec<SpotMarket> = (0..cfg.topology.num_dcs())
             .map(|i| SpotMarket::new(&cfg.cloud, rng.split(100 + i as u64)))
@@ -184,6 +191,7 @@ impl World {
             gen,
             jobs: BTreeMap::new(),
             metrics: Metrics::default(),
+            tracer,
             rng,
             next_job: 0,
             bids,
@@ -193,6 +201,21 @@ impl World {
             probe_violations: Vec::new(),
             cfg,
         }
+    }
+
+    /// Publish one event on the trace bus and fold it into the figure
+    /// metrics. Inside loops that hold a `jobs` borrow, use the
+    /// field-disjoint split form instead:
+    /// `let st = w.tracer.publish(ev); w.metrics.on_event(&st);`
+    pub fn emit(&mut self, event: TraceEvent) {
+        let stamped = self.tracer.publish(event);
+        self.metrics.on_event(&stamped);
+    }
+
+    /// Order-sensitive digest of the run's full event stream (same
+    /// (config, seed) ⇒ same value) — the replay-check primitive.
+    pub fn trace_digest(&self) -> u64 {
+        self.tracer.digest()
     }
 
     /// Index of the master responsible for `dc`.
@@ -265,6 +288,10 @@ impl World {
         }
         let bytes = self.wan.stats.cross_dc_total_bytes();
         self.cost.charge_transfer(bytes, self.cfg.cloud.transfer_per_gb);
+        self.emit(TraceEvent::RunBilled {
+            machine_usd: self.cost.machine_usd,
+            transfer_usd: self.cost.transfer_usd,
+        });
     }
 
     /// Role of the JM at (job, dc), if alive.

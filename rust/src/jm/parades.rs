@@ -61,6 +61,18 @@ pub enum Locality {
     Stolen,
 }
 
+impl Locality {
+    /// Compact tag for trace events and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Locality::NodeLocal => "node-local",
+            Locality::RackLocal => "rack-local",
+            Locality::Any => "any",
+            Locality::Stolen => "stolen",
+        }
+    }
+}
+
 /// One assignment decided by Parades.
 #[derive(Debug, Clone)]
 pub struct Assignment {

@@ -24,5 +24,6 @@ pub mod scenario;
 pub mod sim;
 pub mod storage;
 pub mod testkit;
+pub mod trace;
 pub mod util;
 pub mod workloads;

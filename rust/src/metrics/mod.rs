@@ -6,15 +6,25 @@
 //! * Steal-message delays, recovery intervals, election delays (Fig 12b).
 //! * Intermediate-information sizes per workload (Fig 12a).
 //! * Cost components come from [`crate::cloud::CostMeter`] + WAN stats.
+//!
+//! Since the trace-bus refactor, `Metrics` is a pure *fold* over the
+//! typed event stream: it implements [`TraceSink`] and is populated
+//! exclusively through [`Metrics::on_event`] — emission sites publish
+//! [`TraceEvent`]s and never push figure bookkeeping directly. That makes
+//! the figure outputs reproducible from any captured event stream (the
+//! parity tests fold a ring-buffer capture into a fresh `Metrics` and
+//! assert equality with the live one).
 
 use std::collections::BTreeMap;
 
 use crate::dag::{SizeClass, WorkloadKind};
 use crate::ids::JobId;
+use crate::sim::to_secs;
+use crate::trace::{Stamped, TraceEvent, TraceSink};
 use crate::util::stats;
 
 /// Outcome of one job.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct JobRecord {
     pub id: JobId,
     pub kind: WorkloadKind,
@@ -38,7 +48,7 @@ impl JobRecord {
 /// A (time, value) step timeline.
 pub type Timeline = Vec<(f64, f64)>;
 
-#[derive(Debug, Default)]
+#[derive(Debug, Default, PartialEq)]
 pub struct Metrics {
     pub jobs: BTreeMap<JobId, JobRecord>,
     /// Cumulative launched tasks per job (Fig 9).
@@ -59,7 +69,7 @@ pub struct Metrics {
 }
 
 impl Metrics {
-    pub fn submit(&mut self, id: JobId, kind: WorkloadKind, size: SizeClass, t: f64, tasks: usize) {
+    fn submit(&mut self, id: JobId, kind: WorkloadKind, size: SizeClass, t: f64, tasks: usize) {
         self.jobs.insert(
             id,
             JobRecord {
@@ -75,23 +85,23 @@ impl Metrics {
         );
     }
 
-    pub fn complete(&mut self, id: JobId, t: f64) {
+    fn complete(&mut self, id: JobId, t: f64) {
         if let Some(r) = self.jobs.get_mut(&id) {
             r.completed_secs = Some(t);
         }
     }
 
-    pub fn record_launch(&mut self, id: JobId, t: f64) {
+    fn record_launch(&mut self, id: JobId, t: f64) {
         let tl = self.task_launches.entry(id).or_default();
         let next = tl.last().map(|&(_, c)| c + 1.0).unwrap_or(1.0);
         tl.push((t, next));
     }
 
-    pub fn record_containers(&mut self, id: JobId, t: f64, count: usize) {
+    fn record_containers(&mut self, id: JobId, t: f64, count: usize) {
         self.containers.entry(id).or_default().push((t, count as f64));
     }
 
-    pub fn record_info_size(&mut self, kind: WorkloadKind, bytes: usize) {
+    fn record_info_size(&mut self, kind: WorkloadKind, bytes: usize) {
         self.info_sizes.entry(kind).or_default().push(bytes as f64);
     }
 
@@ -133,9 +143,57 @@ impl Metrics {
     }
 }
 
+impl TraceSink for Metrics {
+    /// Fold one stamped event into the figure structures. The stamp's
+    /// virtual time is the figure timestamp, so the fold reproduces the
+    /// pre-trace-bus direct pushes bit for bit.
+    fn on_event(&mut self, ev: &Stamped) {
+        let t = to_secs(ev.time);
+        match &ev.event {
+            TraceEvent::JobSubmitted { job, kind, size, tasks } => {
+                self.submit(*job, *kind, *size, t, *tasks);
+            }
+            TraceEvent::JobCompleted { job } => self.complete(*job, t),
+            TraceEvent::JobRestarted { job } => {
+                if let Some(r) = self.jobs.get_mut(job) {
+                    r.restarts += 1;
+                }
+            }
+            TraceEvent::TaskLaunched { job, remote_input, .. } => {
+                self.record_launch(*job, t);
+                if *remote_input {
+                    self.remote_input_tasks += 1;
+                } else {
+                    self.local_input_tasks += 1;
+                }
+            }
+            TraceEvent::ContainerCount { job, count } => {
+                self.record_containers(*job, t, *count);
+            }
+            TraceEvent::InfoReplicated { kind, bytes, .. } => {
+                self.record_info_size(*kind, *bytes);
+            }
+            TraceEvent::StealCompleted { delay_ms, .. } => {
+                self.steal_delays_ms.push(*delay_ms);
+            }
+            TraceEvent::JmRecovered { job, interval_secs, .. } => {
+                self.recovery_intervals_secs.push(*interval_secs);
+                if let Some(r) = self.jobs.get_mut(job) {
+                    r.recoveries += 1;
+                }
+            }
+            TraceEvent::ElectionWon { delay_secs, .. } => {
+                self.election_delays_secs.push(*delay_secs);
+            }
+            _ => {}
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::secs_f;
 
     fn m() -> Metrics {
         let mut m = Metrics::default();
@@ -181,5 +239,58 @@ mod tests {
         assert_eq!(m.avg_jrt(), 0.0);
         assert_eq!(m.makespan(), 0.0);
         assert!(m.jrt_cdf(&[0.5]).iter().all(|&(v, _)| v == 0.0));
+    }
+
+    /// Folding events through the sink must equal the direct mutators —
+    /// the contract the emission-site refactor relies on.
+    #[test]
+    fn event_fold_matches_direct_mutators() {
+        let job = JobId(7);
+        let kind = WorkloadKind::PageRank;
+        let task = crate::ids::TaskId { job, stage: crate::ids::StageId(0), index: 0 };
+        let dc = crate::ids::DcId(1);
+        let stamp = |t_secs: f64, seq, event| Stamped { time: secs_f(t_secs), seq, event };
+
+        let mut folded = Metrics::default();
+        folded.on_event(&stamp(
+            1.0,
+            0,
+            TraceEvent::JobSubmitted { job, kind, size: SizeClass::Small, tasks: 3 },
+        ));
+        folded.on_event(&stamp(
+            2.0,
+            1,
+            TraceEvent::TaskLaunched { job, task, dc, locality: "node-local", remote_input: true },
+        ));
+        folded.on_event(&stamp(3.0, 2, TraceEvent::ContainerCount { job, count: 4 }));
+        folded.on_event(&stamp(4.0, 3, TraceEvent::InfoReplicated { job, kind, bytes: 2048 }));
+        folded.on_event(&stamp(
+            5.0,
+            4,
+            TraceEvent::StealCompleted { job, thief: dc, victim: crate::ids::DcId(2), tasks: 2, delay_ms: 63.5 },
+        ));
+        folded.on_event(&stamp(6.0, 5, TraceEvent::JmRecovered { job, dc, interval_secs: 12.5 }));
+        folded.on_event(&stamp(
+            7.0,
+            6,
+            TraceEvent::ElectionWon { job, new_primary: dc, delay_secs: 0.8 },
+        ));
+        folded.on_event(&stamp(8.0, 7, TraceEvent::JobRestarted { job }));
+        folded.on_event(&stamp(9.0, 8, TraceEvent::JobCompleted { job }));
+
+        let mut direct = Metrics::default();
+        direct.submit(job, kind, SizeClass::Small, 1.0, 3);
+        direct.record_launch(job, 2.0);
+        direct.remote_input_tasks += 1;
+        direct.record_containers(job, 3.0, 4);
+        direct.record_info_size(kind, 2048);
+        direct.steal_delays_ms.push(63.5);
+        direct.recovery_intervals_secs.push(12.5);
+        direct.jobs.get_mut(&job).unwrap().recoveries += 1;
+        direct.election_delays_secs.push(0.8);
+        direct.jobs.get_mut(&job).unwrap().restarts += 1;
+        direct.complete(job, 9.0);
+
+        assert_eq!(folded, direct);
     }
 }

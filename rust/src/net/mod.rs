@@ -16,6 +16,7 @@
 use crate::config::WanConfig;
 use crate::ids::DcId;
 use crate::sim::{secs_f, SimTime};
+use crate::trace::{TraceEvent, Tracer};
 use crate::util::Pcg;
 
 /// Traffic classes, tracked separately for the Fig-10 cost breakdown.
@@ -52,6 +53,13 @@ pub struct Wan {
     /// 1.0 = nominal; applied on top of the AR(1) process to *inter*-DC
     /// links only. The chaos engine toggles this for WAN-window events.
     degrade: f64,
+    /// Per-pair degradation multipliers (asymmetric partitions): applied
+    /// on top of both the AR(1) process and the global `degrade` factor,
+    /// to the one inter-DC pair the chaos engine targeted.
+    pair_degrade: Vec<Vec<f64>>,
+    /// Trace bus handle; when attached, every control message and bulk
+    /// transfer is published as a typed event.
+    tracer: Option<Tracer>,
     rng: Pcg,
     pub stats: WanStats,
 }
@@ -64,7 +72,28 @@ impl Wan {
             .iter()
             .map(|row| row.iter().map(|&(m, _)| m).collect())
             .collect();
-        Wan { cfg, current, active: vec![vec![0; n]; n], degrade: 1.0, rng, stats: WanStats::default() }
+        Wan {
+            cfg,
+            current,
+            active: vec![vec![0; n]; n],
+            degrade: 1.0,
+            pair_degrade: vec![vec![1.0; n]; n],
+            tracer: None,
+            rng,
+            stats: WanStats::default(),
+        }
+    }
+
+    /// Publish WAN traffic onto the trace bus (the world attaches its
+    /// tracer at construction; standalone Wans — Fig 2 — stay silent).
+    pub fn attach_tracer(&mut self, tracer: Tracer) {
+        self.tracer = Some(tracer);
+    }
+
+    fn emit(&self, event: TraceEvent) {
+        if let Some(t) = &self.tracer {
+            t.publish(event);
+        }
     }
 
     /// Set the cross-DC degradation multiplier (clamped away from zero so
@@ -76,6 +105,23 @@ impl Wan {
     /// Current cross-DC degradation multiplier.
     pub fn degrade_factor(&self) -> f64 {
         self.degrade
+    }
+
+    /// Degrade (or restore, with 1.0) a single unordered region pair —
+    /// the asymmetric-partition chaos axis. Clamped away from zero;
+    /// intra-DC "pairs" are never degraded.
+    pub fn set_pair_degrade(&mut self, a: DcId, b: DcId, factor: f64) {
+        if a == b {
+            return;
+        }
+        let f = factor.max(0.01);
+        self.pair_degrade[a.0][b.0] = f;
+        self.pair_degrade[b.0][a.0] = f;
+    }
+
+    /// Current per-pair degradation multiplier (1.0 = nominal).
+    pub fn pair_degrade_factor(&self, a: DcId, b: DcId) -> f64 {
+        self.pair_degrade[a.0][b.0]
     }
 
     pub fn num_dcs(&self) -> usize {
@@ -110,7 +156,7 @@ impl Wan {
         if a == b {
             self.current[a.0][b.0]
         } else {
-            self.current[a.0][b.0] * self.degrade
+            self.current[a.0][b.0] * self.degrade * self.pair_degrade[a.0][b.0]
         }
     }
 
@@ -131,6 +177,7 @@ impl Wan {
         if a != b {
             self.stats.cross_dc_control_bytes += bytes;
         }
+        self.emit(TraceEvent::WanMessage { from: a, to: b, bytes });
         let bw = self.bandwidth_mbps(a, b); // Mbps
         let ser_ms = (bytes as f64 * 8.0) / (bw * 1000.0); // ms
         secs_f((self.latency_ms(a, b) + ser_ms) / 1000.0).max(1)
@@ -145,6 +192,7 @@ impl Wan {
         if a != b {
             self.stats.cross_dc_data_bytes += bytes;
         }
+        self.emit(TraceEvent::WanTransfer { from: a, to: b, bytes });
         self.active[a.0][b.0] += 1;
         if a != b {
             self.active[b.0][a.0] += 1;
@@ -274,6 +322,43 @@ mod tests {
         assert_eq!(w.bandwidth_mbps(DcId(0), DcId(1)), wan_bw, "restored exactly");
         let fast = w.begin_transfer(DcId(0), DcId(1), 10 * 1024 * 1024);
         assert!(slow > 3 * fast, "degraded transfer {slow}ms vs nominal {fast}ms");
+    }
+
+    #[test]
+    fn pair_degrade_hits_only_the_targeted_pair() {
+        let mut w = wan();
+        let lan = w.bandwidth_mbps(DcId(0), DcId(0));
+        let targeted = w.bandwidth_mbps(DcId(0), DcId(2));
+        let other = w.bandwidth_mbps(DcId(0), DcId(1));
+        w.set_pair_degrade(DcId(0), DcId(2), 0.1);
+        assert_eq!(w.bandwidth_mbps(DcId(0), DcId(0)), lan, "LAN untouched");
+        assert_eq!(w.bandwidth_mbps(DcId(0), DcId(1)), other, "other pairs untouched");
+        assert!((w.bandwidth_mbps(DcId(0), DcId(2)) - targeted * 0.1).abs() < 1e-9);
+        assert!((w.bandwidth_mbps(DcId(2), DcId(0)) - targeted * 0.1).abs() < 1e-9, "symmetric");
+        // Composes with the global brownout factor.
+        w.set_degrade(0.5);
+        assert!((w.bandwidth_mbps(DcId(0), DcId(2)) - targeted * 0.05).abs() < 1e-9);
+        w.set_degrade(1.0);
+        w.set_pair_degrade(DcId(0), DcId(2), 1.0);
+        assert_eq!(w.bandwidth_mbps(DcId(0), DcId(2)), targeted, "restored exactly");
+        // Intra-DC pairs cannot be degraded.
+        w.set_pair_degrade(DcId(1), DcId(1), 0.01);
+        assert_eq!(w.pair_degrade_factor(DcId(1), DcId(1)), 1.0);
+    }
+
+    #[test]
+    fn attached_tracer_sees_wan_traffic() {
+        use crate::trace::{RingBuffer, RingSink, Tracer};
+        let mut w = wan();
+        let tracer = Tracer::new();
+        let ring = RingBuffer::shared(16);
+        tracer.attach(Box::new(RingSink(ring.clone())));
+        w.attach_tracer(tracer);
+        w.message_delay(DcId(0), DcId(1), 256);
+        w.begin_transfer(DcId(1), DcId(2), 1024);
+        let r = ring.borrow();
+        let kinds: Vec<&str> = r.iter().map(|s| s.event.kind()).collect();
+        assert_eq!(kinds, vec!["wan-message", "wan-transfer"]);
     }
 
     #[test]

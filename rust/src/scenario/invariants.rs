@@ -1,14 +1,25 @@
 //! Invariant checkers: what must hold of *every* finished scenario run,
 //! no matter which failures were injected. Each campaign run passes
-//! through [`check_world`] (post-run, on the final [`World`]) and the
-//! periodic [`probe_world`] (installed by the runner at every scheduling
-//! period), which together turn every scenario execution into a test.
+//! through three layers that together turn every scenario execution into
+//! a test:
+//!
+//! * [`StreamChecker`] — a [`TraceSink`] folding the typed event stream
+//!   *as it happens*: exactly-once completion, steal conservation and
+//!   stamp monotonicity are caught at the offending event's timestamp,
+//!   not post-mortem;
+//! * the periodic [`probe_world`] (installed by the runner at every
+//!   scheduling period) — fair-share and grant-bookkeeping checks;
+//! * [`check_world`] — post-run checks over the final [`World`].
 
+use std::cell::RefCell;
 use std::collections::{HashMap, HashSet};
+use std::rc::Rc;
 
 use crate::dag::TaskStatus;
 use crate::deploy::World;
-use crate::ids::{ContainerId, DcId, JmId, TaskId};
+use crate::ids::{ContainerId, DcId, JmId, JobId, TaskId};
+use crate::sim::{to_secs, SimTime};
+use crate::trace::{Stamped, TraceEvent, TraceSink};
 
 /// One invariant breach, with enough detail to debug the run.
 #[derive(Debug, Clone)]
@@ -142,6 +153,222 @@ pub fn check_world(w: &World) -> Vec<Violation> {
         push(&mut v, "runtime-probe", p.clone());
     }
     v
+}
+
+/// Streaming invariant checker over the trace bus: violations are
+/// detected (and stamped) at the moment the offending event is
+/// published, which pinpoints *when* a run went wrong — the post-run
+/// [`check_world`] can only say that it did.
+///
+/// Checks:
+/// * **stamp-monotone** — `(time, seq)` stamps never go backwards (the
+///   bus ordering contract);
+/// * **exactly-once** — no task finishes twice and no finished task is
+///   relaunched (a full job restart legally resets the job's slate);
+/// * **completion** — a job completes at most once, and no task activity
+///   follows its job's completion;
+/// * **steal-conservation** — cumulative tasks stolen in never exceed
+///   tasks granted out by victims.
+#[derive(Default)]
+pub struct StreamChecker {
+    last: Option<(SimTime, u64)>,
+    done: HashSet<TaskId>,
+    completed: HashSet<JobId>,
+    stolen_out: u64,
+    stolen_in: u64,
+    violations: Vec<String>,
+}
+
+impl StreamChecker {
+    pub fn new() -> StreamChecker {
+        StreamChecker::default()
+    }
+
+    /// Attach a fresh checker to the world's trace bus; read the returned
+    /// handle after the run (the runner folds it into the campaign
+    /// verdict via `World::probe_violations`).
+    pub fn install(world: &World) -> Rc<RefCell<StreamChecker>> {
+        let checker = Rc::new(RefCell::new(StreamChecker::new()));
+        world.tracer.attach(Box::new(StreamSink(checker.clone())));
+        checker
+    }
+
+    pub fn violations(&self) -> &[String] {
+        &self.violations
+    }
+
+    fn violate(&mut self, msg: String) {
+        if self.violations.len() < 64 {
+            self.violations.push(msg);
+        }
+    }
+}
+
+impl TraceSink for StreamChecker {
+    fn on_event(&mut self, ev: &Stamped) {
+        if let Some((t, s)) = self.last {
+            if ev.time < t || ev.seq <= s {
+                self.violate(format!(
+                    "stream-order: stamp ({}, {}) after ({t}, {s})",
+                    ev.time, ev.seq
+                ));
+            }
+        }
+        self.last = Some((ev.time, ev.seq));
+        let at = to_secs(ev.time);
+        match &ev.event {
+            TraceEvent::TaskFinished { job, task, .. } => {
+                if !self.done.insert(*task) {
+                    self.violate(format!(
+                        "stream-exactly-once: {task} completed twice (second at t={at:.1}s)"
+                    ));
+                }
+                if self.completed.contains(job) {
+                    self.violate(format!(
+                        "stream-completion: {task} finished after {job} completed (t={at:.1}s)"
+                    ));
+                }
+            }
+            TraceEvent::TaskLaunched { job, task, .. } => {
+                if self.done.contains(task) {
+                    self.violate(format!(
+                        "stream-exactly-once: {task} relaunched after completion (t={at:.1}s)"
+                    ));
+                }
+                if self.completed.contains(job) {
+                    self.violate(format!(
+                        "stream-completion: {task} launched after {job} completed (t={at:.1}s)"
+                    ));
+                }
+            }
+            TraceEvent::JobCompleted { job } => {
+                if !self.completed.insert(*job) {
+                    self.violate(format!(
+                        "stream-completion: {job} completed twice (second at t={at:.1}s)"
+                    ));
+                }
+            }
+            TraceEvent::JobRestarted { job } => {
+                // A full restart (centralized baseline) legally reruns
+                // every task of the job from scratch.
+                let job = *job;
+                self.done.retain(|t| t.job != job);
+                self.completed.remove(&job);
+            }
+            TraceEvent::StealGranted { tasks, .. } => {
+                self.stolen_out += *tasks as u64;
+            }
+            TraceEvent::StealCompleted { tasks, .. } => {
+                self.stolen_in += *tasks as u64;
+                if self.stolen_in > self.stolen_out {
+                    self.violate(format!(
+                        "stream-steal-conservation: {} in > {} out (t={at:.1}s)",
+                        self.stolen_in, self.stolen_out
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// [`TraceSink`] adapter sharing one [`StreamChecker`] with the runner.
+pub struct StreamSink(pub Rc<RefCell<StreamChecker>>);
+
+impl TraceSink for StreamSink {
+    fn on_event(&mut self, ev: &Stamped) {
+        self.0.borrow_mut().on_event(ev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ids::StageId;
+    use crate::sim::secs;
+
+    fn st(t: u64, seq: u64, event: TraceEvent) -> Stamped {
+        Stamped { time: secs(t), seq, event }
+    }
+
+    fn task(i: u32) -> TaskId {
+        TaskId { job: JobId(0), stage: StageId(0), index: i }
+    }
+
+    fn finished(i: u32) -> TraceEvent {
+        TraceEvent::TaskFinished { job: JobId(0), task: task(i), dc: DcId(0) }
+    }
+
+    #[test]
+    fn flags_double_completion_at_the_offending_event() {
+        let mut c = StreamChecker::new();
+        c.on_event(&st(10, 0, finished(0)));
+        c.on_event(&st(11, 1, finished(1)));
+        assert!(c.violations().is_empty());
+        c.on_event(&st(12, 2, finished(0)));
+        assert_eq!(c.violations().len(), 1);
+        let v = &c.violations()[0];
+        assert!(v.contains("completed twice"), "{v}");
+        assert!(v.contains("t=12.0s"), "timestamped at the event: {v}");
+    }
+
+    #[test]
+    fn restart_legally_reruns_the_job() {
+        let mut c = StreamChecker::new();
+        c.on_event(&st(10, 0, finished(0)));
+        c.on_event(&st(20, 1, TraceEvent::JobRestarted { job: JobId(0) }));
+        c.on_event(&st(30, 2, finished(0)));
+        c.on_event(&st(40, 3, TraceEvent::JobCompleted { job: JobId(0) }));
+        assert!(c.violations().is_empty(), "{:?}", c.violations());
+    }
+
+    #[test]
+    fn flags_activity_after_job_completion() {
+        let mut c = StreamChecker::new();
+        c.on_event(&st(10, 0, TraceEvent::JobCompleted { job: JobId(0) }));
+        c.on_event(&st(
+            11,
+            1,
+            TraceEvent::TaskLaunched {
+                job: JobId(0),
+                task: task(0),
+                dc: DcId(0),
+                locality: "any",
+                remote_input: false,
+            },
+        ));
+        assert_eq!(c.violations().len(), 1);
+        assert!(c.violations()[0].contains("launched after"), "{:?}", c.violations());
+    }
+
+    #[test]
+    fn flags_steal_deficit_as_it_happens() {
+        let mut c = StreamChecker::new();
+        let grant = TraceEvent::StealGranted { job: JobId(0), victim: DcId(1), thief: DcId(0), tasks: 2 };
+        let complete = |n| TraceEvent::StealCompleted {
+            job: JobId(0),
+            thief: DcId(0),
+            victim: DcId(1),
+            tasks: n,
+            delay_ms: 60.0,
+        };
+        c.on_event(&st(10, 0, grant));
+        c.on_event(&st(11, 1, complete(2)));
+        assert!(c.violations().is_empty());
+        c.on_event(&st(12, 2, complete(1)));
+        assert_eq!(c.violations().len(), 1);
+        assert!(c.violations()[0].contains("steal-conservation"), "{:?}", c.violations());
+    }
+
+    #[test]
+    fn flags_stamp_regression() {
+        let mut c = StreamChecker::new();
+        c.on_event(&st(10, 5, finished(0)));
+        c.on_event(&st(9, 6, finished(1)));
+        c.on_event(&st(10, 6, finished(2)));
+        assert_eq!(c.violations().len(), 2, "{:?}", c.violations());
+        assert!(c.violations().iter().all(|v| v.contains("stream-order")));
+    }
 }
 
 /// Periodic runtime probe, called by the campaign runner right after each

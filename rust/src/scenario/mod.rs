@@ -36,24 +36,33 @@
 //! ```
 //!
 //! Event DSL: `hogs@T:0,2,3` (resource hogs into DCs at `T` seconds),
-//! `kill_jm@T:dc2` (kill job 0's JM replica host), `kill_node@T:dc1.n2`
-//! (spot-style VM termination), `wan@T1-T2:0.25` (degrade cross-DC
-//! bandwidth to 25 % during the window). `overrides` strings reuse the
-//! CLI's `--set section.key=value` surface, so every config knob is a
-//! scenario axis for free.
+//! `kill_jm@T:dc2` (kill job 0's JM replica host),
+//! `kill_jm_cascade@T:dc0,2,45` (kill, then re-kill each freshly-elected
+//! primary every 45 s, 2 kills total), `kill_node@T:dc1.n2` (spot-style
+//! VM termination), `wan@T1-T2:0.25` (degrade all cross-DC bandwidth to
+//! 25 % during the window), `wan_pair@T:dc0,dc2,0.05` (asymmetric
+//! partition of a single region pair; factor 1 restores). `overrides`
+//! strings reuse the CLI's `--set section.key=value` surface, so every
+//! config knob is a scenario axis for free.
 //!
-//! Run a campaign with `houtu campaign [--spec FILE | --smoke]`; every
-//! run must pass the [`invariants`] checkers (no task lost or
-//! double-completed, jobs terminate, pools restored, fair-share `a ≤ d`
-//! probe, steal conservation) and gets a deterministic digest — same
-//! (spec, seed) ⇒ identical digest, which the replay regression test
-//! pins down.
+//! Run a campaign with `houtu campaign [--spec FILE | --smoke]
+//! [--report out.json|out.csv]`; every run must pass the [`invariants`]
+//! checkers — the streaming [`invariants::StreamChecker`] riding the
+//! [`crate::trace`] bus (exactly-once at the offending event's
+//! timestamp, steal conservation, stamp monotonicity), the periodic
+//! fair-share probe, and the post-run [`check_world`] — and gets a
+//! deterministic trace-folded digest: same (spec, seed) ⇒ identical
+//! event stream ⇒ identical digest, which the replay regression tests
+//! pin down. `--report` serializes the [`CampaignReport`] (per-run
+//! metrics + digests + violations) as JSON or CSV.
 
 pub mod invariants;
+pub mod report;
 pub mod runner;
 pub mod spec;
 
-pub use invariants::{check_world, probe_world, Violation};
+pub use invariants::{check_world, probe_world, StreamChecker, Violation};
+pub use report::write_and_verify;
 pub use runner::{
     run_campaign, run_digest, run_one, run_scenario, CampaignReport, FinishedRun, RunReport,
 };
@@ -204,7 +213,7 @@ pub fn smoke_campaign() -> CampaignSpec {
 
 /// The built-in standard campaign: the same matrix `configs/campaign.toml`
 /// ships (kept in sync by a regression test), used when the CLI finds no
-/// spec file. 4 scenarios × 3 seeds = 12 runs. Scenario order matches the
+/// spec file. 6 scenarios × 3 seeds = 18 runs. Scenario order matches the
 /// TOML parse order (sections sort alphabetically in the subset parser).
 pub fn standard_campaign() -> CampaignSpec {
     CampaignSpec {
@@ -212,6 +221,31 @@ pub fn standard_campaign() -> CampaignSpec {
         seeds: vec![42, 7, 1234],
         parallelism: 0,
         scenarios: vec![
+            ScenarioSpec {
+                name: "asym-wan-partition".to_string(),
+                deployment: Deployment::Houtu,
+                regions: 0,
+                workload: ScenarioWorkload::SingleJob {
+                    kind: WorkloadKind::TpcH,
+                    size: SizeClass::Medium,
+                    home: DcId(0),
+                },
+                events: vec![
+                    ChaosEvent::WanPairDegrade {
+                        at_secs: 30.0,
+                        a: DcId(0),
+                        b: DcId(2),
+                        factor: 0.05,
+                    },
+                    ChaosEvent::WanPairDegrade {
+                        at_secs: 500.0,
+                        a: DcId(0),
+                        b: DcId(2),
+                        factor: 1.0,
+                    },
+                ],
+                overrides: vec![],
+            },
             ScenarioSpec {
                 name: "baseline-wordcount".to_string(),
                 deployment: Deployment::Houtu,
@@ -222,6 +256,23 @@ pub fn standard_campaign() -> CampaignSpec {
                     home: DcId(0),
                 },
                 events: vec![],
+                overrides: vec![],
+            },
+            ScenarioSpec {
+                name: "jm-kill-cascade".to_string(),
+                deployment: Deployment::Houtu,
+                regions: 0,
+                workload: ScenarioWorkload::SingleJob {
+                    kind: WorkloadKind::WordCount,
+                    size: SizeClass::Large,
+                    home: DcId(0),
+                },
+                events: vec![ChaosEvent::KillJmCascade {
+                    at_secs: 70.0,
+                    dc: DcId(0),
+                    count: 2,
+                    gap_secs: 45.0,
+                }],
                 overrides: vec![],
             },
             ScenarioSpec {

@@ -1,0 +1,318 @@
+//! Campaign report export: serialize a [`CampaignReport`] — per-run
+//! metrics, trace-folded digests and violations — as JSON or CSV via the
+//! in-repo writers (the crate stays dependency-free), plus the
+//! round-trip validation `houtu campaign --report` and `ci.sh` rely on.
+//!
+//! The JSON shape is the trace-derived summary: one object per
+//! (scenario, seed) run with its figure-level metrics and its 16-hex
+//! `digest` string (digests are u64s, which JSON numbers cannot carry
+//! losslessly). CSV has one row per run with the same columns;
+//! violations are `;`-joined inside one quoted cell.
+
+use crate::util::error::{Context, Result};
+use crate::util::json::{self, Json};
+use crate::{anyhow, ensure};
+
+use super::runner::{CampaignReport, RunReport};
+
+/// Columns shared by the CSV header and the JSON run objects.
+const COLUMNS: [&str; 16] = [
+    "scenario",
+    "seed",
+    "deployment",
+    "completed_jobs",
+    "total_jobs",
+    "avg_jrt_secs",
+    "makespan_secs",
+    "events_processed",
+    "tasks_stolen",
+    "recoveries",
+    "elections",
+    "restarts",
+    "cross_dc_bytes",
+    "machine_usd",
+    "digest",
+    "violations",
+];
+
+fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl CampaignReport {
+    /// The report as a JSON document.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"campaign\": {},\n", json::escape(&self.name)));
+        out.push_str(&format!("  \"workers\": {},\n", self.workers));
+        out.push_str(&format!("  \"campaign_digest\": \"{:016x}\",\n", self.campaign_digest));
+        out.push_str(&format!("  \"total_violations\": {},\n", self.total_violations()));
+        out.push_str("  \"runs\": [\n");
+        for (i, r) in self.runs.iter().enumerate() {
+            out.push_str("    {");
+            out.push_str(&format!("\"scenario\": {}, ", json::escape(&r.scenario)));
+            out.push_str(&format!("\"seed\": {}, ", r.seed));
+            out.push_str(&format!("\"deployment\": {}, ", json::escape(r.deployment)));
+            out.push_str(&format!("\"completed_jobs\": {}, ", r.completed_jobs));
+            out.push_str(&format!("\"total_jobs\": {}, ", r.total_jobs));
+            out.push_str(&format!("\"avg_jrt_secs\": {}, ", json_f64(r.avg_jrt_secs)));
+            out.push_str(&format!("\"makespan_secs\": {}, ", json_f64(r.makespan_secs)));
+            out.push_str(&format!("\"events_processed\": {}, ", r.events_processed));
+            out.push_str(&format!("\"tasks_stolen\": {}, ", r.tasks_stolen));
+            out.push_str(&format!("\"recoveries\": {}, ", r.recoveries));
+            out.push_str(&format!("\"elections\": {}, ", r.elections));
+            out.push_str(&format!("\"restarts\": {}, ", r.restarts));
+            out.push_str(&format!("\"cross_dc_bytes\": {}, ", r.cross_dc_bytes));
+            out.push_str(&format!("\"machine_usd\": {}, ", json_f64(r.machine_usd)));
+            out.push_str(&format!("\"digest\": \"{:016x}\", ", r.digest));
+            out.push_str(&format!("\"wall_ms\": {}, ", r.wall_ms));
+            let viol: Vec<String> = r.violations.iter().map(|v| json::escape(v)).collect();
+            out.push_str(&format!("\"violations\": [{}]", viol.join(", ")));
+            out.push_str(if i + 1 == self.runs.len() { "}\n" } else { "},\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// The report as CSV (header + one row per run).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&COLUMNS.join(","));
+        out.push('\n');
+        for r in &self.runs {
+            let viol = r.violations.join("; ");
+            out.push_str(&format!(
+                "{},{},{},{},{},{:.3},{:.3},{},{},{},{},{},{},{:.4},{:016x},{}\n",
+                csv_cell(&r.scenario),
+                r.seed,
+                csv_cell(r.deployment),
+                r.completed_jobs,
+                r.total_jobs,
+                r.avg_jrt_secs,
+                r.makespan_secs,
+                r.events_processed,
+                r.tasks_stolen,
+                r.recoveries,
+                r.elections,
+                r.restarts,
+                r.cross_dc_bytes,
+                r.machine_usd,
+                r.digest,
+                csv_cell(&viol)
+            ));
+        }
+        out
+    }
+}
+
+/// Quote a CSV cell when it needs it (commas, quotes, newlines).
+fn csv_cell(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Which format a path's extension selects.
+fn format_of(path: &str) -> Result<&'static str> {
+    if path.ends_with(".json") {
+        Ok("json")
+    } else if path.ends_with(".csv") {
+        Ok("csv")
+    } else {
+        Err(anyhow!("report path {path:?} must end in .json or .csv"))
+    }
+}
+
+/// Write the report to `path` (format by extension), then read the file
+/// back and verify it round-trips — run count, per-run digests and the
+/// campaign digest must survive serialization. Returns the format name.
+pub fn write_and_verify(report: &CampaignReport, path: &str) -> Result<&'static str> {
+    let format = format_of(path)?;
+    let text = match format {
+        "json" => report.to_json(),
+        _ => report.to_csv(),
+    };
+    std::fs::write(path, &text).with_context(|| format!("writing {path}"))?;
+    let back = std::fs::read_to_string(path).with_context(|| format!("re-reading {path}"))?;
+    match format {
+        "json" => verify_json(report, &back),
+        _ => verify_csv(report, &back),
+    }?;
+    Ok(format)
+}
+
+fn verify_json(report: &CampaignReport, text: &str) -> Result<()> {
+    let doc = json::parse(text).map_err(|e| anyhow!("report is not valid JSON: {e}"))?;
+    ensure!(
+        doc.get("campaign").and_then(Json::as_str) == Some(report.name.as_str()),
+        "campaign name did not round-trip"
+    );
+    let digest = doc
+        .get("campaign_digest")
+        .and_then(Json::as_str)
+        .context("campaign_digest missing")?;
+    ensure!(
+        u64::from_str_radix(digest, 16).ok() == Some(report.campaign_digest),
+        "campaign digest did not round-trip"
+    );
+    let runs = doc.get("runs").and_then(Json::as_array).context("runs missing")?;
+    ensure!(
+        runs.len() == report.runs.len(),
+        "run count did not round-trip: {} vs {}",
+        runs.len(),
+        report.runs.len()
+    );
+    for (got, want) in runs.iter().zip(&report.runs) {
+        check_run(got, want)?;
+    }
+    Ok(())
+}
+
+fn check_run(got: &Json, want: &RunReport) -> Result<()> {
+    let ctx = format!("{}/seed{}", want.scenario, want.seed);
+    ensure!(
+        got.get("scenario").and_then(Json::as_str) == Some(want.scenario.as_str()),
+        "{ctx}: scenario did not round-trip"
+    );
+    // Seeds are emitted as raw JSON numbers; above 2^53 the parser's f64
+    // can only carry the nearest representable value, so compare in f64
+    // space (the writer's exact decimal parses to `seed as f64`).
+    ensure!(
+        got.get("seed").and_then(Json::as_f64) == Some(want.seed as f64),
+        "{ctx}: seed did not round-trip"
+    );
+    let digest = got.get("digest").and_then(Json::as_str).context("digest missing")?;
+    ensure!(
+        u64::from_str_radix(digest, 16).ok() == Some(want.digest),
+        "{ctx}: digest did not round-trip"
+    );
+    let viol = got.get("violations").and_then(Json::as_array).context("violations missing")?;
+    ensure!(
+        viol.len() == want.violations.len(),
+        "{ctx}: violation count did not round-trip"
+    );
+    Ok(())
+}
+
+fn verify_csv(report: &CampaignReport, text: &str) -> Result<()> {
+    let mut lines = text.lines();
+    let header = lines.next().context("empty CSV report")?;
+    ensure!(header == COLUMNS.join(","), "CSV header mismatch: {header:?}");
+    // Quoted cells never contain newlines (violations are ';'-joined on
+    // one line), so line count is row count.
+    let rows: Vec<&str> = lines.filter(|l| !l.is_empty()).collect();
+    ensure!(
+        rows.len() == report.runs.len(),
+        "CSV row count {} != {} runs",
+        rows.len(),
+        report.runs.len()
+    );
+    for (row, want) in rows.iter().zip(&report.runs) {
+        let digest = format!("{:016x}", want.digest);
+        ensure!(
+            row.contains(&digest),
+            "{}/seed{}: digest missing from CSV row",
+            want.scenario,
+            want.seed
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> CampaignReport {
+        let run = |scenario: &str, seed, digest, violations: Vec<String>| RunReport {
+            scenario: scenario.to_string(),
+            seed,
+            deployment: "houtu",
+            completed_jobs: 1,
+            total_jobs: 1,
+            avg_jrt_secs: 123.456,
+            makespan_secs: 130.0,
+            events_processed: 999,
+            tasks_stolen: 3,
+            recoveries: 1,
+            elections: 0,
+            restarts: 0,
+            cross_dc_bytes: 1 << 30,
+            machine_usd: 12.34,
+            digest,
+            violations,
+            wall_ms: 42,
+        };
+        CampaignReport {
+            name: "unit".to_string(),
+            workers: 2,
+            runs: vec![
+                run("clean", 42, 0xdead_beef_0000_0001, vec![]),
+                run(
+                    "dirty, with \"quotes\"",
+                    7,
+                    0x0000_0000_0000_00ff,
+                    vec!["exactly-once: j0: 3/4 tasks Done".to_string()],
+                ),
+            ],
+            campaign_digest: 0x1234_5678_9abc_def0,
+        }
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let rep = report();
+        let text = rep.to_json();
+        verify_json(&rep, &text).unwrap();
+        // Spot-check the parsed shape, not just our own validator.
+        let doc = json::parse(&text).unwrap();
+        let runs = doc.get("runs").and_then(Json::as_array).unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].get("digest").and_then(Json::as_str), Some("deadbeef00000001"));
+        assert_eq!(
+            runs[1].get("scenario").and_then(Json::as_str),
+            Some("dirty, with \"quotes\"")
+        );
+        assert_eq!(
+            runs[1].get("violations").and_then(Json::as_array).map(<[Json]>::len),
+            Some(1)
+        );
+        assert_eq!(doc.get("total_violations").and_then(Json::as_u64), Some(1));
+    }
+
+    #[test]
+    fn csv_round_trips() {
+        let rep = report();
+        let text = rep.to_csv();
+        verify_csv(&rep, &text).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "header + 2 rows");
+        assert!(lines[0].starts_with("scenario,seed,"));
+        assert!(lines[1].contains("deadbeef00000001"));
+        assert!(lines[2].starts_with("\"dirty, with \"\"quotes\"\"\","), "{}", lines[2]);
+    }
+
+    #[test]
+    fn mismatched_report_fails_verification() {
+        let rep = report();
+        let mut other = report();
+        other.runs[0].digest ^= 1;
+        assert!(verify_json(&other, &rep.to_json()).is_err());
+        other.campaign_digest ^= 1;
+        assert!(verify_json(&other, &rep.to_json()).is_err());
+    }
+
+    #[test]
+    fn format_comes_from_the_extension() {
+        assert_eq!(format_of("a/b.json").unwrap(), "json");
+        assert_eq!(format_of("out.csv").unwrap(), "csv");
+        assert!(format_of("report.txt").is_err());
+    }
+}

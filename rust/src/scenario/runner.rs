@@ -13,11 +13,12 @@ use std::sync::Mutex;
 
 use crate::config::Config;
 use crate::deploy::{build_sim, inject_hogs, kill_jm_host, kill_node, schedule_trace, submit_job, World, WorldSim};
-use crate::ids::{JmId, JobId};
+use crate::ids::{DcId, JmId, JobId};
 use crate::sim::{secs, secs_f, SimTime};
+use crate::trace::{Fnv64, TraceEvent};
 use crate::util::error::Result;
 
-use super::invariants::{check_world, probe_world};
+use super::invariants::{check_world, probe_world, StreamChecker};
 use super::spec::{CampaignSpec, ChaosEvent, ScenarioSpec, ScenarioWorkload};
 
 /// A finished simulation plus what only the engine knows about it.
@@ -54,10 +55,19 @@ pub fn run_scenario(base: &Config, spec: &ScenarioSpec, seed: u64) -> Result<Fin
         }
     };
     install_probe(&mut sim, horizon);
+    // Streaming invariants ride the trace bus for the whole run; their
+    // findings join the probe's in `World::probe_violations`, which
+    // `check_world` folds into the campaign verdict.
+    let stream = StreamChecker::install(&sim.state);
     schedule_events(&mut sim, &spec.events);
     sim.run_until(horizon);
     let makespan = sim.state.metrics.makespan();
     sim.state.bill_machines(makespan);
+    for v in stream.borrow().violations() {
+        if sim.state.probe_violations.len() < 64 {
+            sim.state.probe_violations.push(v.clone());
+        }
+    }
     Ok(FinishedRun { events_processed: sim.events_processed, world: sim.state })
 }
 
@@ -71,25 +81,94 @@ pub fn run_scenario(base: &Config, spec: &ScenarioSpec, seed: u64) -> Result<Fin
 fn schedule_events(sim: &mut WorldSim, events: &[ChaosEvent]) {
     let mut wan_actions: Vec<(f64, bool, f64)> = Vec::new(); // (t, is_start, factor)
     for ev in events.iter().cloned() {
+        let label = ev.to_string();
         match ev {
             ChaosEvent::InjectHogs { at_secs, dcs } => {
-                sim.schedule_at(secs_f(at_secs), move |sim| inject_hogs(sim, &dcs));
+                sim.schedule_at(secs_f(at_secs), move |sim| {
+                    sim.state.emit(TraceEvent::ChaosInjected { label });
+                    inject_hogs(sim, &dcs);
+                });
             }
             ChaosEvent::KillJm { at_secs, dc } => {
-                sim.schedule_at(secs_f(at_secs), move |sim| kill_jm_host(sim, JobId(0), dc));
+                sim.schedule_at(secs_f(at_secs), move |sim| {
+                    sim.state.emit(TraceEvent::ChaosInjected { label });
+                    kill_jm_host(sim, JobId(0), dc);
+                });
+            }
+            ChaosEvent::KillJmCascade { at_secs, dc, count, gap_secs } => {
+                let gap = secs_f(gap_secs);
+                sim.schedule_at(secs_f(at_secs), move |sim| {
+                    sim.state.emit(TraceEvent::ChaosInjected { label });
+                    cascade_kill(sim, JobId(0), Some(dc), count, gap);
+                });
             }
             ChaosEvent::KillNode { at_secs, node } => {
-                sim.schedule_at(secs_f(at_secs), move |sim| kill_node(sim, node));
+                sim.schedule_at(secs_f(at_secs), move |sim| {
+                    sim.state.emit(TraceEvent::ChaosInjected { label });
+                    kill_node(sim, node);
+                });
             }
             ChaosEvent::WanDegrade { from_secs, until_secs, factor } => {
                 wan_actions.push((from_secs, true, factor));
                 wan_actions.push((until_secs, false, 1.0));
             }
+            ChaosEvent::WanPairDegrade { at_secs, a, b, factor } => {
+                sim.schedule_at(secs_f(at_secs), move |sim| {
+                    sim.state.emit(TraceEvent::ChaosInjected { label });
+                    sim.state.wan.set_pair_degrade(a, b, factor);
+                });
+            }
         }
     }
     wan_actions.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
     for (t, _, factor) in wan_actions {
-        sim.schedule_at(secs_f(t), move |sim| sim.state.wan.set_degrade(factor));
+        sim.schedule_at(secs_f(t), move |sim| {
+            sim.state.emit(TraceEvent::ChaosInjected { label: format!("wan-factor={factor}") });
+            sim.state.wan.set_degrade(factor);
+        });
+    }
+}
+
+/// Cascading JM kills (generalizing the hand-coded
+/// `kill_pjm_then_new_pjm_too` path): the first kill hits the spec'd DC;
+/// each subsequent kill, `gap` later, hits whichever DC hosts job 0's
+/// *current* primary — i.e. the freshly-elected pJM. If the gap elapses
+/// before detection + election finished (the primary pointer still names
+/// a dead replica), the kill waits and retries instead of silently
+/// re-hitting the dead DC — the cascade always lands `count` kills on
+/// live primaries unless the job finishes first.
+fn cascade_kill(sim: &mut WorldSim, job: JobId, target: Option<DcId>, remaining: u32, gap: SimTime) {
+    if remaining == 0 {
+        return;
+    }
+    let dc = {
+        let Some(rt) = sim.state.jobs.get(&job) else { return };
+        if rt.done {
+            return;
+        }
+        match target {
+            Some(dc) => dc,
+            None => {
+                let primary_alive =
+                    rt.jms.get(&rt.primary).map(|jm| jm.alive).unwrap_or(false);
+                if !primary_alive {
+                    // Election still in flight: poll until a live primary
+                    // exists (bounded by job completion / the horizon).
+                    sim.schedule_in(secs_f(1.0), move |sim| {
+                        cascade_kill(sim, job, None, remaining, gap);
+                    });
+                    return;
+                }
+                sim.state.jobs[&job].primary
+            }
+        }
+    };
+    sim.state.emit(TraceEvent::ChaosInjected {
+        label: format!("kill_jm_cascade:kill@dc{} ({} left)", dc.0, remaining - 1),
+    });
+    kill_jm_host(sim, job, dc);
+    if remaining > 1 {
+        sim.schedule_in(gap, move |sim| cascade_kill(sim, job, None, remaining - 1, gap));
     }
 }
 
@@ -112,55 +191,14 @@ fn arm_probe(sim: &mut WorldSim, period: SimTime, horizon: SimTime, prev: HashMa
     });
 }
 
-/// FNV-1a accumulator for run digests.
-struct Fnv(u64);
-
-impl Fnv {
-    fn new() -> Fnv {
-        Fnv(0xcbf2_9ce4_8422_2325)
-    }
-    fn u64(&mut self, x: u64) {
-        for b in x.to_le_bytes() {
-            self.0 ^= b as u64;
-            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
-        }
-    }
-    fn bytes(&mut self, bs: &[u8]) {
-        for &b in bs {
-            self.0 ^= b as u64;
-            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
-        }
-    }
-}
-
 /// Deterministic digest of a finished run: same (spec, seed) ⇒ same
-/// digest, byte for byte. Folds in the event count, every job's
-/// submission/completion times and task counts, the WAN/zk traffic and
-/// the failure-handling counters.
+/// digest, byte for byte. Since the trace-bus refactor this is a fold of
+/// the run's *entire event stream* — every `(time, seq)` stamp and typed
+/// payload, plus the event and step counts — so it is strictly stronger
+/// than the old end-state scan: two runs that reach the same final world
+/// through different event orders digest differently.
 pub fn run_digest(run: &FinishedRun) -> u64 {
-    let w = &run.world;
-    let mut h = Fnv::new();
-    h.u64(run.events_processed);
-    h.u64(w.metrics.jobs.len() as u64);
-    for (id, rec) in &w.metrics.jobs {
-        h.u64(id.0);
-        h.bytes(rec.kind.name().as_bytes());
-        h.u64(rec.submitted_secs.to_bits());
-        h.u64(rec.completed_secs.map(f64::to_bits).unwrap_or(0));
-        h.u64(rec.tasks_total as u64);
-        h.u64(rec.restarts as u64);
-    }
-    for (id, tl) in &w.metrics.task_launches {
-        h.u64(id.0);
-        h.u64(tl.len() as u64);
-    }
-    h.u64(w.wan.stats.cross_dc_total_bytes());
-    h.u64(w.wan.stats.messages);
-    h.u64(w.zk.stats.writes);
-    h.u64(w.metrics.recovery_intervals_secs.len() as u64);
-    h.u64(w.metrics.election_delays_secs.len() as u64);
-    h.u64(w.metrics.steal_delays_ms.len() as u64);
-    h.0
+    run.world.trace_digest()
 }
 
 /// Everything a campaign records about one (scenario, seed) run.
@@ -361,7 +399,7 @@ pub fn run_campaign(base: &Config, spec: &CampaignSpec) -> CampaignReport {
         .into_iter()
         .map(|o| o.expect("campaign worker lost a run"))
         .collect();
-    let mut h = Fnv::new();
+    let mut h = Fnv64::new();
     for r in &runs {
         h.bytes(r.scenario.as_bytes());
         h.u64(r.seed);

@@ -26,11 +26,21 @@ pub enum ChaosEvent {
     /// `kill_jm@T:dc2` — kill the VM hosting job 0's JM replica in a DC
     /// (the Fig-11 pJM/sJM termination).
     KillJm { at_secs: f64, dc: DcId },
+    /// `kill_jm_cascade@T:dc0,3,45` — cascading JM kills: kill job 0's
+    /// JM in the given DC at `T`, then every `gap` seconds kill whichever
+    /// DC hosts the *current* primary (the freshly-elected pJM), `count`
+    /// kills in total. Generalizes the hand-coded
+    /// `kill_pjm_then_new_pjm_too` path.
+    KillJmCascade { at_secs: f64, dc: DcId, count: u32, gap_secs: f64 },
     /// `kill_node@T:dc1.n2` — spot-style termination of one worker VM.
     KillNode { at_secs: f64, node: NodeId },
     /// `wan@T1-T2:0.25` — degrade all cross-DC bandwidth to the given
     /// fraction during the window (§2.2 changeable environment).
     WanDegrade { from_secs: f64, until_secs: f64, factor: f64 },
+    /// `wan_pair@T:dc0,dc2,0.05` — asymmetric partition: from `T` on,
+    /// scale only the (dcA, dcB) link by `factor`. A second event with
+    /// factor 1 restores the pair.
+    WanPairDegrade { at_secs: f64, a: DcId, b: DcId, factor: f64 },
 }
 
 fn parse_f64(s: &str, whole: &str) -> Result<f64> {
@@ -84,6 +94,20 @@ impl ChaosEvent {
                 at_secs: parse_time(when, s)?,
                 dc: parse_dc(arg, s)?,
             }),
+            "kill_jm_cascade" => {
+                let parts: Vec<&str> = arg.split(',').collect();
+                ensure!(parts.len() == 3, "event {s:?}: args must be dc,count,gap");
+                let count = parse_usize(parts[1], s)?;
+                ensure!(count >= 1, "event {s:?}: need at least one kill");
+                let gap_secs = parse_f64(parts[2], s)?;
+                ensure!(gap_secs > 0.0, "event {s:?}: gap must be positive");
+                Ok(ChaosEvent::KillJmCascade {
+                    at_secs: parse_time(when, s)?,
+                    dc: parse_dc(parts[0], s)?,
+                    count: count as u32,
+                    gap_secs,
+                })
+            }
             "kill_node" => {
                 let (dc, idx) = arg
                     .split_once('.')
@@ -105,7 +129,20 @@ impl ChaosEvent {
                 ensure!(factor > 0.0, "event {s:?}: factor must be positive");
                 Ok(ChaosEvent::WanDegrade { from_secs, until_secs, factor })
             }
-            other => bail!("unknown event kind {other:?} (hogs|kill_jm|kill_node|wan)"),
+            "wan_pair" => {
+                let parts: Vec<&str> = arg.split(',').collect();
+                ensure!(parts.len() == 3, "event {s:?}: args must be dcA,dcB,factor");
+                let a = parse_dc(parts[0], s)?;
+                let b = parse_dc(parts[1], s)?;
+                ensure!(a != b, "event {s:?}: pair must span two distinct DCs");
+                let factor = parse_f64(parts[2], s)?;
+                ensure!(factor > 0.0, "event {s:?}: factor must be positive");
+                Ok(ChaosEvent::WanPairDegrade { at_secs: parse_time(when, s)?, a, b, factor })
+            }
+            other => bail!(
+                "unknown event kind {other:?} \
+                 (hogs|kill_jm|kill_jm_cascade|kill_node|wan|wan_pair)"
+            ),
         }
     }
 }
@@ -118,11 +155,17 @@ impl std::fmt::Display for ChaosEvent {
                 write!(f, "hogs@{at_secs}:{}", list.join(","))
             }
             ChaosEvent::KillJm { at_secs, dc } => write!(f, "kill_jm@{at_secs}:dc{}", dc.0),
+            ChaosEvent::KillJmCascade { at_secs, dc, count, gap_secs } => {
+                write!(f, "kill_jm_cascade@{at_secs}:dc{},{count},{gap_secs}", dc.0)
+            }
             ChaosEvent::KillNode { at_secs, node } => {
                 write!(f, "kill_node@{at_secs}:dc{}.n{}", node.dc.0, node.idx)
             }
             ChaosEvent::WanDegrade { from_secs, until_secs, factor } => {
                 write!(f, "wan@{from_secs}-{until_secs}:{factor}")
+            }
+            ChaosEvent::WanPairDegrade { at_secs, a, b, factor } => {
+                write!(f, "wan_pair@{at_secs}:dc{},dc{},{factor}", a.0, b.0)
             }
         }
     }
@@ -179,10 +222,12 @@ impl ScenarioSpec {
             let ok = match ev {
                 ChaosEvent::InjectHogs { dcs, .. } => dcs.iter().all(|d| d.0 < n),
                 ChaosEvent::KillJm { dc, .. } => dc.0 < n,
+                ChaosEvent::KillJmCascade { dc, .. } => dc.0 < n,
                 ChaosEvent::KillNode { node, .. } => {
                     node.dc.0 < n && node.idx < cfg.topology.workers_per_dc
                 }
                 ChaosEvent::WanDegrade { .. } => true,
+                ChaosEvent::WanPairDegrade { a, b, .. } => a.0 < n && b.0 < n,
             };
             ensure!(ok, "scenario {:?}: event {ev} outside the {n}-region topology", self.name);
         }
@@ -390,11 +435,26 @@ mod tests {
             ChaosEvent::parse("wan@120-300:0.25").unwrap(),
             ChaosEvent::WanDegrade { from_secs: 120.0, until_secs: 300.0, factor: 0.25 }
         );
+        assert_eq!(
+            ChaosEvent::parse("wan_pair@30:dc0,dc2,0.05").unwrap(),
+            ChaosEvent::WanPairDegrade { at_secs: 30.0, a: DcId(0), b: DcId(2), factor: 0.05 }
+        );
+        assert_eq!(
+            ChaosEvent::parse("kill_jm_cascade@70:dc0,3,45").unwrap(),
+            ChaosEvent::KillJmCascade { at_secs: 70.0, dc: DcId(0), count: 3, gap_secs: 45.0 }
+        );
     }
 
     #[test]
     fn event_dsl_display_roundtrips() {
-        for s in ["hogs@100:0,2,3", "kill_jm@70:dc2", "kill_node@50:dc1.n2", "wan@120-300:0.25"] {
+        for s in [
+            "hogs@100:0,2,3",
+            "kill_jm@70:dc2",
+            "kill_jm_cascade@70:dc0,3,45",
+            "kill_node@50:dc1.n2",
+            "wan@120-300:0.25",
+            "wan_pair@30:dc0,dc2,0.05",
+        ] {
             let ev = ChaosEvent::parse(s).unwrap();
             assert_eq!(ChaosEvent::parse(&ev.to_string()).unwrap(), ev, "{s}");
         }
@@ -410,10 +470,17 @@ mod tests {
             "kill_jm@-70:dc0",
             "kill_jm@NaN:dc0",
             "kill_jm@inf:dc0",
+            "kill_jm_cascade@70:dc0",
+            "kill_jm_cascade@70:dc0,0,45",
+            "kill_jm_cascade@70:dc0,3,0",
+            "kill_jm_cascade@70:dc0,3,45,9",
             "kill_node@50:dc1",
             "wan@300-120:0.25",
             "wan@1-2:0",
             "wan@1-2:NaN",
+            "wan_pair@30:dc0,dc0,0.5",
+            "wan_pair@30:dc0,dc1,0",
+            "wan_pair@30:dc0,dc1",
             "meteor@9:dc0",
         ] {
             assert!(ChaosEvent::parse(s).is_err(), "{s:?} should not parse");

@@ -37,6 +37,7 @@ pub fn to_secs(t: SimTime) -> f64 {
 pub struct EventId(u64);
 
 type EventFn<S> = Box<dyn FnOnce(&mut Sim<S>)>;
+type StepHook<S> = Box<dyn FnMut(&mut S, SimTime)>;
 
 struct Entry<S> {
     time: SimTime,
@@ -70,7 +71,14 @@ pub struct Sim<S> {
     now: SimTime,
     seq: u64,
     queue: BinaryHeap<Entry<S>>,
+    /// Seqs scheduled and neither fired nor cancelled yet. Keeping the
+    /// live set explicit (instead of `queue.len() - cancelled.len()`)
+    /// makes cancel-after-fire a true no-op and [`Sim::pending`] exact.
+    live: HashSet<u64>,
     cancelled: HashSet<u64>,
+    /// Called after the clock advances to each event's time, before the
+    /// event closure runs (the trace bus rides on this).
+    hook: Option<StepHook<S>>,
     /// Total events executed (for perf accounting / runaway detection).
     pub events_processed: u64,
 }
@@ -82,9 +90,19 @@ impl<S> Sim<S> {
             now: 0,
             seq: 0,
             queue: BinaryHeap::new(),
+            live: HashSet::new(),
             cancelled: HashSet::new(),
+            hook: None,
             events_processed: 0,
         }
+    }
+
+    /// Install the per-step hook: it observes `(state, time)` right after
+    /// the clock advances to an event's timestamp and right before the
+    /// event closure runs, so anything the closure does can rely on the
+    /// hook having seen the current time.
+    pub fn set_step_hook(&mut self, hook: impl FnMut(&mut S, SimTime) + 'static) {
+        self.hook = Some(Box::new(hook));
     }
 
     /// Current virtual time (ms).
@@ -99,10 +117,9 @@ impl<S> Sim<S> {
         to_secs(self.now)
     }
 
-    /// Number of pending (non-cancelled) events, counting lazily-cancelled
-    /// entries still in the heap.
+    /// Number of pending (non-cancelled, not-yet-fired) events.
     pub fn pending(&self) -> usize {
-        self.queue.len() - self.cancelled.len()
+        self.live.len()
     }
 
     /// Schedule `f` at absolute virtual time `t` (clamped to now).
@@ -110,6 +127,7 @@ impl<S> Sim<S> {
         let t = t.max(self.now);
         let seq = self.seq;
         self.seq += 1;
+        self.live.insert(seq);
         self.queue.push(Entry { time: t, seq, f: Box::new(f) });
         EventId(seq)
     }
@@ -129,13 +147,16 @@ impl<S> Sim<S> {
         self.schedule_at(self.now, f)
     }
 
-    /// Cancel a scheduled event. Safe to call after the event has fired
-    /// (no-op). Returns whether the id was newly cancelled.
+    /// Cancel a scheduled event. A true no-op after the event has fired
+    /// (or was already cancelled). Returns whether the id was newly
+    /// cancelled — i.e. whether it was still live.
     pub fn cancel(&mut self, id: EventId) -> bool {
-        if id.0 >= self.seq {
-            return false;
+        if self.live.remove(&id.0) {
+            self.cancelled.insert(id.0);
+            true
+        } else {
+            false
         }
-        self.cancelled.insert(id.0)
     }
 
     fn pop_live(&mut self) -> Option<Entry<S>> {
@@ -143,6 +164,7 @@ impl<S> Sim<S> {
             if self.cancelled.remove(&e.seq) {
                 continue;
             }
+            self.live.remove(&e.seq);
             return Some(e);
         }
         None
@@ -155,6 +177,9 @@ impl<S> Sim<S> {
                 debug_assert!(e.time >= self.now, "time went backwards");
                 self.now = e.time;
                 self.events_processed += 1;
+                if let Some(hook) = self.hook.as_mut() {
+                    hook(&mut self.state, e.time);
+                }
                 (e.f)(self);
                 true
             }
@@ -322,6 +347,60 @@ mod tests {
             (sim.state, now)
         }
         assert_eq!(run_once(), run_once());
+    }
+
+    #[test]
+    fn cancel_after_fire_is_a_true_noop() {
+        // Regression: cancelling an already-fired event used to park its
+        // seq in `cancelled` forever, underflowing `pending()`.
+        let mut sim = Sim::new(0u64);
+        let id = sim.schedule_at(10, |s| s.state += 1);
+        assert_eq!(sim.pending(), 1);
+        sim.run_to_completion();
+        assert_eq!(sim.state, 1);
+        assert_eq!(sim.pending(), 0);
+        assert!(!sim.cancel(id), "cancelling a fired event must report false");
+        assert_eq!(sim.pending(), 0, "stale cancel must not corrupt pending()");
+        // The sim keeps working normally afterwards.
+        let id2 = sim.schedule_at(20, |s| s.state += 10);
+        assert_eq!(sim.pending(), 1);
+        sim.run_to_completion();
+        assert_eq!(sim.state, 11);
+        assert_eq!(sim.pending(), 0);
+        assert!(!sim.cancel(id2));
+    }
+
+    #[test]
+    fn pending_counts_only_live_events() {
+        let mut sim = Sim::new(());
+        let ids: Vec<EventId> = (0..10u64).map(|t| sim.schedule_at(t, |_| {})).collect();
+        assert_eq!(sim.pending(), 10);
+        for id in &ids[..5] {
+            assert!(sim.cancel(*id));
+        }
+        assert_eq!(sim.pending(), 5);
+        sim.run_to_completion();
+        assert_eq!(sim.pending(), 0);
+        for id in ids {
+            assert!(!sim.cancel(id), "nothing is live after the run");
+        }
+        assert_eq!(sim.pending(), 0);
+    }
+
+    #[test]
+    fn step_hook_runs_before_each_event() {
+        // The hook must see each event's time before its closure runs, so
+        // closures can rely on hook-maintained state (the trace clock).
+        let mut sim = Sim::new((0 as SimTime, Vec::<bool>::new()));
+        sim.set_step_hook(|s, now| s.0 = now);
+        for t in [3u64, 7, 7, 12] {
+            sim.schedule_at(t, move |sim| {
+                let seen = sim.state.0 == t;
+                sim.state.1.push(seen);
+            });
+        }
+        sim.run_to_completion();
+        assert_eq!(sim.state.1, vec![true; 4]);
     }
 
     #[test]

@@ -1,0 +1,590 @@
+//! Typed trace bus: a flight recorder for everything the testbed does.
+//!
+//! HOUTU's evaluation and its reliability claims all reduce to *what
+//! happened when* — task launches, steals, elections, recoveries, WAN
+//! transfers. Instead of scattering per-figure bookkeeping pushes across
+//! the deployment layer, every emission site publishes one typed
+//! [`TraceEvent`] through the [`Tracer`] handle stored on the world;
+//! downstream consumers (the figure [`crate::metrics::Metrics`], the
+//! replay digest, streaming invariant checkers, ring-buffer forensics)
+//! are all [`TraceSink`]s folding the same stream.
+//!
+//! # Event taxonomy
+//!
+//! * **Job/task lifecycle** — `JobSubmitted`, `StageReleased`,
+//!   `TaskLaunched`, `TaskFinished`, `TaskRequeued`,
+//!   `SpeculativeRelaunch`, `JobCompleted`, `JobRestarted`.
+//! * **Containers & masters** — `ContainerCount` (the Fig-11 quantity),
+//!   `ContainersGranted` (period-boundary water-filling),
+//!   `ContainersReturned` (Af surplus release).
+//! * **JM replicas** — `JmSpawned`, `JmFailed`, `JmRecovered`,
+//!   `ElectionWon` (§3.2.2 failure handling).
+//! * **Work stealing** — `StealRequested` (thief turns), `StealGranted`
+//!   (victim leaks tasks), `StealCompleted` (round trip done; Fig 12b).
+//! * **Replication & WAN** — `InfoReplicated` (Fig 12a sizes),
+//!   `WanMessage` / `WanTransfer` (control vs bulk traffic).
+//! * **Cloud & chaos** — `SpotRevoked`, `NodeKilled`, `NodeRestarted`,
+//!   `RunBilled`, `ChaosInjected` (scenario-engine injections).
+//!
+//! # Ordering guarantees
+//!
+//! Every published event carries a `(SimTime, seq)` stamp. `seq` is a
+//! per-run monotone counter, so stamps are strictly increasing in
+//! publication order; `time` is the virtual time of the simulation event
+//! being executed (the sim's step hook advances the tracer clock *before*
+//! each event closure runs) and is therefore non-decreasing. Same
+//! (config, seed) ⇒ byte-identical stream, which is what makes the
+//! trace-folded digest a replay check that sees *order*, not just end
+//! state.
+//!
+//! # Sink contract
+//!
+//! A [`TraceSink`] observes each stamped event exactly once, in
+//! publication order, synchronously with the emission. Sinks must be
+//! cheap (they run on the hot path of every emission), must not publish
+//! events themselves (the bus is borrowed during dispatch; re-entrant
+//! publication panics), and must not assume they see the whole run —
+//! they may be attached mid-flight. The built-in digest fold and step
+//! counter live on the bus itself and cannot be detached.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, VecDeque};
+use std::rc::Rc;
+
+use crate::dag::{SizeClass, WorkloadKind};
+use crate::ids::{DcId, JmId, JobId, NodeId, StageId, TaskId};
+use crate::sim::SimTime;
+
+/// One thing that happened in the simulated testbed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// A job entered the system (release time, §4.1).
+    JobSubmitted { job: JobId, kind: WorkloadKind, size: SizeClass, tasks: usize },
+    /// All stages complete; JMs release their resources (§3.2.1).
+    JobCompleted { job: JobId },
+    /// Centralized baseline resubmission — all progress lost (§6.4).
+    JobRestarted { job: JobId },
+    /// The pJM released a stage whose parents completed.
+    StageReleased { job: JobId, stage: StageId, tasks: usize },
+    /// A task attempt started on a container in `dc`. `locality` is the
+    /// Parades placement decision (`node-local`/`rack-local`/`any`, or
+    /// `stolen` for cross-DC work stealing).
+    TaskLaunched { job: JobId, task: TaskId, dc: DcId, locality: &'static str, remote_input: bool },
+    /// A task attempt completed (post attempt/generation validation).
+    TaskFinished { job: JobId, task: TaskId, dc: DcId },
+    /// A running task lost its container and went back to Waiting.
+    TaskRequeued { job: JobId, task: TaskId, dc: DcId },
+    /// Straggler mitigation aborted and re-queued a running task (§7).
+    SpeculativeRelaunch { job: JobId, task: TaskId, dc: DcId },
+    /// Containers belonging to a job changed (the Fig-11 timeline).
+    ContainerCount { job: JobId, count: usize },
+    /// Period-boundary grants from a master to a sub-job.
+    ContainersGranted { jm: JmId, count: usize },
+    /// Af surplus: a sub-job proactively returned idle containers.
+    ContainersReturned { jm: JmId, count: usize },
+    /// A JM replica came up (step 2/2b).
+    JmSpawned { job: JobId, dc: DcId, primary: bool },
+    /// A JM replica's container died (detection happens later).
+    JmFailed { job: JobId, dc: DcId },
+    /// A replacement JM is operational; `interval_secs` is the Fig-11
+    /// failure interval (VM kill → successor operating).
+    JmRecovered { job: JobId, dc: DcId, interval_secs: f64 },
+    /// A new primary won the Zookeeper election (§3.2.2).
+    ElectionWon { job: JobId, new_primary: DcId, delay_secs: f64 },
+    /// An idle JM turned thief and offered a container (Algorithm 2).
+    StealRequested { job: JobId, thief: DcId, victim: DcId },
+    /// The victim leaked long-waiting tasks to the thief.
+    StealGranted { job: JobId, victim: DcId, thief: DcId, tasks: usize },
+    /// The steal round trip finished at the thief (Fig 12b delay).
+    StealCompleted { job: JobId, thief: DcId, victim: DcId, tasks: usize, delay_ms: f64 },
+    /// Intermediate info re-encoded and pushed through zk (Fig 12a).
+    InfoReplicated { job: JobId, kind: WorkloadKind, bytes: usize },
+    /// A small control message crossed the fabric.
+    WanMessage { from: DcId, to: DcId, bytes: u64 },
+    /// A bulk data transfer began on a (src, dst) pair.
+    WanTransfer { from: DcId, to: DcId, bytes: u64 },
+    /// The market out-priced an instance's bid (§2.3 revocation).
+    SpotRevoked { node: NodeId, price: f64, bid: f64 },
+    /// A worker VM died (revocation or injected termination).
+    NodeKilled { node: NodeId, containers: usize, tasks: usize },
+    /// A replacement instance came back with fresh containers.
+    NodeRestarted { node: NodeId },
+    /// End-of-run billing (§6.3 model).
+    RunBilled { machine_usd: f64, transfer_usd: f64 },
+    /// The scenario engine injected a chaos event (its DSL rendering).
+    ChaosInjected { label: String },
+}
+
+impl TraceEvent {
+    /// Compact kebab-case tag, for counting sinks and reports.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::JobSubmitted { .. } => "job-submitted",
+            TraceEvent::JobCompleted { .. } => "job-completed",
+            TraceEvent::JobRestarted { .. } => "job-restarted",
+            TraceEvent::StageReleased { .. } => "stage-released",
+            TraceEvent::TaskLaunched { .. } => "task-launched",
+            TraceEvent::TaskFinished { .. } => "task-finished",
+            TraceEvent::TaskRequeued { .. } => "task-requeued",
+            TraceEvent::SpeculativeRelaunch { .. } => "speculative-relaunch",
+            TraceEvent::ContainerCount { .. } => "container-count",
+            TraceEvent::ContainersGranted { .. } => "containers-granted",
+            TraceEvent::ContainersReturned { .. } => "containers-returned",
+            TraceEvent::JmSpawned { .. } => "jm-spawned",
+            TraceEvent::JmFailed { .. } => "jm-failed",
+            TraceEvent::JmRecovered { .. } => "jm-recovered",
+            TraceEvent::ElectionWon { .. } => "election-won",
+            TraceEvent::StealRequested { .. } => "steal-requested",
+            TraceEvent::StealGranted { .. } => "steal-granted",
+            TraceEvent::StealCompleted { .. } => "steal-completed",
+            TraceEvent::InfoReplicated { .. } => "info-replicated",
+            TraceEvent::WanMessage { .. } => "wan-message",
+            TraceEvent::WanTransfer { .. } => "wan-transfer",
+            TraceEvent::SpotRevoked { .. } => "spot-revoked",
+            TraceEvent::NodeKilled { .. } => "node-killed",
+            TraceEvent::NodeRestarted { .. } => "node-restarted",
+            TraceEvent::RunBilled { .. } => "run-billed",
+            TraceEvent::ChaosInjected { .. } => "chaos-injected",
+        }
+    }
+
+    /// Fold the full payload into an FNV accumulator (order-sensitive
+    /// replay digests are built from this).
+    pub fn fold(&self, h: &mut Fnv64) {
+        h.bytes(self.kind().as_bytes());
+        match self {
+            TraceEvent::JobSubmitted { job, kind, size, tasks } => {
+                h.u64(job.0);
+                h.bytes(kind.name().as_bytes());
+                h.bytes(size.name().as_bytes());
+                h.u64(*tasks as u64);
+            }
+            TraceEvent::JobCompleted { job }
+            | TraceEvent::JobRestarted { job } => h.u64(job.0),
+            TraceEvent::StageReleased { job, stage, tasks } => {
+                h.u64(job.0);
+                h.u64(stage.0 as u64);
+                h.u64(*tasks as u64);
+            }
+            TraceEvent::TaskLaunched { job, task, dc, locality, remote_input } => {
+                h.u64(job.0);
+                fold_task(h, task);
+                h.u64(dc.0 as u64);
+                h.bytes(locality.as_bytes());
+                h.u64(*remote_input as u64);
+            }
+            TraceEvent::TaskFinished { job, task, dc }
+            | TraceEvent::TaskRequeued { job, task, dc }
+            | TraceEvent::SpeculativeRelaunch { job, task, dc } => {
+                h.u64(job.0);
+                fold_task(h, task);
+                h.u64(dc.0 as u64);
+            }
+            TraceEvent::ContainerCount { job, count } => {
+                h.u64(job.0);
+                h.u64(*count as u64);
+            }
+            TraceEvent::ContainersGranted { jm, count }
+            | TraceEvent::ContainersReturned { jm, count } => {
+                h.u64(jm.job.0);
+                h.u64(jm.dc.0 as u64);
+                h.u64(*count as u64);
+            }
+            TraceEvent::JmSpawned { job, dc, primary } => {
+                h.u64(job.0);
+                h.u64(dc.0 as u64);
+                h.u64(*primary as u64);
+            }
+            TraceEvent::JmFailed { job, dc } => {
+                h.u64(job.0);
+                h.u64(dc.0 as u64);
+            }
+            TraceEvent::JmRecovered { job, dc, interval_secs } => {
+                h.u64(job.0);
+                h.u64(dc.0 as u64);
+                h.u64(interval_secs.to_bits());
+            }
+            TraceEvent::ElectionWon { job, new_primary, delay_secs } => {
+                h.u64(job.0);
+                h.u64(new_primary.0 as u64);
+                h.u64(delay_secs.to_bits());
+            }
+            TraceEvent::StealRequested { job, thief, victim } => {
+                h.u64(job.0);
+                h.u64(thief.0 as u64);
+                h.u64(victim.0 as u64);
+            }
+            TraceEvent::StealGranted { job, victim, thief, tasks } => {
+                h.u64(job.0);
+                h.u64(victim.0 as u64);
+                h.u64(thief.0 as u64);
+                h.u64(*tasks as u64);
+            }
+            TraceEvent::StealCompleted { job, thief, victim, tasks, delay_ms } => {
+                h.u64(job.0);
+                h.u64(thief.0 as u64);
+                h.u64(victim.0 as u64);
+                h.u64(*tasks as u64);
+                h.u64(delay_ms.to_bits());
+            }
+            TraceEvent::InfoReplicated { job, kind, bytes } => {
+                h.u64(job.0);
+                h.bytes(kind.name().as_bytes());
+                h.u64(*bytes as u64);
+            }
+            TraceEvent::WanMessage { from, to, bytes }
+            | TraceEvent::WanTransfer { from, to, bytes } => {
+                h.u64(from.0 as u64);
+                h.u64(to.0 as u64);
+                h.u64(*bytes);
+            }
+            TraceEvent::SpotRevoked { node, price, bid } => {
+                fold_node(h, node);
+                h.u64(price.to_bits());
+                h.u64(bid.to_bits());
+            }
+            TraceEvent::NodeKilled { node, containers, tasks } => {
+                fold_node(h, node);
+                h.u64(*containers as u64);
+                h.u64(*tasks as u64);
+            }
+            TraceEvent::NodeRestarted { node } => fold_node(h, node),
+            TraceEvent::RunBilled { machine_usd, transfer_usd } => {
+                h.u64(machine_usd.to_bits());
+                h.u64(transfer_usd.to_bits());
+            }
+            TraceEvent::ChaosInjected { label } => h.bytes(label.as_bytes()),
+        }
+    }
+}
+
+fn fold_task(h: &mut Fnv64, t: &TaskId) {
+    h.u64(t.job.0);
+    h.u64(t.stage.0 as u64);
+    h.u64(t.index as u64);
+}
+
+fn fold_node(h: &mut Fnv64, n: &NodeId) {
+    h.u64(n.dc.0 as u64);
+    h.u64(n.idx as u64);
+}
+
+/// A published event with its `(SimTime, seq)` stamp.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stamped {
+    /// Virtual time (ms) of the simulation event that emitted this.
+    pub time: SimTime,
+    /// Per-run monotone publication counter.
+    pub seq: u64,
+    pub event: TraceEvent,
+}
+
+impl Stamped {
+    /// Stamp + payload fold (what the bus digest accumulates per event).
+    pub fn fold(&self, h: &mut Fnv64) {
+        h.u64(self.time);
+        h.u64(self.seq);
+        self.event.fold(h);
+    }
+}
+
+/// A consumer of the stream. See the module docs for the contract.
+pub trait TraceSink {
+    fn on_event(&mut self, ev: &Stamped);
+}
+
+/// FNV-1a accumulator shared by the trace digest and campaign digests.
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv64(pub u64);
+
+impl Default for Fnv64 {
+    fn default() -> Fnv64 {
+        Fnv64::new()
+    }
+}
+
+impl Fnv64 {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    pub fn new() -> Fnv64 {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn u64(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    pub fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+}
+
+/// Bounded history of the most recent events (flight-recorder memory).
+#[derive(Debug)]
+pub struct RingBuffer {
+    cap: usize,
+    buf: VecDeque<Stamped>,
+    /// Total events ever pushed (≥ `len()` once the ring wraps).
+    pub pushed: u64,
+}
+
+impl RingBuffer {
+    pub fn new(cap: usize) -> RingBuffer {
+        RingBuffer { cap: cap.max(1), buf: VecDeque::new(), pushed: 0 }
+    }
+
+    /// A shareable ring: attach `RingSink(handle.clone())` to a tracer and
+    /// read the captured events from `handle` after the run.
+    pub fn shared(cap: usize) -> Rc<RefCell<RingBuffer>> {
+        Rc::new(RefCell::new(RingBuffer::new(cap)))
+    }
+
+    pub fn push(&mut self, ev: Stamped) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(ev);
+        self.pushed += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Oldest-to-newest iteration over the retained window.
+    pub fn iter(&self) -> impl Iterator<Item = &Stamped> {
+        self.buf.iter()
+    }
+}
+
+/// [`TraceSink`] adapter writing into a shared [`RingBuffer`].
+pub struct RingSink(pub Rc<RefCell<RingBuffer>>);
+
+impl TraceSink for RingSink {
+    fn on_event(&mut self, ev: &Stamped) {
+        self.0.borrow_mut().push(ev.clone());
+    }
+}
+
+/// [`TraceSink`] counting events per kind (cheap campaign telemetry).
+#[derive(Default)]
+pub struct CountingSink(pub Rc<RefCell<BTreeMap<&'static str, u64>>>);
+
+impl CountingSink {
+    pub fn shared() -> (CountingSink, Rc<RefCell<BTreeMap<&'static str, u64>>>) {
+        let counts: Rc<RefCell<BTreeMap<&'static str, u64>>> = Rc::default();
+        (CountingSink(counts.clone()), counts)
+    }
+}
+
+impl TraceSink for CountingSink {
+    fn on_event(&mut self, ev: &Stamped) {
+        *self.0.borrow_mut().entry(ev.event.kind()).or_insert(0) += 1;
+    }
+}
+
+struct Core {
+    now: SimTime,
+    next_seq: u64,
+    steps: u64,
+    digest: Fnv64,
+    sinks: Vec<Box<dyn TraceSink>>,
+}
+
+/// The bus handle. Cheap to clone; every clone publishes into the same
+/// per-run stream (the world holds one, the WAN fabric holds another).
+#[derive(Clone)]
+pub struct Tracer {
+    core: Rc<RefCell<Core>>,
+}
+
+impl Default for Tracer {
+    fn default() -> Tracer {
+        Tracer::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Tracer {
+        Tracer {
+            core: Rc::new(RefCell::new(Core {
+                now: 0,
+                next_seq: 0,
+                steps: 0,
+                digest: Fnv64::new(),
+                sinks: Vec::new(),
+            })),
+        }
+    }
+
+    /// The sim step hook: advance the clock to the executing event's time
+    /// and count the step. Called *before* the event closure runs, so
+    /// everything the closure publishes is stamped with its time.
+    pub fn on_step(&self, now: SimTime) {
+        let mut c = self.core.borrow_mut();
+        c.now = now;
+        c.steps += 1;
+    }
+
+    /// Current stamp clock (virtual ms).
+    pub fn now(&self) -> SimTime {
+        self.core.borrow().now
+    }
+
+    /// Publish one event: stamp it, fold it into the run digest, hand it
+    /// to every attached sink, and return the stamped copy so the caller
+    /// can feed owned consumers (the world feeds [`crate::metrics::Metrics`]).
+    pub fn publish(&self, event: TraceEvent) -> Stamped {
+        let mut c = self.core.borrow_mut();
+        let stamped = Stamped { time: c.now, seq: c.next_seq, event };
+        c.next_seq += 1;
+        stamped.fold(&mut c.digest);
+        for sink in c.sinks.iter_mut() {
+            sink.on_event(&stamped);
+        }
+        stamped
+    }
+
+    /// Attach a sink; it observes every event published from now on.
+    pub fn attach(&self, sink: Box<dyn TraceSink>) {
+        self.core.borrow_mut().sinks.push(sink);
+    }
+
+    /// Order-sensitive digest of everything published so far, with the
+    /// event and step counts mixed in — same (config, seed) ⇒ same value.
+    pub fn digest(&self) -> u64 {
+        let c = self.core.borrow();
+        let mut h = c.digest;
+        h.u64(c.next_seq);
+        h.u64(c.steps);
+        h.0
+    }
+
+    /// Events published so far.
+    pub fn events_published(&self) -> u64 {
+        self.core.borrow().next_seq
+    }
+
+    /// Sim events executed so far (fed by the step hook).
+    pub fn steps(&self) -> u64 {
+        self.core.borrow().steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(job: u64) -> TraceEvent {
+        TraceEvent::JobCompleted { job: JobId(job) }
+    }
+
+    #[test]
+    fn stamps_are_strictly_increasing() {
+        let t = Tracer::new();
+        t.on_step(5);
+        let a = t.publish(ev(1));
+        let b = t.publish(ev(2));
+        t.on_step(9);
+        let c = t.publish(ev(3));
+        assert_eq!((a.time, a.seq), (5, 0));
+        assert_eq!((b.time, b.seq), (5, 1));
+        assert_eq!((c.time, c.seq), (9, 2));
+        assert_eq!(t.events_published(), 3);
+        assert_eq!(t.steps(), 2);
+    }
+
+    #[test]
+    fn digest_is_order_sensitive() {
+        let mk = |first: u64, second: u64| {
+            let t = Tracer::new();
+            t.on_step(1);
+            t.publish(ev(first));
+            t.publish(ev(second));
+            t.digest()
+        };
+        assert_eq!(mk(1, 2), mk(1, 2), "same stream replays identically");
+        assert_ne!(mk(1, 2), mk(2, 1), "order must change the digest");
+    }
+
+    #[test]
+    fn digest_covers_time_and_payload() {
+        let base = {
+            let t = Tracer::new();
+            t.on_step(10);
+            t.publish(ev(1));
+            t.digest()
+        };
+        let late = {
+            let t = Tracer::new();
+            t.on_step(11);
+            t.publish(ev(1));
+            t.digest()
+        };
+        let other = {
+            let t = Tracer::new();
+            t.on_step(10);
+            t.publish(TraceEvent::JobRestarted { job: JobId(1) });
+            t.digest()
+        };
+        assert_ne!(base, late, "stamp time folds in");
+        assert_ne!(base, other, "variant tag folds in");
+    }
+
+    #[test]
+    fn ring_buffer_keeps_the_tail() {
+        let ring = RingBuffer::shared(3);
+        let t = Tracer::new();
+        t.attach(Box::new(RingSink(ring.clone())));
+        t.on_step(1);
+        for j in 0..5 {
+            t.publish(ev(j));
+        }
+        let r = ring.borrow();
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.pushed, 5);
+        let jobs: Vec<u64> = r
+            .iter()
+            .map(|s| match s.event {
+                TraceEvent::JobCompleted { job } => job.0,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(jobs, vec![2, 3, 4], "oldest evicted first");
+    }
+
+    #[test]
+    fn counting_sink_tallies_kinds() {
+        let (sink, counts) = CountingSink::shared();
+        let t = Tracer::new();
+        t.attach(Box::new(sink));
+        t.publish(ev(0));
+        t.publish(ev(1));
+        t.publish(TraceEvent::JobRestarted { job: JobId(0) });
+        let c = counts.borrow();
+        assert_eq!(c.get("job-completed"), Some(&2));
+        assert_eq!(c.get("job-restarted"), Some(&1));
+    }
+
+    #[test]
+    fn clones_share_one_stream() {
+        let t = Tracer::new();
+        let t2 = t.clone();
+        t.on_step(3);
+        let a = t.publish(ev(1));
+        let b = t2.publish(ev(2));
+        assert_eq!(a.seq, 0);
+        assert_eq!(b.seq, 1);
+        assert_eq!(t.digest(), t2.digest());
+    }
+}

@@ -2,6 +2,7 @@
 //! byte/time formatting helpers.
 
 pub mod error;
+pub mod json;
 pub mod rng;
 pub mod stats;
 

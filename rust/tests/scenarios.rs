@@ -48,6 +48,33 @@ fn cli_parses_campaign_flags() {
     assert!(!cli.smoke);
     let args: Vec<String> = ["campaign", "--smoke"].iter().map(|s| s.to_string()).collect();
     assert!(houtu::cli::parse(&args).smoke);
+    let args: Vec<String> = ["campaign", "--smoke", "--report", "/tmp/r.json"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    assert_eq!(houtu::cli::parse(&args).report.as_deref(), Some("/tmp/r.json"));
+}
+
+/// End-to-end report export: run the smoke campaign, write JSON and CSV,
+/// and verify both round-trip (the same path `houtu campaign --report`
+/// and ci.sh exercise).
+#[test]
+fn campaign_report_exports_and_round_trips() {
+    let report = run_campaign(&Config::default(), &smoke_campaign());
+    let dir = std::env::temp_dir();
+    let json_path = dir.join("houtu_test_report.json");
+    let csv_path = dir.join("houtu_test_report.csv");
+    let json_path = json_path.to_str().unwrap();
+    let csv_path = csv_path.to_str().unwrap();
+    assert_eq!(houtu::scenario::write_and_verify(&report, json_path).unwrap(), "json");
+    assert_eq!(houtu::scenario::write_and_verify(&report, csv_path).unwrap(), "csv");
+    // The JSON really parses with the in-repo parser and carries the runs.
+    let text = std::fs::read_to_string(json_path).unwrap();
+    let doc = houtu::util::json::parse(&text).unwrap();
+    let runs = doc.get("runs").and_then(houtu::util::json::Json::as_array).unwrap();
+    assert_eq!(runs.len(), report.runs.len());
+    let _ = std::fs::remove_file(json_path);
+    let _ = std::fs::remove_file(csv_path);
 }
 
 /// Parity with the hand-coded Fig-9 injection experiment: the engine
@@ -233,7 +260,7 @@ fn standard_campaign_risky_cells_run_clean() {
         std_campaign.scenarios.iter().find(|s| s.name == n).unwrap().clone()
     };
     for seed in [7u64, 1234] {
-        for name in ["pjm-kill", "spot-chaos"] {
+        for name in ["pjm-kill", "spot-chaos", "jm-kill-cascade", "asym-wan-partition"] {
             let rep = run_one(&base, &by_name(name), seed);
             assert!(rep.passed(), "{name}/seed{seed}: {:?}", rep.violations);
             assert_eq!(rep.completed_jobs, rep.total_jobs, "{name}/seed{seed}");

@@ -1,0 +1,210 @@
+//! Trace-bus integration tests.
+//!
+//! * **Metrics-via-trace parity** — `Metrics` is a pure fold over the
+//!   event stream: folding a ring-buffer capture into a fresh `Metrics`
+//!   must reproduce the live one exactly, which pins the figure outputs
+//!   (Fig 8/9/11/12 all read `Metrics`) to the pre-refactor behaviour.
+//! * **Digest determinism** — the trace-folded replay digest is
+//!   identical across campaign worker counts (1 vs N threads) and across
+//!   repeated runs of random (scenario, seed) cells.
+
+use houtu::config::{Config, Deployment};
+use houtu::dag::{SizeClass, WorkloadKind};
+use houtu::deploy::{build_sim, submit_job, World};
+use houtu::ids::{DcId, JobId};
+use houtu::metrics::Metrics;
+use houtu::scenario::{
+    presets, run_campaign, run_one, run_scenario, smoke_campaign, ScenarioSpec, ScenarioWorkload,
+};
+use houtu::sim::secs;
+use houtu::trace::{CountingSink, RingBuffer, RingSink, TraceSink};
+use houtu::util::Pcg;
+
+/// Run one job with a full-stream ring capture attached; return the
+/// finished world and the capture.
+fn captured_single_job(
+    kind: WorkloadKind,
+    size: SizeClass,
+    home: DcId,
+) -> (World, std::rc::Rc<std::cell::RefCell<RingBuffer>>) {
+    let cfg = Config::default();
+    let horizon = secs(14_400);
+    let mut sim = build_sim(cfg, Deployment::Houtu, horizon);
+    let ring = RingBuffer::shared(4_000_000);
+    sim.state.tracer.attach(Box::new(RingSink(ring.clone())));
+    sim.schedule_at(1, move |sim| {
+        submit_job(sim, kind, size, home);
+    });
+    sim.run_until(horizon);
+    (sim.state, ring)
+}
+
+#[test]
+fn metrics_are_exactly_the_trace_fold() {
+    let (world, ring) = captured_single_job(WorkloadKind::WordCount, SizeClass::Medium, DcId(0));
+    assert_eq!(world.metrics.completed_jobs(), 1);
+    let ring = ring.borrow();
+    assert_eq!(ring.pushed as usize, ring.len(), "capture must not have wrapped");
+    let mut folded = Metrics::default();
+    for ev in ring.iter() {
+        folded.on_event(ev);
+    }
+    assert_eq!(folded, world.metrics, "Metrics must be a pure fold of the event stream");
+}
+
+/// The figure-level quantities a clean run must reproduce (no failures
+/// injected, default config has revocations and stragglers off): the
+/// Fig-9 launch timeline is cumulative 1..=N with N = the job's task
+/// count, and the Fig-11 container timeline rises from the JM spawn and
+/// returns to zero at completion. These pin the trace-fed `Metrics` to
+/// the semantics the direct pushes had.
+#[test]
+fn clean_run_figure_outputs_hold() {
+    let (world, _) = captured_single_job(WorkloadKind::PageRank, SizeClass::Small, DcId(1));
+    let rec = &world.metrics.jobs[&JobId(0)];
+    assert!(rec.jrt().unwrap() > 0.0);
+
+    let launches = &world.metrics.task_launches[&JobId(0)];
+    assert_eq!(launches.len(), rec.tasks_total, "every task launched exactly once");
+    for (i, &(t, c)) in launches.iter().enumerate() {
+        assert_eq!(c, (i + 1) as f64, "cumulative count");
+        assert!(t >= rec.submitted_secs);
+    }
+
+    let containers = &world.metrics.containers[&JobId(0)];
+    assert!(containers.first().unwrap().1 > 0.0, "JM spawn registers containers");
+    assert_eq!(containers.last().unwrap().1, 0.0, "all containers released at the end");
+
+    let infos = &world.metrics.info_sizes[&rec.kind];
+    assert!(!infos.is_empty(), "replication sampled info sizes");
+}
+
+#[test]
+fn trace_counts_match_world_ground_truth() {
+    let cfg = Config::default();
+    let spec = presets::fig11_kill(DcId(0), Deployment::Houtu);
+    let horizon = secs(14_400);
+    // Rebuild the preset by hand so we can attach a counting sink before
+    // the run starts.
+    let run_cfg = spec.build_config(&cfg, cfg.seed).unwrap();
+    let mut sim = build_sim(run_cfg, Deployment::Houtu, horizon);
+    let (sink, counts) = CountingSink::shared();
+    sim.state.tracer.attach(Box::new(sink));
+    sim.schedule_at(1, |sim| {
+        submit_job(sim, WorkloadKind::WordCount, SizeClass::Large, DcId(0));
+    });
+    sim.schedule_at(secs(70), |sim| {
+        houtu::deploy::kill_jm_host(sim, JobId(0), DcId(0));
+    });
+    sim.run_until(horizon);
+    let w = &sim.state;
+    assert_eq!(w.metrics.completed_jobs(), 1);
+    let counts = counts.borrow();
+    let get = |k: &str| counts.get(k).copied().unwrap_or(0);
+    assert_eq!(get("job-submitted"), 1);
+    assert_eq!(get("job-completed"), 1);
+    assert_eq!(get("task-finished") as usize, w.metrics.jobs[&JobId(0)].tasks_total);
+    assert!(get("task-launched") >= get("task-finished"));
+    assert_eq!(get("election-won") as usize, w.metrics.election_delays_secs.len());
+    assert_eq!(get("jm-recovered") as usize, w.metrics.recovery_intervals_secs.len());
+    assert_eq!(get("steal-completed") as usize, w.metrics.steal_delays_ms.len());
+    assert!(get("node-killed") >= 1, "the kill must be on the record");
+    assert!(get("wan-transfer") >= 1);
+    assert!(get("info-replicated") >= 1);
+}
+
+#[test]
+fn campaign_digest_is_worker_count_invariant() {
+    let base = Config::default();
+    let mut spec = smoke_campaign();
+    spec.parallelism = 1;
+    let serial = run_campaign(&base, &spec);
+    spec.parallelism = 4;
+    let parallel = run_campaign(&base, &spec);
+    assert!(serial.all_pass(), "{}", serial.render());
+    assert!(parallel.all_pass(), "{}", parallel.render());
+    assert_eq!(
+        serial.campaign_digest, parallel.campaign_digest,
+        "digest must not depend on worker count"
+    );
+    for (a, b) in serial.runs.iter().zip(&parallel.runs) {
+        assert_eq!(a.digest, b.digest, "{}/seed{}", a.scenario, a.seed);
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.avg_jrt_secs.to_bits(), b.avg_jrt_secs.to_bits());
+    }
+}
+
+/// Property: random (scenario, seed) cells replay to identical digests.
+#[test]
+fn random_cells_replay_identically() {
+    let base = Config::default();
+    let mut rng = Pcg::seeded(0xC0FFEE);
+    let kinds = WorkloadKind::ALL;
+    for i in 0..3u32 {
+        let kind = kinds[rng.below(kinds.len() as u64) as usize];
+        let home = DcId(rng.below(4) as usize);
+        let seed = rng.below(10_000);
+        let spec = ScenarioSpec {
+            name: format!("rand-{i}"),
+            deployment: Deployment::Houtu,
+            regions: 0,
+            workload: ScenarioWorkload::SingleJob { kind, size: SizeClass::Small, home },
+            events: vec![],
+            overrides: vec![],
+        };
+        let a = run_one(&base, &spec, seed);
+        let b = run_one(&base, &spec, seed);
+        assert!(a.passed(), "{kind:?}@{home}/seed{seed}: {:?}", a.violations);
+        assert_eq!(a.digest, b.digest, "{kind:?}@{home}/seed{seed} must replay identically");
+        assert_eq!(a.events_processed, b.events_processed);
+    }
+}
+
+/// The digest now sees *order*: it differs across seeds even when the
+/// end states are structurally similar (same scenario, same jobs).
+#[test]
+fn digest_differs_across_seeds() {
+    let base = Config::default();
+    let spec = ScenarioSpec {
+        name: "order".into(),
+        deployment: Deployment::Houtu,
+        regions: 0,
+        workload: ScenarioWorkload::SingleJob {
+            kind: WorkloadKind::WordCount,
+            size: SizeClass::Small,
+            home: DcId(0),
+        },
+        events: vec![],
+        overrides: vec![],
+    };
+    let a = run_one(&base, &spec, 1);
+    let b = run_one(&base, &spec, 2);
+    assert!(a.passed() && b.passed());
+    assert_ne!(a.digest, b.digest);
+}
+
+/// The new chaos families run clean end to end through the engine.
+#[test]
+fn new_chaos_families_run_clean() {
+    let base = Config::default();
+    let std_campaign = houtu::scenario::standard_campaign();
+    for name in ["asym-wan-partition", "jm-kill-cascade"] {
+        let spec = std_campaign.scenarios.iter().find(|s| s.name == name).unwrap();
+        let run = run_scenario(&base, spec, 42).unwrap();
+        let violations = houtu::scenario::check_world(&run.world);
+        assert!(violations.is_empty(), "{name}: {violations:?}");
+        assert_eq!(run.world.metrics.completed_jobs(), 1, "{name}");
+        if name == "jm-kill-cascade" {
+            assert!(
+                !run.world.metrics.election_delays_secs.is_empty(),
+                "cascade must force at least one election"
+            );
+        }
+        if name == "asym-wan-partition" {
+            assert!(
+                (run.world.wan.pair_degrade_factor(DcId(0), DcId(2)) - 1.0).abs() < 1e-12,
+                "pair degradation must be restored"
+            );
+        }
+    }
+}
