@@ -10,6 +10,9 @@
 //!   trace --deployment D                         run the online trace
 //!   campaign [--spec FILE | --smoke]             run a scenario-matrix campaign
 //!            [--report out.json|out.csv]         ... and export the report
+//!   fuzz [--cases N] [--seed S]                  chaos-fuzz random scenarios
+//!        [--soak MINUTES] [--repro out.toml]     ... soak / write minimal repro
+//!        [--report out.json]                     ... and export the fuzz report
 //!   all                                          every figure in sequence
 //! ```
 
@@ -21,9 +24,10 @@ use crate::ids::DcId;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: houtu <fig2|fig3|fig7|fig8|fig9|fig10|fig11|fig12|theorem1|run|trace|campaign|export|all> \
+        "usage: houtu <fig2|fig3|fig7|fig8|fig9|fig10|fig11|fig12|theorem1|run|trace|campaign|fuzz|export|all> \
          [--config FILE] [--set section.key=value]... [--deployment D] [--workload W] [--size S] \
-         [--spec FILE] [--smoke] [--report out.json|out.csv]"
+         [--spec FILE] [--smoke] [--report out.json|out.csv] \
+         [--cases N] [--seed S] [--soak MINUTES] [--repro out.toml]"
     );
     std::process::exit(2);
 }
@@ -41,6 +45,16 @@ pub struct Cli {
     pub smoke: bool,
     /// Campaign report export path (`campaign --report out.json|out.csv`).
     pub report: Option<String>,
+    /// Fuzz cases per batch (`fuzz --cases N`).
+    pub cases: usize,
+    /// Fuzz seed (`fuzz --seed S`); independent of the config seed, which
+    /// the sampled cells override per run.
+    pub fuzz_seed: u64,
+    /// Soak budget in minutes (`fuzz --soak MINUTES`).
+    pub soak_minutes: Option<f64>,
+    /// Where to write the first failure's minimal repro TOML
+    /// (`fuzz --repro out.toml`).
+    pub repro: Option<String>,
 }
 
 pub fn parse(args: &[String]) -> Cli {
@@ -55,6 +69,10 @@ pub fn parse(args: &[String]) -> Cli {
     let mut spec = None;
     let mut smoke = false;
     let mut report = None;
+    let mut cases = 32usize;
+    let mut fuzz_seed = 1u64;
+    let mut soak_minutes = None;
+    let mut repro = None;
     let mut i = 1;
     while i < args.len() {
         match args[i].as_str() {
@@ -112,6 +130,32 @@ pub fn parse(args: &[String]) -> Cli {
                 i += 1;
                 report = Some(args.get(i).unwrap_or_else(|| usage()).clone());
             }
+            "--cases" => {
+                i += 1;
+                cases = args
+                    .get(i)
+                    .and_then(|s| s.parse::<usize>().ok())
+                    .filter(|&n| n > 0)
+                    .unwrap_or_else(|| usage());
+            }
+            "--seed" => {
+                i += 1;
+                fuzz_seed =
+                    args.get(i).and_then(|s| s.parse::<u64>().ok()).unwrap_or_else(|| usage());
+            }
+            "--soak" => {
+                i += 1;
+                soak_minutes = Some(
+                    args.get(i)
+                        .and_then(|s| s.parse::<f64>().ok())
+                        .filter(|m| m.is_finite() && *m > 0.0)
+                        .unwrap_or_else(|| usage()),
+                );
+            }
+            "--repro" => {
+                i += 1;
+                repro = Some(args.get(i).unwrap_or_else(|| usage()).clone());
+            }
             other => {
                 eprintln!("unknown flag {other:?}");
                 usage();
@@ -119,7 +163,20 @@ pub fn parse(args: &[String]) -> Cli {
         }
         i += 1;
     }
-    Cli { command, cfg, deployment, workload, size, spec, smoke, report }
+    Cli {
+        command,
+        cfg,
+        deployment,
+        workload,
+        size,
+        spec,
+        smoke,
+        report,
+        cases,
+        fuzz_seed,
+        soak_minutes,
+        repro,
+    }
 }
 
 /// Entry point used by `main.rs`.
@@ -227,6 +284,50 @@ pub fn run(cli: &Cli) {
             }
             if !report.all_pass() {
                 eprintln!("campaign FAILED: {} violations", report.total_violations());
+                std::process::exit(1);
+            }
+        }
+        "fuzz" => {
+            use crate::scenario::{fuzz, FuzzOpts, FuzzSpace};
+            let space = FuzzSpace::default();
+            let opts = FuzzOpts { cases: cli.cases, seed: cli.fuzz_seed, ..FuzzOpts::default() };
+            let report = match cli.soak_minutes {
+                Some(minutes) => fuzz::run_soak(cfg, &space, &opts, minutes),
+                None => fuzz::run_fuzz(cfg, &space, &opts),
+            };
+            print!("{}", report.render());
+            // Export before the pass/fail gate so failing fuzz runs
+            // still leave their report behind (mirrors `campaign`).
+            if let Some(path) = &cli.report {
+                match fuzz::write_report(&report, path) {
+                    Ok(()) => {
+                        println!("wrote {path} (json, {} cases, round-trip OK)", report.cases);
+                    }
+                    Err(e) => {
+                        eprintln!("fuzz report export failed: {e:#}");
+                        std::process::exit(1);
+                    }
+                }
+            }
+            if let Some(first) = report.failures.first() {
+                if let Some(path) = &cli.repro {
+                    match fuzz::write_repro(&first.shrunk, path) {
+                        Ok(()) => println!(
+                            "wrote {path} ({} chaos event(s), seed {}, round-trip OK)",
+                            first.shrunk.spec.events.len(),
+                            first.shrunk.seed
+                        ),
+                        Err(e) => {
+                            eprintln!("repro export failed: {e:#}");
+                            std::process::exit(1);
+                        }
+                    }
+                }
+                eprintln!(
+                    "fuzz FAILED: {} of {} cases violated invariants",
+                    report.failures.len(),
+                    report.cases
+                );
                 std::process::exit(1);
             }
         }

@@ -51,6 +51,9 @@ pub struct SpotMarket {
     mean: f64,
     phi: f64,
     sigma: f64,
+    /// Scheduled volatility multiplier (the `spot_storm@` chaos family):
+    /// 1 = calm; a storm window scales the log-price innovation stddev.
+    storm: f64,
     price: f64,
     rng: Pcg,
 }
@@ -61,6 +64,7 @@ impl SpotMarket {
             mean: cfg.spot_hourly_mean,
             phi: 0.9,
             sigma: cfg.spot_volatility,
+            storm: 1.0,
             price: cfg.spot_hourly_mean,
             rng,
         }
@@ -71,6 +75,19 @@ impl SpotMarket {
         self.price
     }
 
+    /// Enter (factor > 1) or leave (factor = 1) a volatility storm: the
+    /// next [`SpotMarket::step`] draws its innovation with
+    /// `sigma × factor`. Rolling spot-price storms (PingAn's adversarial
+    /// price dynamics) are scheduled as a (set, restore-to-1) pair.
+    pub fn set_storm(&mut self, factor: f64) {
+        self.storm = factor;
+    }
+
+    /// The current volatility multiplier (1 = calm).
+    pub fn storm(&self) -> f64 {
+        self.storm
+    }
+
     /// Recalculate the market price (one market period). Returns the new
     /// price. Log-AR(1) around log(mean) keeps the price positive and
     /// produces occasional multi-× spikes — the revocation driver.
@@ -79,7 +96,7 @@ impl SpotMarket {
         let lx = self.price.ln();
         let innov = (1.0 - self.phi * self.phi).sqrt();
         let eps = self.rng.std_normal();
-        self.price = (lmean + self.phi * (lx - lmean) + innov * self.sigma * eps).exp();
+        self.price = (lmean + self.phi * (lx - lmean) + innov * self.sigma * self.storm * eps).exp();
         self.price
     }
 
@@ -177,6 +194,34 @@ mod tests {
         let frac = spikes as f64 / n as f64;
         assert!(frac > 0.0005, "no revocation events at all ({frac})");
         assert!(frac < 0.15, "revocations too frequent ({frac})");
+    }
+
+    #[test]
+    fn storm_raises_revocation_pressure_and_restores() {
+        let cfg = cloud_cfg();
+        let bid = cfg.bid_multiplier * cfg.spot_hourly_mean;
+        let spikes = |storm: f64| {
+            let mut m = SpotMarket::new(&cfg, Pcg::seeded(8));
+            m.set_storm(storm);
+            let n = 20_000;
+            (0..n).filter(|_| m.step() > bid).count()
+        };
+        let calm = spikes(1.0);
+        let stormy = spikes(4.0);
+        assert!(stormy > calm * 3, "storm x4: {stormy} spikes vs calm {calm}");
+        // Restoring the storm factor restores the calm trajectory: the
+        // factor multiplies the innovation, it does not mutate sigma.
+        let mut m = SpotMarket::new(&cfg, Pcg::seeded(8));
+        m.set_storm(6.0);
+        m.step();
+        m.set_storm(1.0);
+        assert_eq!(m.storm(), 1.0);
+        let mut prices = Vec::new();
+        for _ in 0..20_000 {
+            prices.push(m.step());
+        }
+        let mean = crate::util::stats::mean(&prices);
+        assert!((mean - cfg.spot_hourly_mean).abs() < cfg.spot_hourly_mean * 0.5, "mean {mean}");
     }
 
     #[test]

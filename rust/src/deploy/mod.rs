@@ -11,7 +11,7 @@ pub mod lifecycle;
 pub mod scheduling;
 pub mod world;
 
-pub use failure::{inject_hogs, kill_jm_host, kill_node};
+pub use failure::{inject_hogs, kill_dc, kill_jm_host, kill_node};
 pub use lifecycle::submit_job;
 pub use scheduling::{install_timers, should_steal};
 pub use world::{JobRt, World, WorldSim};

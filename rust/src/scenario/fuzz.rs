@@ -1,0 +1,1097 @@
+//! Seeded chaos fuzzer with minimal-counterexample shrinking.
+//!
+//! The campaign engine runs the scenarios someone wrote down; this module
+//! *generates* them. A [`FuzzSpace`] declares the adversary space — chaos
+//! schedules over the full `kind@time:args` DSL (including the correlated
+//! `kill_dc@` outages and `spot_storm@` price storms), topology and
+//! workload axes, straggler sweeps and config overrides — and [`run_fuzz`]
+//! samples random campaign cells from it, executes each through the full
+//! invariant stack ([`super::runner::run_one`]: streaming checkers,
+//! runtime probe, post-run world checks, replay digest) on the same
+//! `std::thread` worker pool the campaign runner uses.
+//!
+//! When a cell violates an invariant, the fuzzer does not just report the
+//! (often large) random schedule: it **shrinks** it. [`CellGen`] extends
+//! the [`crate::testkit::Gen`] shrink contract from scalar values to whole
+//! [`ScenarioSpec`]s — drop chaos events, halve times/durations/counts,
+//! pull factors back toward benign, drop overrides, simplify the workload,
+//! shrink the seed — and the same greedy [`crate::testkit::shrink_failure`]
+//! loop that minimizes a failing integer minimizes the failing chaos
+//! schedule. The result is emitted as a repro TOML ([`repro_toml`]) that
+//! `houtu campaign --spec repro.toml` loads directly, so a fuzz finding is
+//! one command away from a deterministic regression test.
+//!
+//! Determinism: cells are generated up front from the fuzz seed, executed
+//! in a fixed order, and shrinking probes candidates in the deterministic
+//! order [`Gen::shrink`] returns — so reports (digests, failures, shrunk
+//! cells) are identical regardless of worker count.
+//!
+//! `houtu fuzz [--cases N] [--seed S] [--soak MINUTES] [--repro out.toml]
+//! [--report out.json]` drives this; `--soak` keeps sampling fresh batches
+//! until the wall-clock budget expires (the ROADMAP's long-horizon soak
+//! campaigns) and `--report` exports the [`FuzzReport`] as verified JSON.
+
+use std::time::{Duration, Instant};
+
+use crate::config::{Config, Deployment};
+use crate::dag::{SizeClass, WorkloadKind};
+use crate::ids::{DcId, NodeId};
+use crate::testkit::{shrink_failure, Gen};
+use crate::util::error::{Context, Result};
+use crate::util::json::{self, Json};
+use crate::util::Pcg;
+use crate::{anyhow, ensure};
+
+use super::runner::run_one;
+use super::spec::{CampaignSpec, ChaosEvent, ScenarioSpec, ScenarioWorkload};
+
+/// The declarative adversary space [`run_fuzz`] samples from. Bounds are
+/// chosen so that every generated cell is *survivable by design* on a
+/// correct tree (e.g. at most one whole-DC outage per cell, hogs always
+/// spare the submitting DC): the fuzzer hunts invariant bugs, not
+/// impossible physics.
+#[derive(Debug, Clone)]
+pub struct FuzzSpace {
+    /// Hard cap on chaos events per cell.
+    pub max_events: usize,
+    /// Deployments drawn when a cell leaves the (weighted) houtu default.
+    pub deployments: Vec<Deployment>,
+    /// Region-count axis; 0 keeps the base topology.
+    pub regions: Vec<usize>,
+    /// Trace workloads submit 1..=this many jobs.
+    pub trace_jobs_max: usize,
+    /// Straggler sweep axes (first-class fuzz dimensions — every cell may
+    /// overlay `workload.straggler_prob`/`straggler_factor` overrides).
+    pub straggler_prob_max: f64,
+    pub straggler_factor_max: f64,
+    /// Allow spot-market cells (revocations on, optional `spot_storm@`).
+    pub allow_revocations: bool,
+}
+
+impl Default for FuzzSpace {
+    fn default() -> Self {
+        FuzzSpace {
+            max_events: 3,
+            deployments: Deployment::ALL.to_vec(),
+            // Never below the paper's 4 regions: with ≤3 chaos events and
+            // ≥4 JM replicas, some replica always survives a simultaneous
+            // combination, keeping cells survivable by construction.
+            regions: vec![0, 0, 0, 6, 8],
+            trace_jobs_max: 3,
+            straggler_prob_max: 0.25,
+            straggler_factor_max: 5.0,
+            allow_revocations: true,
+        }
+    }
+}
+
+/// One sampled campaign cell: a scenario plus the seed it runs at.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FuzzCell {
+    pub spec: ScenarioSpec,
+    pub seed: u64,
+}
+
+fn round1(x: f64) -> f64 {
+    (x * 10.0).round() / 10.0
+}
+
+fn round2(x: f64) -> f64 {
+    (x * 100.0).round() / 100.0
+}
+
+/// Generator of [`FuzzCell`]s over a [`FuzzSpace`] — the [`Gen`] shrink
+/// contract extended from values to whole scenario specs.
+pub struct CellGen<'a> {
+    pub space: &'a FuzzSpace,
+    pub base: &'a Config,
+}
+
+impl<'a> CellGen<'a> {
+    pub fn new(space: &'a FuzzSpace, base: &'a Config) -> CellGen<'a> {
+        CellGen { space, base }
+    }
+
+    /// Region count a cell with this `regions` axis actually runs on.
+    fn dcs(&self, regions: usize) -> usize {
+        if regions == 0 {
+            self.base.topology.num_dcs()
+        } else {
+            regions
+        }
+    }
+}
+
+impl Gen<FuzzCell> for CellGen<'_> {
+    fn generate(&self, rng: &mut Pcg) -> FuzzCell {
+        let space = self.space;
+        let regions = space.regions[rng.index(space.regions.len())];
+        let n = self.dcs(regions);
+        let deployment = if rng.chance(0.7) || space.deployments.is_empty() {
+            Deployment::Houtu
+        } else {
+            space.deployments[rng.index(space.deployments.len())]
+        };
+        let workload = if rng.chance(0.25) {
+            ScenarioWorkload::Trace { num_jobs: 1 + rng.index(space.trace_jobs_max.max(1)) }
+        } else {
+            let kinds = [
+                WorkloadKind::WordCount,
+                WorkloadKind::TpcH,
+                WorkloadKind::IterativeMl,
+                WorkloadKind::PageRank,
+            ];
+            ScenarioWorkload::SingleJob {
+                kind: kinds[rng.index(kinds.len())],
+                size: if rng.chance(0.3) { SizeClass::Medium } else { SizeClass::Small },
+                home: DcId(rng.index(n)),
+            }
+        };
+        let home = match workload {
+            ScenarioWorkload::SingleJob { home, .. } => home,
+            ScenarioWorkload::Trace { .. } => DcId(0),
+        };
+        let mut events: Vec<ChaosEvent> = Vec::new();
+        let mut overrides: Vec<String> = Vec::new();
+        // One chaos theme per cell keeps combinations survivable while
+        // still crossing every family with every workload/topology axis.
+        match rng.index(6) {
+            // Calm cell: pins the no-chaos invariants at random axes.
+            0 => {}
+            // Resource pressure: hogs into a proper subset sparing the
+            // submitting DC (single-job only — trace jobs homed in a
+            // hogged DC could never spawn their JM, which is starvation
+            // by construction, not a bug; and only when a non-home DC
+            // exists to hog).
+            1 => {
+                if n >= 2 && matches!(workload, ScenarioWorkload::SingleJob { .. }) {
+                    let mut dcs: Vec<DcId> =
+                        (0..n).map(DcId).filter(|d| *d != home).collect();
+                    rng.shuffle(&mut dcs);
+                    let k = 1 + rng.index(dcs.len().min(3));
+                    dcs.truncate(k);
+                    dcs.sort_by_key(|d| d.0);
+                    events.push(ChaosEvent::InjectHogs {
+                        at_secs: round1(rng.uniform(30.0, 300.0)),
+                        dcs,
+                    });
+                }
+            }
+            // JM chaos: a kill or a bounded cascade, plus maybe one
+            // spot-style node termination.
+            2 => {
+                if rng.chance(0.5) {
+                    events.push(ChaosEvent::KillJm {
+                        at_secs: round1(rng.uniform(20.0, 200.0)),
+                        dc: DcId(rng.index(n)),
+                    });
+                } else {
+                    events.push(ChaosEvent::KillJmCascade {
+                        at_secs: round1(rng.uniform(20.0, 120.0)),
+                        dc: DcId(rng.index(n)),
+                        count: 1 + rng.index(2) as u32,
+                        gap_secs: round1(rng.uniform(20.0, 60.0)),
+                    });
+                }
+                if rng.chance(0.4) {
+                    events.push(ChaosEvent::KillNode {
+                        at_secs: round1(rng.uniform(10.0, 300.0)),
+                        node: NodeId {
+                            dc: DcId(rng.index(n)),
+                            idx: rng.index(self.base.topology.workers_per_dc),
+                        },
+                    });
+                }
+            }
+            // Correlated whole-DC outage (at most one per cell), plus
+            // maybe a stray node kill elsewhere.
+            3 => {
+                let dead = DcId(rng.index(n));
+                events.push(ChaosEvent::KillDc {
+                    at_secs: round1(rng.uniform(30.0, 240.0)),
+                    dc: dead,
+                });
+                if n >= 2 && rng.chance(0.3) {
+                    events.push(ChaosEvent::KillNode {
+                        at_secs: round1(rng.uniform(10.0, 300.0)),
+                        node: NodeId {
+                            dc: DcId((dead.0 + 1 + rng.index(n - 1)) % n),
+                            idx: rng.index(self.base.topology.workers_per_dc),
+                        },
+                    });
+                }
+            }
+            // WAN weather: one brown-out window, or (given two regions to
+            // pair) an asymmetric pair degrade with an optional restore.
+            4 => {
+                if n < 2 || rng.chance(0.5) {
+                    let from = round1(rng.uniform(10.0, 200.0));
+                    let dur = round1(rng.uniform(30.0, 300.0));
+                    events.push(ChaosEvent::WanDegrade {
+                        from_secs: from,
+                        until_secs: from + dur,
+                        factor: round2(rng.uniform(0.05, 0.6)),
+                    });
+                } else {
+                    let a = DcId(rng.index(n));
+                    let b = DcId((a.0 + 1 + rng.index(n - 1)) % n);
+                    let at = round1(rng.uniform(10.0, 200.0));
+                    events.push(ChaosEvent::WanPairDegrade {
+                        at_secs: at,
+                        a,
+                        b,
+                        factor: round2(rng.uniform(0.05, 0.6)),
+                    });
+                    if rng.chance(0.5) {
+                        events.push(ChaosEvent::WanPairDegrade {
+                            at_secs: at + round1(rng.uniform(60.0, 400.0)),
+                            a,
+                            b,
+                            factor: 1.0,
+                        });
+                    }
+                }
+            }
+            // Spot-market adversary: revocations on, optionally with a
+            // scheduled volatility storm on one region.
+            _ => {
+                if space.allow_revocations {
+                    overrides.push("cloud.revocations=true".to_string());
+                    overrides.push("cloud.bid_multiplier=1.5".to_string());
+                    let period = [60.0, 120.0][rng.index(2)];
+                    overrides.push(format!("cloud.market_period_secs={period}"));
+                    if rng.chance(0.6) {
+                        events.push(ChaosEvent::SpotStorm {
+                            at_secs: round1(rng.uniform(60.0, 300.0)),
+                            dc: DcId(rng.index(n)),
+                            dur_secs: round1(rng.uniform(120.0, 600.0)),
+                            sigma_factor: round1(rng.uniform(2.0, 4.0)),
+                        });
+                    }
+                }
+            }
+        }
+        // Cross-cutting straggler sweep: the §2.2 changeable environment
+        // at task granularity, riding on top of any theme.
+        if rng.chance(0.35) {
+            let p = round2(rng.uniform(0.05, space.straggler_prob_max.max(0.05)));
+            let f = round2(rng.uniform(1.5, space.straggler_factor_max.max(1.5)));
+            overrides.push(format!("workload.straggler_prob={p}"));
+            overrides.push(format!("workload.straggler_factor={f}"));
+        }
+        // Occasional benign scheduler axis, to cross chaos with tuning.
+        if rng.chance(0.2) {
+            overrides.push(format!("scheduler.tau={}", [0.25, 0.5, 1.0][rng.index(3)]));
+        }
+        events.truncate(space.max_events);
+        let spec = ScenarioSpec {
+            name: format!("fuzz-{:08x}", rng.next_u32()),
+            deployment,
+            regions,
+            workload,
+            events,
+            overrides,
+        };
+        FuzzCell { spec, seed: 1 + rng.below(1_000_000) }
+    }
+
+    /// Shrink a failing cell toward a minimal chaos schedule. Candidates
+    /// are ordered most-aggressive-first (drop everything, then halves,
+    /// then single drops, then per-field simplifications) so the greedy
+    /// loop converges in few probes; every candidate is strictly simpler,
+    /// and candidates that no longer fit the topology are filtered by the
+    /// caller's validity check.
+    fn shrink(&self, cell: &FuzzCell) -> Vec<FuzzCell> {
+        let mut out: Vec<FuzzCell> = Vec::new();
+        let with_spec = |spec: ScenarioSpec, seed: u64| FuzzCell { spec, seed };
+        let s = &cell.spec;
+
+        // 1. Schedule-level drops: all events, the back half, each one.
+        if !s.events.is_empty() {
+            out.push(with_spec(ScenarioSpec { events: Vec::new(), ..s.clone() }, cell.seed));
+        }
+        if s.events.len() > 1 {
+            let half = s.events[..s.events.len() / 2].to_vec();
+            out.push(with_spec(ScenarioSpec { events: half, ..s.clone() }, cell.seed));
+        }
+        for i in 0..s.events.len() {
+            let mut ev = s.events.clone();
+            ev.remove(i);
+            if !ev.is_empty() {
+                out.push(with_spec(ScenarioSpec { events: ev, ..s.clone() }, cell.seed));
+            }
+        }
+
+        // 2. Per-event simplifications: halve times/durations/counts,
+        // pull factors back toward benign, drop hog DCs. The submitting
+        // DC is threaded through so hog shrinks can never target it —
+        // hogging home starves the job by construction, which would let
+        // a genuine invariant failure shrink into a trivial-starvation
+        // repro and hide the actual bug.
+        let home = match s.workload {
+            ScenarioWorkload::SingleJob { home, .. } => home,
+            ScenarioWorkload::Trace { .. } => DcId(0),
+        };
+        for (i, ev) in s.events.iter().enumerate() {
+            for simpler in shrink_event(ev, home) {
+                let mut evs = s.events.clone();
+                evs[i] = simpler;
+                out.push(with_spec(ScenarioSpec { events: evs, ..s.clone() }, cell.seed));
+            }
+        }
+
+        // 3. Drop overrides one at a time.
+        for i in 0..s.overrides.len() {
+            let mut ov = s.overrides.clone();
+            ov.remove(i);
+            out.push(with_spec(ScenarioSpec { overrides: ov, ..s.clone() }, cell.seed));
+        }
+
+        // 4. Simplify the workload / topology / deployment axes.
+        match s.workload {
+            ScenarioWorkload::Trace { num_jobs } if num_jobs > 1 => {
+                out.push(with_spec(
+                    ScenarioSpec {
+                        workload: ScenarioWorkload::Trace { num_jobs: num_jobs / 2 },
+                        ..s.clone()
+                    },
+                    cell.seed,
+                ));
+            }
+            ScenarioWorkload::SingleJob { kind, size, home } => {
+                if let Some(smaller) = match size {
+                    SizeClass::Large => Some(SizeClass::Medium),
+                    SizeClass::Medium => Some(SizeClass::Small),
+                    SizeClass::Small => None,
+                } {
+                    out.push(with_spec(
+                        ScenarioSpec {
+                            workload: ScenarioWorkload::SingleJob { kind, size: smaller, home },
+                            ..s.clone()
+                        },
+                        cell.seed,
+                    ));
+                }
+                // Moving home onto a hogged DC would starve the job by
+                // construction — skip the candidate in that case.
+                let dc0_hogged = s.events.iter().any(|e| {
+                    matches!(e, ChaosEvent::InjectHogs { dcs, .. } if dcs.contains(&DcId(0)))
+                });
+                if home != DcId(0) && !dc0_hogged {
+                    out.push(with_spec(
+                        ScenarioSpec {
+                            workload: ScenarioWorkload::SingleJob { kind, size, home: DcId(0) },
+                            ..s.clone()
+                        },
+                        cell.seed,
+                    ));
+                }
+            }
+            _ => {}
+        }
+        if s.regions > 0 {
+            out.push(with_spec(ScenarioSpec { regions: 0, ..s.clone() }, cell.seed));
+        }
+        if s.deployment != Deployment::Houtu {
+            out.push(with_spec(
+                ScenarioSpec { deployment: Deployment::Houtu, ..s.clone() },
+                cell.seed,
+            ));
+        }
+
+        // 5. Shrink the seed last: 1, then halves.
+        if cell.seed > 1 {
+            out.push(with_spec(s.clone(), 1));
+            if cell.seed > 3 {
+                out.push(with_spec(s.clone(), cell.seed / 2));
+            }
+        }
+        out
+    }
+}
+
+/// Push time-shrink candidates: jump straight to t=0, then halve (on the
+/// 0.1 s grid). Guards keep every candidate *strictly* earlier, so the
+/// greedy loop cannot stall on a candidate equal to its input.
+fn push_time_shrinks(out: &mut Vec<ChaosEvent>, at: f64, rebuild: &dyn Fn(f64) -> ChaosEvent) {
+    if at > 0.0 {
+        out.push(rebuild(0.0));
+        let half = round1(at / 2.0);
+        if half > 0.0 && half < at {
+            out.push(rebuild(half));
+        }
+    }
+}
+
+/// Simpler variants of one chaos event (empty when already minimal).
+/// Besides times/durations/counts/factors, DC indices shrink toward dc0:
+/// without that move, a failing cell generated on a widened topology
+/// (`regions = 6/8`) whose events reference dc4+ could never take the
+/// `regions -> 0` candidate (it would no longer fit the base topology).
+/// `home` is the submitting DC; hog shrinks never remap onto it.
+fn shrink_event(ev: &ChaosEvent, home: DcId) -> Vec<ChaosEvent> {
+    let mut out = Vec::new();
+    match ev.clone() {
+        ChaosEvent::InjectHogs { at_secs, dcs } => {
+            push_time_shrinks(&mut out, at_secs, &|t| ChaosEvent::InjectHogs {
+                at_secs: t,
+                dcs: dcs.clone(),
+            });
+            if dcs.len() > 1 {
+                let mut fewer = dcs.clone();
+                fewer.pop();
+                out.push(ChaosEvent::InjectHogs { at_secs, dcs: fewer });
+            }
+            // Remap the (sorted, distinct) set onto the lowest indices
+            // that spare the submitting DC.
+            let minimal: Vec<DcId> =
+                (0..).map(DcId).filter(|d| *d != home).take(dcs.len()).collect();
+            if dcs != minimal {
+                out.push(ChaosEvent::InjectHogs { at_secs, dcs: minimal });
+            }
+        }
+        ChaosEvent::KillJm { at_secs, dc } => {
+            push_time_shrinks(&mut out, at_secs, &|t| ChaosEvent::KillJm { at_secs: t, dc });
+            if dc.0 > 0 {
+                out.push(ChaosEvent::KillJm { at_secs, dc: DcId(0) });
+            }
+        }
+        ChaosEvent::KillJmCascade { at_secs, dc, count, gap_secs } => {
+            // A single kill_jm is strictly milder than any cascade.
+            out.push(ChaosEvent::KillJm { at_secs, dc });
+            if count > 1 {
+                out.push(ChaosEvent::KillJmCascade { at_secs, dc, count: count / 2, gap_secs });
+            }
+            push_time_shrinks(&mut out, at_secs, &|t| ChaosEvent::KillJmCascade {
+                at_secs: t,
+                dc,
+                count,
+                gap_secs,
+            });
+            let half_gap = round1(gap_secs / 2.0);
+            if half_gap > 0.0 && half_gap < gap_secs {
+                out.push(ChaosEvent::KillJmCascade { at_secs, dc, count, gap_secs: half_gap });
+            }
+            if dc.0 > 0 {
+                out.push(ChaosEvent::KillJmCascade { at_secs, dc: DcId(0), count, gap_secs });
+            }
+        }
+        ChaosEvent::KillNode { at_secs, node } => {
+            push_time_shrinks(&mut out, at_secs, &|t| ChaosEvent::KillNode { at_secs: t, node });
+            if node.idx > 0 {
+                out.push(ChaosEvent::KillNode {
+                    at_secs,
+                    node: NodeId { dc: node.dc, idx: 0 },
+                });
+            }
+            if node.dc.0 > 0 {
+                out.push(ChaosEvent::KillNode {
+                    at_secs,
+                    node: NodeId { dc: DcId(0), idx: node.idx },
+                });
+            }
+        }
+        ChaosEvent::KillDc { at_secs, dc } => {
+            // A single node kill is strictly milder than a DC outage.
+            out.push(ChaosEvent::KillNode { at_secs, node: NodeId { dc, idx: 0 } });
+            push_time_shrinks(&mut out, at_secs, &|t| ChaosEvent::KillDc { at_secs: t, dc });
+            if dc.0 > 0 {
+                out.push(ChaosEvent::KillDc { at_secs, dc: DcId(0) });
+            }
+        }
+        ChaosEvent::WanDegrade { from_secs, until_secs, factor } => {
+            push_time_shrinks(&mut out, from_secs, &|t| ChaosEvent::WanDegrade {
+                from_secs: t,
+                until_secs: t + (until_secs - from_secs),
+                factor,
+            });
+            let dur = until_secs - from_secs;
+            let half_dur = round1(dur / 2.0);
+            if half_dur > 0.0 && half_dur < dur {
+                out.push(ChaosEvent::WanDegrade {
+                    from_secs,
+                    until_secs: from_secs + half_dur,
+                    factor,
+                });
+            }
+            let milder = round2(factor + (1.0 - factor) / 2.0);
+            if factor < 0.95 && milder > factor {
+                out.push(ChaosEvent::WanDegrade { from_secs, until_secs, factor: milder });
+            }
+        }
+        ChaosEvent::WanPairDegrade { at_secs, a, b, factor } => {
+            push_time_shrinks(&mut out, at_secs, &|t| ChaosEvent::WanPairDegrade {
+                at_secs: t,
+                a,
+                b,
+                factor,
+            });
+            let milder = round2(factor + (1.0 - factor) / 2.0);
+            if factor < 0.95 && milder > factor {
+                out.push(ChaosEvent::WanPairDegrade { at_secs, a, b, factor: milder });
+            }
+            if a.0 + b.0 > 1 {
+                out.push(ChaosEvent::WanPairDegrade {
+                    at_secs,
+                    a: DcId(0),
+                    b: DcId(1),
+                    factor,
+                });
+            }
+        }
+        ChaosEvent::SpotStorm { at_secs, dc, dur_secs, sigma_factor } => {
+            push_time_shrinks(&mut out, at_secs, &|t| ChaosEvent::SpotStorm {
+                at_secs: t,
+                dc,
+                dur_secs,
+                sigma_factor,
+            });
+            let half_dur = round1(dur_secs / 2.0);
+            if half_dur > 0.0 && half_dur < dur_secs {
+                out.push(ChaosEvent::SpotStorm { at_secs, dc, dur_secs: half_dur, sigma_factor });
+            }
+            let milder = round1(1.0 + (sigma_factor - 1.0) / 2.0);
+            if sigma_factor > 1.1 && milder < sigma_factor {
+                out.push(ChaosEvent::SpotStorm { at_secs, dc, dur_secs, sigma_factor: milder });
+            }
+            if dc.0 > 0 {
+                out.push(ChaosEvent::SpotStorm { at_secs, dc: DcId(0), dur_secs, sigma_factor });
+            }
+        }
+    }
+    out
+}
+
+/// What one cell execution produced, as far as the fuzzer cares.
+#[derive(Debug, Clone)]
+pub struct CellOutcome {
+    pub violations: Vec<String>,
+    pub digest: u64,
+}
+
+/// Cell-execution oracle. The default ([`sim_oracle`]) runs the real
+/// simulator through the full invariant stack; tests substitute synthetic
+/// oracles to pin shrink behaviour without paying for simulations.
+pub type Oracle<'a> = &'a (dyn Fn(&Config, &ScenarioSpec, u64) -> CellOutcome + Sync);
+
+/// The production oracle: run the cell through [`run_one`] (streaming
+/// checkers + runtime probe + post-run world checks + digest; panics are
+/// caught and reported as violations).
+pub fn sim_oracle(base: &Config, spec: &ScenarioSpec, seed: u64) -> CellOutcome {
+    let rep = run_one(base, spec, seed);
+    CellOutcome { violations: rep.violations, digest: rep.digest }
+}
+
+/// Fuzzer knobs (the CLI surface).
+#[derive(Debug, Clone)]
+pub struct FuzzOpts {
+    pub cases: usize,
+    pub seed: u64,
+    /// Worker threads; 0 = one per available core.
+    pub parallelism: usize,
+    /// Probe budget for shrinking each failure.
+    pub max_shrink_iters: usize,
+}
+
+impl Default for FuzzOpts {
+    fn default() -> Self {
+        FuzzOpts { cases: 32, seed: 1, parallelism: 0, max_shrink_iters: 240 }
+    }
+}
+
+/// One invariant violation found by the fuzzer, minimized.
+#[derive(Debug, Clone)]
+pub struct FuzzFailure {
+    pub case_index: usize,
+    pub original: FuzzCell,
+    pub shrunk: FuzzCell,
+    /// Violations of the *shrunk* cell (what the repro reproduces).
+    pub violations: Vec<String>,
+    pub shrink_steps: usize,
+}
+
+/// A fuzz run's outcome: per-case digests (for replay/worker-invariance
+/// pins) and the minimized failures.
+#[derive(Debug, Clone)]
+pub struct FuzzReport {
+    pub seed: u64,
+    pub cases: usize,
+    pub workers: usize,
+    pub case_digests: Vec<u64>,
+    pub failures: Vec<FuzzFailure>,
+    pub wall_ms: u64,
+}
+
+impl FuzzReport {
+    pub fn all_pass(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    /// Human-readable summary; failing cells include their repro TOML so
+    /// the finding is actionable straight from the terminal.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        writeln!(
+            out,
+            "Fuzz seed {} — {} cases on {} workers: {} failing ({} ms)",
+            self.seed,
+            self.cases,
+            self.workers,
+            self.failures.len(),
+            self.wall_ms
+        )
+        .unwrap();
+        for f in &self.failures {
+            writeln!(
+                out,
+                "! case #{}: {} event(s) shrunk to {} in {} probes (scenario {:?}, seed {})",
+                f.case_index,
+                f.original.spec.events.len(),
+                f.shrunk.spec.events.len(),
+                f.shrink_steps,
+                f.shrunk.spec.name,
+                f.shrunk.seed
+            )
+            .unwrap();
+            for v in &f.violations {
+                writeln!(out, "    {v}").unwrap();
+            }
+            writeln!(out, "  repro (campaign --spec):").unwrap();
+            for line in repro_toml(&f.shrunk).lines() {
+                writeln!(out, "    {line}").unwrap();
+            }
+        }
+        out
+    }
+
+    /// JSON export (in-repo writer; see [`verify_report_json`]). The
+    /// `repro_toml` field embeds full TOML documents — quotes, newlines
+    /// and all — so the round-trip exercises the JSON escaping paths.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str("  \"tool\": \"houtu-fuzz\",\n");
+        out.push_str(&format!("  \"seed\": {},\n", self.seed));
+        out.push_str(&format!("  \"cases\": {},\n", self.cases));
+        out.push_str(&format!("  \"workers\": {},\n", self.workers));
+        out.push_str(&format!("  \"wall_ms\": {},\n", self.wall_ms));
+        let digests: Vec<String> =
+            self.case_digests.iter().map(|d| format!("\"{d:016x}\"")).collect();
+        out.push_str(&format!("  \"case_digests\": [{}],\n", digests.join(", ")));
+        out.push_str("  \"failures\": [\n");
+        for (i, f) in self.failures.iter().enumerate() {
+            out.push_str("    {");
+            out.push_str(&format!("\"case\": {}, ", f.case_index));
+            out.push_str(&format!("\"seed\": {}, ", f.shrunk.seed));
+            out.push_str(&format!("\"shrink_steps\": {}, ", f.shrink_steps));
+            let evs: Vec<String> =
+                f.shrunk.spec.events.iter().map(|e| json::escape(&e.to_string())).collect();
+            out.push_str(&format!("\"shrunk_events\": [{}], ", evs.join(", ")));
+            let viol: Vec<String> = f.violations.iter().map(|v| json::escape(v)).collect();
+            out.push_str(&format!("\"violations\": [{}], ", viol.join(", ")));
+            out.push_str(&format!("\"repro_toml\": {}", json::escape(&repro_toml(&f.shrunk))));
+            out.push_str(if i + 1 == self.failures.len() { "}\n" } else { "},\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+/// Write the fuzz report as JSON (`houtu fuzz --report out.json`) and
+/// assert the file parses back to the same content — the same
+/// write-then-verify contract as the campaign report export.
+pub fn write_report(report: &FuzzReport, path: &str) -> Result<()> {
+    ensure!(path.ends_with(".json"), "fuzz report path {path:?} must end in .json");
+    let text = report.to_json();
+    std::fs::write(path, &text).with_context(|| format!("writing {path}"))?;
+    let back = std::fs::read_to_string(path).with_context(|| format!("re-reading {path}"))?;
+    verify_report_json(report, &back)
+}
+
+/// Verify a serialized fuzz report parses back to the same content —
+/// seed, digests, and each failure's violations and byte-exact repro
+/// TOML. Exercises the `util::json` escape/parse paths on real payloads.
+pub fn verify_report_json(report: &FuzzReport, text: &str) -> Result<()> {
+    let doc = json::parse(text).map_err(|e| anyhow!("fuzz report is not valid JSON: {e}"))?;
+    ensure!(
+        doc.get("seed").and_then(Json::as_u64) == Some(report.seed),
+        "seed did not round-trip"
+    );
+    ensure!(
+        doc.get("cases").and_then(Json::as_u64) == Some(report.cases as u64),
+        "case count did not round-trip"
+    );
+    let digests = doc.get("case_digests").and_then(Json::as_array).context("digests missing")?;
+    ensure!(digests.len() == report.case_digests.len(), "digest count did not round-trip");
+    for (got, want) in digests.iter().zip(&report.case_digests) {
+        let s = got.as_str().context("digest must be a string")?;
+        ensure!(
+            u64::from_str_radix(s, 16).ok() == Some(*want),
+            "digest {s} did not round-trip"
+        );
+    }
+    let failures = doc.get("failures").and_then(Json::as_array).context("failures missing")?;
+    ensure!(failures.len() == report.failures.len(), "failure count did not round-trip");
+    for (got, want) in failures.iter().zip(&report.failures) {
+        ensure!(
+            got.get("case").and_then(Json::as_u64) == Some(want.case_index as u64),
+            "failure case index did not round-trip"
+        );
+        let viol = got.get("violations").and_then(Json::as_array).context("violations missing")?;
+        ensure!(viol.len() == want.violations.len(), "violation count did not round-trip");
+        for (gv, wv) in viol.iter().zip(&want.violations) {
+            ensure!(gv.as_str() == Some(wv.as_str()), "violation text did not round-trip");
+        }
+        let toml_text =
+            got.get("repro_toml").and_then(Json::as_str).context("repro_toml missing")?;
+        ensure!(
+            toml_text == repro_toml(&want.shrunk),
+            "repro TOML did not round-trip byte-exactly"
+        );
+    }
+    Ok(())
+}
+
+/// Spec-parser tokens for workload kinds ([`WorkloadKind::name`] returns
+/// display names like "TPC-H", which `from_keys` does not accept).
+fn kind_token(k: WorkloadKind) -> &'static str {
+    match k {
+        WorkloadKind::WordCount => "wordcount",
+        WorkloadKind::TpcH => "tpch",
+        WorkloadKind::IterativeMl => "ml",
+        WorkloadKind::PageRank => "pagerank",
+    }
+}
+
+/// Render a cell as a campaign TOML that `houtu campaign --spec` loads:
+/// the repro artifact. [`write_repro`] asserts the round-trip.
+pub fn repro_toml(cell: &FuzzCell) -> String {
+    use std::fmt::Write as _;
+    let s = &cell.spec;
+    let mut out = String::new();
+    writeln!(out, "# houtu fuzz repro — run with: houtu campaign --spec <this file>").unwrap();
+    writeln!(out, "[campaign]").unwrap();
+    writeln!(out, "name = \"fuzz-repro\"").unwrap();
+    writeln!(out, "seeds = [{}]", cell.seed).unwrap();
+    writeln!(out).unwrap();
+    writeln!(out, "[scenario.{}]", s.name).unwrap();
+    writeln!(out, "deployment = \"{}\"", s.deployment.name()).unwrap();
+    match s.workload {
+        ScenarioWorkload::SingleJob { kind, size, home } => {
+            writeln!(out, "workload = \"{}\"", kind_token(kind)).unwrap();
+            writeln!(out, "size = \"{}\"", size.name()).unwrap();
+            writeln!(out, "home = {}", home.0).unwrap();
+        }
+        ScenarioWorkload::Trace { num_jobs } => {
+            writeln!(out, "workload = \"trace\"").unwrap();
+            writeln!(out, "num_jobs = {num_jobs}").unwrap();
+        }
+    }
+    if s.regions > 0 {
+        writeln!(out, "regions = {}", s.regions).unwrap();
+    }
+    if !s.events.is_empty() {
+        let evs: Vec<String> = s.events.iter().map(|e| format!("\"{e}\"")).collect();
+        writeln!(out, "events = [{}]", evs.join(", ")).unwrap();
+    }
+    if !s.overrides.is_empty() {
+        let ovs: Vec<String> = s.overrides.iter().map(|o| format!("\"{o}\"")).collect();
+        writeln!(out, "overrides = [{}]", ovs.join(", ")).unwrap();
+    }
+    out
+}
+
+/// Write a repro TOML and assert it round-trips: parsing the file back
+/// through [`CampaignSpec`] must reproduce the cell bit-exactly (same
+/// scenario, same seed), so the artifact is guaranteed loadable.
+pub fn write_repro(cell: &FuzzCell, path: &str) -> Result<()> {
+    let text = repro_toml(cell);
+    std::fs::write(path, &text).with_context(|| format!("writing {path}"))?;
+    let back = CampaignSpec::from_file(path)?;
+    ensure!(back.seeds == vec![cell.seed], "repro seed did not round-trip");
+    ensure!(
+        back.scenarios.len() == 1 && back.scenarios[0] == cell.spec,
+        "repro TOML did not round-trip the scenario spec"
+    );
+    Ok(())
+}
+
+/// Run the fuzzer with a custom oracle (tests); see [`run_fuzz`].
+pub fn run_fuzz_with(
+    base: &Config,
+    space: &FuzzSpace,
+    opts: &FuzzOpts,
+    oracle: Oracle,
+) -> FuzzReport {
+    let t0 = Instant::now();
+    let gen = CellGen::new(space, base);
+    // Cells come from the fuzz seed alone, before any execution, so the
+    // sampled adversaries are identical for any worker count.
+    let mut rng = Pcg::new(opts.seed, 0xf0_22);
+    let cells: Vec<FuzzCell> = (0..opts.cases).map(|_| gen.generate(&mut rng)).collect();
+    let n = cells.len();
+    let workers = super::runner::resolve_workers(opts.parallelism, n);
+    let outcomes: Vec<CellOutcome> = super::runner::par_map(workers, n, |i| {
+        let cell = &cells[i];
+        oracle(base, &cell.spec, cell.seed)
+    });
+
+    // Shrink failures sequentially in case order: deterministic, and the
+    // probes reuse the same oracle. Invalid shrink candidates (events that
+    // no longer fit a shrunk topology) count as passing, so they are never
+    // kept.
+    let prop = |cell: &FuzzCell| -> std::result::Result<(), String> {
+        if cell.spec.build_config(base, cell.seed).is_err() {
+            return Ok(());
+        }
+        let out = oracle(base, &cell.spec, cell.seed);
+        if out.violations.is_empty() {
+            Ok(())
+        } else {
+            Err(out.violations.join("; "))
+        }
+    };
+    let mut failures = Vec::new();
+    for (i, (cell, outcome)) in cells.iter().zip(&outcomes).enumerate() {
+        if outcome.violations.is_empty() {
+            continue;
+        }
+        let (shrunk, _msg, steps) = shrink_failure(
+            &gen,
+            cell.clone(),
+            outcome.violations.join("; "),
+            opts.max_shrink_iters,
+            &prop,
+        );
+        // Re-query the oracle for the shrunk cell's violation *list*:
+        // recovering it from the joined shrink message would corrupt any
+        // violation whose text itself contains the separator (panic
+        // payloads routinely do). The oracle is deterministic, so this
+        // reproduces exactly what the repro will show.
+        let violations = oracle(base, &shrunk.spec, shrunk.seed).violations;
+        failures.push(FuzzFailure {
+            case_index: i,
+            original: cell.clone(),
+            shrunk,
+            violations,
+            shrink_steps: steps,
+        });
+    }
+    FuzzReport {
+        seed: opts.seed,
+        cases: n,
+        workers,
+        case_digests: outcomes.iter().map(|o| o.digest).collect(),
+        failures,
+        wall_ms: t0.elapsed().as_millis() as u64,
+    }
+}
+
+/// Sample `opts.cases` cells from the space, run each through the full
+/// invariant stack in parallel, and shrink every violation to a minimal
+/// repro. Deterministic for a given (space, opts, tree).
+pub fn run_fuzz(base: &Config, space: &FuzzSpace, opts: &FuzzOpts) -> FuzzReport {
+    run_fuzz_with(base, space, opts, &sim_oracle)
+}
+
+/// Soak mode: keep running fresh `opts.cases`-sized batches (each with a
+/// distinct derived seed) until `minutes` of wall clock elapse or a
+/// failure is found. At least one batch always runs; the returned report
+/// accumulates every batch's digests and failures, with `seed` left at
+/// the base seed.
+pub fn run_soak(base: &Config, space: &FuzzSpace, opts: &FuzzOpts, minutes: f64) -> FuzzReport {
+    let t0 = Instant::now();
+    // Clamp to a year so an absurd --soak value saturates instead of
+    // overflowing Duration::from_secs_f64 (which panics).
+    let budget_secs = (minutes.max(0.0) * 60.0).min(365.0 * 86_400.0);
+    let deadline = t0 + Duration::from_secs_f64(budget_secs);
+    let mut total: Option<FuzzReport> = None;
+    let mut batch: u64 = 0;
+    loop {
+        let batch_opts = FuzzOpts {
+            seed: opts.seed.wrapping_add(batch.wrapping_mul(0x9e37_79b9_7f4a_7c15)),
+            ..opts.clone()
+        };
+        let rep = run_fuzz(base, space, &batch_opts);
+        total = Some(match total.take() {
+            None => rep,
+            Some(mut acc) => {
+                acc.cases += rep.cases;
+                acc.case_digests.extend(rep.case_digests);
+                let offset = acc.cases - rep.cases;
+                acc.failures.extend(rep.failures.into_iter().map(|mut f| {
+                    f.case_index += offset;
+                    f
+                }));
+                acc
+            }
+        });
+        batch += 1;
+        let acc = total.as_ref().unwrap();
+        if !acc.failures.is_empty() || Instant::now() >= deadline {
+            break;
+        }
+    }
+    let mut rep = total.expect("soak ran at least one batch");
+    rep.seed = opts.seed;
+    rep.wall_ms = t0.elapsed().as_millis() as u64;
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space() -> FuzzSpace {
+        FuzzSpace::default()
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_valid() {
+        let base = Config::default();
+        let sp = space();
+        let gen = CellGen::new(&sp, &base);
+        let cells = |seed: u64| -> Vec<FuzzCell> {
+            let mut rng = Pcg::new(seed, 0xf0_22);
+            (0..40).map(|_| gen.generate(&mut rng)).collect()
+        };
+        let a = cells(7);
+        let b = cells(7);
+        assert_eq!(a, b, "same fuzz seed must sample the same cells");
+        let c = cells(8);
+        assert_ne!(a, c, "different fuzz seeds must sample different cells");
+        for cell in &a {
+            cell.spec
+                .build_config(&base, cell.seed)
+                .unwrap_or_else(|e| panic!("generated invalid cell {:?}: {e}", cell.spec));
+            assert!(cell.spec.events.len() <= space().max_events);
+        }
+        // The space actually covers the three new families somewhere in a
+        // modest sample.
+        let all: Vec<&ChaosEvent> = a.iter().flat_map(|c| c.spec.events.iter()).collect();
+        assert!(
+            all.iter().any(|e| matches!(e, ChaosEvent::KillDc { .. }))
+                || all.iter().any(|e| matches!(e, ChaosEvent::SpotStorm { .. }))
+                || a.iter().any(|c| {
+                    c.spec.overrides.iter().any(|o| o.starts_with("workload.straggler_prob"))
+                }),
+            "sample never drew a new chaos family"
+        );
+    }
+
+    #[test]
+    fn shrink_candidates_are_strictly_simpler() {
+        let base = Config::default();
+        let sp = space();
+        let gen = CellGen::new(&sp, &base);
+        let mut rng = Pcg::new(3, 0xf0_22);
+        let measure = |c: &FuzzCell| -> f64 {
+            let ev_cost: f64 = c
+                .spec
+                .events
+                .iter()
+                .map(|e| match e {
+                    ChaosEvent::KillDc { at_secs, dc } => 20.0 + at_secs + 0.1 * dc.0 as f64,
+                    ChaosEvent::KillJmCascade { at_secs, dc, count, gap_secs } => {
+                        10.0 + *count as f64 * 4.0 + at_secs + gap_secs + 0.1 * dc.0 as f64
+                    }
+                    ChaosEvent::InjectHogs { at_secs, dcs } => {
+                        let dc_sum: usize = dcs.iter().map(|d| d.0).sum();
+                        10.0 + dcs.len() as f64 + at_secs + 0.1 * dc_sum as f64
+                    }
+                    ChaosEvent::KillJm { at_secs, dc } => 8.0 + at_secs + 0.1 * dc.0 as f64,
+                    ChaosEvent::KillNode { at_secs, node } => {
+                        6.0 + node.idx as f64 + at_secs + 0.1 * node.dc.0 as f64
+                    }
+                    ChaosEvent::WanDegrade { from_secs, until_secs, factor } => {
+                        6.0 + from_secs + (until_secs - from_secs) + (1.0 - factor) * 10.0
+                    }
+                    ChaosEvent::WanPairDegrade { at_secs, a, b, factor } => {
+                        6.0 + at_secs + (1.0 - factor) * 10.0 + 0.1 * (a.0 + b.0) as f64
+                    }
+                    ChaosEvent::SpotStorm { at_secs, dc, dur_secs, sigma_factor } => {
+                        6.0 + at_secs + dur_secs + sigma_factor * 2.0 + 0.1 * dc.0 as f64
+                    }
+                })
+                .sum();
+            let wl_cost = match c.spec.workload {
+                ScenarioWorkload::Trace { num_jobs } => 10.0 + num_jobs as f64,
+                ScenarioWorkload::SingleJob { size, home, .. } => {
+                    home.0 as f64
+                        + match size {
+                            SizeClass::Small => 0.0,
+                            SizeClass::Medium => 2.0,
+                            SizeClass::Large => 4.0,
+                        }
+                }
+            };
+            ev_cost * 1000.0
+                + c.spec.overrides.len() as f64 * 100.0
+                + wl_cost
+                + c.spec.regions as f64
+                + (c.spec.deployment != Deployment::Houtu) as u8 as f64
+                + (c.seed as f64) / 1e9
+        };
+        for _ in 0..60 {
+            let cell = gen.generate(&mut rng);
+            let m = measure(&cell);
+            for cand in gen.shrink(&cell) {
+                assert!(
+                    measure(&cand) < m,
+                    "candidate not simpler:\n  from {:?}\n  to   {:?}",
+                    cell,
+                    cand
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn repro_toml_round_trips_generated_cells() {
+        let base = Config::default();
+        let sp = space();
+        let gen = CellGen::new(&sp, &base);
+        let mut rng = Pcg::new(11, 0xf0_22);
+        for _ in 0..60 {
+            let cell = gen.generate(&mut rng);
+            let text = repro_toml(&cell);
+            let doc = crate::config::toml::parse(&text)
+                .unwrap_or_else(|e| panic!("repro not parseable: {e}\n{text}"));
+            let spec = CampaignSpec::from_doc(&doc).unwrap();
+            assert_eq!(spec.seeds, vec![cell.seed], "{text}");
+            assert_eq!(spec.scenarios.len(), 1, "{text}");
+            assert_eq!(spec.scenarios[0], cell.spec, "{text}");
+        }
+    }
+
+    #[test]
+    fn synthetic_failures_shrink_to_a_single_event() {
+        let base = Config::default();
+        // Synthetic oracle: every cell with at least one event fails —
+        // so the minimal counterexample is exactly one event.
+        let oracle = |_b: &Config, s: &ScenarioSpec, _seed: u64| CellOutcome {
+            violations: if s.events.is_empty() {
+                vec![]
+            } else {
+                vec!["synthetic: chaos observed".to_string()]
+            },
+            digest: s.events.len() as u64,
+        };
+        let opts = FuzzOpts { cases: 24, seed: 5, parallelism: 2, max_shrink_iters: 200 };
+        let rep = run_fuzz_with(&base, &space(), &opts, &oracle);
+        assert_eq!(rep.cases, 24);
+        assert_eq!(rep.case_digests.len(), 24);
+        assert!(!rep.failures.is_empty(), "the sample should contain chaotic cells");
+        for f in &rep.failures {
+            assert_eq!(
+                f.shrunk.spec.events.len(),
+                1,
+                "not minimal: {:?} (from {:?})",
+                f.shrunk.spec.events,
+                f.original.spec.events
+            );
+            assert!(f.shrunk.seed == 1, "seed not shrunk: {}", f.shrunk.seed);
+        }
+    }
+}

@@ -39,11 +39,18 @@
 //! `kill_jm@T:dc2` (kill job 0's JM replica host),
 //! `kill_jm_cascade@T:dc0,2,45` (kill, then re-kill each freshly-elected
 //! primary every 45 s, 2 kills total), `kill_node@T:dc1.n2` (spot-style
-//! VM termination), `wan@T1-T2:0.25` (degrade all cross-DC bandwidth to
-//! 25 % during the window), `wan_pair@T:dc0,dc2,0.05` (asymmetric
-//! partition of a single region pair; factor 1 restores). `overrides`
-//! strings reuse the CLI's `--set section.key=value` surface, so every
-//! config knob is a scenario axis for free.
+//! VM termination), `kill_dc@T:dc2` (correlated whole-DC outage: every
+//! live worker VM of the region terminates at once), `wan@T1-T2:0.25`
+//! (degrade all cross-DC bandwidth to 25 % during the window),
+//! `wan_pair@T:dc0,dc2,0.05` (asymmetric partition of a single region
+//! pair; factor 1 restores), `spot_storm@T:dc1,300,4` (rolling
+//! spot-price storm: the region's market draws its log-price innovation
+//! with `sigma × 4` for 300 s, then calm is restored; pair it with
+//! `cloud.revocations=true` to let the spikes kill instances).
+//! `overrides` strings reuse the CLI's `--set section.key=value`
+//! surface, so every config knob — including the straggler sweep axes
+//! `workload.straggler_prob` / `workload.straggler_factor` — is a
+//! scenario axis for free.
 //!
 //! Run a campaign with `houtu campaign [--spec FILE | --smoke]
 //! [--report out.json|out.csv]`; every run must pass the [`invariants`]
@@ -55,12 +62,26 @@
 //! event stream ⇒ identical digest, which the replay regression tests
 //! pin down. `--report` serializes the [`CampaignReport`] (per-run
 //! metrics + digests + violations) as JSON or CSV.
+//!
+//! Beyond hand-written campaigns, `houtu fuzz [--cases N] [--seed S]
+//! [--soak MINUTES] [--repro out.toml] [--report out.json]` *generates*
+//! scenarios: the
+//! [`fuzz`] module samples random cells from a declarative
+//! [`fuzz::FuzzSpace`] over the whole DSL plus the topology, workload,
+//! straggler and override axes, runs them through the same invariant
+//! stack, and greedily shrinks any violation to a minimal chaos schedule
+//! emitted as a `campaign --spec`-loadable repro TOML.
 
+pub mod fuzz;
 pub mod invariants;
 pub mod report;
 pub mod runner;
 pub mod spec;
 
+pub use fuzz::{
+    repro_toml, run_fuzz, run_fuzz_with, run_soak, sim_oracle, write_report, write_repro, CellGen,
+    CellOutcome, FuzzCell, FuzzFailure, FuzzOpts, FuzzReport, FuzzSpace,
+};
 pub use invariants::{check_world, probe_world, StreamChecker, Violation};
 pub use report::write_and_verify;
 pub use runner::{
@@ -213,7 +234,7 @@ pub fn smoke_campaign() -> CampaignSpec {
 
 /// The built-in standard campaign: the same matrix `configs/campaign.toml`
 /// ships (kept in sync by a regression test), used when the CLI finds no
-/// spec file. 6 scenarios × 3 seeds = 18 runs. Scenario order matches the
+/// spec file. 9 scenarios × 3 seeds = 27 runs. Scenario order matches the
 /// TOML parse order (sections sort alphabetically in the subset parser).
 pub fn standard_campaign() -> CampaignSpec {
     CampaignSpec {
@@ -259,6 +280,18 @@ pub fn standard_campaign() -> CampaignSpec {
                 overrides: vec![],
             },
             ScenarioSpec {
+                name: "dc-outage".to_string(),
+                deployment: Deployment::Houtu,
+                regions: 0,
+                workload: ScenarioWorkload::SingleJob {
+                    kind: WorkloadKind::WordCount,
+                    size: SizeClass::Large,
+                    home: DcId(0),
+                },
+                events: vec![ChaosEvent::KillDc { at_secs: 70.0, dc: DcId(2) }],
+                overrides: vec![],
+            },
+            ScenarioSpec {
                 name: "jm-kill-cascade".to_string(),
                 deployment: Deployment::Houtu,
                 regions: 0,
@@ -301,6 +334,23 @@ pub fn standard_campaign() -> CampaignSpec {
                 ],
             },
             ScenarioSpec {
+                name: "spot-storm".to_string(),
+                deployment: Deployment::Houtu,
+                regions: 0,
+                workload: ScenarioWorkload::Trace { num_jobs: 3 },
+                events: vec![ChaosEvent::SpotStorm {
+                    at_secs: 120.0,
+                    dc: DcId(1),
+                    dur_secs: 600.0,
+                    sigma_factor: 3.0,
+                }],
+                overrides: vec![
+                    "cloud.revocations=true".to_string(),
+                    "cloud.bid_multiplier=1.5".to_string(),
+                    "cloud.market_period_secs=120.0".to_string(),
+                ],
+            },
+            ScenarioSpec {
                 name: "steal-under-pressure".to_string(),
                 deployment: Deployment::Houtu,
                 regions: 0,
@@ -314,6 +364,21 @@ pub fn standard_campaign() -> CampaignSpec {
                     dcs: vec![DcId(0), DcId(2), DcId(3)],
                 }],
                 overrides: vec![],
+            },
+            ScenarioSpec {
+                name: "straggler-storm".to_string(),
+                deployment: Deployment::Houtu,
+                regions: 0,
+                workload: ScenarioWorkload::SingleJob {
+                    kind: WorkloadKind::PageRank,
+                    size: SizeClass::Medium,
+                    home: DcId(1),
+                },
+                events: vec![],
+                overrides: vec![
+                    "workload.straggler_prob=0.2".to_string(),
+                    "workload.straggler_factor=4.0".to_string(),
+                ],
             },
         ],
     }

@@ -12,7 +12,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::config::Config;
-use crate::deploy::{build_sim, inject_hogs, kill_jm_host, kill_node, schedule_trace, submit_job, World, WorldSim};
+use crate::deploy::{build_sim, inject_hogs, kill_dc, kill_jm_host, kill_node, schedule_trace, submit_job, World, WorldSim};
 use crate::ids::{DcId, JmId, JobId};
 use crate::sim::{secs, secs_f, SimTime};
 use crate::trace::{Fnv64, TraceEvent};
@@ -73,13 +73,14 @@ pub fn run_scenario(base: &Config, spec: &ScenarioSpec, seed: u64) -> Result<Fin
 
 /// Place the spec's chaos events on the simulation timeline.
 ///
-/// WAN windows are scheduled as (set factor, restore 1.0) pairs in
-/// chronological order with restores sorted *before* starts at equal
-/// timestamps — same-time DES events run in scheduling order, so a
-/// window beginning exactly where another ends always wins the
-/// boundary, regardless of the order events appear in the spec.
+/// WAN windows and spot storms are scheduled as (set factor, restore 1.0)
+/// pairs in chronological order with restores sorted *before* starts at
+/// equal timestamps — same-time DES events run in scheduling order, so a
+/// window beginning exactly where another ends always wins the boundary,
+/// regardless of the order events appear in the spec.
 fn schedule_events(sim: &mut WorldSim, events: &[ChaosEvent]) {
     let mut wan_actions: Vec<(f64, bool, f64)> = Vec::new(); // (t, is_start, factor)
+    let mut storm_actions: Vec<(f64, bool, usize, f64)> = Vec::new(); // (t, is_start, dc, factor)
     for ev in events.iter().cloned() {
         let label = ev.to_string();
         match ev {
@@ -108,6 +109,16 @@ fn schedule_events(sim: &mut WorldSim, events: &[ChaosEvent]) {
                     kill_node(sim, node);
                 });
             }
+            ChaosEvent::KillDc { at_secs, dc } => {
+                sim.schedule_at(secs_f(at_secs), move |sim| {
+                    sim.state.emit(TraceEvent::ChaosInjected { label });
+                    kill_dc(sim, dc);
+                });
+            }
+            ChaosEvent::SpotStorm { at_secs, dc, dur_secs, sigma_factor } => {
+                storm_actions.push((at_secs, true, dc.0, sigma_factor));
+                storm_actions.push((at_secs + dur_secs, false, dc.0, 1.0));
+            }
             ChaosEvent::WanDegrade { from_secs, until_secs, factor } => {
                 wan_actions.push((from_secs, true, factor));
                 wan_actions.push((until_secs, false, 1.0));
@@ -125,6 +136,15 @@ fn schedule_events(sim: &mut WorldSim, events: &[ChaosEvent]) {
         sim.schedule_at(secs_f(t), move |sim| {
             sim.state.emit(TraceEvent::ChaosInjected { label: format!("wan-factor={factor}") });
             sim.state.wan.set_degrade(factor);
+        });
+    }
+    storm_actions.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+    for (t, _, dc, factor) in storm_actions {
+        sim.schedule_at(secs_f(t), move |sim| {
+            sim.state.emit(TraceEvent::ChaosInjected {
+                label: format!("spot_storm:dc{dc}-factor={factor}"),
+            });
+            sim.state.markets[dc].set_storm(factor);
         });
     }
 }
@@ -366,20 +386,23 @@ impl CampaignReport {
     }
 }
 
-/// Execute the campaign's scenario × seed matrix in parallel and collect
-/// the per-run reports (in stable matrix order, independent of worker
-/// interleaving).
-pub fn run_campaign(base: &Config, spec: &CampaignSpec) -> CampaignReport {
-    let plans = spec.expand();
-    let n = plans.len();
-    let workers = if spec.parallelism > 0 {
-        spec.parallelism
+/// Resolve a parallelism knob (0 = one worker per core) against a job
+/// count.
+pub(crate) fn resolve_workers(parallelism: usize, jobs: usize) -> usize {
+    if parallelism > 0 {
+        parallelism
     } else {
         std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
     }
-    .min(n.max(1));
+    .min(jobs.max(1))
+}
+
+/// Run `n` indexed jobs on a pool of `workers` `std::thread`s and collect
+/// the results in index order, independent of worker interleaving. Shared
+/// by the campaign runner and the chaos fuzzer.
+pub(crate) fn par_map<T: Send>(workers: usize, n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
     let next = AtomicUsize::new(0);
-    let slots: Mutex<Vec<Option<RunReport>>> = Mutex::new((0..n).map(|_| None).collect());
+    let slots: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
     std::thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| loop {
@@ -387,18 +410,29 @@ pub fn run_campaign(base: &Config, spec: &CampaignSpec) -> CampaignReport {
                 if i >= n {
                     break;
                 }
-                let (sc, seed) = &plans[i];
-                let rep = run_one(base, sc, *seed);
-                slots.lock().unwrap()[i] = Some(rep);
+                let out = f(i);
+                slots.lock().unwrap()[i] = Some(out);
             });
         }
     });
-    let runs: Vec<RunReport> = slots
+    slots
         .into_inner()
         .unwrap()
         .into_iter()
-        .map(|o| o.expect("campaign worker lost a run"))
-        .collect();
+        .map(|o| o.expect("parallel worker lost a job"))
+        .collect()
+}
+
+/// Execute the campaign's scenario × seed matrix in parallel and collect
+/// the per-run reports (in stable matrix order, independent of worker
+/// interleaving).
+pub fn run_campaign(base: &Config, spec: &CampaignSpec) -> CampaignReport {
+    let plans = spec.expand();
+    let workers = resolve_workers(spec.parallelism, plans.len());
+    let runs: Vec<RunReport> = par_map(workers, plans.len(), |i| {
+        let (sc, seed) = &plans[i];
+        run_one(base, sc, *seed)
+    });
     let mut h = Fnv64::new();
     for r in &runs {
         h.bytes(r.scenario.as_bytes());

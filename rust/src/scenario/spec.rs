@@ -34,6 +34,16 @@ pub enum ChaosEvent {
     KillJmCascade { at_secs: f64, dc: DcId, count: u32, gap_secs: f64 },
     /// `kill_node@T:dc1.n2` — spot-style termination of one worker VM.
     KillNode { at_secs: f64, node: NodeId },
+    /// `kill_dc@T:dc2` — correlated whole-DC outage: every live worker VM
+    /// of the region terminates at once (the ROADMAP's multi-region
+    /// outage family). Nodes re-acquire after the usual delay.
+    KillDc { at_secs: f64, dc: DcId },
+    /// `spot_storm@T:dc1,300,4` — rolling spot-price storm: from `T` for
+    /// `dur` seconds the region's market draws its log-price innovation
+    /// with `sigma × factor` (PingAn-style adversarial price dynamics);
+    /// the runner restores calm at `T+dur`. Only bites with
+    /// `cloud.revocations=true`.
+    SpotStorm { at_secs: f64, dc: DcId, dur_secs: f64, sigma_factor: f64 },
     /// `wan@T1-T2:0.25` — degrade all cross-DC bandwidth to the given
     /// fraction during the window (§2.2 changeable environment).
     WanDegrade { from_secs: f64, until_secs: f64, factor: f64 },
@@ -118,6 +128,24 @@ impl ChaosEvent {
                     node: NodeId { dc: parse_dc(dc, s)?, idx: parse_usize(idx, s)? },
                 })
             }
+            "kill_dc" => Ok(ChaosEvent::KillDc {
+                at_secs: parse_time(when, s)?,
+                dc: parse_dc(arg, s)?,
+            }),
+            "spot_storm" => {
+                let parts: Vec<&str> = arg.split(',').collect();
+                ensure!(parts.len() == 3, "event {s:?}: args must be dc,dur,sigma_factor");
+                let dur_secs = parse_f64(parts[1], s)?;
+                ensure!(dur_secs > 0.0, "event {s:?}: duration must be positive");
+                let sigma_factor = parse_f64(parts[2], s)?;
+                ensure!(sigma_factor > 0.0, "event {s:?}: sigma factor must be positive");
+                Ok(ChaosEvent::SpotStorm {
+                    at_secs: parse_time(when, s)?,
+                    dc: parse_dc(parts[0], s)?,
+                    dur_secs,
+                    sigma_factor,
+                })
+            }
             "wan" => {
                 let (from, until) = when
                     .split_once('-')
@@ -141,7 +169,7 @@ impl ChaosEvent {
             }
             other => bail!(
                 "unknown event kind {other:?} \
-                 (hogs|kill_jm|kill_jm_cascade|kill_node|wan|wan_pair)"
+                 (hogs|kill_jm|kill_jm_cascade|kill_node|kill_dc|wan|wan_pair|spot_storm)"
             ),
         }
     }
@@ -160,6 +188,10 @@ impl std::fmt::Display for ChaosEvent {
             }
             ChaosEvent::KillNode { at_secs, node } => {
                 write!(f, "kill_node@{at_secs}:dc{}.n{}", node.dc.0, node.idx)
+            }
+            ChaosEvent::KillDc { at_secs, dc } => write!(f, "kill_dc@{at_secs}:dc{}", dc.0),
+            ChaosEvent::SpotStorm { at_secs, dc, dur_secs, sigma_factor } => {
+                write!(f, "spot_storm@{at_secs}:dc{},{dur_secs},{sigma_factor}", dc.0)
             }
             ChaosEvent::WanDegrade { from_secs, until_secs, factor } => {
                 write!(f, "wan@{from_secs}-{until_secs}:{factor}")
@@ -226,6 +258,8 @@ impl ScenarioSpec {
                 ChaosEvent::KillNode { node, .. } => {
                     node.dc.0 < n && node.idx < cfg.topology.workers_per_dc
                 }
+                ChaosEvent::KillDc { dc, .. } => dc.0 < n,
+                ChaosEvent::SpotStorm { dc, .. } => dc.0 < n,
                 ChaosEvent::WanDegrade { .. } => true,
                 ChaosEvent::WanPairDegrade { a, b, .. } => a.0 < n && b.0 < n,
             };
@@ -253,6 +287,27 @@ impl ScenarioSpec {
                 pair[0].1,
                 pair[1].0,
                 pair[1].1
+            );
+        }
+        // Spot storms restore calm (factor 1) at their end, so overlapping
+        // windows on the same region would cancel each other — reject.
+        let mut storms: Vec<(usize, f64, f64)> = self
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                ChaosEvent::SpotStorm { at_secs, dc, dur_secs, .. } => {
+                    Some((dc.0, *at_secs, *at_secs + *dur_secs))
+                }
+                _ => None,
+            })
+            .collect();
+        storms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for pair in storms.windows(2) {
+            ensure!(
+                pair[0].0 != pair[1].0 || pair[0].2 <= pair[1].1,
+                "scenario {:?}: overlapping spot storms on dc{}",
+                self.name,
+                pair[0].0
             );
         }
         Ok(cfg)
@@ -443,6 +498,19 @@ mod tests {
             ChaosEvent::parse("kill_jm_cascade@70:dc0,3,45").unwrap(),
             ChaosEvent::KillJmCascade { at_secs: 70.0, dc: DcId(0), count: 3, gap_secs: 45.0 }
         );
+        assert_eq!(
+            ChaosEvent::parse("kill_dc@60:dc2").unwrap(),
+            ChaosEvent::KillDc { at_secs: 60.0, dc: DcId(2) }
+        );
+        assert_eq!(
+            ChaosEvent::parse("spot_storm@120:dc1,300,4").unwrap(),
+            ChaosEvent::SpotStorm {
+                at_secs: 120.0,
+                dc: DcId(1),
+                dur_secs: 300.0,
+                sigma_factor: 4.0
+            }
+        );
     }
 
     #[test]
@@ -452,6 +520,9 @@ mod tests {
             "kill_jm@70:dc2",
             "kill_jm_cascade@70:dc0,3,45",
             "kill_node@50:dc1.n2",
+            "kill_dc@60:dc2",
+            "spot_storm@120:dc1,300,4",
+            "spot_storm@12.5:dc0,60.25,2.5",
             "wan@120-300:0.25",
             "wan_pair@30:dc0,dc2,0.05",
         ] {
@@ -475,6 +546,12 @@ mod tests {
             "kill_jm_cascade@70:dc0,3,0",
             "kill_jm_cascade@70:dc0,3,45,9",
             "kill_node@50:dc1",
+            "kill_dc@60",
+            "kill_dc@-5:dc1",
+            "spot_storm@120:dc1",
+            "spot_storm@120:dc1,0,4",
+            "spot_storm@120:dc1,300,0",
+            "spot_storm@120:dc1,300,4,9",
             "wan@300-120:0.25",
             "wan@1-2:0",
             "wan@1-2:NaN",
@@ -579,6 +656,37 @@ mod tests {
         ]);
         let err = overlapping.build_config(&Config::default(), 1).unwrap_err();
         assert!(err.to_string().contains("overlapping wan windows"), "{err}");
+    }
+
+    #[test]
+    fn overlapping_spot_storms_same_dc_are_rejected() {
+        let mk = |events| ScenarioSpec {
+            name: "storm".into(),
+            deployment: Deployment::Houtu,
+            regions: 0,
+            workload: ScenarioWorkload::Trace { num_jobs: 1 },
+            events,
+            overrides: vec![],
+        };
+        let storm = |dc, at, dur| ChaosEvent::SpotStorm {
+            at_secs: at,
+            dc: DcId(dc),
+            dur_secs: dur,
+            sigma_factor: 3.0,
+        };
+        // Sequential on one DC and concurrent on two DCs are both fine.
+        assert!(mk(vec![storm(0, 10.0, 50.0), storm(0, 60.0, 50.0)])
+            .build_config(&Config::default(), 1)
+            .is_ok());
+        assert!(mk(vec![storm(0, 10.0, 500.0), storm(1, 100.0, 50.0)])
+            .build_config(&Config::default(), 1)
+            .is_ok());
+        // Overlap on the same DC would let the first restore cancel the
+        // second storm mid-window.
+        let err = mk(vec![storm(2, 10.0, 500.0), storm(2, 100.0, 50.0)])
+            .build_config(&Config::default(), 1)
+            .unwrap_err();
+        assert!(err.to_string().contains("overlapping spot storms"), "{err}");
     }
 
     #[test]

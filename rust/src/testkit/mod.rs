@@ -2,10 +2,16 @@
 //!
 //! The offline image does not ship `proptest`, so this module provides the
 //! subset we need: seeded random generators, a `forall` runner that reports
-//! the failing seed + case, and greedy shrinking for integer/vec cases.
-//! All property tests in this repo (scheduler invariants, consensus log
-//! consistency, DAG topology, Af bounds) run through this kit, so a failure
-//! is always reproducible by re-running with the printed seed.
+//! the failing seed + case, and greedy shrinking. All property tests in
+//! this repo (scheduler invariants, consensus log consistency, DAG
+//! topology, Af bounds) run through this kit, so a failure is always
+//! reproducible by re-running with the printed seed.
+//!
+//! The [`Gen`] shrink contract is not limited to scalars and vectors: the
+//! chaos fuzzer ([`crate::scenario::fuzz`]) implements `Gen` over whole
+//! `ScenarioSpec` cells, so the same greedy [`shrink_failure`] loop that
+//! minimizes a failing integer also minimizes a failing chaos schedule
+//! (drop events, halve times/factors/counts, shrink seeds).
 
 use crate::util::Pcg;
 
@@ -16,6 +22,9 @@ pub const DEFAULT_CASES: usize = 256;
 pub trait Gen<T> {
     fn generate(&self, rng: &mut Pcg) -> T;
     /// Candidate smaller values to try when shrinking a failing case.
+    /// Candidates must be *strictly simpler* by some finite measure so the
+    /// greedy loop terminates; returning the input itself would loop until
+    /// the iteration budget.
     fn shrink(&self, value: &T) -> Vec<T> {
         let _ = value;
         Vec::new()
@@ -48,7 +57,7 @@ impl Gen<usize> for UsizeIn {
     }
 }
 
-/// Generator of f64 in [lo, hi) (no shrinking — ranges are small).
+/// Generator of f64 in [lo, hi) with halving shrink toward `lo`.
 pub struct F64In(pub f64, pub f64);
 
 impl Gen<f64> for F64In {
@@ -56,10 +65,17 @@ impl Gen<f64> for F64In {
         rng.uniform(self.0, self.1)
     }
     fn shrink(&self, v: &f64) -> Vec<f64> {
+        // Any value strictly above `lo` shrinks; the old epsilon guard
+        // (`|v - lo| > 1e-9`) dropped the boundary candidate for values
+        // within epsilon of `lo`, so shrinking stalled at `lo + tiny`
+        // instead of converging to the exact bound.
         let mut out = Vec::new();
-        if (*v - self.0).abs() > 1e-9 {
+        if *v > self.0 {
             out.push(self.0);
-            out.push(self.0 + (*v - self.0) / 2.0);
+            let mid = self.0 + (*v - self.0) / 2.0;
+            if mid > self.0 && mid < *v {
+                out.push(mid);
+            }
         }
         out
     }
@@ -111,6 +127,43 @@ pub struct Failure {
     pub shrunk_iterations: usize,
 }
 
+/// Greedily minimize a failing case: repeatedly replace it with the first
+/// shrink candidate that still fails, until no candidate fails or the
+/// `max_iters` probe budget runs out. Deterministic: candidate order comes
+/// from [`Gen::shrink`] alone, so the same failing input always shrinks to
+/// the same minimum. Returns the minimal failing case, its failure
+/// message, and the number of candidate probes spent.
+pub fn shrink_failure<T, G>(
+    gen: &G,
+    input: T,
+    message: String,
+    max_iters: usize,
+    prop: impl Fn(&T) -> Result<(), String>,
+) -> (T, String, usize)
+where
+    T: Clone,
+    G: Gen<T>,
+{
+    let mut best = input;
+    let mut best_msg = message;
+    let mut iters = 0;
+    'outer: loop {
+        for cand in gen.shrink(&best) {
+            iters += 1;
+            if iters > max_iters {
+                break 'outer;
+            }
+            if let Err(m2) = prop(&cand) {
+                best = cand;
+                best_msg = m2;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (best, best_msg, iters)
+}
+
 /// Run `prop` on `cases` generated inputs. On failure, greedily shrink and
 /// panic with the smallest failing case and the seed to reproduce.
 pub fn forall_cases<T, G>(seed: u64, cases: usize, gen: &G, prop: impl Fn(&T) -> Result<(), String>)
@@ -122,24 +175,7 @@ where
     for case_idx in 0..cases {
         let input = gen.generate(&mut rng);
         if let Err(msg) = prop(&input) {
-            // Greedy shrink loop.
-            let mut best = input;
-            let mut best_msg = msg;
-            let mut iters = 0;
-            'outer: loop {
-                for cand in gen.shrink(&best) {
-                    iters += 1;
-                    if iters > 2000 {
-                        break 'outer;
-                    }
-                    if let Err(m2) = prop(&cand) {
-                        best = cand;
-                        best_msg = m2;
-                        continue 'outer;
-                    }
-                }
-                break;
-            }
+            let (best, best_msg, iters) = shrink_failure(gen, input, msg, 2000, &prop);
             panic!(
                 "property failed (seed={seed}, case #{case_idx}, {iters} shrink steps)\n\
                  input: {best:?}\nerror: {best_msg}"
@@ -214,6 +250,31 @@ mod tests {
         let input_line = msg.lines().find(|l| l.starts_with("input:")).unwrap();
         let value: usize = input_line.trim_start_matches("input: ").parse().unwrap();
         assert!((123..=1000).contains(&value), "shrunk to {value}");
+    }
+
+    #[test]
+    fn f64_shrink_converges_to_the_exact_lower_bound() {
+        // Property over the generator itself: from any start in [lo, hi),
+        // greedily shrinking an always-failing property must terminate at
+        // *exactly* `lo` — including starts within the old 1e-9 epsilon
+        // of the bound, which previously stalled one ulp short.
+        let lo = 0.25;
+        let gen_range = F64In(lo, 10.0);
+        forall_cases(21, 64, &F64In(lo, 10.0), |&start: &f64| {
+            let (best, _, _) =
+                shrink_failure(&gen_range, start, "always fails".into(), 200, |_| {
+                    Err("still failing".into())
+                });
+            prop_assert!(best == lo, "stalled at {best} (start {start})");
+            Ok(())
+        });
+        // The regression case the epsilon comparison used to lose: a value
+        // epsilon-close to (but not at) the bound still offers `lo`.
+        let near = lo + 1e-12;
+        let cands = gen_range.shrink(&near);
+        assert!(cands.contains(&lo), "boundary candidate missing: {cands:?}");
+        // The bound itself is a fixed point.
+        assert!(gen_range.shrink(&lo).is_empty());
     }
 
     #[test]

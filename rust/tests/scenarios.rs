@@ -7,8 +7,9 @@ use houtu::dag::{SizeClass, WorkloadKind};
 use houtu::deploy::{run_single_job, SingleJobPlan};
 use houtu::ids::{DcId, JobId};
 use houtu::scenario::{
-    check_world, presets, run_campaign, run_one, run_scenario, smoke_campaign, standard_campaign,
-    CampaignSpec, ScenarioSpec, ScenarioWorkload,
+    check_world, presets, run_campaign, run_fuzz_with, run_one, run_scenario, smoke_campaign,
+    standard_campaign, CampaignSpec, CellOutcome, FuzzOpts, FuzzSpace, ScenarioSpec,
+    ScenarioWorkload,
 };
 
 fn stolen_in(w: &houtu::deploy::World) -> u64 {
@@ -260,7 +261,15 @@ fn standard_campaign_risky_cells_run_clean() {
         std_campaign.scenarios.iter().find(|s| s.name == n).unwrap().clone()
     };
     for seed in [7u64, 1234] {
-        for name in ["pjm-kill", "spot-chaos", "jm-kill-cascade", "asym-wan-partition"] {
+        for name in [
+            "pjm-kill",
+            "spot-chaos",
+            "jm-kill-cascade",
+            "asym-wan-partition",
+            "dc-outage",
+            "spot-storm",
+            "straggler-storm",
+        ] {
             let rep = run_one(&base, &by_name(name), seed);
             assert!(rep.passed(), "{name}/seed{seed}: {:?}", rep.violations);
             assert_eq!(rep.completed_jobs, rep.total_jobs, "{name}/seed{seed}");
@@ -346,4 +355,159 @@ fn wan_degrade_window_slows_the_job() {
         jrt(&stormy),
         jrt(&calm)
     );
+}
+
+/// Golden replay-digest pins for the three new chaos families at fixed
+/// seeds: every (cell, seed) replays to a bit-identical digest, different
+/// seeds diverge, and the injected chaos is visible in the event stream
+/// (a chaos-free twin digests differently).
+#[test]
+fn new_chaos_family_digests_pin_deterministic_replay() {
+    let base = Config::default();
+    let campaign = standard_campaign();
+    let by_name = |n: &str| -> ScenarioSpec {
+        campaign.scenarios.iter().find(|s| s.name == n).unwrap().clone()
+    };
+    for name in ["dc-outage", "spot-storm", "straggler-storm"] {
+        let spec = by_name(name);
+        let mut digests = Vec::new();
+        for seed in [42u64, 7] {
+            let a = run_one(&base, &spec, seed);
+            let b = run_one(&base, &spec, seed);
+            assert!(a.passed(), "{name}/seed{seed}: {:?}", a.violations);
+            assert_eq!(a.digest, b.digest, "{name}/seed{seed}: replay diverged");
+            assert_eq!(a.events_processed, b.events_processed, "{name}/seed{seed}");
+            digests.push(a.digest);
+        }
+        assert_ne!(digests[0], digests[1], "{name}: seeds 42 and 7 digested identically");
+        let calm = ScenarioSpec { events: vec![], overrides: vec![], ..spec.clone() };
+        let c = run_one(&base, &calm, 42);
+        assert!(c.passed(), "{name} calm twin: {:?}", c.violations);
+        assert_ne!(c.digest, digests[0], "{name}: chaos left no trace in the digest");
+    }
+}
+
+/// The `kill_dc@` family semantics: the whole region dies at the fig11
+/// kill instant, the sJM it hosted recovers, and the run stays clean.
+#[test]
+fn kill_dc_outage_recovers_and_passes_invariants() {
+    let base = Config::default();
+    let campaign = standard_campaign();
+    let spec =
+        campaign.scenarios.iter().find(|s| s.name == "dc-outage").unwrap().clone();
+    let run = run_scenario(&base, &spec, 42).unwrap();
+    let w = &run.world;
+    assert_eq!(w.metrics.completed_jobs(), 1);
+    let violations = check_world(w);
+    assert!(violations.is_empty(), "{violations:?}");
+    assert!(
+        !w.metrics.recovery_intervals_secs.is_empty(),
+        "whole-DC outage killed the dc2 sJM, but no recovery was recorded"
+    );
+    // Every dc2 node came back: full capacity restored post-run.
+    assert_eq!(
+        w.cluster.free_pool(DcId(2)).len(),
+        w.cluster.dc_capacity(DcId(2)),
+        "dc2 did not re-acquire its instances"
+    );
+}
+
+/// The straggler sweep axes actually perturb execution: with stragglers
+/// on, the same (scenario, seed) runs strictly slower than its calm twin
+/// while staying exactly-once clean.
+#[test]
+fn straggler_sweep_slows_the_job_but_stays_clean() {
+    let base = Config::default();
+    let campaign = standard_campaign();
+    let spec =
+        campaign.scenarios.iter().find(|s| s.name == "straggler-storm").unwrap().clone();
+    let stormy = run_scenario(&base, &spec, 42).unwrap();
+    let calm_spec = ScenarioSpec { overrides: vec![], ..spec };
+    let calm = run_scenario(&base, &calm_spec, 42).unwrap();
+    for (label, w) in [("straggler", &stormy.world), ("calm", &calm.world)] {
+        assert_eq!(w.metrics.completed_jobs(), 1, "{label}");
+        let violations = check_world(w);
+        assert!(violations.is_empty(), "{label}: {violations:?}");
+    }
+    let jrt = |w: &houtu::deploy::World| w.metrics.jobs[&JobId(0)].jrt().unwrap();
+    assert!(
+        jrt(&stormy.world) > jrt(&calm.world),
+        "straggler storm {:.1}s should exceed calm {:.1}s",
+        jrt(&stormy.world),
+        jrt(&calm.world)
+    );
+}
+
+/// Fuzz results are worker-count invariant: cells are generated from the
+/// fuzz seed before execution and shrinking is sequential, so 1 worker
+/// and 4 workers produce identical digests and identical minimized
+/// failures.
+#[test]
+fn fuzz_results_are_worker_count_invariant() {
+    let base = Config::default();
+    let space = FuzzSpace::default();
+    // Synthetic oracle keeps this fast while still exercising the whole
+    // generate → execute → shrink pipeline; `digest` is derived from the
+    // cell so reordering across workers would be visible.
+    let oracle = |_b: &Config, s: &ScenarioSpec, seed: u64| {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in format!("{}|{}|{seed}", s.name, s.events.len()).bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        CellOutcome {
+            violations: if s.events.len() >= 2 {
+                vec!["synthetic: two-event schedules fail".to_string()]
+            } else {
+                vec![]
+            },
+            digest: h,
+        }
+    };
+    let mut total_failures = 0;
+    for seed in 9u64..13 {
+        let run = |parallelism: usize| {
+            let opts = FuzzOpts { cases: 24, seed, parallelism, max_shrink_iters: 2000 };
+            run_fuzz_with(&base, &space, &opts, &oracle)
+        };
+        let solo = run(1);
+        let pooled = run(4);
+        assert_eq!(solo.cases, pooled.cases);
+        assert_eq!(
+            solo.case_digests, pooled.case_digests,
+            "seed {seed}: digest order depends on workers"
+        );
+        assert_eq!(solo.failures.len(), pooled.failures.len(), "seed {seed}");
+        for (a, b) in solo.failures.iter().zip(&pooled.failures) {
+            assert_eq!(a.case_index, b.case_index, "seed {seed}");
+            assert_eq!(a.original, b.original, "seed {seed}");
+            assert_eq!(a.shrunk, b.shrunk, "seed {seed}: shrinking depends on workers");
+            assert_eq!(a.violations, b.violations, "seed {seed}");
+        }
+        // The synthetic property "≥ 2 events fail" has 2-event minima.
+        for f in &solo.failures {
+            assert_eq!(f.shrunk.spec.events.len(), 2, "{:?}", f.shrunk.spec.events);
+        }
+        total_failures += solo.failures.len();
+    }
+    assert!(total_failures > 0, "96 sampled cells never drew a two-event schedule");
+}
+
+#[test]
+fn cli_parses_fuzz_flags() {
+    let args: Vec<String> = ["fuzz", "--cases", "8", "--seed", "3", "--repro", "/tmp/r.toml"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let cli = houtu::cli::parse(&args);
+    assert_eq!(cli.command, "fuzz");
+    assert_eq!(cli.cases, 8);
+    assert_eq!(cli.fuzz_seed, 3);
+    assert_eq!(cli.repro.as_deref(), Some("/tmp/r.toml"));
+    assert_eq!(cli.soak_minutes, None);
+    let args: Vec<String> =
+        ["fuzz", "--soak", "0.5"].iter().map(|s| s.to_string()).collect();
+    let cli = houtu::cli::parse(&args);
+    assert_eq!(cli.soak_minutes, Some(0.5));
+    assert_eq!(cli.cases, 32, "default case count");
+    assert_eq!(cli.fuzz_seed, 1, "default fuzz seed");
 }
