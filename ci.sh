@@ -3,9 +3,12 @@
 # benches, examples), run the full test suite, then a smoke scenario
 # campaign through the real CLI with a report export whose round-trip
 # the CLI asserts (it re-reads and re-parses the file, exiting non-zero
-# on any mismatch) — so the export path stays wired — and finally a
-# seeded chaos-fuzz smoke batch: any invariant violation is shrunk to a
-# minimal repro TOML and fails the build (non-zero exit).
+# on any mismatch) — so the export path stays wired — then a seeded
+# chaos-fuzz smoke batch (any invariant violation is shrunk to a minimal
+# repro TOML and fails the build), and finally the perf harness: `bench
+# --smoke` times every workload on both queue engines and writes
+# BENCH_sim.json, whose util::json round-trip the CLI asserts — every
+# run extends the perf trajectory.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -13,4 +16,5 @@ cargo build --release --all-targets
 cargo test -q
 cargo run --release --quiet -- campaign --smoke --report /tmp/smoke.json
 cargo run --release --quiet -- fuzz --cases 8 --seed 1 --repro /tmp/fuzz-repro.toml
+cargo run --release --quiet -- bench --smoke --report BENCH_sim.json
 echo "ci.sh: all green"

@@ -1,0 +1,539 @@
+//! First-class benchmark harness: the `BENCH_*.json` perf trajectory.
+//!
+//! Every PR that claims a hot-path win needs a number, and one-off
+//! figure scripts don't accumulate into a trajectory. This module is the
+//! repeatable measurement harness behind `houtu bench [--smoke]
+//! [--iters N] [--report BENCH_sim.json]`: a fixed set of
+//! scenario-backed workloads, a warmup/iters timing loop, and a
+//! round-trip-verified JSON report (via the in-repo [`crate::util::json`]
+//! parser, same contract as the campaign/fuzz exports).
+//!
+//! # Workloads
+//!
+//! * `campaign-smoke` — every cell of [`crate::scenario::smoke_campaign`]
+//!   run serially through [`run_scenario_on`]: the end-to-end DES +
+//!   deployment-stack number. Run on **both** queue engines
+//!   (`…-legacy` is the vendored pre-overhaul queue), so every report
+//!   carries the measured old-vs-new ratio — the speedup claim is
+//!   re-measured on every run, not frozen in a PR description.
+//! * `fuzz-batch` — a deterministic batch of generated chaos cells
+//!   (seeded [`CellGen`]), the shape `houtu fuzz` hammers.
+//! * `soak-slice` — a slice of the long-horizon soak load: the online
+//!   trace workload under spot revocations across several seeds.
+//! * `dense-cancel-churn` — a queue microbenchmark: schedule/cancel
+//!   storms plus periodic timer chains, the access pattern that made the
+//!   old tombstone-set queue hurt. Also run on both engines.
+//!
+//! # Report schema (`BENCH_sim.json`)
+//!
+//! ```json
+//! {
+//!   "bench": "sim-hot-path",
+//!   "smoke": false,
+//!   "workloads": [
+//!     {"name": "campaign-smoke", "queue": "slab", "iters": 3,
+//!      "warmup": 1, "events_total": 123456, "peak_pending": 789,
+//!      "wall_ms_mean": 12.5, "wall_ms_min": 12.1, "wall_ms_max": 13.0,
+//!      "events_per_sec": 9876543.2}
+//!   ]
+//! }
+//! ```
+//!
+//! `events_total` is summed over the timed iterations, `events_per_sec`
+//! is `events_total / total_wall_secs`, and `peak_pending` is the
+//! highest queue depth any run reached ([`crate::sim::Sim::peak_pending`]).
+//! Adding a workload = adding a [`BenchWorkload`] variant and its
+//! `run_once` arm; the report, CLI and round-trip check pick it up
+//! automatically.
+
+use std::fmt::Write as _;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Instant;
+
+use crate::config::{Config, Deployment};
+use crate::scenario::{
+    run_scenario_on, smoke_campaign, CellGen, FuzzSpace, ScenarioSpec, ScenarioWorkload,
+};
+use crate::sim::{every, QueueKind, Sim};
+use crate::testkit::Gen as _;
+use crate::util::error::{Context, Result};
+use crate::util::json::{self, Json};
+use crate::util::{stats, Pcg};
+use crate::{anyhow, ensure};
+
+/// Harness knobs (the CLI surface).
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    /// Shrink workload scales and run one untimed-warmup-free iteration
+    /// (the ci.sh gate).
+    pub smoke: bool,
+    /// Timed iterations per workload.
+    pub iters: usize,
+    /// Untimed warmup iterations per workload.
+    pub warmup: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { smoke: false, iters: 3, warmup: 1 }
+    }
+}
+
+impl BenchOpts {
+    /// The fast ci.sh configuration.
+    pub fn smoke() -> Self {
+        BenchOpts { smoke: true, iters: 1, warmup: 0 }
+    }
+}
+
+/// What one workload iteration produced.
+struct IterOut {
+    events: u64,
+    peak_pending: usize,
+}
+
+/// The fixed workload set. See the module docs for what each measures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BenchWorkload {
+    CampaignSmoke,
+    FuzzBatch,
+    SoakSlice,
+    DenseCancelChurn,
+}
+
+impl BenchWorkload {
+    pub fn name(self) -> &'static str {
+        match self {
+            BenchWorkload::CampaignSmoke => "campaign-smoke",
+            BenchWorkload::FuzzBatch => "fuzz-batch",
+            BenchWorkload::SoakSlice => "soak-slice",
+            BenchWorkload::DenseCancelChurn => "dense-cancel-churn",
+        }
+    }
+
+    fn run_once(self, base: &Config, queue: QueueKind, smoke: bool) -> IterOut {
+        match self {
+            BenchWorkload::CampaignSmoke => {
+                let spec = smoke_campaign();
+                let mut out = IterOut { events: 0, peak_pending: 0 };
+                for (sc, seed) in spec.expand() {
+                    let run = run_scenario_on(base, &sc, seed, queue)
+                        .expect("smoke campaign cells are always valid");
+                    out.events += run.events_processed;
+                    out.peak_pending = out.peak_pending.max(run.peak_pending);
+                }
+                out
+            }
+            BenchWorkload::FuzzBatch => {
+                let space = FuzzSpace::default();
+                let gen = CellGen::new(&space, base);
+                let mut rng = Pcg::seeded(0xBE7C);
+                let cells = if smoke { 3 } else { 6 };
+                let mut out = IterOut { events: 0, peak_pending: 0 };
+                for _ in 0..cells {
+                    let cell = gen.generate(&mut rng);
+                    // Chaos cells may legitimately trip simulator
+                    // assertions (the fuzzer reports those as findings);
+                    // the bench must time a deterministic batch either
+                    // way, so panics count as a zero-event run.
+                    let done = catch_unwind(AssertUnwindSafe(|| {
+                        run_scenario_on(base, &cell.spec, cell.seed, queue)
+                    }));
+                    if let Ok(Ok(run)) = done {
+                        out.events += run.events_processed;
+                        out.peak_pending = out.peak_pending.max(run.peak_pending);
+                    }
+                }
+                out
+            }
+            BenchWorkload::SoakSlice => {
+                let num_jobs = if smoke { 2 } else { 4 };
+                let seeds: &[u64] = if smoke { &[42] } else { &[42, 7, 1234] };
+                let sc = ScenarioSpec {
+                    name: "soak-slice".to_string(),
+                    deployment: Deployment::Houtu,
+                    regions: 0,
+                    workload: ScenarioWorkload::Trace { num_jobs },
+                    events: vec![],
+                    overrides: vec![
+                        "cloud.revocations=true".to_string(),
+                        "cloud.spot_volatility=0.5".to_string(),
+                        "cloud.market_period_secs=120.0".to_string(),
+                        "cloud.bid_multiplier=1.5".to_string(),
+                    ],
+                };
+                let mut out = IterOut { events: 0, peak_pending: 0 };
+                for &seed in seeds {
+                    let run = run_scenario_on(base, &sc, seed, queue)
+                        .expect("soak slice spec is always valid");
+                    out.events += run.events_processed;
+                    out.peak_pending = out.peak_pending.max(run.peak_pending);
+                }
+                out
+            }
+            BenchWorkload::DenseCancelChurn => {
+                let n = if smoke { 60_000 } else { 200_000 };
+                dense_cancel_churn(queue, n)
+            }
+        }
+    }
+}
+
+/// Queue microbenchmark: a schedule/cancel storm (half of everything
+/// scheduled gets cancelled, hitting the O(1)-cancel path hard) plus
+/// self-rescheduling timer chains, then a full drain.
+fn dense_cancel_churn(queue: QueueKind, n: usize) -> IterOut {
+    let mut sim = Sim::with_queue(0u64, queue);
+    let mut rng = Pcg::seeded(0xC0FFEE);
+    let mut ids = Vec::with_capacity(n);
+    for i in 0..n {
+        let t = rng.below(1_000_000);
+        ids.push(sim.schedule_at(t, move |s| {
+            s.state = s.state.wrapping_add(i as u64);
+        }));
+        if rng.chance(0.5) {
+            let j = rng.index(ids.len());
+            sim.cancel(ids[j]);
+        }
+    }
+    let mut ticks = 0u32;
+    every(&mut sim, 500, move |_| {
+        ticks += 1;
+        ticks < 1_000
+    });
+    sim.run_to_completion();
+    IterOut { events: sim.events_processed, peak_pending: sim.peak_pending() }
+}
+
+/// One workload's timed outcome.
+#[derive(Debug, Clone)]
+pub struct WorkloadResult {
+    /// Workload name, `-legacy`-suffixed for the baseline engine.
+    pub name: String,
+    pub queue: &'static str,
+    pub iters: usize,
+    pub warmup: usize,
+    /// Simulation events executed across the timed iterations.
+    pub events_total: u64,
+    /// Highest queue depth any run reached.
+    pub peak_pending: usize,
+    pub wall_ms_mean: f64,
+    pub wall_ms_min: f64,
+    pub wall_ms_max: f64,
+    /// `events_total / total_wall_secs` — the headline hot-path number.
+    pub events_per_sec: f64,
+}
+
+/// A whole bench run.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub name: String,
+    pub smoke: bool,
+    pub workloads: Vec<WorkloadResult>,
+}
+
+fn time_workload(
+    base: &Config,
+    w: BenchWorkload,
+    queue: QueueKind,
+    opts: &BenchOpts,
+) -> WorkloadResult {
+    for _ in 0..opts.warmup {
+        let _ = w.run_once(base, queue, opts.smoke);
+    }
+    let mut wall_ms = Vec::with_capacity(opts.iters);
+    let mut events_total = 0u64;
+    let mut peak_pending = 0usize;
+    for _ in 0..opts.iters.max(1) {
+        let t0 = Instant::now();
+        let out = w.run_once(base, queue, opts.smoke);
+        wall_ms.push(t0.elapsed().as_secs_f64() * 1000.0);
+        events_total += out.events;
+        peak_pending = peak_pending.max(out.peak_pending);
+    }
+    let total_secs: f64 = wall_ms.iter().sum::<f64>() / 1000.0;
+    let events_per_sec = if total_secs > 0.0 { events_total as f64 / total_secs } else { 0.0 };
+    let name = match queue {
+        QueueKind::Slab => w.name().to_string(),
+        QueueKind::Legacy => format!("{}-legacy", w.name()),
+    };
+    WorkloadResult {
+        name,
+        queue: queue.name(),
+        iters: opts.iters.max(1),
+        warmup: opts.warmup,
+        events_total,
+        peak_pending,
+        wall_ms_mean: stats::mean(&wall_ms),
+        wall_ms_min: stats::min(&wall_ms),
+        wall_ms_max: stats::max(&wall_ms),
+        events_per_sec,
+    }
+}
+
+/// Run the full workload matrix. The two hot workloads run on both queue
+/// engines so the report always carries the old-vs-new comparison.
+pub fn run_bench(base: &Config, opts: &BenchOpts) -> BenchReport {
+    let matrix: &[(BenchWorkload, QueueKind)] = &[
+        (BenchWorkload::CampaignSmoke, QueueKind::Slab),
+        (BenchWorkload::CampaignSmoke, QueueKind::Legacy),
+        (BenchWorkload::FuzzBatch, QueueKind::Slab),
+        (BenchWorkload::SoakSlice, QueueKind::Slab),
+        (BenchWorkload::DenseCancelChurn, QueueKind::Slab),
+        (BenchWorkload::DenseCancelChurn, QueueKind::Legacy),
+    ];
+    let workloads =
+        matrix.iter().map(|&(w, q)| time_workload(base, w, q, opts)).collect();
+    BenchReport { name: "sim-hot-path".to_string(), smoke: opts.smoke, workloads }
+}
+
+impl BenchReport {
+    /// Speedup of a slab workload over its `-legacy` twin, if both ran.
+    pub fn speedup(&self, workload: &str) -> Option<f64> {
+        let slab = self.workloads.iter().find(|w| w.name == workload)?;
+        let legacy =
+            self.workloads.iter().find(|w| w.name == format!("{workload}-legacy"))?;
+        if legacy.events_per_sec > 0.0 {
+            Some(slab.events_per_sec / legacy.events_per_sec)
+        } else {
+            None
+        }
+    }
+
+    /// Human-readable table + the old-vs-new ratios.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        writeln!(
+            out,
+            "Bench {:?}{} — {} workloads",
+            self.name,
+            if self.smoke { " (smoke)" } else { "" },
+            self.workloads.len()
+        )
+        .unwrap();
+        writeln!(
+            out,
+            "{:>26} {:>7} {:>6} {:>12} {:>10} {:>12} {:>12}",
+            "workload", "queue", "iters", "events", "peak-q", "ms/iter", "events/s"
+        )
+        .unwrap();
+        for w in &self.workloads {
+            writeln!(
+                out,
+                "{:>26} {:>7} {:>6} {:>12} {:>10} {:>12.1} {:>12.0}",
+                w.name, w.queue, w.iters, w.events_total, w.peak_pending, w.wall_ms_mean,
+                w.events_per_sec
+            )
+            .unwrap();
+        }
+        for base in ["campaign-smoke", "dense-cancel-churn"] {
+            if let Some(x) = self.speedup(base) {
+                writeln!(out, "{base}: slab is {x:.2}x the legacy queue (events/s)").unwrap();
+            }
+        }
+        out
+    }
+
+    /// The report as a JSON document (schema in the module docs).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"bench\": {},\n", json::escape(&self.name)));
+        out.push_str(&format!("  \"smoke\": {},\n", self.smoke));
+        out.push_str("  \"workloads\": [\n");
+        for (i, w) in self.workloads.iter().enumerate() {
+            out.push_str("    {");
+            out.push_str(&format!("\"name\": {}, ", json::escape(&w.name)));
+            out.push_str(&format!("\"queue\": {}, ", json::escape(w.queue)));
+            out.push_str(&format!("\"iters\": {}, ", w.iters));
+            out.push_str(&format!("\"warmup\": {}, ", w.warmup));
+            out.push_str(&format!("\"events_total\": {}, ", w.events_total));
+            out.push_str(&format!("\"peak_pending\": {}, ", w.peak_pending));
+            out.push_str(&format!("\"wall_ms_mean\": {}, ", json_f64(w.wall_ms_mean)));
+            out.push_str(&format!("\"wall_ms_min\": {}, ", json_f64(w.wall_ms_min)));
+            out.push_str(&format!("\"wall_ms_max\": {}, ", json_f64(w.wall_ms_max)));
+            out.push_str(&format!("\"events_per_sec\": {}", json_f64(w.events_per_sec)));
+            out.push_str(if i + 1 == self.workloads.len() { "}\n" } else { "},\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Verify a serialized report parses back with every workload's identity
+/// fields intact (integers exactly, floats bit-for-bit — Rust's shortest
+/// `{}` float repr round-trips).
+pub fn verify_report_json(report: &BenchReport, text: &str) -> Result<()> {
+    let doc = json::parse(text).map_err(|e| anyhow!("bench report json: {e}"))?;
+    ensure!(
+        doc.get("bench").and_then(Json::as_str) == Some(report.name.as_str()),
+        "bench name did not round-trip"
+    );
+    ensure!(
+        doc.get("smoke").and_then(Json::as_bool) == Some(report.smoke),
+        "smoke flag did not round-trip"
+    );
+    let runs = doc
+        .get("workloads")
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow!("missing workloads array"))?;
+    ensure!(
+        runs.len() == report.workloads.len(),
+        "workload count drifted: {} vs {}",
+        runs.len(),
+        report.workloads.len()
+    );
+    for (j, w) in runs.iter().zip(&report.workloads) {
+        ensure!(
+            j.get("name").and_then(Json::as_str) == Some(w.name.as_str()),
+            "workload name did not round-trip"
+        );
+        ensure!(
+            j.get("queue").and_then(Json::as_str) == Some(w.queue),
+            "{}: queue did not round-trip",
+            w.name
+        );
+        ensure!(
+            j.get("events_total").and_then(Json::as_u64) == Some(w.events_total),
+            "{}: events_total did not round-trip",
+            w.name
+        );
+        ensure!(
+            j.get("peak_pending").and_then(Json::as_u64) == Some(w.peak_pending as u64),
+            "{}: peak_pending did not round-trip",
+            w.name
+        );
+        let eps = j
+            .get("events_per_sec")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("{}: events_per_sec missing", w.name))?;
+        ensure!(
+            eps.to_bits() == w.events_per_sec.to_bits(),
+            "{}: events_per_sec did not round-trip",
+            w.name
+        );
+        ensure!(eps >= 0.0, "{}: negative events_per_sec", w.name);
+    }
+    Ok(())
+}
+
+/// Write the report as JSON, read the file back and verify the
+/// round-trip (same contract as the campaign/fuzz exports, so a future
+/// schema change that breaks parsing fails loudly in ci).
+pub fn write_report(report: &BenchReport, path: &str) -> Result<()> {
+    ensure!(path.ends_with(".json"), "bench report path {path:?} must end in .json");
+    let text = report.to_json();
+    std::fs::write(path, &text).with_context(|| format!("writing {path}"))?;
+    let back = std::fs::read_to_string(path).with_context(|| format!("re-reading {path}"))?;
+    verify_report_json(report, &back)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_report() -> BenchReport {
+        BenchReport {
+            name: "sim-hot-path".to_string(),
+            smoke: true,
+            workloads: vec![
+                WorkloadResult {
+                    name: "campaign-smoke".to_string(),
+                    queue: "slab",
+                    iters: 1,
+                    warmup: 0,
+                    events_total: 123_456,
+                    peak_pending: 789,
+                    wall_ms_mean: 12.5,
+                    wall_ms_min: 12.5,
+                    wall_ms_max: 12.5,
+                    events_per_sec: 9_876_543.21,
+                },
+                WorkloadResult {
+                    name: "campaign-smoke-legacy".to_string(),
+                    queue: "legacy",
+                    iters: 1,
+                    warmup: 0,
+                    events_total: 123_456,
+                    peak_pending: 789,
+                    wall_ms_mean: 25.0,
+                    wall_ms_min: 25.0,
+                    wall_ms_max: 25.0,
+                    events_per_sec: 4_938_271.5,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn report_round_trips_through_json() {
+        let r = tiny_report();
+        verify_report_json(&r, &r.to_json()).expect("round trip");
+    }
+
+    #[test]
+    fn verification_catches_drift() {
+        let r = tiny_report();
+        let mut text = r.to_json();
+        text = text.replace("123456", "123457");
+        assert!(verify_report_json(&r, &text).is_err(), "event drift must fail");
+        assert!(verify_report_json(&r, "{}").is_err(), "empty doc must fail");
+        assert!(verify_report_json(&r, "not json").is_err());
+    }
+
+    #[test]
+    fn speedup_reads_the_legacy_twin() {
+        let r = tiny_report();
+        let x = r.speedup("campaign-smoke").expect("both rows present");
+        assert!((x - 2.0).abs() < 1e-9, "speedup {x}");
+        assert!(r.speedup("fuzz-batch").is_none());
+    }
+
+    #[test]
+    fn dense_cancel_churn_is_deterministic_and_queue_agnostic() {
+        let a = dense_cancel_churn(QueueKind::Slab, 5_000);
+        let b = dense_cancel_churn(QueueKind::Slab, 5_000);
+        assert_eq!(a.events, b.events, "same seed ⇒ same event count");
+        assert_eq!(a.peak_pending, b.peak_pending);
+        let c = dense_cancel_churn(QueueKind::Legacy, 5_000);
+        assert_eq!(a.events, c.events, "engines must execute the same schedule");
+        assert_eq!(a.peak_pending, c.peak_pending);
+        assert!(a.events > 5_000 / 2, "survivors + 1000 timer ticks executed");
+    }
+
+    #[test]
+    fn campaign_smoke_workload_agrees_across_engines() {
+        // One real (tiny) timed pass per engine: identical schedules must
+        // execute identical event counts and reach identical peak depth;
+        // the full 6-workload matrix runs in release through the ci.sh
+        // `bench --smoke` gate.
+        let base = Config::default();
+        let opts = BenchOpts::smoke();
+        let slab = time_workload(&base, BenchWorkload::CampaignSmoke, QueueKind::Slab, &opts);
+        let legacy =
+            time_workload(&base, BenchWorkload::CampaignSmoke, QueueKind::Legacy, &opts);
+        assert!(slab.events_total > 0, "no events executed");
+        assert_eq!(
+            slab.events_total, legacy.events_total,
+            "both engines must run the identical smoke campaign"
+        );
+        assert_eq!(slab.peak_pending, legacy.peak_pending);
+        assert_eq!(legacy.name, "campaign-smoke-legacy");
+        assert_eq!((slab.queue, legacy.queue), ("slab", "legacy"));
+        let r = BenchReport {
+            name: "sim-hot-path".to_string(),
+            smoke: true,
+            workloads: vec![slab, legacy],
+        };
+        assert!(r.speedup("campaign-smoke").is_some());
+        verify_report_json(&r, &r.to_json()).expect("live report round-trips");
+    }
+}

@@ -13,6 +13,8 @@
 //!   fuzz [--cases N] [--seed S]                  chaos-fuzz random scenarios
 //!        [--soak MINUTES] [--repro out.toml]     ... soak / write minimal repro
 //!        [--report out.json]                     ... and export the fuzz report
+//!   bench [--smoke] [--iters N]                  time the sim hot-path workloads
+//!         [--report BENCH_sim.json]              ... and export the perf report
 //!   all                                          every figure in sequence
 //! ```
 
@@ -24,10 +26,10 @@ use crate::ids::DcId;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: houtu <fig2|fig3|fig7|fig8|fig9|fig10|fig11|fig12|theorem1|run|trace|campaign|fuzz|export|all> \
+        "usage: houtu <fig2|fig3|fig7|fig8|fig9|fig10|fig11|fig12|theorem1|run|trace|campaign|fuzz|bench|export|all> \
          [--config FILE] [--set section.key=value]... [--deployment D] [--workload W] [--size S] \
          [--spec FILE] [--smoke] [--report out.json|out.csv] \
-         [--cases N] [--seed S] [--soak MINUTES] [--repro out.toml]"
+         [--cases N] [--seed S] [--soak MINUTES] [--repro out.toml] [--iters N]"
     );
     std::process::exit(2);
 }
@@ -55,6 +57,8 @@ pub struct Cli {
     /// Where to write the first failure's minimal repro TOML
     /// (`fuzz --repro out.toml`).
     pub repro: Option<String>,
+    /// Timed iterations per bench workload (`bench --iters N`).
+    pub iters: Option<usize>,
 }
 
 pub fn parse(args: &[String]) -> Cli {
@@ -73,6 +77,7 @@ pub fn parse(args: &[String]) -> Cli {
     let mut fuzz_seed = 1u64;
     let mut soak_minutes = None;
     let mut repro = None;
+    let mut iters = None;
     let mut i = 1;
     while i < args.len() {
         match args[i].as_str() {
@@ -156,6 +161,15 @@ pub fn parse(args: &[String]) -> Cli {
                 i += 1;
                 repro = Some(args.get(i).unwrap_or_else(|| usage()).clone());
             }
+            "--iters" => {
+                i += 1;
+                iters = Some(
+                    args.get(i)
+                        .and_then(|s| s.parse::<usize>().ok())
+                        .filter(|&n| n > 0)
+                        .unwrap_or_else(|| usage()),
+                );
+            }
             other => {
                 eprintln!("unknown flag {other:?}");
                 usage();
@@ -176,6 +190,7 @@ pub fn parse(args: &[String]) -> Cli {
         fuzz_seed,
         soak_minutes,
         repro,
+        iters,
     }
 }
 
@@ -329,6 +344,27 @@ pub fn run(cli: &Cli) {
                     report.cases
                 );
                 std::process::exit(1);
+            }
+        }
+        "bench" => {
+            use crate::bench::{self, BenchOpts};
+            let mut opts = if cli.smoke { BenchOpts::smoke() } else { BenchOpts::default() };
+            if let Some(n) = cli.iters {
+                opts.iters = n;
+            }
+            let report = bench::run_bench(cfg, &opts);
+            print!("{}", report.render());
+            if let Some(path) = &cli.report {
+                match bench::write_report(&report, path) {
+                    Ok(()) => println!(
+                        "wrote {path} (json, {} workloads, round-trip OK)",
+                        report.workloads.len()
+                    ),
+                    Err(e) => {
+                        eprintln!("bench report export failed: {e:#}");
+                        std::process::exit(1);
+                    }
+                }
             }
         }
         "trace" => {

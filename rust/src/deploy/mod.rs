@@ -19,17 +19,31 @@ pub use world::{JobRt, World, WorldSim};
 use crate::config::{Config, Deployment};
 use crate::dag::{SizeClass, WorkloadKind};
 use crate::ids::DcId;
-use crate::sim::{secs, secs_f, Sim, SimTime};
+use crate::sim::{secs, secs_f, QueueKind, Sim, SimTime};
 use crate::workloads::TraceEntry;
 
-/// Build a simulation with timers installed up to `horizon`. The sim's
-/// step hook drives the trace bus clock: the tracer sees each event's
-/// time (and counts the step) before the event closure runs, so every
-/// emission inside the closure carries the right stamp.
+/// Build a simulation with timers installed up to `horizon`. The sim
+/// advances the trace bus's shared [`crate::sim::StepClock`] inline: the
+/// tracer sees each event's time (and counts the step) before the event
+/// closure runs, so every emission inside the closure carries the right
+/// stamp — without a boxed step-hook call per event.
 pub fn build_sim(cfg: Config, mode: Deployment, horizon: SimTime) -> WorldSim {
+    build_sim_with(cfg, mode, horizon, QueueKind::Slab)
+}
+
+/// [`build_sim`] on an explicit queue engine. The differential suites
+/// and `houtu bench` run whole campaigns on [`QueueKind::Legacy`] to
+/// prove (and measure) the slab queue against the pre-swap baseline.
+pub fn build_sim_with(
+    cfg: Config,
+    mode: Deployment,
+    horizon: SimTime,
+    queue: QueueKind,
+) -> WorldSim {
     let world = World::new(cfg, mode);
-    let mut sim = Sim::new(world);
-    sim.set_step_hook(|w: &mut World, now| w.tracer.on_step(now));
+    let clock = world.tracer.clock();
+    let mut sim = Sim::with_queue(world, queue);
+    sim.attach_clock(clock);
     install_timers(&mut sim, horizon);
     sim
 }

@@ -6,6 +6,7 @@
 //! See DESIGN.md for the system inventory and the per-figure experiment
 //! index, and EXPERIMENTS.md for measured results.
 
+pub mod bench;
 pub mod cli;
 pub mod cloud;
 pub mod dag;

@@ -85,7 +85,8 @@ pub use fuzz::{
 pub use invariants::{check_world, probe_world, StreamChecker, Violation};
 pub use report::write_and_verify;
 pub use runner::{
-    run_campaign, run_digest, run_one, run_scenario, CampaignReport, FinishedRun, RunReport,
+    run_campaign, run_digest, run_one, run_scenario, run_scenario_on, CampaignReport, FinishedRun,
+    RunReport,
 };
 pub use spec::{CampaignSpec, ChaosEvent, ScenarioSpec, ScenarioWorkload};
 

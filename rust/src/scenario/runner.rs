@@ -12,9 +12,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::config::Config;
-use crate::deploy::{build_sim, inject_hogs, kill_dc, kill_jm_host, kill_node, schedule_trace, submit_job, World, WorldSim};
+use crate::deploy::{build_sim_with, inject_hogs, kill_dc, kill_jm_host, kill_node, schedule_trace, submit_job, World, WorldSim};
 use crate::ids::{DcId, JmId, JobId};
-use crate::sim::{secs, secs_f, SimTime};
+use crate::sim::{secs, secs_f, QueueKind, SimTime};
 use crate::trace::{Fnv64, TraceEvent};
 use crate::util::error::Result;
 
@@ -25,6 +25,9 @@ use super::spec::{CampaignSpec, ChaosEvent, ScenarioSpec, ScenarioWorkload};
 pub struct FinishedRun {
     pub world: World,
     pub events_processed: u64,
+    /// High-water mark of the event queue over the run (the bench
+    /// harness reports it as peak queue depth).
+    pub peak_pending: usize,
 }
 
 /// Execute one scenario at one seed and return the finished world.
@@ -36,12 +39,25 @@ pub struct FinishedRun {
 /// `World::probe_violations`, which [`check_world`] folds into the
 /// campaign verdict and the preset regression tests assert empty.
 pub fn run_scenario(base: &Config, spec: &ScenarioSpec, seed: u64) -> Result<FinishedRun> {
+    run_scenario_on(base, spec, seed, QueueKind::Slab)
+}
+
+/// [`run_scenario`] on an explicit queue engine. The golden-digest suite
+/// replays every standard-campaign cell on [`QueueKind::Legacy`] and
+/// asserts the digests match the slab queue bit-for-bit; `houtu bench`
+/// times the same pair.
+pub fn run_scenario_on(
+    base: &Config,
+    spec: &ScenarioSpec,
+    seed: u64,
+    queue: QueueKind,
+) -> Result<FinishedRun> {
     let cfg = spec.build_config(base, seed)?;
     let mode = cfg.deployment;
     let (mut sim, horizon) = match spec.workload {
         ScenarioWorkload::SingleJob { kind, size, home } => {
             let horizon = secs(14_400);
-            let mut sim = build_sim(cfg, mode, horizon);
+            let mut sim = build_sim_with(cfg, mode, horizon, queue);
             sim.schedule_at(1, move |sim| {
                 submit_job(sim, kind, size, home);
             });
@@ -49,7 +65,7 @@ pub fn run_scenario(base: &Config, spec: &ScenarioSpec, seed: u64) -> Result<Fin
         }
         ScenarioWorkload::Trace { .. } => {
             let (trace, horizon) = crate::deploy::online_trace(&cfg);
-            let mut sim = build_sim(cfg, mode, horizon);
+            let mut sim = build_sim_with(cfg, mode, horizon, queue);
             schedule_trace(&mut sim, &trace);
             (sim, horizon)
         }
@@ -68,7 +84,11 @@ pub fn run_scenario(base: &Config, spec: &ScenarioSpec, seed: u64) -> Result<Fin
             sim.state.probe_violations.push(v.clone());
         }
     }
-    Ok(FinishedRun { events_processed: sim.events_processed, world: sim.state })
+    Ok(FinishedRun {
+        events_processed: sim.events_processed,
+        peak_pending: sim.peak_pending(),
+        world: sim.state,
+    })
 }
 
 /// Place the spec's chaos events on the simulation timeline.
@@ -399,8 +419,10 @@ pub(crate) fn resolve_workers(parallelism: usize, jobs: usize) -> usize {
 
 /// Run `n` indexed jobs on a pool of `workers` `std::thread`s and collect
 /// the results in index order, independent of worker interleaving. Shared
-/// by the campaign runner and the chaos fuzzer.
-pub(crate) fn par_map<T: Send>(workers: usize, n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+/// by the campaign runner, the chaos fuzzer and (hence `pub`, but hidden
+/// — not a stable API) the golden-digest differential suite.
+#[doc(hidden)]
+pub fn par_map<T: Send>(workers: usize, n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
     let next = AtomicUsize::new(0);
     let slots: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
     std::thread::scope(|s| {

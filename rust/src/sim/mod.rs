@@ -2,17 +2,60 @@
 //!
 //! The whole geo-distributed testbed (four data centers, WAN, spot market,
 //! masters, job managers) runs on this engine: a virtual millisecond clock
-//! and a binary-heap event queue with a monotone tie-breaking sequence
-//! number, so a run is a pure function of (config, seed). Events are boxed
+//! and an event queue with a monotone tie-breaking sequence number, so a
+//! run is a pure function of (config, seed). Events are boxed
 //! `FnOnce(&mut Sim<S>)` closures over the world state `S`; an event may
 //! freely inspect/mutate the state and schedule further events.
 //!
-//! Events can be cancelled (heartbeat timers, speculative timeouts) via the
-//! [`EventId`] returned by `schedule_*`; cancelled entries are lazily
-//! skipped at pop time.
+//! # Queue invariants
+//!
+//! The hot path is the queue, so its contract is spelled out here and
+//! enforced by the property/differential suites (`rust/tests/sim_queue.rs`,
+//! `rust/tests/golden_digests.rs`); both engines in [`queue`] implement it:
+//!
+//! 1. **Total order.** Events pop in strictly increasing `(time, seq)`
+//!    order, where `seq` is the per-sim monotone schedule counter. Since
+//!    `seq` is unique, same-time events are FIFO in schedule order —
+//!    the determinism contract every replay digest pins.
+//! 2. **Exact `pending()`.** `pending()` counts exactly the events that
+//!    were scheduled and have neither fired nor been cancelled — it is a
+//!    maintained counter, never `heap_len - tombstones`.
+//! 3. **Cancel is O(1) and cancel-after-fire is a true no-op.**
+//!    [`Sim::cancel`] returns `true` iff the event was still live; a
+//!    stale [`EventId`] (fired, cancelled, or its slot since reused)
+//!    returns `false` and perturbs nothing.
+//! 4. **No time travel.** `schedule_at` clamps to `now`; the clock never
+//!    moves backwards.
+//! 5. **Horizon boundary.** [`Sim::run_until`]`(t)` executes every event
+//!    with timestamp `≤ t` — including events scheduled *at exactly `t`*
+//!    by other events firing at `t` (periodic re-arms landing on the
+//!    horizon included) — before stopping, then leaves the clock at `t`.
+//!
+//! The production engine ([`queue::SlabQueue`]) keeps closures in a
+//! generation-stamped slab and orders bare `(time, seq, slot)` triples in
+//! an index-only 4-ary heap: cancels vacate the slot in O(1) and stale
+//! heap entries are skipped lazily at pop, so no tombstone sets exist.
+//! The pre-overhaul engine ([`queue::LegacyQueue`]) is vendored as the
+//! executable golden baseline; [`Sim::with_queue`] selects at runtime so
+//! differential tests and `houtu bench` replay identical schedules on
+//! both.
+//!
+//! # Step clock
+//!
+//! The trace bus used to ride a boxed per-event step hook (a dynamic
+//! dispatch + `RefCell` borrow per event just to advance a clock). The
+//! sim now updates an optional shared [`StepClock`] inline — two `Cell`
+//! stores — and the tracer reads it lazily when an event is actually
+//! published; the boxed [`Sim::set_step_hook`] remains for consumers
+//! that need to observe state between events.
 
-use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashSet};
+use std::cell::Cell;
+use std::rc::Rc;
+
+pub mod queue;
+
+pub use queue::{LegacyQueue, Popped, QueueKind, SlabQueue};
+use queue::QueueImpl;
 
 /// Virtual time in milliseconds since simulation start.
 pub type SimTime = u64;
@@ -32,35 +75,66 @@ pub fn to_secs(t: SimTime) -> f64 {
     t as f64 / 1000.0
 }
 
-/// Handle for cancelling a scheduled event.
+/// Handle for cancelling a scheduled event. Opaque: the slab engine packs
+/// `(slot, generation)` into it, the legacy engine packs the schedule
+/// seq; ids are only meaningful to the sim that issued them.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct EventId(u64);
 
-type EventFn<S> = Box<dyn FnOnce(&mut Sim<S>)>;
+impl EventId {
+    /// Slab encoding: generation in the high 32 bits, slot in the low.
+    pub(crate) fn pack(slot: u32, gen: u32) -> EventId {
+        EventId(((gen as u64) << 32) | slot as u64)
+    }
+
+    pub(crate) fn unpack(self) -> (u32, u32) {
+        (self.0 as u32, (self.0 >> 32) as u32)
+    }
+
+    /// Legacy encoding: the raw schedule seq.
+    pub(crate) fn pack_seq(seq: u64) -> EventId {
+        EventId(seq)
+    }
+
+    pub(crate) fn raw(self) -> u64 {
+        self.0
+    }
+}
+
+/// Boxed event closure over world state `S`.
+pub type EventFn<S> = Box<dyn FnOnce(&mut Sim<S>)>;
+
 type StepHook<S> = Box<dyn FnMut(&mut S, SimTime)>;
 
-struct Entry<S> {
-    time: SimTime,
-    seq: u64,
-    f: EventFn<S>,
+/// Shared `(now, steps)` cells the sim advances inline on every step —
+/// the zero-dispatch replacement for clock-only step hooks. The trace
+/// bus holds one and stamps published events from it lazily, so a step
+/// that publishes nothing costs two `Cell` stores and no `RefCell`
+/// borrow, no boxed call.
+#[derive(Debug, Default)]
+pub struct StepClock {
+    now: Cell<SimTime>,
+    steps: Cell<u64>,
 }
 
-impl<S> PartialEq for Entry<S> {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
+impl StepClock {
+    /// Advance to an executing event's time and count the step.
+    #[inline]
+    pub fn advance(&self, t: SimTime) {
+        self.now.set(t);
+        self.steps.set(self.steps.get() + 1);
     }
-}
-impl<S> Eq for Entry<S> {}
-impl<S> PartialOrd for Entry<S> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
+
+    /// Last time advanced to (the stamp clock).
+    #[inline]
+    pub fn now(&self) -> SimTime {
+        self.now.get()
     }
-}
-impl<S> Ord for Entry<S> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap; invert so the earliest (time, seq) pops
-        // first. seq keeps same-time events FIFO => deterministic replay.
-        other.time.cmp(&self.time).then(other.seq.cmp(&self.seq))
+
+    /// Steps counted so far.
+    #[inline]
+    pub fn steps(&self) -> u64 {
+        self.steps.get()
     }
 }
 
@@ -70,37 +144,55 @@ pub struct Sim<S> {
     pub state: S,
     now: SimTime,
     seq: u64,
-    queue: BinaryHeap<Entry<S>>,
-    /// Seqs scheduled and neither fired nor cancelled yet. Keeping the
-    /// live set explicit (instead of `queue.len() - cancelled.len()`)
-    /// makes cancel-after-fire a true no-op and [`Sim::pending`] exact.
-    live: HashSet<u64>,
-    cancelled: HashSet<u64>,
+    queue: QueueImpl<S>,
+    /// Advanced inline before each event closure (no dynamic dispatch).
+    clock: Option<Rc<StepClock>>,
     /// Called after the clock advances to each event's time, before the
-    /// event closure runs (the trace bus rides on this).
+    /// event closure runs.
     hook: Option<StepHook<S>>,
     /// Total events executed (for perf accounting / runaway detection).
     pub events_processed: u64,
+    peak_pending: usize,
 }
 
 impl<S> Sim<S> {
+    /// A sim on the production slab queue.
     pub fn new(state: S) -> Self {
+        Sim::with_queue(state, QueueKind::Slab)
+    }
+
+    /// A sim on an explicit queue engine (differential tests and
+    /// `houtu bench` run the same schedule on both).
+    pub fn with_queue(state: S, kind: QueueKind) -> Self {
         Sim {
             state,
             now: 0,
             seq: 0,
-            queue: BinaryHeap::new(),
-            live: HashSet::new(),
-            cancelled: HashSet::new(),
+            queue: QueueImpl::new(kind),
+            clock: None,
             hook: None,
             events_processed: 0,
+            peak_pending: 0,
         }
+    }
+
+    /// Which queue engine this sim runs on.
+    pub fn queue_kind(&self) -> QueueKind {
+        self.queue.kind()
+    }
+
+    /// Attach the shared step clock; the sim advances it inline right
+    /// before each event closure runs (and before the boxed hook, if
+    /// any), so everything the closure publishes sees the event's time.
+    pub fn attach_clock(&mut self, clock: Rc<StepClock>) {
+        self.clock = Some(clock);
     }
 
     /// Install the per-step hook: it observes `(state, time)` right after
     /// the clock advances to an event's timestamp and right before the
     /// event closure runs, so anything the closure does can rely on the
-    /// hook having seen the current time.
+    /// hook having seen the current time. Prefer [`Sim::attach_clock`]
+    /// when all the hook would do is advance a clock.
     pub fn set_step_hook(&mut self, hook: impl FnMut(&mut S, SimTime) + 'static) {
         self.hook = Some(Box::new(hook));
     }
@@ -119,7 +211,13 @@ impl<S> Sim<S> {
 
     /// Number of pending (non-cancelled, not-yet-fired) events.
     pub fn pending(&self) -> usize {
-        self.live.len()
+        self.queue.pending()
+    }
+
+    /// High-water mark of [`Sim::pending`] over the run so far (the
+    /// bench harness reports it as peak queue depth).
+    pub fn peak_pending(&self) -> usize {
+        self.peak_pending
     }
 
     /// Schedule `f` at absolute virtual time `t` (clamped to now).
@@ -127,9 +225,12 @@ impl<S> Sim<S> {
         let t = t.max(self.now);
         let seq = self.seq;
         self.seq += 1;
-        self.live.insert(seq);
-        self.queue.push(Entry { time: t, seq, f: Box::new(f) });
-        EventId(seq)
+        let id = self.queue.schedule(t, seq, Box::new(f));
+        let live = self.queue.pending();
+        if live > self.peak_pending {
+            self.peak_pending = live;
+        }
+        id
     }
 
     /// Schedule `f` after `delay` ms.
@@ -151,32 +252,19 @@ impl<S> Sim<S> {
     /// (or was already cancelled). Returns whether the id was newly
     /// cancelled — i.e. whether it was still live.
     pub fn cancel(&mut self, id: EventId) -> bool {
-        if self.live.remove(&id.0) {
-            self.cancelled.insert(id.0);
-            true
-        } else {
-            false
-        }
-    }
-
-    fn pop_live(&mut self) -> Option<Entry<S>> {
-        while let Some(e) = self.queue.pop() {
-            if self.cancelled.remove(&e.seq) {
-                continue;
-            }
-            self.live.remove(&e.seq);
-            return Some(e);
-        }
-        None
+        self.queue.cancel(id)
     }
 
     /// Execute the next event; returns false when the queue is empty.
     pub fn step(&mut self) -> bool {
-        match self.pop_live() {
+        match self.queue.pop() {
             Some(e) => {
                 debug_assert!(e.time >= self.now, "time went backwards");
                 self.now = e.time;
                 self.events_processed += 1;
+                if let Some(clock) = &self.clock {
+                    clock.advance(e.time);
+                }
                 if let Some(hook) = self.hook.as_mut() {
                     hook(&mut self.state, e.time);
                 }
@@ -199,26 +287,18 @@ impl<S> Sim<S> {
         self.events_processed - start
     }
 
-    /// Run until virtual time reaches `t` (events at exactly `t` included)
-    /// or the queue empties. The clock is advanced to `t` at the end.
+    /// Run until virtual time reaches `t` or the queue empties, then
+    /// advance the clock to `t`. Events at exactly `t` are included —
+    /// also ones scheduled *during* the run by other events at `t`, so a
+    /// periodic timer whose tick lands exactly on the horizon fires (and
+    /// re-arms) before the run stops. Pinned by
+    /// `run_until_fires_periodic_event_exactly_at_horizon` below.
     pub fn run_until(&mut self, t: SimTime) {
-        loop {
-            let next = loop {
-                match self.queue.peek() {
-                    Some(e) if self.cancelled.contains(&e.seq) => {
-                        let e = self.queue.pop().unwrap();
-                        self.cancelled.remove(&e.seq);
-                    }
-                    Some(e) => break Some(e.time),
-                    None => break None,
-                }
-            };
-            match next {
-                Some(nt) if nt <= t => {
-                    self.step();
-                }
-                _ => break,
+        while let Some(next) = self.queue.next_time() {
+            if next > t {
+                break;
             }
+            self.step();
         }
         self.now = self.now.max(t);
     }
@@ -232,6 +312,13 @@ impl<S> Sim<S> {
 
 /// Periodic timer helper: reschedules itself every `period` ms until the
 /// predicate returns false. The closure receives the sim.
+///
+/// The first tick is a real queued event at the current time (via
+/// [`Sim::defer`]) rather than a synchronous call — so it is counted in
+/// `events_processed`, the step clock/hook see it, and it is FIFO-ordered
+/// against already-queued same-time events. (It used to run inline at
+/// arm time, invisibly to the step hook — the clock stamped its effects
+/// with the *previous* event's time.)
 pub fn every<S: 'static>(
     sim: &mut Sim<S>,
     period: SimTime,
@@ -248,9 +335,11 @@ pub fn every<S: 'static>(
             }
         });
     }
-    if tick(sim) {
-        arm(sim, period, tick);
-    }
+    sim.defer(move |sim| {
+        if tick(sim) {
+            arm(sim, period, tick);
+        }
+    });
 }
 
 #[cfg(test)]
@@ -272,12 +361,14 @@ mod tests {
 
     #[test]
     fn same_time_events_are_fifo() {
-        let mut sim = Sim::new(Vec::<u32>::new());
-        for i in 0..100 {
-            sim.schedule_at(secs(5), move |s| s.state.push(i));
+        for kind in [QueueKind::Slab, QueueKind::Legacy] {
+            let mut sim = Sim::with_queue(Vec::<u32>::new(), kind);
+            for i in 0..100 {
+                sim.schedule_at(secs(5), move |s| s.state.push(i));
+            }
+            sim.run_to_completion();
+            assert_eq!(sim.state, (0..100).collect::<Vec<_>>(), "{:?}", kind);
         }
-        sim.run_to_completion();
-        assert_eq!(sim.state, (0..100).collect::<Vec<_>>());
     }
 
     #[test]
@@ -294,13 +385,15 @@ mod tests {
 
     #[test]
     fn cancellation_skips_event() {
-        let mut sim = Sim::new(0u64);
-        let id = sim.schedule_at(10, |s| s.state += 1);
-        sim.schedule_at(5, |s| s.state += 100);
-        assert!(sim.cancel(id));
-        assert!(!sim.cancel(id), "double-cancel is a no-op");
-        sim.run_to_completion();
-        assert_eq!(sim.state, 100);
+        for kind in [QueueKind::Slab, QueueKind::Legacy] {
+            let mut sim = Sim::with_queue(0u64, kind);
+            let id = sim.schedule_at(10, |s| s.state += 1);
+            sim.schedule_at(5, |s| s.state += 100);
+            assert!(sim.cancel(id));
+            assert!(!sim.cancel(id), "double-cancel is a no-op");
+            sim.run_to_completion();
+            assert_eq!(sim.state, 100, "{:?}", kind);
+        }
     }
 
     #[test]
@@ -333,10 +426,79 @@ mod tests {
         assert_eq!(sim.now(), secs(4));
     }
 
+    /// Regression pin for the horizon-boundary semantics (queue
+    /// invariant 5): a periodic tick landing exactly on the `run_until`
+    /// horizon fires before the run stops — including the re-arm case
+    /// where the at-`t` tick schedules the next tick — and ticks beyond
+    /// the horizon stay queued for the next run.
     #[test]
-    fn determinism_across_runs() {
-        fn run_once() -> (Vec<u32>, SimTime) {
-            let mut sim = Sim::new(Vec::new());
+    fn run_until_fires_periodic_event_exactly_at_horizon() {
+        for kind in [QueueKind::Slab, QueueKind::Legacy] {
+            let ticks = Rc::new(RefCell::new(Vec::<SimTime>::new()));
+            let t2 = ticks.clone();
+            let mut sim = Sim::with_queue((), kind);
+            every(&mut sim, secs(10), move |sim| {
+                t2.borrow_mut().push(sim.now());
+                true
+            });
+            sim.run_until(secs(30)); // ticks at 0, 10, 20 and exactly 30
+            assert_eq!(
+                *ticks.borrow(),
+                vec![0, secs(10), secs(20), secs(30)],
+                "{:?}: the horizon tick must fire before the run stops",
+                kind
+            );
+            assert_eq!(sim.now(), secs(30));
+            assert_eq!(sim.pending(), 1, "{:?}: the re-arm at 40s stays queued", kind);
+            // A second run picks up exactly where the boundary left off.
+            sim.run_until(secs(40));
+            assert_eq!(ticks.borrow().last(), Some(&secs(40)), "{:?}", kind);
+        }
+    }
+
+    /// Same-time chains spawned at the horizon drain before the stop:
+    /// an event at `t` defers work to `t`, which defers again — all of
+    /// it runs inside `run_until(t)`.
+    #[test]
+    fn run_until_drains_same_time_chains_at_horizon() {
+        for kind in [QueueKind::Slab, QueueKind::Legacy] {
+            let mut sim = Sim::with_queue(Vec::<u32>::new(), kind);
+            sim.schedule_at(secs(7), |s| {
+                s.state.push(1);
+                s.defer(|s| {
+                    s.state.push(2);
+                    s.defer(|s| s.state.push(3));
+                });
+            });
+            sim.run_until(secs(7));
+            assert_eq!(sim.state, vec![1, 2, 3], "{:?}", kind);
+            assert_eq!(sim.pending(), 0);
+        }
+    }
+
+    /// `every`'s first tick is a queued event, not a synchronous call:
+    /// the step clock and hook observe it, it counts as a step, and it
+    /// runs FIFO after same-time events queued before it.
+    #[test]
+    fn every_first_tick_is_a_real_event() {
+        let mut sim = Sim::new(Vec::<&'static str>::new());
+        let clock = Rc::new(StepClock::default());
+        sim.attach_clock(clock.clone());
+        sim.schedule_at(0, |s| s.state.push("queued-first"));
+        every(&mut sim, secs(1), |s| {
+            s.state.push("tick");
+            false
+        });
+        sim.run_until(0);
+        assert_eq!(sim.state, vec!["queued-first", "tick"]);
+        assert_eq!(sim.events_processed, 2);
+        assert_eq!(clock.steps(), 2, "the first tick must be clock-visible");
+    }
+
+    #[test]
+    fn determinism_across_runs_and_queue_engines() {
+        fn run_once(kind: QueueKind) -> (Vec<u32>, SimTime) {
+            let mut sim = Sim::with_queue(Vec::new(), kind);
             let mut rng = crate::util::Pcg::seeded(99);
             for i in 0..500u32 {
                 let t = rng.below(10_000);
@@ -346,7 +508,12 @@ mod tests {
             let now = sim.now();
             (sim.state, now)
         }
-        assert_eq!(run_once(), run_once());
+        assert_eq!(run_once(QueueKind::Slab), run_once(QueueKind::Slab));
+        assert_eq!(
+            run_once(QueueKind::Slab),
+            run_once(QueueKind::Legacy),
+            "both engines must replay the same schedule identically"
+        );
     }
 
     #[test]
@@ -388,9 +555,23 @@ mod tests {
     }
 
     #[test]
+    fn peak_pending_tracks_high_water_mark() {
+        let mut sim = Sim::new(());
+        for t in 0..8u64 {
+            sim.schedule_at(t, |_| {});
+        }
+        assert_eq!(sim.peak_pending(), 8);
+        sim.run_to_completion();
+        assert_eq!(sim.pending(), 0);
+        assert_eq!(sim.peak_pending(), 8, "peak survives the drain");
+        sim.schedule_at(100, |_| {});
+        assert_eq!(sim.peak_pending(), 8, "lower watermark never lowers the peak");
+    }
+
+    #[test]
     fn step_hook_runs_before_each_event() {
         // The hook must see each event's time before its closure runs, so
-        // closures can rely on hook-maintained state (the trace clock).
+        // closures can rely on hook-maintained state.
         let mut sim = Sim::new((0 as SimTime, Vec::<bool>::new()));
         sim.set_step_hook(|s, now| s.0 = now);
         for t in [3u64, 7, 7, 12] {
@@ -401,6 +582,22 @@ mod tests {
         }
         sim.run_to_completion();
         assert_eq!(sim.state.1, vec![true; 4]);
+    }
+
+    #[test]
+    fn attached_clock_advances_before_each_event() {
+        let mut sim = Sim::new(Vec::<bool>::new());
+        let clock = Rc::new(StepClock::default());
+        sim.attach_clock(clock.clone());
+        for t in [3u64, 7, 7, 12] {
+            let c = clock.clone();
+            sim.schedule_at(t, move |sim| {
+                sim.state.push(c.now() == t);
+            });
+        }
+        sim.run_to_completion();
+        assert_eq!(sim.state, vec![true; 4]);
+        assert_eq!(clock.steps(), 4);
     }
 
     #[test]

@@ -1,0 +1,512 @@
+//! Event-queue implementations behind the simulation core.
+//!
+//! Two interchangeable engines live here:
+//!
+//! * [`SlabQueue`] — the production queue: a generation-stamped slab holds
+//!   the event closures, an index-only 4-ary min-heap orders bare
+//!   `(time, seq, slot)` triples. Cancel is O(1) (vacate the slot; the
+//!   stale heap entry is skipped lazily at pop), `pending()` is an exact
+//!   counter, and there are no side tombstone sets.
+//! * [`LegacyQueue`] — the pre-overhaul queue (`BinaryHeap<Entry>` of
+//!   boxed closures plus `live`/`cancelled` `HashSet`s), vendored
+//!   verbatim. It is the executable golden record: the differential
+//!   suites (`rust/tests/sim_queue.rs`, `rust/tests/golden_digests.rs`)
+//!   replay generated schedules and whole campaign cells on both engines
+//!   and assert bit-identical pop orders and replay digests, and
+//!   `houtu bench` runs the campaign-smoke workload on both so every
+//!   report carries the measured old-vs-new ratio.
+//!
+//! Both engines implement the same contract (see the invariants block in
+//! [`crate::sim`]): pops are ordered by `(time, seq)` with `seq` the
+//! caller-supplied strictly-monotone schedule counter, so same-time
+//! events are FIFO and the pop order is a pure function of the schedule
+//! — the determinism the replay digests pin.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashSet};
+
+use super::{EventFn, EventId, SimTime};
+
+/// Which queue engine a [`crate::sim::Sim`] runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueKind {
+    /// Generation-stamped slab + index-only 4-ary heap (production).
+    Slab,
+    /// Pre-overhaul `BinaryHeap` + tombstone sets (differential baseline).
+    Legacy,
+}
+
+impl QueueKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            QueueKind::Slab => "slab",
+            QueueKind::Legacy => "legacy",
+        }
+    }
+}
+
+/// A popped event: its scheduled time, schedule seq, and closure.
+pub struct Popped<S> {
+    pub time: SimTime,
+    pub seq: u64,
+    pub f: EventFn<S>,
+}
+
+// ---------------------------------------------------------------------------
+// SlabQueue: generation-stamped slab + index-only 4-ary min-heap.
+// ---------------------------------------------------------------------------
+
+/// Sentinel for "no free slot" in the slab free list.
+const NO_FREE: u32 = u32::MAX;
+
+struct Slot<S> {
+    /// Bumped every time the slot is vacated (fire or cancel), so stale
+    /// [`EventId`]s held by callers can never cancel a reused slot.
+    gen: u32,
+    /// Free-list link, meaningful only while vacant.
+    next_free: u32,
+    /// Schedule seq of the occupying event; `f.is_some()` ⇒ valid.
+    seq: u64,
+    /// The closure; `Some` iff the slot is occupied (event still live).
+    f: Option<EventFn<S>>,
+}
+
+/// Bare ordering triple the 4-ary heap stores — no closure, 24 bytes.
+#[derive(Clone, Copy)]
+struct HeapEntry {
+    time: SimTime,
+    seq: u64,
+    slot: u32,
+}
+
+#[inline]
+fn key(e: &HeapEntry) -> (SimTime, u64) {
+    (e.time, e.seq)
+}
+
+/// The production event queue. See the module docs for the design.
+pub struct SlabQueue<S> {
+    slots: Vec<Slot<S>>,
+    free_head: u32,
+    heap: Vec<HeapEntry>,
+    /// Exact count of live (scheduled, not fired, not cancelled) events.
+    live: usize,
+}
+
+impl<S> Default for SlabQueue<S> {
+    fn default() -> Self {
+        SlabQueue::new()
+    }
+}
+
+impl<S> SlabQueue<S> {
+    pub fn new() -> Self {
+        SlabQueue { slots: Vec::new(), free_head: NO_FREE, heap: Vec::new(), live: 0 }
+    }
+
+    /// Schedule a closure. `seq` must be strictly monotone across calls
+    /// (the sim owns the counter); it is both the FIFO tie-break and the
+    /// staleness check for lazily-skipped heap entries.
+    pub fn schedule(&mut self, time: SimTime, seq: u64, f: EventFn<S>) -> EventId {
+        let slot = if self.free_head != NO_FREE {
+            let s = self.free_head as usize;
+            self.free_head = self.slots[s].next_free;
+            self.slots[s].seq = seq;
+            self.slots[s].f = Some(f);
+            s as u32
+        } else {
+            let s = self.slots.len();
+            assert!(s < NO_FREE as usize, "event slab exhausted");
+            self.slots.push(Slot { gen: 0, next_free: NO_FREE, seq, f: Some(f) });
+            s as u32
+        };
+        self.heap_push(HeapEntry { time, seq, slot });
+        self.live += 1;
+        EventId::pack(slot, self.slots[slot as usize].gen)
+    }
+
+    /// O(1) cancel: vacate the slot (dropping the closure now, not at
+    /// pop) and bump its generation. The heap entry stays behind and is
+    /// skipped at pop because its `seq` no longer matches the slot.
+    pub fn cancel(&mut self, id: EventId) -> bool {
+        let (slot, gen) = id.unpack();
+        match self.slots.get_mut(slot as usize) {
+            Some(s) if s.gen == gen && s.f.is_some() => {
+                s.f = None;
+                self.vacate(slot);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Pop the earliest live event, discarding stale heap entries.
+    pub fn pop(&mut self) -> Option<Popped<S>> {
+        while let Some(e) = self.heap_pop() {
+            let s = &mut self.slots[e.slot as usize];
+            if s.seq != e.seq || s.f.is_none() {
+                continue; // cancelled (or slot since reused): stale entry
+            }
+            let f = s.f.take().expect("occupied slot");
+            self.vacate(e.slot);
+            return Some(Popped { time: e.time, seq: e.seq, f });
+        }
+        None
+    }
+
+    /// Timestamp of the earliest live event, discarding stale heap
+    /// entries on the way (which is why this takes `&mut self`).
+    pub fn next_time(&mut self) -> Option<SimTime> {
+        while let Some(&e) = self.heap.first() {
+            let s = &self.slots[e.slot as usize];
+            if s.seq == e.seq && s.f.is_some() {
+                return Some(e.time);
+            }
+            self.heap_pop();
+        }
+        None
+    }
+
+    /// Exact number of live events — a counter, not a heap scan.
+    pub fn pending(&self) -> usize {
+        self.live
+    }
+
+    fn vacate(&mut self, slot: u32) {
+        let s = &mut self.slots[slot as usize];
+        debug_assert!(s.f.is_none());
+        s.gen = s.gen.wrapping_add(1);
+        s.next_free = self.free_head;
+        self.free_head = slot;
+        self.live -= 1;
+    }
+
+    // 4-ary min-heap over (time, seq). Wider nodes halve the tree depth
+    // versus binary, and the hot compare loop touches one cache line per
+    // level (4 × 24-byte entries).
+
+    fn heap_push(&mut self, e: HeapEntry) {
+        self.heap.push(e);
+        let mut i = self.heap.len() - 1;
+        while i > 0 {
+            let p = (i - 1) / 4;
+            if key(&self.heap[p]) <= key(&self.heap[i]) {
+                break;
+            }
+            self.heap.swap(i, p);
+            i = p;
+        }
+    }
+
+    fn heap_pop(&mut self) -> Option<HeapEntry> {
+        let n = self.heap.len();
+        if n == 0 {
+            return None;
+        }
+        self.heap.swap(0, n - 1);
+        let min = self.heap.pop();
+        let n = self.heap.len();
+        let mut i = 0;
+        loop {
+            let c0 = 4 * i + 1;
+            if c0 >= n {
+                break;
+            }
+            let mut m = c0;
+            for c in (c0 + 1)..(c0 + 4).min(n) {
+                if key(&self.heap[c]) < key(&self.heap[m]) {
+                    m = c;
+                }
+            }
+            if key(&self.heap[m]) >= key(&self.heap[i]) {
+                break;
+            }
+            self.heap.swap(i, m);
+            i = m;
+        }
+        min
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LegacyQueue: the pre-overhaul engine, vendored as the golden baseline.
+// ---------------------------------------------------------------------------
+
+struct Entry<S> {
+    time: SimTime,
+    seq: u64,
+    f: EventFn<S>,
+}
+
+impl<S> PartialEq for Entry<S> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<S> Eq for Entry<S> {}
+impl<S> PartialOrd for Entry<S> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<S> Ord for Entry<S> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert so the earliest (time, seq)
+        // pops first. seq keeps same-time events FIFO.
+        other.time.cmp(&self.time).then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// The pre-overhaul queue: boxed closures inside the heap, cancellation
+/// via `live`/`cancelled` tombstone sets checked at pop time. Kept (not
+/// deleted) so the differential suites and `houtu bench` can replay any
+/// schedule on the exact pre-swap semantics and compare bit-for-bit.
+pub struct LegacyQueue<S> {
+    queue: BinaryHeap<Entry<S>>,
+    live: HashSet<u64>,
+    cancelled: HashSet<u64>,
+}
+
+impl<S> Default for LegacyQueue<S> {
+    fn default() -> Self {
+        LegacyQueue::new()
+    }
+}
+
+impl<S> LegacyQueue<S> {
+    pub fn new() -> Self {
+        LegacyQueue { queue: BinaryHeap::new(), live: HashSet::new(), cancelled: HashSet::new() }
+    }
+
+    pub fn schedule(&mut self, time: SimTime, seq: u64, f: EventFn<S>) -> EventId {
+        self.live.insert(seq);
+        self.queue.push(Entry { time, seq, f });
+        EventId::pack_seq(seq)
+    }
+
+    pub fn cancel(&mut self, id: EventId) -> bool {
+        let seq = id.raw();
+        if self.live.remove(&seq) {
+            self.cancelled.insert(seq);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<Popped<S>> {
+        while let Some(e) = self.queue.pop() {
+            if self.cancelled.remove(&e.seq) {
+                continue;
+            }
+            self.live.remove(&e.seq);
+            return Some(Popped { time: e.time, seq: e.seq, f: e.f });
+        }
+        None
+    }
+
+    pub fn next_time(&mut self) -> Option<SimTime> {
+        loop {
+            match self.queue.peek() {
+                Some(e) if self.cancelled.contains(&e.seq) => {
+                    let e = self.queue.pop().expect("peeked entry");
+                    self.cancelled.remove(&e.seq);
+                }
+                Some(e) => return Some(e.time),
+                None => return None,
+            }
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.live.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runtime dispatch: one branch per op, so the whole deployment stack can
+// run on either engine without threading a type parameter through every
+// event producer.
+// ---------------------------------------------------------------------------
+
+pub(crate) enum QueueImpl<S> {
+    Slab(SlabQueue<S>),
+    Legacy(LegacyQueue<S>),
+}
+
+impl<S> QueueImpl<S> {
+    pub(crate) fn new(kind: QueueKind) -> Self {
+        match kind {
+            QueueKind::Slab => QueueImpl::Slab(SlabQueue::new()),
+            QueueKind::Legacy => QueueImpl::Legacy(LegacyQueue::new()),
+        }
+    }
+
+    pub(crate) fn kind(&self) -> QueueKind {
+        match self {
+            QueueImpl::Slab(_) => QueueKind::Slab,
+            QueueImpl::Legacy(_) => QueueKind::Legacy,
+        }
+    }
+
+    #[inline]
+    pub(crate) fn schedule(&mut self, time: SimTime, seq: u64, f: EventFn<S>) -> EventId {
+        match self {
+            QueueImpl::Slab(q) => q.schedule(time, seq, f),
+            QueueImpl::Legacy(q) => q.schedule(time, seq, f),
+        }
+    }
+
+    #[inline]
+    pub(crate) fn cancel(&mut self, id: EventId) -> bool {
+        match self {
+            QueueImpl::Slab(q) => q.cancel(id),
+            QueueImpl::Legacy(q) => q.cancel(id),
+        }
+    }
+
+    #[inline]
+    pub(crate) fn pop(&mut self) -> Option<Popped<S>> {
+        match self {
+            QueueImpl::Slab(q) => q.pop(),
+            QueueImpl::Legacy(q) => q.pop(),
+        }
+    }
+
+    #[inline]
+    pub(crate) fn next_time(&mut self) -> Option<SimTime> {
+        match self {
+            QueueImpl::Slab(q) => q.next_time(),
+            QueueImpl::Legacy(q) => q.next_time(),
+        }
+    }
+
+    #[inline]
+    pub(crate) fn pending(&self) -> usize {
+        match self {
+            QueueImpl::Slab(q) => q.pending(),
+            QueueImpl::Legacy(q) => q.pending(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg;
+
+    type Q = SlabQueue<()>;
+
+    fn noop() -> EventFn<()> {
+        Box::new(|_| {})
+    }
+
+    #[test]
+    fn pops_in_time_then_seq_order() {
+        let mut q = Q::new();
+        q.schedule(30, 0, noop());
+        q.schedule(10, 1, noop());
+        q.schedule(20, 2, noop());
+        q.schedule(10, 3, noop());
+        let order: Vec<(SimTime, u64)> = std::iter::from_fn(|| q.pop())
+            .map(|p| (p.time, p.seq))
+            .collect();
+        assert_eq!(order, vec![(10, 1), (10, 3), (20, 2), (30, 0)]);
+        assert_eq!(q.pending(), 0);
+    }
+
+    #[test]
+    fn cancel_is_o1_and_exact() {
+        let mut q = Q::new();
+        let a = q.schedule(5, 0, noop());
+        let b = q.schedule(5, 1, noop());
+        assert_eq!(q.pending(), 2);
+        assert!(q.cancel(a));
+        assert!(!q.cancel(a), "double cancel");
+        assert_eq!(q.pending(), 1);
+        let p = q.pop().expect("b survives");
+        assert_eq!(p.seq, 1);
+        assert!(!q.cancel(b), "cancel after fire");
+        assert_eq!(q.pending(), 0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn slot_reuse_does_not_resurrect_stale_ids() {
+        let mut q = Q::new();
+        let a = q.schedule(5, 0, noop());
+        assert!(q.cancel(a));
+        // The vacated slot is reused by a new event.
+        let b = q.schedule(3, 1, noop());
+        assert!(!q.cancel(a), "stale id must not hit the reused slot");
+        assert_eq!(q.pending(), 1);
+        // The stale heap entry for `a` is skipped, `b` pops.
+        let p = q.pop().expect("b");
+        assert_eq!((p.time, p.seq), (3, 1));
+        assert!(q.pop().is_none());
+        let _ = b;
+    }
+
+    #[test]
+    fn next_time_skips_cancelled_heads() {
+        let mut q = Q::new();
+        let a = q.schedule(1, 0, noop());
+        q.schedule(9, 1, noop());
+        assert_eq!(q.next_time(), Some(1));
+        assert!(q.cancel(a));
+        assert_eq!(q.next_time(), Some(9));
+        assert_eq!(q.pop().expect("9").time, 9);
+        assert_eq!(q.next_time(), None);
+    }
+
+    #[test]
+    fn four_ary_heap_orders_large_random_batches() {
+        let mut rng = Pcg::seeded(5);
+        let mut q = Q::new();
+        for seq in 0..5000u64 {
+            q.schedule(rng.below(1000), seq, noop());
+        }
+        let mut last = (0u64, 0u64);
+        let mut n = 0;
+        while let Some(p) = q.pop() {
+            assert!((p.time, p.seq) > last || n == 0, "heap order violated");
+            last = (p.time, p.seq);
+            n += 1;
+        }
+        assert_eq!(n, 5000);
+    }
+
+    #[test]
+    fn legacy_and_slab_agree_on_interleaved_ops() {
+        // Mini differential smoke (the full generated-schedule suite
+        // lives in rust/tests/sim_queue.rs): schedule/cancel/pop
+        // interleavings must produce identical (time, seq) streams.
+        let mut rng = Pcg::seeded(77);
+        let mut slab: SlabQueue<()> = SlabQueue::new();
+        let mut legacy: LegacyQueue<()> = LegacyQueue::new();
+        let mut ids: Vec<(EventId, EventId)> = Vec::new();
+        let mut seq = 0u64;
+        for _ in 0..2000 {
+            match rng.index(4) {
+                0 | 1 => {
+                    let t = rng.below(500);
+                    ids.push((slab.schedule(t, seq, noop()), legacy.schedule(t, seq, noop())));
+                    seq += 1;
+                }
+                2 if !ids.is_empty() => {
+                    let (a, b) = ids[rng.index(ids.len())];
+                    assert_eq!(slab.cancel(a), legacy.cancel(b));
+                }
+                _ => {
+                    let (p1, p2) = (slab.pop(), legacy.pop());
+                    assert_eq!(
+                        p1.as_ref().map(|p| (p.time, p.seq)),
+                        p2.as_ref().map(|p| (p.time, p.seq))
+                    );
+                }
+            }
+            assert_eq!(slab.pending(), legacy.pending());
+            assert_eq!(slab.next_time(), legacy.next_time());
+        }
+    }
+}

@@ -53,7 +53,7 @@ use std::rc::Rc;
 
 use crate::dag::{SizeClass, WorkloadKind};
 use crate::ids::{DcId, JmId, JobId, NodeId, StageId, TaskId};
-use crate::sim::SimTime;
+use crate::sim::{SimTime, StepClock};
 
 /// One thing that happened in the simulated testbed.
 #[derive(Debug, Clone, PartialEq)]
@@ -394,18 +394,24 @@ impl TraceSink for CountingSink {
 }
 
 struct Core {
-    now: SimTime,
     next_seq: u64,
-    steps: u64,
     digest: Fnv64,
     sinks: Vec<Box<dyn TraceSink>>,
 }
 
 /// The bus handle. Cheap to clone; every clone publishes into the same
 /// per-run stream (the world holds one, the WAN fabric holds another).
+///
+/// The stamp clock lives in a shared [`StepClock`] (plain `Cell`s) that
+/// the sim advances *inline* on every step — see
+/// [`crate::sim::Sim::attach_clock`]. The tracer reads it lazily when an
+/// event is actually published, so a sim step that publishes nothing
+/// costs the bus no dynamic dispatch and no `RefCell` borrow (it used to
+/// pay a boxed step-hook call per event just to move this clock).
 #[derive(Clone)]
 pub struct Tracer {
     core: Rc<RefCell<Core>>,
+    clock: Rc<StepClock>,
 }
 
 impl Default for Tracer {
@@ -418,27 +424,31 @@ impl Tracer {
     pub fn new() -> Tracer {
         Tracer {
             core: Rc::new(RefCell::new(Core {
-                now: 0,
                 next_seq: 0,
-                steps: 0,
                 digest: Fnv64::new(),
                 sinks: Vec::new(),
             })),
+            clock: Rc::new(StepClock::default()),
         }
     }
 
-    /// The sim step hook: advance the clock to the executing event's time
-    /// and count the step. Called *before* the event closure runs, so
-    /// everything the closure publishes is stamped with its time.
+    /// The shared step clock — hand it to [`crate::sim::Sim::attach_clock`]
+    /// so the sim advances it inline instead of through a boxed hook.
+    pub fn clock(&self) -> Rc<StepClock> {
+        self.clock.clone()
+    }
+
+    /// Advance the stamp clock to an executing event's time and count the
+    /// step. The sim normally does this inline through the attached
+    /// [`StepClock`]; this method remains for unit tests and hand-driven
+    /// streams.
     pub fn on_step(&self, now: SimTime) {
-        let mut c = self.core.borrow_mut();
-        c.now = now;
-        c.steps += 1;
+        self.clock.advance(now);
     }
 
     /// Current stamp clock (virtual ms).
     pub fn now(&self) -> SimTime {
-        self.core.borrow().now
+        self.clock.now()
     }
 
     /// Publish one event: stamp it, fold it into the run digest, hand it
@@ -446,7 +456,7 @@ impl Tracer {
     /// can feed owned consumers (the world feeds [`crate::metrics::Metrics`]).
     pub fn publish(&self, event: TraceEvent) -> Stamped {
         let mut c = self.core.borrow_mut();
-        let stamped = Stamped { time: c.now, seq: c.next_seq, event };
+        let stamped = Stamped { time: self.clock.now(), seq: c.next_seq, event };
         c.next_seq += 1;
         stamped.fold(&mut c.digest);
         for sink in c.sinks.iter_mut() {
@@ -466,7 +476,7 @@ impl Tracer {
         let c = self.core.borrow();
         let mut h = c.digest;
         h.u64(c.next_seq);
-        h.u64(c.steps);
+        h.u64(self.clock.steps());
         h.0
     }
 
@@ -475,9 +485,9 @@ impl Tracer {
         self.core.borrow().next_seq
     }
 
-    /// Sim events executed so far (fed by the step hook).
+    /// Sim events executed so far (fed by the inline step clock).
     pub fn steps(&self) -> u64 {
-        self.core.borrow().steps
+        self.clock.steps()
     }
 }
 
@@ -586,5 +596,110 @@ mod tests {
         assert_eq!(a.seq, 0);
         assert_eq!(b.seq, 1);
         assert_eq!(t.digest(), t2.digest());
+    }
+
+    #[test]
+    fn sim_attached_clock_stamps_publishes() {
+        // The end-to-end fast path: a Sim advancing the tracer's shared
+        // StepClock inline must stamp publishes exactly like the old
+        // boxed step hook did.
+        let t = Tracer::new();
+        let mut sim = crate::sim::Sim::new(Tracer::clone(&t));
+        sim.attach_clock(t.clock());
+        sim.schedule_at(5, |s| {
+            s.state.publish(TraceEvent::JobCompleted { job: JobId(1) });
+        });
+        sim.schedule_at(9, |s| {
+            s.state.publish(TraceEvent::JobCompleted { job: JobId(2) });
+        });
+        sim.run_to_completion();
+        assert_eq!(t.steps(), 2);
+        assert_eq!(t.now(), 9);
+        assert_eq!(t.events_published(), 2);
+    }
+
+    /// Seqs of every event ever pushed through a ring, captured by an
+    /// unbounded side sink for comparison.
+    struct VecSink(Rc<RefCell<Vec<Stamped>>>);
+    impl TraceSink for VecSink {
+        fn on_event(&mut self, ev: &Stamped) {
+            self.0.borrow_mut().push(ev.clone());
+        }
+    }
+
+    #[test]
+    fn ring_at_exact_capacity_keeps_everything() {
+        // Boundary: pushing exactly `cap` events must not evict — the
+        // wrap happens on push `cap + 1`, not `cap`.
+        let ring = RingBuffer::shared(4);
+        let t = Tracer::new();
+        t.attach(Box::new(RingSink(ring.clone())));
+        for j in 0..4 {
+            t.publish(ev(j));
+        }
+        {
+            let r = ring.borrow();
+            assert_eq!(r.len(), 4);
+            assert_eq!(r.pushed, 4);
+            let seqs: Vec<u64> = r.iter().map(|s| s.seq).collect();
+            assert_eq!(seqs, vec![0, 1, 2, 3], "no eviction at exact capacity");
+        }
+        t.publish(ev(4));
+        let r = ring.borrow();
+        assert_eq!(r.len(), 4, "one past capacity evicts exactly one");
+        assert_eq!(r.pushed, 5);
+        assert_eq!(r.iter().next().map(|s| s.seq), Some(1), "oldest went first");
+    }
+
+    #[test]
+    fn ring_seq_continuity_across_many_overwrites() {
+        // After wrapping several times the retained window must be a
+        // contiguous seq range ending at the last published event — no
+        // gaps, no reordering across the wrap point.
+        let ring = RingBuffer::shared(3);
+        let t = Tracer::new();
+        t.attach(Box::new(RingSink(ring.clone())));
+        for j in 0..11 {
+            t.publish(ev(j));
+        }
+        let r = ring.borrow();
+        let seqs: Vec<u64> = r.iter().map(|s| s.seq).collect();
+        assert_eq!(seqs, vec![8, 9, 10], "window = the last cap seqs, in order");
+        for w in seqs.windows(2) {
+            assert_eq!(w[1], w[0] + 1, "seq continuity across overwrite");
+        }
+        assert_eq!(r.pushed, 11);
+        assert_eq!(r.pushed - r.len() as u64, 8, "exactly the overwritten prefix");
+    }
+
+    #[test]
+    fn counting_sink_totals_match_an_unbounded_sink() {
+        // CountingSink's per-kind tallies must agree with a full
+        // unbounded capture of the same stream, even while a small ring
+        // on the same bus wraps many times.
+        let (csink, counts) = CountingSink::shared();
+        let full: Rc<RefCell<Vec<Stamped>>> = Rc::default();
+        let ring = RingBuffer::shared(2);
+        let t = Tracer::new();
+        t.attach(Box::new(csink));
+        t.attach(Box::new(VecSink(full.clone())));
+        t.attach(Box::new(RingSink(ring.clone())));
+        t.on_step(1);
+        for j in 0..9 {
+            t.publish(ev(j));
+            if j % 3 == 0 {
+                t.publish(TraceEvent::JobRestarted { job: JobId(j) });
+            }
+        }
+        let full = full.borrow();
+        let mut expect: BTreeMap<&'static str, u64> = BTreeMap::new();
+        for s in full.iter() {
+            *expect.entry(s.event.kind()).or_insert(0) += 1;
+        }
+        assert_eq!(*counts.borrow(), expect, "tallies must match the full stream");
+        let total: u64 = counts.borrow().values().sum();
+        assert_eq!(total, full.len() as u64);
+        assert_eq!(ring.borrow().pushed, full.len() as u64, "ring saw every event");
+        assert_eq!(ring.borrow().len(), 2, "but only retains its window");
     }
 }

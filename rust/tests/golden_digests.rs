@@ -1,0 +1,149 @@
+//! Golden replay-digest pin for the sim-core queue swap.
+//!
+//! The digest of a run is an order-sensitive fold of its *entire* trace
+//! stream, so it is the strongest replay check the repo has. This suite
+//! pins every cell of `standard_campaign()` (9 scenarios × 3 seeds) two
+//! ways:
+//!
+//! 1. **Executable golden record.** The pre-swap queue engine is vendored
+//!    in-tree ([`QueueKind::Legacy`], byte-for-byte the old
+//!    `BinaryHeap` + tombstone-set implementation), so "record the digest
+//!    before the swap" is executed *at test time*: every cell runs on
+//!    both engines and the digests must match bit-identically. Unlike a
+//!    hardcoded table, this pin cannot go stale against the thing it is
+//!    meant to guard (the queue overhaul), and it re-proves the swap on
+//!    every CI run.
+//! 2. **Optional static table.** If `rust/tests/golden_digests.json`
+//!    exists, every cell digest must also match it — catching *any*
+//!    future behavioral drift, queue-related or not. Regenerate it (after
+//!    auditing the drift is intentional) with:
+//!    `HOUTU_PIN_GOLDEN=1 cargo test --test golden_digests`.
+
+use houtu::config::Config;
+use houtu::scenario::runner::par_map;
+use houtu::scenario::{run_digest, run_scenario_on, standard_campaign};
+use houtu::sim::QueueKind;
+use houtu::util::json::{self, Json};
+
+#[derive(Debug, Clone, PartialEq)]
+struct CellPin {
+    scenario: String,
+    seed: u64,
+    digest: u64,
+    events: u64,
+}
+
+fn compute_pins(queue: QueueKind) -> Vec<CellPin> {
+    let base = Config::default();
+    let cells = standard_campaign().expand();
+    let workers =
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(cells.len());
+    par_map(workers, cells.len(), |i| {
+        let (sc, seed) = &cells[i];
+        let run = run_scenario_on(&base, sc, *seed, queue)
+            .unwrap_or_else(|e| panic!("{}/seed{}: {e}", sc.name, seed));
+        CellPin {
+            scenario: sc.name.clone(),
+            seed: *seed,
+            digest: run_digest(&run),
+            events: run.events_processed,
+        }
+    })
+}
+
+fn golden_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden_digests.json")
+}
+
+fn pins_to_json(pins: &[CellPin]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n  \"campaign\": \"reliability-matrix\",\n  \"cells\": [\n");
+    for (i, p) in pins.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"scenario\": {}, \"seed\": {}, \"digest\": \"{:016x}\", \"events\": {}}}{}\n",
+            json::escape(&p.scenario),
+            p.seed,
+            p.digest,
+            p.events,
+            if i + 1 == pins.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn check_against_static_table(pins: &[CellPin]) {
+    let path = golden_path();
+    if std::env::var("HOUTU_PIN_GOLDEN").is_ok() {
+        std::fs::write(&path, pins_to_json(pins)).expect("writing golden table");
+        eprintln!("golden_digests: wrote {} cells to {}", pins.len(), path.display());
+        return;
+    }
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        // No static table committed yet — the executable legacy-queue pin
+        // above is the authoritative record. Generate the table with
+        // HOUTU_PIN_GOLDEN=1 once a maintainer wants hard values too.
+        return;
+    };
+    let doc = json::parse(&text).expect("golden table must be valid json");
+    let cells = doc.get("cells").and_then(Json::as_array).expect("golden table cells");
+    assert_eq!(cells.len(), pins.len(), "golden table cell count drifted");
+    for (j, p) in cells.iter().zip(pins) {
+        let scenario = j.get("scenario").and_then(Json::as_str).expect("scenario");
+        let seed = j.get("seed").and_then(Json::as_u64).expect("seed");
+        let digest = j.get("digest").and_then(Json::as_str).expect("digest");
+        assert_eq!((scenario, seed), (p.scenario.as_str(), p.seed), "cell order drifted");
+        assert_eq!(
+            digest,
+            format!("{:016x}", p.digest),
+            "{}/seed{}: replay digest drifted from the committed golden table \
+             (audit the change, then re-pin with HOUTU_PIN_GOLDEN=1)",
+            p.scenario,
+            p.seed
+        );
+    }
+}
+
+/// The tentpole acceptance gate: all 27 standard-campaign cells replay
+/// bit-identically on the pre-swap queue and the slab queue.
+#[test]
+fn standard_campaign_digests_survive_the_queue_swap() {
+    let slab = compute_pins(QueueKind::Slab);
+    let legacy = compute_pins(QueueKind::Legacy);
+    assert_eq!(slab.len(), 27, "expected the 9×3 standard matrix");
+    assert_eq!(slab.len(), legacy.len());
+    for (a, b) in slab.iter().zip(&legacy) {
+        assert_eq!(
+            (&a.scenario, a.seed),
+            (&b.scenario, b.seed),
+            "cell order must be engine-independent"
+        );
+        assert_eq!(
+            format!("{:016x}", a.digest),
+            format!("{:016x}", b.digest),
+            "{}/seed{}: replay digest drifted across the queue swap",
+            a.scenario,
+            a.seed
+        );
+        assert_eq!(
+            a.events, b.events,
+            "{}/seed{}: event count drifted across the queue swap",
+            a.scenario,
+            a.seed
+        );
+        assert_ne!(a.digest, 0, "{}/seed{}: degenerate digest", a.scenario, a.seed);
+        assert!(a.events > 0, "{}/seed{}: empty run", a.scenario, a.seed);
+    }
+    // Digests must be informative: within every scenario, the three
+    // seeds produce three distinct streams.
+    for chunk in slab.chunks(3) {
+        assert!(
+            chunk[0].digest != chunk[1].digest
+                && chunk[1].digest != chunk[2].digest
+                && chunk[0].digest != chunk[2].digest,
+            "{}: seeds collided — digest is not seeing the stream",
+            chunk[0].scenario
+        );
+    }
+    check_against_static_table(&slab);
+}

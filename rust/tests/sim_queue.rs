@@ -1,0 +1,351 @@
+//! Differential + property suites for the event-queue overhaul.
+//!
+//! The sim core swapped its `BinaryHeap<Box<FnOnce>>` + tombstone-set
+//! queue for a generation-stamped slab feeding an index-only 4-ary heap.
+//! The pre-swap engine is vendored as [`LegacyQueue`]; these suites prove
+//! the swap preserved semantics *exactly*:
+//!
+//! * generated schedule/cancel/pop interleavings (via
+//!   `testkit::forall_cases` with a shrinking script generator) replayed
+//!   on both engines **and** a naive `Vec`-scan reference model, with
+//!   bit-identical pop streams and exact `pending()` at every step;
+//! * whole randomly-generated *simulations* (events scheduling children,
+//!   deferring, cancelling each other) run on both engines with
+//!   bit-identical replay digests;
+//! * the `run_until`/`every` horizon-boundary contract (queue invariant
+//!   5 in `rust/src/sim/mod.rs`).
+
+use houtu::sim::{every, EventFn, EventId, LegacyQueue, QueueKind, Sim, SimTime, SlabQueue};
+use houtu::testkit::{forall_cases, Gen};
+use houtu::trace::Fnv64;
+use houtu::util::Pcg;
+use houtu::prop_assert;
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+// ---------------------------------------------------------------------------
+// Queue-level differential: generated op scripts vs a Vec-scan model.
+// ---------------------------------------------------------------------------
+
+/// One step of a queue-driving script. `Cancel` indexes into the ids
+/// issued so far (mod count), so scripts stay valid under shrinking.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Op {
+    Schedule(u16),
+    Cancel(u8),
+    Pop,
+    Peek,
+}
+
+/// Script generator with a drop-based shrink (every candidate is a
+/// strictly shorter script, honouring the `Gen` contract).
+struct OpsGen;
+
+impl Gen<Vec<Op>> for OpsGen {
+    fn generate(&self, rng: &mut Pcg) -> Vec<Op> {
+        let len = 20 + rng.index(180);
+        (0..len)
+            .map(|_| match rng.index(10) {
+                0..=4 => Op::Schedule(rng.below(1000) as u16),
+                5 | 6 => Op::Cancel(rng.below(256) as u8),
+                7 | 8 => Op::Pop,
+                _ => Op::Peek,
+            })
+            .collect()
+    }
+
+    fn shrink(&self, v: &Vec<Op>) -> Vec<Vec<Op>> {
+        let mut out = Vec::new();
+        if v.len() > 1 {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[1..].to_vec());
+            let mut minus_last = v.clone();
+            minus_last.pop();
+            out.push(minus_last);
+        }
+        out
+    }
+}
+
+/// Naive reference model: a flat vec of live `(time, seq)` pairs, popped
+/// by linear min-scan. Obviously correct, O(n) everything.
+#[derive(Default)]
+struct VecModel {
+    live: Vec<(SimTime, u64)>,
+}
+
+impl VecModel {
+    fn schedule(&mut self, time: SimTime, seq: u64) {
+        self.live.push((time, seq));
+    }
+
+    fn cancel(&mut self, seq: u64) -> bool {
+        match self.live.iter().position(|&(_, s)| s == seq) {
+            Some(i) => {
+                self.live.remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn min_index(&self) -> Option<usize> {
+        (0..self.live.len()).min_by_key(|&i| self.live[i])
+    }
+
+    fn pop(&mut self) -> Option<(SimTime, u64)> {
+        self.min_index().map(|i| self.live.remove(i))
+    }
+
+    fn next_time(&self) -> Option<SimTime> {
+        self.min_index().map(|i| self.live[i].0)
+    }
+
+    fn pending(&self) -> usize {
+        self.live.len()
+    }
+}
+
+fn noop() -> EventFn<()> {
+    Box::new(|_| {})
+}
+
+/// Pop all three implementations once and check they agree; fold the
+/// popped `(time, seq)` into each engine's replay digest.
+fn pop_pair(
+    slab: &mut SlabQueue<()>,
+    legacy: &mut LegacyQueue<()>,
+    model: &mut VecModel,
+    dig_slab: &mut Fnv64,
+    dig_legacy: &mut Fnv64,
+) -> Result<(), String> {
+    let a = slab.pop().map(|p| (p.time, p.seq));
+    let b = legacy.pop().map(|p| (p.time, p.seq));
+    let m = model.pop();
+    prop_assert!(a == b, "pop diverged: slab {a:?} vs legacy {b:?}");
+    prop_assert!(a == m, "pop diverged from model: {a:?} vs {m:?}");
+    if let Some((t, s)) = a {
+        dig_slab.u64(t);
+        dig_slab.u64(s);
+    }
+    if let Some((t, s)) = b {
+        dig_legacy.u64(t);
+        dig_legacy.u64(s);
+    }
+    Ok(())
+}
+
+/// Replay one script on all three implementations, checking agreement at
+/// every step and folding each pop stream into a digest; ends with a
+/// full drain plus a cancel-after-fire sweep over every id ever issued.
+fn run_script(ops: &[Op]) -> Result<(), String> {
+    let mut slab: SlabQueue<()> = SlabQueue::new();
+    let mut legacy: LegacyQueue<()> = LegacyQueue::new();
+    let mut model = VecModel::default();
+    let mut seq = 0u64;
+    // Parallel id books: the two engines issue different EventId
+    // encodings for the same schedule, so cancels address by position.
+    let mut ids: Vec<(EventId, EventId, u64)> = Vec::new();
+    let mut dig_slab = Fnv64::new();
+    let mut dig_legacy = Fnv64::new();
+    for op in ops {
+        match *op {
+            Op::Schedule(t) => {
+                let t = t as SimTime;
+                let a = slab.schedule(t, seq, noop());
+                let b = legacy.schedule(t, seq, noop());
+                model.schedule(t, seq);
+                ids.push((a, b, seq));
+                seq += 1;
+            }
+            Op::Cancel(raw) => {
+                if !ids.is_empty() {
+                    let (a, b, s) = ids[raw as usize % ids.len()];
+                    let ra = slab.cancel(a);
+                    let rb = legacy.cancel(b);
+                    let rm = model.cancel(s);
+                    prop_assert!(
+                        ra == rb && ra == rm,
+                        "cancel diverged: slab {ra} legacy {rb} model {rm}"
+                    );
+                }
+            }
+            Op::Pop => {
+                pop_pair(&mut slab, &mut legacy, &mut model, &mut dig_slab, &mut dig_legacy)?;
+            }
+            Op::Peek => {
+                let a = slab.next_time();
+                let b = legacy.next_time();
+                let m = model.next_time();
+                prop_assert!(a == b && a == m, "next_time diverged: {a:?} {b:?} {m:?}");
+            }
+        }
+        prop_assert!(
+            slab.pending() == model.pending() && legacy.pending() == model.pending(),
+            "pending diverged: slab {} legacy {} model {}",
+            slab.pending(),
+            legacy.pending(),
+            model.pending()
+        );
+    }
+    // Drain to empty: the tails must agree too.
+    while model.pending() > 0 {
+        pop_pair(&mut slab, &mut legacy, &mut model, &mut dig_slab, &mut dig_legacy)?;
+    }
+    prop_assert!(slab.pop().is_none() && legacy.pop().is_none(), "ghost events after drain");
+    // Every id is now fired or cancelled: cancel must be a universal
+    // no-op reporting false on all implementations.
+    for &(a, b, s) in &ids {
+        let (ra, rb, rm) = (slab.cancel(a), legacy.cancel(b), model.cancel(s));
+        prop_assert!(!ra && !rb && !rm, "cancel-after-fire not a no-op: {ra} {rb} {rm}");
+    }
+    prop_assert!(
+        slab.pending() == 0 && legacy.pending() == 0,
+        "stale cancels corrupted pending()"
+    );
+    prop_assert!(
+        dig_slab.0 == dig_legacy.0,
+        "replay digests diverged: {:016x} vs {:016x}",
+        dig_slab.0,
+        dig_legacy.0
+    );
+    Ok(())
+}
+
+#[test]
+fn generated_schedules_replay_identically_on_old_and_new_queue() {
+    forall_cases(0xD1FF, 192, &OpsGen, |ops: &Vec<Op>| run_script(ops));
+}
+
+#[test]
+fn same_time_fifo_order_is_exact() {
+    // All events at one timestamp: the pop stream must be schedule order
+    // on both engines (the determinism contract replay digests pin).
+    let mut slab: SlabQueue<()> = SlabQueue::new();
+    let mut legacy: LegacyQueue<()> = LegacyQueue::new();
+    for seq in 0..500u64 {
+        slab.schedule(77, seq, noop());
+        legacy.schedule(77, seq, noop());
+    }
+    for expect in 0..500u64 {
+        assert_eq!(slab.pop().map(|p| p.seq), Some(expect), "slab broke FIFO at {expect}");
+        assert_eq!(legacy.pop().map(|p| p.seq), Some(expect), "legacy broke FIFO at {expect}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sim-level differential: whole generated simulations, digest-compared.
+// ---------------------------------------------------------------------------
+
+/// Recorder world: folds everything observable about execution order —
+/// (now, tag, pending-at-fire, cancel outcomes) — into one digest.
+struct Rec {
+    h: Fnv64,
+    ids: Vec<EventId>,
+}
+
+fn run_generated_sim(kind: QueueKind, seed: u64) -> (u64, u64, usize) {
+    let mut sim = Sim::with_queue(Rec { h: Fnv64::new(), ids: Vec::new() }, kind);
+    let mut rng = Pcg::seeded(seed);
+    for i in 0..400u64 {
+        let t = rng.below(40_000);
+        let spawn_child = rng.chance(0.3);
+        let child_dt = rng.below(5_000);
+        let defer_too = rng.chance(0.15);
+        let cancel_idx = if rng.chance(0.25) { Some(rng.index(400)) } else { None };
+        let id = sim.schedule_at(t, move |sim| {
+            let now = sim.now();
+            let pending = sim.pending() as u64;
+            sim.state.h.u64(now);
+            sim.state.h.u64(i);
+            sim.state.h.u64(pending);
+            if let Some(j) = cancel_idx {
+                if j < sim.state.ids.len() {
+                    let target = sim.state.ids[j];
+                    let hit = sim.cancel(target);
+                    sim.state.h.u64(hit as u64);
+                }
+            }
+            if spawn_child {
+                sim.schedule_in(child_dt, move |sim| {
+                    let now = sim.now();
+                    sim.state.h.u64(now ^ 0xC0DE);
+                    sim.state.h.u64(i);
+                });
+            }
+            if defer_too {
+                sim.defer(move |sim| {
+                    let now = sim.now();
+                    sim.state.h.u64(now ^ 0xDEFE);
+                    sim.state.h.u64(i);
+                });
+            }
+        });
+        sim.state.ids.push(id);
+    }
+    // Split the run across a horizon boundary to exercise run_until's
+    // lazy-skip path, then drain.
+    sim.run_until(20_000);
+    sim.run_to_completion();
+    (sim.state.h.0, sim.events_processed, sim.peak_pending())
+}
+
+#[test]
+fn generated_sims_digest_identically_on_old_and_new_queue() {
+    for seed in [1u64, 42, 7, 1234, 0xFEED] {
+        let slab = run_generated_sim(QueueKind::Slab, seed);
+        let legacy = run_generated_sim(QueueKind::Legacy, seed);
+        assert_eq!(slab, legacy, "seed {seed}: execution diverged between engines");
+        let again = run_generated_sim(QueueKind::Slab, seed);
+        assert_eq!(slab, again, "seed {seed}: slab engine is not deterministic");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Horizon-boundary regression pins (Sim::run_until / every).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn periodic_tick_landing_exactly_on_horizon_fires_on_both_engines() {
+    for kind in [QueueKind::Slab, QueueKind::Legacy] {
+        let ticks: Rc<RefCell<Vec<SimTime>>> = Rc::default();
+        let t2 = ticks.clone();
+        let mut sim = Sim::with_queue((), kind);
+        every(&mut sim, 1_000, move |sim| {
+            t2.borrow_mut().push(sim.now());
+            true
+        });
+        sim.run_until(5_000);
+        assert_eq!(
+            *ticks.borrow(),
+            vec![0, 1_000, 2_000, 3_000, 4_000, 5_000],
+            "{kind:?}: the tick scheduled exactly at the horizon must fire before the stop"
+        );
+        assert_eq!(sim.now(), 5_000, "{kind:?}: clock parks on the horizon");
+        // The re-arm for 6000 is queued, not lost and not fired early.
+        assert_eq!(sim.pending(), 1, "{kind:?}");
+        sim.run_until(5_999);
+        assert_eq!(ticks.borrow().len(), 6, "{kind:?}: nothing extra before the next period");
+        sim.run_until(6_000);
+        assert_eq!(ticks.borrow().last(), Some(&6_000), "{kind:?}");
+    }
+}
+
+#[test]
+fn horizon_events_scheduled_at_the_horizon_by_horizon_events_fire() {
+    // An event at t spawns same-time work (defer and schedule_at(t));
+    // run_until(t) must drain the whole chain, exactly like the campaign
+    // runner's final scheduling period at its horizon.
+    let mut sim = Sim::new(Vec::<u32>::new());
+    sim.schedule_at(9_000, |sim| {
+        sim.state.push(1);
+        let t = sim.now();
+        sim.schedule_at(t, |sim| sim.state.push(2));
+        sim.defer(|sim| sim.state.push(3));
+    });
+    sim.run_until(9_000);
+    assert_eq!(sim.state, vec![1, 2, 3]);
+    assert_eq!(sim.pending(), 0);
+    assert_eq!(sim.now(), 9_000);
+}
