@@ -1,18 +1,21 @@
 #!/usr/bin/env bash
 # Tier-1 verify in one command: build everything (lib, bin, tests,
-# benches, examples), run the full test suite, then a smoke scenario
-# campaign through the real CLI with a report export whose round-trip
-# the CLI asserts (it re-reads and re-parses the file, exiting non-zero
-# on any mismatch) — so the export path stays wired — then a seeded
-# chaos-fuzz smoke batch (any invariant violation is shrunk to a minimal
-# repro TOML and fails the build), and finally the perf harness: `bench
-# --smoke` times every workload on both queue engines and writes
+# benches, examples), fail on rustdoc rot (docs are CI-gated: broken
+# intra-doc links or bad doc syntax exit non-zero), run the full test
+# suite, then a smoke scenario campaign through the real CLI with a
+# report export whose round-trip the CLI asserts (it re-reads and
+# re-parses the file, exiting non-zero on any mismatch) — so the export
+# path stays wired — then a seeded chaos-fuzz smoke batch (any invariant
+# violation is shrunk to a minimal repro TOML and fails the build), and
+# finally the perf harness: `bench --smoke` times every workload —
+# including the per-strategy bid-churn cost rows — and writes
 # BENCH_sim.json, whose util::json round-trip the CLI asserts — every
 # run extends the perf trajectory.
 set -euo pipefail
 cd "$(dirname "$0")"
 
 cargo build --release --all-targets
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 cargo test -q
 cargo run --release --quiet -- campaign --smoke --report /tmp/smoke.json
 cargo run --release --quiet -- fuzz --cases 8 --seed 1 --repro /tmp/fuzz-repro.toml

@@ -23,6 +23,12 @@
 //! * `dense-cancel-churn` — a queue microbenchmark: schedule/cancel
 //!   storms plus periodic timer chains, the access pattern that made the
 //!   old tombstone-set queue hurt. Also run on both engines.
+//! * `bid-churn-{naive,adaptive,deadline}` — the cost-aware bidding
+//!   subsystem under a revocation-heavy spot-price storm, once per
+//!   [`StrategyKind`]; each row reports the run's total USD next to its
+//!   wall time, so the report carries the measured cost/latency
+//!   trade-off per strategy (insurance replication rides along for the
+//!   non-naive strategies).
 //!
 //! # Report schema (`BENCH_sim.json`)
 //!
@@ -34,7 +40,7 @@
 //!     {"name": "campaign-smoke", "queue": "slab", "iters": 3,
 //!      "warmup": 1, "events_total": 123456, "peak_pending": 789,
 //!      "wall_ms_mean": 12.5, "wall_ms_min": 12.1, "wall_ms_max": 13.0,
-//!      "events_per_sec": 9876543.2}
+//!      "events_per_sec": 9876543.2, "usd": 0.0}
 //!   ]
 //! }
 //! ```
@@ -50,9 +56,12 @@ use std::fmt::Write as _;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Instant;
 
+use crate::cloud::bidding::StrategyKind;
 use crate::config::{Config, Deployment};
+use crate::ids::DcId;
 use crate::scenario::{
-    run_scenario_on, smoke_campaign, CellGen, FuzzSpace, ScenarioSpec, ScenarioWorkload,
+    run_scenario_on, smoke_campaign, CellGen, ChaosEvent, FuzzSpace, ScenarioSpec,
+    ScenarioWorkload,
 };
 use crate::sim::{every, QueueKind, Sim};
 use crate::testkit::Gen as _;
@@ -90,6 +99,8 @@ impl BenchOpts {
 struct IterOut {
     events: u64,
     peak_pending: usize,
+    /// Run-level cost (USD) — nonzero only for the bid-churn family.
+    usd: f64,
 }
 
 /// The fixed workload set. See the module docs for what each measures.
@@ -99,6 +110,8 @@ pub enum BenchWorkload {
     FuzzBatch,
     SoakSlice,
     DenseCancelChurn,
+    /// Spot-storm trace under the given bid strategy (cost + wall time).
+    BidChurn(StrategyKind),
 }
 
 impl BenchWorkload {
@@ -108,6 +121,9 @@ impl BenchWorkload {
             BenchWorkload::FuzzBatch => "fuzz-batch",
             BenchWorkload::SoakSlice => "soak-slice",
             BenchWorkload::DenseCancelChurn => "dense-cancel-churn",
+            BenchWorkload::BidChurn(StrategyKind::Naive) => "bid-churn-naive",
+            BenchWorkload::BidChurn(StrategyKind::Adaptive) => "bid-churn-adaptive",
+            BenchWorkload::BidChurn(StrategyKind::Deadline) => "bid-churn-deadline",
         }
     }
 
@@ -115,7 +131,7 @@ impl BenchWorkload {
         match self {
             BenchWorkload::CampaignSmoke => {
                 let spec = smoke_campaign();
-                let mut out = IterOut { events: 0, peak_pending: 0 };
+                let mut out = IterOut { events: 0, peak_pending: 0, usd: 0.0 };
                 for (sc, seed) in spec.expand() {
                     let run = run_scenario_on(base, &sc, seed, queue)
                         .expect("smoke campaign cells are always valid");
@@ -129,7 +145,7 @@ impl BenchWorkload {
                 let gen = CellGen::new(&space, base);
                 let mut rng = Pcg::seeded(0xBE7C);
                 let cells = if smoke { 3 } else { 6 };
-                let mut out = IterOut { events: 0, peak_pending: 0 };
+                let mut out = IterOut { events: 0, peak_pending: 0, usd: 0.0 };
                 for _ in 0..cells {
                     let cell = gen.generate(&mut rng);
                     // Chaos cells may legitimately trip simulator
@@ -162,7 +178,7 @@ impl BenchWorkload {
                         "cloud.bid_multiplier=1.5".to_string(),
                     ],
                 };
-                let mut out = IterOut { events: 0, peak_pending: 0 };
+                let mut out = IterOut { events: 0, peak_pending: 0, usd: 0.0 };
                 for &seed in seeds {
                     let run = run_scenario_on(base, &sc, seed, queue)
                         .expect("soak slice spec is always valid");
@@ -174,6 +190,52 @@ impl BenchWorkload {
             BenchWorkload::DenseCancelChurn => {
                 let n = if smoke { 60_000 } else { 200_000 };
                 dense_cancel_churn(queue, n)
+            }
+            BenchWorkload::BidChurn(strategy) => {
+                // The bid-insurance-storm shape: a revocation-heavy price
+                // storm over the online trace, priced by one strategy.
+                // Insurance rides along for the non-naive strategies so
+                // the row reflects the whole subsystem's overhead.
+                let num_jobs = if smoke { 2 } else { 3 };
+                let seeds: &[u64] = if smoke { &[42] } else { &[42, 7] };
+                let mut overrides = vec![
+                    "cloud.revocations=true".to_string(),
+                    "cloud.bid_multiplier=1.5".to_string(),
+                    "cloud.market_period_secs=120.0".to_string(),
+                    format!("bidding.strategy={}", strategy.name()),
+                ];
+                if strategy != StrategyKind::Naive {
+                    overrides.push("bidding.insurance=true".to_string());
+                }
+                if strategy == StrategyKind::Deadline {
+                    // Without a soft deadline the policy never leaves its
+                    // calm baseline; a tight one makes the row measure
+                    // the aggressive-bidding path, not an inert no-op.
+                    overrides.push("workload.deadline_secs=300".to_string());
+                    overrides.push("workload.budget_usd=5.0".to_string());
+                }
+                let sc = ScenarioSpec {
+                    name: format!("bid-churn-{}", strategy.name()),
+                    deployment: Deployment::Houtu,
+                    regions: 0,
+                    workload: ScenarioWorkload::Trace { num_jobs },
+                    events: vec![ChaosEvent::SpotStorm {
+                        at_secs: 120.0,
+                        dc: DcId(1),
+                        dur_secs: 600.0,
+                        sigma_factor: 3.0,
+                    }],
+                    overrides,
+                };
+                let mut out = IterOut { events: 0, peak_pending: 0, usd: 0.0 };
+                for &seed in seeds {
+                    let run = run_scenario_on(base, &sc, seed, queue)
+                        .expect("bid churn spec is always valid");
+                    out.events += run.events_processed;
+                    out.peak_pending = out.peak_pending.max(run.peak_pending);
+                    out.usd += run.world.cost.total_usd();
+                }
+                out
             }
         }
     }
@@ -202,7 +264,7 @@ fn dense_cancel_churn(queue: QueueKind, n: usize) -> IterOut {
         ticks < 1_000
     });
     sim.run_to_completion();
-    IterOut { events: sim.events_processed, peak_pending: sim.peak_pending() }
+    IterOut { events: sim.events_processed, peak_pending: sim.peak_pending(), usd: 0.0 }
 }
 
 /// One workload's timed outcome.
@@ -222,6 +284,8 @@ pub struct WorkloadResult {
     pub wall_ms_max: f64,
     /// `events_total / total_wall_secs` — the headline hot-path number.
     pub events_per_sec: f64,
+    /// Mean run cost per iteration (USD); 0 for cost-free workloads.
+    pub usd: f64,
 }
 
 /// A whole bench run.
@@ -244,12 +308,14 @@ fn time_workload(
     let mut wall_ms = Vec::with_capacity(opts.iters);
     let mut events_total = 0u64;
     let mut peak_pending = 0usize;
+    let mut usd_total = 0.0f64;
     for _ in 0..opts.iters.max(1) {
         let t0 = Instant::now();
         let out = w.run_once(base, queue, opts.smoke);
         wall_ms.push(t0.elapsed().as_secs_f64() * 1000.0);
         events_total += out.events;
         peak_pending = peak_pending.max(out.peak_pending);
+        usd_total += out.usd;
     }
     let total_secs: f64 = wall_ms.iter().sum::<f64>() / 1000.0;
     let events_per_sec = if total_secs > 0.0 { events_total as f64 / total_secs } else { 0.0 };
@@ -268,6 +334,7 @@ fn time_workload(
         wall_ms_min: stats::min(&wall_ms),
         wall_ms_max: stats::max(&wall_ms),
         events_per_sec,
+        usd: usd_total / opts.iters.max(1) as f64,
     }
 }
 
@@ -281,6 +348,9 @@ pub fn run_bench(base: &Config, opts: &BenchOpts) -> BenchReport {
         (BenchWorkload::SoakSlice, QueueKind::Slab),
         (BenchWorkload::DenseCancelChurn, QueueKind::Slab),
         (BenchWorkload::DenseCancelChurn, QueueKind::Legacy),
+        (BenchWorkload::BidChurn(StrategyKind::Naive), QueueKind::Slab),
+        (BenchWorkload::BidChurn(StrategyKind::Adaptive), QueueKind::Slab),
+        (BenchWorkload::BidChurn(StrategyKind::Deadline), QueueKind::Slab),
     ];
     let workloads =
         matrix.iter().map(|&(w, q)| time_workload(base, w, q, opts)).collect();
@@ -313,16 +383,16 @@ impl BenchReport {
         .unwrap();
         writeln!(
             out,
-            "{:>26} {:>7} {:>6} {:>12} {:>10} {:>12} {:>12}",
-            "workload", "queue", "iters", "events", "peak-q", "ms/iter", "events/s"
+            "{:>26} {:>7} {:>6} {:>12} {:>10} {:>12} {:>12} {:>9}",
+            "workload", "queue", "iters", "events", "peak-q", "ms/iter", "events/s", "usd"
         )
         .unwrap();
         for w in &self.workloads {
             writeln!(
                 out,
-                "{:>26} {:>7} {:>6} {:>12} {:>10} {:>12.1} {:>12.0}",
+                "{:>26} {:>7} {:>6} {:>12} {:>10} {:>12.1} {:>12.0} {:>9.3}",
                 w.name, w.queue, w.iters, w.events_total, w.peak_pending, w.wall_ms_mean,
-                w.events_per_sec
+                w.events_per_sec, w.usd
             )
             .unwrap();
         }
@@ -352,7 +422,8 @@ impl BenchReport {
             out.push_str(&format!("\"wall_ms_mean\": {}, ", json_f64(w.wall_ms_mean)));
             out.push_str(&format!("\"wall_ms_min\": {}, ", json_f64(w.wall_ms_min)));
             out.push_str(&format!("\"wall_ms_max\": {}, ", json_f64(w.wall_ms_max)));
-            out.push_str(&format!("\"events_per_sec\": {}", json_f64(w.events_per_sec)));
+            out.push_str(&format!("\"events_per_sec\": {}, ", json_f64(w.events_per_sec)));
+            out.push_str(&format!("\"usd\": {}", json_f64(w.usd)));
             out.push_str(if i + 1 == self.workloads.len() { "}\n" } else { "},\n" });
         }
         out.push_str("  ]\n}\n");
@@ -421,6 +492,12 @@ pub fn verify_report_json(report: &BenchReport, text: &str) -> Result<()> {
             w.name
         );
         ensure!(eps >= 0.0, "{}: negative events_per_sec", w.name);
+        let usd = j
+            .get("usd")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("{}: usd missing", w.name))?;
+        ensure!(usd.to_bits() == w.usd.to_bits(), "{}: usd did not round-trip", w.name);
+        ensure!(usd >= 0.0, "{}: negative usd", w.name);
     }
     Ok(())
 }
@@ -456,6 +533,7 @@ mod tests {
                     wall_ms_min: 12.5,
                     wall_ms_max: 12.5,
                     events_per_sec: 9_876_543.21,
+                    usd: 0.0,
                 },
                 WorkloadResult {
                     name: "campaign-smoke-legacy".to_string(),
@@ -468,6 +546,7 @@ mod tests {
                     wall_ms_min: 25.0,
                     wall_ms_max: 25.0,
                     events_per_sec: 4_938_271.5,
+                    usd: 1.234,
                 },
             ],
         }

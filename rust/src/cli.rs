@@ -1,5 +1,11 @@
 //! Command-line launcher (hand-rolled — no clap in the offline image).
 //!
+//! `--set` reaches every config knob, so subsystem axes ride the same
+//! surface — e.g. `--set bidding.strategy=adaptive --set
+//! bidding.insurance=true` turns on cost-aware bidding + insurance
+//! replication for any command below (see `docs/CAMPAIGN.md` for the
+//! campaign-file form of the same axes).
+//!
 //! ```text
 //! houtu <command> [--config FILE] [--set section.key=value]...
 //!

@@ -1,0 +1,406 @@
+//! Bid strategies: how a deployment acquires revocable capacity.
+//!
+//! HOUTU's efficiency half (§2.3/§6.3) rents cheap spot instances whose
+//! continued existence depends on the standing bid beating the market
+//! price. The seed reproduction drew one blind random bid per VM
+//! ([`SpotMarket::draw_bid`]); this module turns that into a pluggable
+//! [`BidStrategy`] decided per *acquisition* (initial fleet build and
+//! every post-revocation re-acquisition) and per *container request*
+//! (the class preference a JM attaches when it asks its master for
+//! capacity):
+//!
+//! * [`Naive`] — the seed behaviour, kept as the bit-identical baseline:
+//!   `bid_multiplier × mean`, jittered ±10 %. Default; a run under
+//!   `bidding.strategy = "naive"` consumes the same RNG stream and
+//!   publishes the same trace events as the pre-subsystem code.
+//! * [`AdaptivePredictor`] — an EWMA price forecast per DC plus an EWMA
+//!   absolute-deviation volatility proxy, both fed by every market
+//!   recalculation ([`BidStrategy::observe_price`]). Bids track the
+//!   forecast with a volatility-scaled safety margin, so `spot_storm@`
+//!   windows raise the bid *before* the next spike out-prices the fleet;
+//!   if the forecast itself crosses the on-demand rate the strategy backs
+//!   off spot entirely and buys on-demand — the "picks on-demand vs spot"
+//!   decision of the wide-area-analytics cost/latency trade-off.
+//! * [`DeadlineAware`] — per-job budget + soft deadline (the
+//!   `workload.budget_usd` / `workload.deadline_secs` config keys). It
+//!   bids at the calm baseline while jobs track their critical-path
+//!   estimate ([`crate::deploy::JobRt::remaining_critical_path`]) and
+//!   scales toward `bidding.aggressive_multiplier` only when a job is
+//!   projected to overshoot its deadline — and never while over budget.
+//!
+//! The insurance half of the subsystem (PingAn, arXiv:1804.02817) lives
+//! in `deploy::lifecycle`: tasks launched on high-revocation-risk spot
+//! containers get a duplicate copy, first commit wins. Strategies here
+//! only decide *prices*; the risk gate is `bidding.risk_margin`.
+
+use crate::config::{BiddingConfig, CloudConfig};
+use crate::ids::DcId;
+use crate::util::error::Result;
+use crate::bail;
+
+use super::{InstanceClass, SpotMarket};
+
+/// Which [`BidStrategy`] a run uses (`bidding.strategy` in the config,
+/// `strategy = "..."` in campaign scenarios).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StrategyKind {
+    /// Blind random bid (the seed behaviour; bit-identical baseline).
+    Naive,
+    /// EWMA price forecast + volatility back-off per DC.
+    Adaptive,
+    /// Budget/deadline-driven aggression.
+    Deadline,
+}
+
+impl StrategyKind {
+    pub const ALL: [StrategyKind; 3] =
+        [StrategyKind::Naive, StrategyKind::Adaptive, StrategyKind::Deadline];
+
+    pub fn parse(s: &str) -> Result<StrategyKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "naive" => StrategyKind::Naive,
+            "adaptive" => StrategyKind::Adaptive,
+            "deadline" => StrategyKind::Deadline,
+            other => bail!("unknown bid strategy {other:?} (naive|adaptive|deadline)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StrategyKind::Naive => "naive",
+            StrategyKind::Adaptive => "adaptive",
+            StrategyKind::Deadline => "deadline",
+        }
+    }
+}
+
+/// Context for one acquisition decision.
+#[derive(Debug, Clone, Copy)]
+pub struct BidRequest {
+    pub dc: DcId,
+    /// How far behind schedule the worst active job is: 0 = on track,
+    /// 1 = projected to overshoot its soft deadline by ≥ 100 %.
+    pub urgency: f64,
+    /// Some active job has exhausted its `workload.budget_usd`.
+    pub over_budget: bool,
+}
+
+impl BidRequest {
+    /// A calm request (fleet build time: no jobs yet, nothing urgent).
+    pub fn calm(dc: DcId) -> BidRequest {
+        BidRequest { dc, urgency: 0.0, over_budget: false }
+    }
+}
+
+/// Instance-class preference a JM attaches to its container requests
+/// (carried to the master and honoured by its allocation pass).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClassPref {
+    /// Any free container (the default; allocation order unchanged).
+    Any,
+    /// Prefer containers hosted on on-demand (revocation-proof) VMs.
+    Reliable,
+}
+
+/// A pluggable bidding policy. One instance lives on the [`World`] and
+/// sees every market recalculation; [`BidStrategy::quote`] is consulted
+/// at every worker-VM acquisition and [`BidStrategy::container_pref`] at
+/// every scheduling period for every live JM.
+///
+/// [`World`]: crate::deploy::World
+pub trait BidStrategy {
+    fn kind(&self) -> StrategyKind;
+
+    /// A market recalculated its price (every `market_period_secs`).
+    /// State-only: must not consume RNG.
+    fn observe_price(&mut self, _dc: DcId, _price: f64) {}
+
+    /// Decide the instance class (+ standing bid) for a fresh worker VM.
+    fn quote(
+        &mut self,
+        req: &BidRequest,
+        market: &mut SpotMarket,
+        cfg: &CloudConfig,
+    ) -> InstanceClass;
+
+    /// The class preference a JM in `dc` attaches to its container
+    /// requests this period.
+    fn container_pref(&self, _dc: DcId, _urgency: f64) -> ClassPref {
+        ClassPref::Any
+    }
+}
+
+/// The seed baseline: blind `bid_multiplier × mean`, jittered ±10 %.
+/// Byte-identical to the pre-subsystem [`SpotMarket::draw_bid`] path.
+pub struct Naive;
+
+impl BidStrategy for Naive {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::Naive
+    }
+
+    fn quote(
+        &mut self,
+        _req: &BidRequest,
+        market: &mut SpotMarket,
+        cfg: &CloudConfig,
+    ) -> InstanceClass {
+        InstanceClass::Spot { bid: market.draw_bid(cfg) }
+    }
+}
+
+/// EWMA price forecast per DC. `forecast` tracks the level, `dev` the
+/// mean absolute deviation (a robust volatility proxy); both start at
+/// the configured mean / calm deviation so the strategy is sane before
+/// the first observation.
+pub struct AdaptivePredictor {
+    alpha: f64,
+    forecast: Vec<f64>,
+    dev: Vec<f64>,
+}
+
+/// Volatility ratio above which the predictor treats a region as inside
+/// a price storm and backs off: bids carry the full safety margin and
+/// container requests prefer reliable hosts.
+const STORM_VOL_RATIO: f64 = 0.25;
+
+impl AdaptivePredictor {
+    pub fn new(num_dcs: usize, cloud: &CloudConfig, bidding: &BiddingConfig) -> AdaptivePredictor {
+        AdaptivePredictor {
+            alpha: bidding.ewma_alpha,
+            forecast: vec![cloud.spot_hourly_mean; num_dcs],
+            // Calm log-AR(1) deviation is roughly sigma × mean.
+            dev: vec![cloud.spot_volatility * cloud.spot_hourly_mean; num_dcs],
+        }
+    }
+
+    /// Deviation-to-level ratio: the storm detector.
+    pub fn vol_ratio(&self, dc: DcId) -> f64 {
+        let f = self.forecast[dc.0].max(1e-9);
+        self.dev[dc.0] / f
+    }
+
+    /// The bid the predictor wants for `dc` (before jitter): forecast
+    /// plus a volatility-scaled safety margin, floored at the naive
+    /// baseline so calm markets never bid below the seed behaviour.
+    pub fn target_bid(&self, dc: DcId, cfg: &CloudConfig) -> f64 {
+        let f = self.forecast[dc.0];
+        let safety = 1.0 + 4.0 * self.vol_ratio(dc);
+        (f * safety).max(cfg.bid_multiplier * cfg.spot_hourly_mean)
+    }
+}
+
+impl BidStrategy for AdaptivePredictor {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::Adaptive
+    }
+
+    fn observe_price(&mut self, dc: DcId, price: f64) {
+        let a = self.alpha;
+        let err = (price - self.forecast[dc.0]).abs();
+        self.dev[dc.0] = a * err + (1.0 - a) * self.dev[dc.0];
+        self.forecast[dc.0] = a * price + (1.0 - a) * self.forecast[dc.0];
+    }
+
+    fn quote(
+        &mut self,
+        req: &BidRequest,
+        market: &mut SpotMarket,
+        cfg: &CloudConfig,
+    ) -> InstanceClass {
+        if self.forecast[req.dc.0] >= cfg.on_demand_hourly {
+            // The forecast *level* out-prices on-demand: spot has stopped
+            // being the cheap option — back off to the reliable class.
+            // (Gated on the level, not level × safety margin: a high bid
+            // costs nothing unless revoked, but an on-demand VM bills at
+            // the premium rate for as long as it is held.)
+            return InstanceClass::OnDemand;
+        }
+        let target = self.target_bid(req.dc, cfg);
+        // Same ±10 % jitter as the naive path, so one spike still revokes
+        // a subset of the fleet rather than all of it at once.
+        InstanceClass::Spot { bid: market.draw_bid_with(target / cfg.spot_hourly_mean, cfg) }
+    }
+
+    fn container_pref(&self, dc: DcId, _urgency: f64) -> ClassPref {
+        if self.vol_ratio(dc) > STORM_VOL_RATIO {
+            ClassPref::Reliable
+        } else {
+            ClassPref::Any
+        }
+    }
+}
+
+/// Budget/deadline-driven: calm-baseline bids while on schedule, scaled
+/// toward `aggressive_multiplier` as jobs fall behind their critical-path
+/// estimate — and never aggressive while a job is over budget.
+pub struct DeadlineAware {
+    base: f64,
+    aggressive: f64,
+}
+
+impl DeadlineAware {
+    pub fn new(cloud: &CloudConfig, bidding: &BiddingConfig) -> DeadlineAware {
+        DeadlineAware {
+            base: cloud.bid_multiplier,
+            aggressive: bidding.aggressive_multiplier.max(cloud.bid_multiplier),
+        }
+    }
+
+    /// The bid multiplier for a given urgency/budget state.
+    pub fn multiplier(&self, urgency: f64, over_budget: bool) -> f64 {
+        if over_budget {
+            self.base
+        } else {
+            self.base + (self.aggressive - self.base) * urgency.clamp(0.0, 1.0)
+        }
+    }
+}
+
+impl BidStrategy for DeadlineAware {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::Deadline
+    }
+
+    fn quote(
+        &mut self,
+        req: &BidRequest,
+        market: &mut SpotMarket,
+        cfg: &CloudConfig,
+    ) -> InstanceClass {
+        let mult = self.multiplier(req.urgency, req.over_budget);
+        InstanceClass::Spot { bid: market.draw_bid_with(mult, cfg) }
+    }
+
+    fn container_pref(&self, _dc: DcId, urgency: f64) -> ClassPref {
+        if urgency > 0.5 {
+            ClassPref::Reliable
+        } else {
+            ClassPref::Any
+        }
+    }
+}
+
+/// Build the configured strategy for a topology of `num_dcs` regions.
+pub fn build_strategy(
+    num_dcs: usize,
+    cloud: &CloudConfig,
+    bidding: &BiddingConfig,
+) -> Box<dyn BidStrategy> {
+    match bidding.strategy {
+        StrategyKind::Naive => Box::new(Naive),
+        StrategyKind::Adaptive => Box::new(AdaptivePredictor::new(num_dcs, cloud, bidding)),
+        StrategyKind::Deadline => Box::new(DeadlineAware::new(cloud, bidding)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::util::Pcg;
+
+    fn cfgs() -> (CloudConfig, BiddingConfig) {
+        let c = Config::default();
+        (c.cloud, c.bidding)
+    }
+
+    #[test]
+    fn strategy_kind_parse_roundtrip() {
+        for k in StrategyKind::ALL {
+            assert_eq!(StrategyKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(StrategyKind::parse("greedy").is_err());
+    }
+
+    #[test]
+    fn naive_matches_the_seed_draw_bid_stream() {
+        let (cloud, _) = cfgs();
+        let mut legacy = SpotMarket::new(&cloud, Pcg::seeded(3));
+        let mut ours = SpotMarket::new(&cloud, Pcg::seeded(3));
+        let mut naive = Naive;
+        for _ in 0..50 {
+            let want = legacy.draw_bid(&cloud);
+            let got = naive.quote(&BidRequest::calm(DcId(0)), &mut ours, &cloud);
+            assert_eq!(got, InstanceClass::Spot { bid: want }, "naive must stay bit-identical");
+        }
+    }
+
+    #[test]
+    fn adaptive_raises_bids_when_observed_prices_turn_volatile() {
+        let (cloud, bidding) = cfgs();
+        let mut a = AdaptivePredictor::new(1, &cloud, &bidding);
+        let calm = a.target_bid(DcId(0), &cloud);
+        // A storm: prices swinging multi-x around the mean.
+        for (i, p) in [0.03, 0.11, 0.04, 0.15, 0.05, 0.18, 0.04, 0.2].iter().enumerate() {
+            a.observe_price(DcId(0), *p);
+            let _ = i;
+        }
+        let stormy = a.target_bid(DcId(0), &cloud);
+        assert!(
+            stormy > calm * 1.3,
+            "volatile series must raise the bid: calm {calm:.4} stormy {stormy:.4}"
+        );
+        assert!(a.vol_ratio(DcId(0)) > STORM_VOL_RATIO);
+        assert_eq!(a.container_pref(DcId(0), 0.0), ClassPref::Reliable, "storm backs off spot");
+    }
+
+    #[test]
+    fn adaptive_converges_back_after_calm_returns() {
+        let (cloud, bidding) = cfgs();
+        let mut a = AdaptivePredictor::new(1, &cloud, &bidding);
+        for p in [0.3, 0.02, 0.25, 0.03] {
+            a.observe_price(DcId(0), p);
+        }
+        assert_eq!(a.container_pref(DcId(0), 0.0), ClassPref::Reliable);
+        for _ in 0..60 {
+            a.observe_price(DcId(0), cloud.spot_hourly_mean);
+        }
+        assert_eq!(a.container_pref(DcId(0), 0.0), ClassPref::Any, "calm restores Any");
+        let target = a.target_bid(DcId(0), &cloud);
+        assert!(
+            (target - cloud.bid_multiplier * cloud.spot_hourly_mean).abs() < 0.01,
+            "target {target} should settle near the naive floor"
+        );
+    }
+
+    #[test]
+    fn adaptive_backs_off_to_on_demand_when_spot_out_prices_it() {
+        let (cloud, bidding) = cfgs();
+        let mut a = AdaptivePredictor::new(1, &cloud, &bidding);
+        // Sustained prices above the on-demand rate.
+        for _ in 0..30 {
+            a.observe_price(DcId(0), cloud.on_demand_hourly * 2.0);
+        }
+        let mut market = SpotMarket::new(&cloud, Pcg::seeded(9));
+        let got = a.quote(&BidRequest::calm(DcId(0)), &mut market, &cloud);
+        assert_eq!(got, InstanceClass::OnDemand, "forecast above on-demand must back off spot");
+    }
+
+    #[test]
+    fn deadline_bids_aggressively_only_when_behind_and_within_budget() {
+        let (cloud, bidding) = cfgs();
+        let d = DeadlineAware::new(&cloud, &bidding);
+        let calm = d.multiplier(0.0, false);
+        assert_eq!(calm, cloud.bid_multiplier, "on-track jobs bid the calm baseline");
+        let behind = d.multiplier(1.0, false);
+        assert!(
+            (behind - bidding.aggressive_multiplier).abs() < 1e-12,
+            "fully behind ⇒ full aggression (got {behind})"
+        );
+        assert!(d.multiplier(0.5, false) > calm);
+        assert!(d.multiplier(0.5, false) < behind);
+        assert_eq!(d.multiplier(1.0, true), calm, "over budget caps the aggression");
+        assert_eq!(d.container_pref(DcId(0), 0.9), ClassPref::Reliable);
+        assert_eq!(d.container_pref(DcId(0), 0.1), ClassPref::Any);
+    }
+
+    #[test]
+    fn build_strategy_honours_the_config() {
+        let (cloud, mut bidding) = cfgs();
+        for k in StrategyKind::ALL {
+            bidding.strategy = k;
+            assert_eq!(build_strategy(4, &cloud, &bidding).kind(), k);
+        }
+    }
+}

@@ -1,13 +1,20 @@
 //! Cloud market substrate: the Fig-3 price table, a per-region spot
-//! market with bid-based revocation, and cost metering (machine-hours plus
-//! the $0.13/GB cross-DC transfer tariff of §6.3).
+//! market with bid-based revocation, cost metering (machine-hours plus
+//! the $0.13/GB cross-DC transfer tariff of §6.3), and the pluggable
+//! [`bidding`] strategies that decide *what* to bid.
 //!
 //! The spot price follows a mean-reverting log-AR(1) process recalculated
 //! every `market_period_secs`; each spot instance carries its own bid
-//! (jittered around `bid_multiplier × mean spot price`), and a price
+//! (chosen by the configured [`bidding::BidStrategy`]; the baseline
+//! jitters around `bid_multiplier × mean spot price`), and a price
 //! excursion above a bid revokes exactly the instances it out-prices —
 //! matching the paper's "terminate those instances whose maximum bid is
-//! below the new market price".
+//! below the new market price". [`CostMeter`] accumulates the Fig-10
+//! cost components, both per run (`World::bill_machines`) and per job
+//! (folded into `CostCharged` trace events and the campaign/fuzz/bench
+//! cost columns).
+
+pub mod bidding;
 
 use crate::config::CloudConfig;
 use crate::util::Pcg;
@@ -101,9 +108,17 @@ impl SpotMarket {
     }
 
     /// Draw a per-instance bid: `bid_multiplier × mean`, jittered ±10 % so
-    /// a spike revokes a subset rather than the whole fleet.
+    /// a spike revokes a subset rather than the whole fleet. This is the
+    /// [`bidding::Naive`] baseline.
     pub fn draw_bid(&mut self, cfg: &CloudConfig) -> f64 {
-        cfg.bid_multiplier * self.mean * self.rng.uniform(0.9, 1.1)
+        self.draw_bid_with(cfg.bid_multiplier, cfg)
+    }
+
+    /// [`SpotMarket::draw_bid`] at an explicit multiplier — the adaptive
+    /// and deadline strategies pick `mult` dynamically but keep the same
+    /// ±10 % jitter (and the same RNG stream shape) as the baseline.
+    pub fn draw_bid_with(&mut self, mult: f64, _cfg: &CloudConfig) -> f64 {
+        mult * self.mean * self.rng.uniform(0.9, 1.1)
     }
 
     /// Would an instance with `bid` be revoked at the current price?
@@ -245,6 +260,77 @@ mod tests {
         assert_eq!(c.on_demand_hours, 2.0);
         assert_eq!(c.spot_hours, 10.0);
         assert!((c.total_usd() - (c.machine_usd + c.transfer_usd)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_meter_zero_hour_charges_are_exact_noops() {
+        // Billing zero hours (a job that finished within one stamp, or a
+        // class that was never used) must not perturb any component.
+        let mut c = CostMeter::default();
+        c.charge_machine(InstanceClass::OnDemand, 0.0, 0.312);
+        c.charge_machine(InstanceClass::Spot { bid: 0.05 }, 0.0, 0.036);
+        c.charge_transfer(0, 0.13);
+        assert_eq!(c.machine_usd, 0.0);
+        assert_eq!(c.transfer_usd, 0.0);
+        assert_eq!(c.on_demand_hours, 0.0);
+        assert_eq!(c.spot_hours, 0.0);
+        assert_eq!(c.total_usd(), 0.0);
+        // And zero-hour charges interleaved with real ones change nothing.
+        c.charge_machine(InstanceClass::OnDemand, 1.0, 0.312);
+        let snapshot = c.total_usd();
+        c.charge_machine(InstanceClass::OnDemand, 0.0, 0.312);
+        assert_eq!(c.total_usd(), snapshot);
+    }
+
+    #[test]
+    fn storm_window_prices_stay_positive_and_finite() {
+        // Even an absurd storm factor cannot push the log-AR(1) price to
+        // zero, negative or non-finite values — the storm scales the
+        // innovation, it never escapes the exp() clamp.
+        let cfg = cloud_cfg();
+        let mut m = SpotMarket::new(&cfg, Pcg::seeded(11));
+        m.set_storm(50.0);
+        for _ in 0..5_000 {
+            let p = m.step();
+            assert!(p.is_finite() && p > 0.0, "storm price escaped the clamp: {p}");
+        }
+        // Restoring calm also restores the configured storm factor.
+        m.set_storm(1.0);
+        assert_eq!(m.storm(), 1.0);
+    }
+
+    #[test]
+    fn revokes_is_deterministic_under_fixed_seeds() {
+        // Same seed ⇒ the same price trajectory ⇒ the same revocation
+        // verdict at every step, for any bid. Different seeds diverge.
+        let cfg = cloud_cfg();
+        let bid = cfg.bid_multiplier * cfg.spot_hourly_mean;
+        let verdicts = |seed: u64| -> Vec<bool> {
+            let mut m = SpotMarket::new(&cfg, Pcg::seeded(seed));
+            (0..2_000)
+                .map(|_| {
+                    m.step();
+                    m.revokes(bid)
+                })
+                .collect()
+        };
+        assert_eq!(verdicts(21), verdicts(21), "fixed seed must replay bit-identically");
+        assert_ne!(verdicts(21), verdicts(22), "different seeds must diverge");
+        // revokes() itself is a pure threshold: boundary cases are exact.
+        let m = SpotMarket::new(&cfg, Pcg::seeded(21));
+        assert!(!m.revokes(m.price()), "price == bid must not revoke");
+        assert!(m.revokes(m.price() - 1e-12));
+        assert!(!m.revokes(f64::INFINITY));
+    }
+
+    #[test]
+    fn draw_bid_with_matches_draw_bid_at_the_config_multiplier() {
+        let cfg = cloud_cfg();
+        let mut a = SpotMarket::new(&cfg, Pcg::seeded(13));
+        let mut b = SpotMarket::new(&cfg, Pcg::seeded(13));
+        for _ in 0..20 {
+            assert_eq!(a.draw_bid(&cfg), b.draw_bid_with(cfg.bid_multiplier, &cfg));
+        }
     }
 
     #[test]

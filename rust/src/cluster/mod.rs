@@ -2,7 +2,7 @@
 //! per-container utilization monitor (§5 "Monitor mechanism").
 //!
 //! A *container* is the unified resource unit of the paper: a fixed
-//! <cores, memory> slot, normalized to capacity 1.0. Both tasks and job
+//! `<cores, memory>` slot, normalized to capacity 1.0. Both tasks and job
 //! managers run in containers, which is why both failure classes occur
 //! with the same probability on spot instances (§2.3). Parades may pack
 //! multiple tasks into one container as long as Σ r ≤ 1.
@@ -336,6 +336,17 @@ impl Cluster {
         n.started_at = t;
         n.containers = fresh.clone();
         fresh
+    }
+
+    /// The instance class a node is currently paid under.
+    pub fn node_class(&self, node: NodeId) -> InstanceClass {
+        self.dcs[node.dc.0].nodes[node.idx].class
+    }
+
+    /// Re-class a node (market re-acquisition may come back with a fresh
+    /// bid or as an on-demand instance — the bid strategy's decision).
+    pub fn set_node_class(&mut self, node: NodeId, class: InstanceClass) {
+        self.dcs[node.dc.0].nodes[node.idx].class = class;
     }
 
     /// Sum of used resource over live containers of a DC (for injection

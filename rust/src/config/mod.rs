@@ -167,6 +167,46 @@ pub struct WorkloadConfig {
     /// models the §2.2 changeable environment at task granularity.
     pub straggler_prob: f64,
     pub straggler_factor: f64,
+    /// Per-job USD budget consumed by the [`BiddingConfig::strategy`]
+    /// `deadline` policy (0 = unlimited): a job over budget stops the
+    /// strategy from bidding aggressively on its behalf.
+    pub budget_usd: f64,
+    /// Per-job soft deadline in seconds (0 = none): a job projected —
+    /// elapsed time plus its remaining critical-path estimate — to
+    /// overshoot it counts as *behind*, which is when the `deadline`
+    /// strategy turns aggressive.
+    pub deadline_secs: f64,
+}
+
+/// The cost-aware bidding subsystem (`[bidding]` section): which
+/// [`crate::cloud::bidding::BidStrategy`] prices worker-VM acquisitions,
+/// and whether PingAn-style insurance replication hedges risky spot
+/// containers. The `naive` default keeps the seed behaviour bit-identical
+/// (same RNG stream, same trace events).
+#[derive(Debug, Clone)]
+pub struct BiddingConfig {
+    /// Which strategy prices acquisitions (naive|adaptive|deadline).
+    pub strategy: crate::cloud::bidding::StrategyKind,
+    /// Duplicate tasks launched on high-revocation-risk spot containers
+    /// (first commit wins; exactly-once is enforced duplicate-safely).
+    pub insurance: bool,
+    /// The `deadline` strategy's bid multiplier when fully behind
+    /// schedule (its calm baseline is `cloud.bid_multiplier`).
+    pub aggressive_multiplier: f64,
+    /// EWMA smoothing factor for the `adaptive` price forecast, in (0,1].
+    pub ewma_alpha: f64,
+    /// Insurance risk gate: a spot container is *risky* when
+    /// `market price × risk_margin ≥ its bid` (or a storm is active).
+    pub risk_margin: f64,
+}
+
+impl BiddingConfig {
+    /// Whether the subsystem publishes its trace events (`BidPlaced`,
+    /// `InsuranceLaunched`, `CostCharged`). False under the naive
+    /// default, which keeps pre-subsystem replay digests bit-identical.
+    pub fn active(&self) -> bool {
+        self.strategy != crate::cloud::bidding::StrategyKind::Naive || self.insurance
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -194,6 +234,7 @@ pub struct Config {
     pub cloud: CloudConfig,
     pub workload: WorkloadConfig,
     pub failures: FailureConfig,
+    pub bidding: BiddingConfig,
 }
 
 /// Fig 2 of the paper, (mean, std) Mbps. Order: NC-3, NC-5, EC-1, SC-1.
@@ -255,6 +296,8 @@ impl Default for Config {
                 num_jobs: 12,
                 straggler_prob: 0.0,
                 straggler_factor: 4.0,
+                budget_usd: 0.0,
+                deadline_secs: 0.0,
             },
             failures: FailureConfig {
                 recovery_enabled: true,
@@ -262,6 +305,13 @@ impl Default for Config {
                 speculation_factor: 2.0,
                 detect_timeout_secs: 5.0,
                 respawn_secs: 4.0,
+            },
+            bidding: BiddingConfig {
+                strategy: crate::cloud::bidding::StrategyKind::Naive,
+                insurance: false,
+                aggressive_multiplier: 3.0,
+                ewma_alpha: 0.3,
+                risk_margin: 1.25,
             },
         }
     }
@@ -321,6 +371,8 @@ impl Config {
         wl.num_jobs = doc.i64_or("workload", "num_jobs", wl.num_jobs as i64) as usize;
         wl.straggler_prob = doc.f64_or("workload", "straggler_prob", wl.straggler_prob);
         wl.straggler_factor = doc.f64_or("workload", "straggler_factor", wl.straggler_factor);
+        wl.budget_usd = doc.f64_or("workload", "budget_usd", wl.budget_usd);
+        wl.deadline_secs = doc.f64_or("workload", "deadline_secs", wl.deadline_secs);
         if let Some(v) = doc.get("workload", "mix") {
             let arr = v.as_array().context("workload.mix must be an array")?;
             if arr.len() != 3 {
@@ -337,6 +389,17 @@ impl Config {
         f.speculation_factor = doc.f64_or("failures", "speculation_factor", f.speculation_factor);
         f.detect_timeout_secs = doc.f64_or("failures", "detect_timeout_secs", f.detect_timeout_secs);
         f.respawn_secs = doc.f64_or("failures", "respawn_secs", f.respawn_secs);
+
+        let b = &mut self.bidding;
+        if let Some(v) = doc.get("bidding", "strategy") {
+            let s = v.as_str().context("bidding.strategy must be a string")?;
+            b.strategy = crate::cloud::bidding::StrategyKind::parse(s)?;
+        }
+        b.insurance = doc.bool_or("bidding", "insurance", b.insurance);
+        b.aggressive_multiplier =
+            doc.f64_or("bidding", "aggressive_multiplier", b.aggressive_multiplier);
+        b.ewma_alpha = doc.f64_or("bidding", "ewma_alpha", b.ewma_alpha);
+        b.risk_margin = doc.f64_or("bidding", "risk_margin", b.risk_margin);
 
         self.validate()
     }
@@ -398,6 +461,22 @@ impl Config {
         let mix_sum: f64 = self.workload.mix.iter().sum();
         if (mix_sum - 1.0).abs() > 1e-6 {
             bail!("workload.mix must sum to 1, got {mix_sum}");
+        }
+        if self.workload.budget_usd < 0.0 {
+            bail!("workload.budget_usd must be >= 0 (0 = unlimited)");
+        }
+        if self.workload.deadline_secs < 0.0 {
+            bail!("workload.deadline_secs must be >= 0 (0 = none)");
+        }
+        let b = &self.bidding;
+        if !(0.0 < b.ewma_alpha && b.ewma_alpha <= 1.0) {
+            bail!("bidding.ewma_alpha must be in (0,1], got {}", b.ewma_alpha);
+        }
+        if b.aggressive_multiplier < 1.0 {
+            bail!("bidding.aggressive_multiplier must be >= 1");
+        }
+        if b.risk_margin < 1.0 {
+            bail!("bidding.risk_margin must be >= 1");
         }
         Ok(())
     }
@@ -502,6 +581,33 @@ mod tests {
         let mut cfg = Config::default();
         cfg.workload.mix = [0.5, 0.5, 0.5];
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn bidding_section_overlays_and_validates() {
+        use crate::cloud::bidding::StrategyKind;
+        let mut cfg = Config::default();
+        assert_eq!(cfg.bidding.strategy, StrategyKind::Naive);
+        assert!(!cfg.bidding.insurance);
+        assert!(!cfg.bidding.active(), "naive + no insurance is the silent baseline");
+        cfg.apply_override("bidding.strategy=adaptive").unwrap();
+        assert_eq!(cfg.bidding.strategy, StrategyKind::Adaptive);
+        assert!(cfg.bidding.active());
+        cfg.apply_override("bidding.insurance=true").unwrap();
+        cfg.apply_override("workload.budget_usd=2.5").unwrap();
+        cfg.apply_override("workload.deadline_secs=600").unwrap();
+        assert!(cfg.bidding.insurance);
+        assert_eq!(cfg.workload.budget_usd, 2.5);
+        assert_eq!(cfg.workload.deadline_secs, 600.0);
+        assert!(cfg.apply_override("bidding.strategy=greedy").is_err());
+        assert!(cfg.apply_override("bidding.ewma_alpha=0").is_err());
+        assert!(cfg.apply_override("bidding.risk_margin=0.5").is_err());
+        assert!(cfg.apply_override("workload.budget_usd=-1").is_err());
+        // Insurance alone (without a non-naive strategy) also activates
+        // the subsystem's trace events.
+        let mut cfg = Config::default();
+        cfg.apply_override("bidding.insurance=true").unwrap();
+        assert!(cfg.bidding.active());
     }
 
     #[test]

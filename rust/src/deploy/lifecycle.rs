@@ -56,6 +56,8 @@ pub fn submit_job(sim: &mut WorldSim, kind: WorkloadKind, size: SizeClass, home:
             estimator: crate::jm::StageEstimator::standard(),
             started_at: HashMap::new(),
             speculative_relaunches: 0,
+            cost: Default::default(),
+            insurance: HashMap::new(),
         };
         let jm_dcs = w.jm_dcs(home);
         let spawns: Vec<(DcId, SimTime)> = jm_dcs
@@ -352,11 +354,15 @@ pub fn container_update(sim: &mut WorldSim, job: JobId, dc: DcId, cid: Container
 }
 
 /// Commit one assignment: reserve the container, fetch inputs (WAN if
-/// cross-DC), run for `p`, then report completion.
+/// cross-DC), run for `p`, then report completion. When insurance
+/// replication is on and the container's host looks revocation-risky
+/// (spot, market price within `bidding.risk_margin` of its bid, or a
+/// price storm active), a duplicate copy starts on another executor of
+/// the same JM — first commit wins, the winner frees the loser.
 pub fn start_assignment(sim: &mut WorldSim, job: JobId, dc: DcId, a: Assignment) {
     let now_ms = sim.now();
     let now = sim.now_secs();
-    let (t, cid, attempt, fetch_ms, links, true_p) = {
+    let (t, cid, attempt, fetch_ms, links, true_p, insured) = {
         let w = &mut sim.state;
         let Some(rt) = w.jobs.get_mut(&job) else { return };
         let t = a.task.id;
@@ -381,12 +387,16 @@ pub fn start_assignment(sim: &mut WorldSim, job: JobId, dc: DcId, a: Assignment)
         let mut fetch_ms: SimTime = 0;
         let mut any_remote = false;
         let mut links: Vec<(DcId, DcId)> = Vec::new();
+        let per_gb = w.cfg.cloud.transfer_per_gb;
         for (src, bytes) in sources {
             if bytes == 0 {
                 continue;
             }
             if src != dst {
                 any_remote = true;
+                // Per-job cost attribution: cross-DC input bytes at the
+                // §6.3 tariff (pure fold — no RNG, no trace events).
+                rt.cost.charge_transfer(bytes, per_gb);
             }
             let d = w.wan.begin_transfer(src, dst, bytes);
             links.push((src, dst));
@@ -403,23 +413,76 @@ pub fn start_assignment(sim: &mut WorldSim, job: JobId, dc: DcId, a: Assignment)
         rt.started_at.insert(t, now);
         // True processing time comes from the spec; a.task.p is the
         // scheduler's *estimate* (§5) and only gates delay thresholds.
-        let mut true_p = rt.spec.stage(t.stage).tasks[t.index as usize].p;
+        let spec_p = rt.spec.stage(t.stage).tasks[t.index as usize].p;
+        let mut true_p = spec_p;
         // §2.2 changeable environment at task granularity: some tasks
         // straggle (contention, slow disks); speculation catches them.
         if w.rng.chance(w.cfg.workload.straggler_prob) {
             true_p *= w.cfg.workload.straggler_factor;
         }
-        (t, a.container, attempt, fetch_ms, links, true_p)
+        // PingAn-style insurance: duplicate the attempt when the primary
+        // sits on a high-revocation-risk spot host and a sibling executor
+        // has room. The copy shares the primary's input fetch (the
+        // replicated partitionList makes inputs co-readable) and runs the
+        // un-straggled spec time, so it also hedges straggler draws.
+        let insured: Option<ContainerId> = if w.cfg.bidding.insurance {
+            let node = w.cluster.container(a.container).node;
+            let risky = match w.cluster.node_class(node) {
+                crate::cloud::InstanceClass::Spot { bid } => {
+                    let m = &w.markets[node.dc.0];
+                    m.storm() > 1.0 || m.price() * w.cfg.bidding.risk_margin >= bid
+                }
+                crate::cloud::InstanceClass::OnDemand => false,
+            };
+            if risky && !rt.insurance.contains_key(&t) {
+                rt.jms.get(&dc).and_then(|jm| {
+                    let fits = |c: ContainerId| {
+                        c != a.container
+                            && w.cluster
+                                .containers
+                                .get(&c)
+                                .map(|cc| cc.alive && cc.free + 1e-9 >= a.task.r)
+                                .unwrap_or(false)
+                    };
+                    // Prefer a different host VM (the whole point is
+                    // surviving the primary's node), else any sibling.
+                    jm.executors
+                        .iter()
+                        .copied()
+                        .find(|&c| fits(c) && w.cluster.containers[&c].node != node)
+                        .or_else(|| jm.executors.iter().copied().find(|&c| fits(c)))
+                })
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        if let Some(backup) = insured {
+            w.cluster.start_task(backup, t, a.task.r, now_ms);
+            rt.insurance.insert(t, backup);
+            let st = w.tracer.publish(TraceEvent::InsuranceLaunched { job, task: t, dc });
+            w.metrics.on_event(&st);
+        }
+        (t, a.container, attempt, fetch_ms, links, true_p, insured.map(|b| (b, spec_p)))
     };
     let run_ms = secs_f(true_p);
     for (s, d) in links {
         sim.schedule_in(fetch_ms, move |sim| sim.state.wan.end_transfer(s, d));
     }
     sim.schedule_in(fetch_ms + run_ms, move |sim| task_finished(sim, job, dc, t, cid, attempt));
+    if let Some((backup, spec_p)) = insured {
+        sim.schedule_in(fetch_ms + secs_f(spec_p), move |sim| {
+            task_finished(sim, job, dc, t, backup, attempt)
+        });
+    }
 }
 
 /// Completion: free the container, record the output partition, replicate
-/// the partitionList, release dependent stages, finish the job.
+/// the partitionList, release dependent stages, finish the job. With
+/// insurance replication the *first* copy to reach this point wins: it
+/// frees the losing copy's reservation and invalidates its in-flight
+/// completion event, so exactly one `TaskFinished` is published per task.
 pub fn task_finished(
     sim: &mut WorldSim,
     job: JobId,
@@ -429,6 +492,7 @@ pub fn task_finished(
     attempt: u32,
 ) {
     let now_ms = sim.now();
+    let now_secs = sim.now_secs();
     enum After {
         JobDone,
         StageDone,
@@ -438,15 +502,51 @@ pub fn task_finished(
         let w = &mut sim.state;
         let Some(rt) = w.jobs.get_mut(&job) else { return };
         if rt.done || rt.attempts.get(&t) != Some(&attempt) {
-            return; // stale event (container died / job restarted)
+            return; // stale event (container died / job restarted / lost the race)
         }
         if !w.cluster.containers.get(&cid).map(|c| c.alive).unwrap_or(false) {
             return; // container died mid-flight; failure path re-queues
         }
         w.cluster.finish_task(cid, t, now_ms);
+        // First commit wins: free every other live copy of this task (the
+        // insured duplicate, or — when the duplicate won — the primary
+        // still booked in the JM's running map) and invalidate its event.
+        let primary = rt.jms.get(&dc).and_then(|jm| jm.running.get(&t).copied());
+        let mut losers: Vec<ContainerId> = Vec::new();
+        if let Some(p) = primary {
+            if p != cid {
+                losers.push(p);
+            }
+        }
+        if let Some(other) = rt.insurance.remove(&t) {
+            if other != cid && !losers.contains(&other) {
+                losers.push(other);
+            }
+            // The losing copy's completion event carries this attempt id;
+            // bump so it drops as stale instead of double-completing.
+            *rt.attempts.entry(t).or_insert(0) += 1;
+        }
+        for loser in losers {
+            if w.cluster.containers.get(&loser).map(|c| c.alive).unwrap_or(false) {
+                w.cluster.finish_task(loser, t, now_ms);
+            }
+        }
         let st = w.tracer.publish(TraceEvent::TaskFinished { job, task: t, dc });
         w.metrics.on_event(&st);
         let node = w.cluster.container(cid).node;
+        // Per-job machine-cost attribution: the winning attempt's
+        // occupancy (wall seconds × footprint) at its host's class rate.
+        {
+            let secs_run =
+                (now_secs - rt.started_at.get(&t).copied().unwrap_or(now_secs)).max(0.0);
+            let class = w.cluster.node_class(node);
+            let price = match class {
+                crate::cloud::InstanceClass::OnDemand => w.cfg.cloud.on_demand_hourly,
+                crate::cloud::InstanceClass::Spot { .. } => w.cfg.cloud.spot_hourly_mean,
+            };
+            let r = rt.spec.stage(t.stage).tasks[t.index as usize].r;
+            rt.cost.charge_machine(class, secs_run / 3600.0 * r, price);
+        }
         let finished_spec = &rt.spec.stage(t.stage).tasks[t.index as usize];
         let out_bytes = finished_spec.output_bytes;
         rt.estimator.record(t.stage, finished_spec.p, finished_spec.r);
@@ -497,6 +597,14 @@ pub fn finish_job(sim: &mut WorldSim, job: JobId) {
     let w = &mut sim.state;
     let Some(rt) = w.jobs.get_mut(&job) else { return };
     rt.done = true;
+    debug_assert!(rt.insurance.is_empty(), "insurance copies must not outlive their job");
+    if w.cfg.bidding.active() {
+        // The job's accumulated CostMeter total — the per-job cost column
+        // campaign/fuzz/bench reports fold from the trace stream.
+        let usd = rt.cost.total_usd();
+        let st = w.tracer.publish(TraceEvent::CostCharged { job, usd });
+        w.metrics.on_event(&st);
+    }
     let dcs: Vec<DcId> = rt.jms.keys().copied().collect();
     let centralized = w.mode.centralized();
     for dc in dcs {

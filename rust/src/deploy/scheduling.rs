@@ -55,9 +55,16 @@ fn schedule_recurring(
 ///    sub-jobs; fresh grants trigger UPDATE events.
 pub fn period_tick(sim: &mut WorldSim) {
     let now_ms = sim.now();
+    let now_secs = sim.now_secs();
     let adaptive = sim.state.mode.adaptive();
     let delta = sim.state.cfg.scheduler.delta;
     let rho = sim.state.cfg.scheduler.rho;
+    // Bid-strategy inputs for this period's container requests: how far
+    // behind schedule the worst job is (deadline strategy) — computed once
+    // per tick, pushed per JM below. Inactive bidding skips the push
+    // entirely, keeping the legacy allocation order byte-identical.
+    let bidding_active = sim.state.cfg.bidding.active();
+    let urgency = if bidding_active { sim.state.job_urgency(now_secs) } else { 0.0 };
 
     // Phase 1+2: desires & surplus release.
     let keys = sim.state.live_jm_keys();
@@ -109,6 +116,12 @@ pub fn period_tick(sim: &mut WorldSim) {
         }
         let master = if centralized { &mut w.masters[0] } else { &mut w.masters[dc.0] };
         master.set_desire(jm_id, desire);
+        if bidding_active {
+            // The container request carries an instance-class preference
+            // next to the desire: the strategy's per-DC decision (storm
+            // back-off for adaptive, behind-schedule for deadline).
+            master.set_class_pref(jm_id, w.strategy.container_pref(dc, urgency));
+        }
         for cid in surplus {
             master.return_container(jm_id, cid, &mut w.cluster, now_ms);
         }
@@ -222,6 +235,14 @@ pub fn check_stragglers(sim: &mut WorldSim, job: JobId, dc: DcId) {
         // locality thresholds are already satisfied.
         if w.cluster.containers.get(&cid).map(|c| c.alive).unwrap_or(false) {
             w.cluster.finish_task(cid, t, now_ms);
+        }
+        // An insurance copy of the aborted attempt is aborted with it:
+        // the attempt bump below invalidates its completion event, so its
+        // reservation must be freed here or it would leak.
+        if let Some(backup) = rt.insurance.remove(&t) {
+            if w.cluster.containers.get(&backup).map(|c| c.alive).unwrap_or(false) {
+                w.cluster.finish_task(backup, t, now_ms);
+            }
         }
         *rt.attempts.entry(t).or_insert(0) += 1;
         rt.progress.mark_waiting(t);

@@ -3,12 +3,13 @@
 
 use std::collections::{BTreeMap, HashMap};
 
+use crate::cloud::bidding::{self, BidRequest, BidStrategy};
 use crate::cloud::{CostMeter, InstanceClass, SpotMarket};
 use crate::cluster::Cluster;
 use crate::config::{Config, Deployment};
 use crate::consensus::{SessionId, ZkEnsemble};
 use crate::dag::{JobProgress, JobSpec, TaskStatus};
-use crate::ids::{DcId, JmId, JobId, NodeId, TaskId};
+use crate::ids::{ContainerId, DcId, JmId, JobId, NodeId, StageId, TaskId};
 use crate::jm::{JobManager, ParadesParams, Role, IntermediateInfo};
 use crate::master::Master;
 use crate::metrics::Metrics;
@@ -71,6 +72,14 @@ pub struct JobRt {
     pub started_at: HashMap<TaskId, f64>,
     /// Tasks relaunched by speculation (metric).
     pub speculative_relaunches: u32,
+    /// Per-job cost attribution (machine occupancy of finished attempts
+    /// plus cross-DC input transfer): the `CostCharged` payload and the
+    /// deadline strategy's budget input. Always metered; no RNG.
+    pub cost: CostMeter,
+    /// Live insurance duplicates: task → the container running its copy
+    /// (PingAn-style replication; at most one copy per task). The winner
+    /// frees the loser; a primary's death promotes a surviving copy.
+    pub insurance: HashMap<TaskId, ContainerId>,
 }
 
 impl JobRt {
@@ -88,6 +97,33 @@ impl JobRt {
     pub fn pjm(&self) -> &JobManager {
         &self.jms[&self.primary]
     }
+
+    /// Longest remaining path (seconds of oracle processing time) through
+    /// the stage DAG, counting only stages with unfinished tasks — the
+    /// deadline strategy's critical-path estimate. Finished stages
+    /// contribute 0, so the estimate shrinks monotonically as the job
+    /// progresses; parents always precede children in the validated spec,
+    /// making a single forward pass exact.
+    pub fn remaining_critical_path(&self) -> f64 {
+        let n = self.spec.stages.len();
+        let mut cp = vec![0.0f64; n];
+        let mut longest = 0.0f64;
+        for (i, s) in self.spec.stages.iter().enumerate() {
+            let own = if self.progress.stage_done(StageId(i as u32)) {
+                0.0
+            } else {
+                s.tasks
+                    .iter()
+                    .filter(|t| self.progress.task_status(t.id) != TaskStatus::Done)
+                    .map(|t| t.p)
+                    .fold(0.0f64, f64::max)
+            };
+            let base = s.parents.iter().map(|p| cp[p.0 as usize]).fold(0.0f64, f64::max);
+            cp[i] = base + own;
+            longest = longest.max(cp[i]);
+        }
+        longest
+    }
 }
 
 /// The whole simulated testbed.
@@ -99,6 +135,10 @@ pub struct World {
     pub wan: Wan,
     pub zk: ZkEnsemble,
     pub markets: Vec<SpotMarket>,
+    /// The configured bid strategy: prices every worker-VM acquisition,
+    /// observes every market recalculation, and hands per-JM container
+    /// class preferences to the masters each scheduling period.
+    pub strategy: Box<dyn BidStrategy>,
     pub cost: CostMeter,
     /// One master per DC (decentralized) or a single monolithic master
     /// (centralized) — indexed by [`World::master_of`].
@@ -115,6 +155,12 @@ pub struct World {
     next_job: u64,
     /// Node bids (spot), for revocation checks.
     pub bids: HashMap<NodeId, f64>,
+    /// Spot↔on-demand class flips from strategy re-acquisitions, as
+    /// (node, change time secs, class *before* the change), appended in
+    /// chronological order. [`World::bill_machines`] bills each segment
+    /// at its own rate; empty (the naive/default case) degenerates to
+    /// the original single-segment billing, bit for bit.
+    pub class_changes: Vec<(NodeId, f64, InstanceClass)>,
     /// Hog sub-jobs for the Fig-9 injection (kept registered forever).
     pub hogs: Vec<JmId>,
     /// Wall-clock guard: stop submitting after the trace ends.
@@ -143,10 +189,15 @@ impl World {
             .map(|i| SpotMarket::new(&cfg.cloud, rng.split(100 + i as u64)))
             .collect();
         // Workers: spot for decentralized deployments (§6.3), on-demand for
-        // the centralized baselines.
+        // the centralized baselines. The configured bid strategy prices
+        // every spot acquisition (the naive default reproduces the seed's
+        // blind draw bit-for-bit).
         let spot_workers = !mode.centralized();
         let mut bids = HashMap::new();
         let cloud_cfg = cfg.cloud.clone();
+        let mut strategy =
+            bidding::build_strategy(cfg.topology.num_dcs(), &cfg.cloud, &cfg.bidding);
+        let bidding_active = cfg.bidding.active();
         let cluster = Cluster::build(
             &cfg.topology.regions,
             cfg.topology.workers_per_dc,
@@ -158,9 +209,26 @@ impl World {
                 // container ids = node 0) sit on reliable instances.
                 let reliable = cloud_cfg.reliable_jm_hosts && idx == 0;
                 if spot_workers && !reliable {
-                    let bid = markets[dc.0].draw_bid(&cloud_cfg);
-                    bids.insert(NodeId { dc, idx }, bid);
-                    InstanceClass::Spot { bid }
+                    let node = NodeId { dc, idx };
+                    let class = strategy.quote(
+                        &BidRequest::calm(dc),
+                        &mut markets[dc.0],
+                        &cloud_cfg,
+                    );
+                    if let InstanceClass::Spot { bid } = class {
+                        bids.insert(node, bid);
+                    }
+                    if bidding_active {
+                        tracer.publish(TraceEvent::BidPlaced {
+                            node,
+                            on_demand: !class.is_spot(),
+                            bid: match class {
+                                InstanceClass::Spot { bid } => bid,
+                                InstanceClass::OnDemand => 0.0,
+                            },
+                        });
+                    }
+                    class
                 } else {
                     InstanceClass::OnDemand
                 }
@@ -185,6 +253,7 @@ impl World {
             wan,
             zk,
             markets,
+            strategy,
             cost: CostMeter::default(),
             masters,
             dfs: Dfs::default(),
@@ -195,6 +264,7 @@ impl World {
             rng,
             next_job: 0,
             bids,
+            class_changes: Vec::new(),
             hogs: Vec::new(),
             trace_done: false,
             hook: None,
@@ -270,6 +340,10 @@ impl World {
 
     /// Bill machines for `makespan_secs` of cluster time (§6.3 model:
     /// the whole testbed is rented for the duration of the workload).
+    /// A node whose class flipped mid-run (a strategy re-acquisition
+    /// recorded in [`World::class_changes`]) is billed per segment at
+    /// each segment's own rate; without flips this is the original
+    /// whole-makespan charge, bit for bit.
     pub fn bill_machines(&mut self, makespan_secs: f64) {
         let hours = makespan_secs / 3600.0;
         let num_dcs = self.cfg.topology.num_dcs();
@@ -277,13 +351,26 @@ impl World {
         for _ in 0..num_dcs {
             self.cost.charge_machine(InstanceClass::OnDemand, hours, self.cfg.cloud.on_demand_hourly);
         }
+        let od_rate = self.cfg.cloud.on_demand_hourly;
+        let spot_rate = self.cfg.cloud.spot_hourly_mean;
+        let rate = |class: InstanceClass| match class {
+            InstanceClass::OnDemand => od_rate,
+            InstanceClass::Spot { .. } => spot_rate,
+        };
         for dc in &self.cluster.dcs {
             for node in &dc.nodes {
-                let price = match node.class {
-                    InstanceClass::OnDemand => self.cfg.cloud.on_demand_hourly,
-                    InstanceClass::Spot { .. } => self.cfg.cloud.spot_hourly_mean,
-                };
-                self.cost.charge_machine(node.class, hours, price);
+                let mut prev = 0.0f64;
+                for &(n, t, class_before) in &self.class_changes {
+                    if n != node.id {
+                        continue;
+                    }
+                    let upto = t.clamp(0.0, makespan_secs);
+                    let seg = (upto - prev).max(0.0);
+                    self.cost.charge_machine(class_before, seg / 3600.0, rate(class_before));
+                    prev = prev.max(upto);
+                }
+                let seg = (makespan_secs - prev).max(0.0);
+                self.cost.charge_machine(node.class, seg / 3600.0, rate(node.class));
             }
         }
         let bytes = self.wan.stats.cross_dc_total_bytes();
@@ -297,5 +384,31 @@ impl World {
     /// Role of the JM at (job, dc), if alive.
     pub fn jm_role(&self, job: JobId, dc: DcId) -> Option<Role> {
         self.jobs.get(&job)?.jms.get(&dc).filter(|j| j.alive).map(|j| j.role)
+    }
+
+    /// How far behind schedule the worst active job is, in [0, 1]: a job
+    /// whose elapsed time plus remaining critical-path estimate projects
+    /// past `workload.deadline_secs` is behind; 1 means ≥ 100 % overshoot.
+    /// 0 when no deadline is configured — the deadline strategy then never
+    /// turns aggressive.
+    pub fn job_urgency(&self, now_secs: f64) -> f64 {
+        let deadline = self.cfg.workload.deadline_secs;
+        if deadline <= 0.0 {
+            return 0.0;
+        }
+        let mut urgency = 0.0f64;
+        for rt in self.jobs.values().filter(|rt| !rt.done) {
+            let projected = (now_secs - rt.submitted_secs) + rt.remaining_critical_path();
+            urgency = urgency.max((projected / deadline - 1.0).clamp(0.0, 1.0));
+        }
+        urgency
+    }
+
+    /// Whether any active job has exhausted its `workload.budget_usd`
+    /// (0 = unlimited): the deadline strategy's aggression cap.
+    pub fn any_over_budget(&self) -> bool {
+        let budget = self.cfg.workload.budget_usd;
+        budget > 0.0
+            && self.jobs.values().any(|rt| !rt.done && rt.cost.total_usd() > budget)
     }
 }

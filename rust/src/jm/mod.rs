@@ -11,6 +11,16 @@
 //! This module is deliberately simulator-agnostic: the deployment layer
 //! (`deploy/`) owns the event loop and calls into these methods, which
 //! makes every scheduling decision unit- and property-testable.
+//!
+//! Paper-to-code map for this module (see `docs/ARCHITECTURE.md` for the
+//! whole system): [`af`] is §4.2/Appendix A's adaptive-feedback resource
+//! requester, [`parades`] is §4.3/Algorithm 2's delay-scheduling +
+//! work-stealing assigner, [`estimator`] is the §5 monitor's per-stage
+//! (p, r) estimator, and [`info::IntermediateInfo`] is the replicated
+//! state (§5 "intermediate information") that lets a replacement replica
+//! *continue* a job instead of restarting it. Container requests pushed
+//! by a JM may additionally carry an instance-class preference from the
+//! cost-aware bidding subsystem ([`crate::cloud::bidding`]).
 
 pub mod af;
 pub mod estimator;

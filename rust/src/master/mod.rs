@@ -11,9 +11,19 @@
 //!
 //! The master also spawns JM containers (step 2/2b) and re-grants a failed
 //! JM's containers to its replacement via jobId-keyed tokens (§5).
+//!
+//! Container requests may carry an instance-class preference
+//! ([`ClassPref`], pushed by the JM's bid strategy alongside its desire):
+//! a sub-job preferring [`ClassPref::Reliable`] is handed free containers
+//! hosted on on-demand (revocation-proof) VMs first. With no preference
+//! registered the allocation order is byte-identical to the plain fair
+//! scheduler, so the naive bidding baseline leaves replay digests
+//! untouched.
 
 use std::collections::BTreeMap;
 
+use crate::cloud::bidding::ClassPref;
+use crate::cloud::InstanceClass;
 use crate::cluster::Cluster;
 
 /// How free containers are handed to unsatisfied sub-jobs.
@@ -50,6 +60,9 @@ pub struct Master {
     desires: BTreeMap<JmId, usize>,
     /// Containers currently granted per sub-job (excluding the JM's own).
     granted: BTreeMap<JmId, Vec<ContainerId>>,
+    /// Instance-class preferences attached to container requests (only
+    /// non-default preferences are stored; see [`Master::set_class_pref`]).
+    prefs: BTreeMap<JmId, ClassPref>,
     pub policy: AllocPolicy,
 }
 
@@ -61,6 +74,7 @@ impl Master {
             home: dc,
             desires: BTreeMap::new(),
             granted: BTreeMap::new(),
+            prefs: BTreeMap::new(),
             policy: AllocPolicy::FairShare,
         }
     }
@@ -73,6 +87,7 @@ impl Master {
             home,
             desires: BTreeMap::new(),
             granted: BTreeMap::new(),
+            prefs: BTreeMap::new(),
             policy: AllocPolicy::FairShare,
         }
     }
@@ -138,7 +153,27 @@ impl Master {
     /// containers back to the cluster pool.
     pub fn unregister(&mut self, jm: JmId) -> Vec<ContainerId> {
         self.desires.remove(&jm);
+        self.prefs.remove(&jm);
         self.granted.remove(&jm).unwrap_or_default()
+    }
+
+    /// Attach the instance-class preference a sub-job's container
+    /// requests carry this period (the JM's bid strategy pushes it next
+    /// to the desire). [`ClassPref::Any`] clears the entry, restoring the
+    /// byte-identical default allocation order.
+    pub fn set_class_pref(&mut self, jm: JmId, pref: ClassPref) {
+        match pref {
+            ClassPref::Any => {
+                self.prefs.remove(&jm);
+            }
+            ClassPref::Reliable => {
+                self.prefs.insert(jm, pref);
+            }
+        }
+    }
+
+    pub fn class_pref(&self, jm: JmId) -> ClassPref {
+        self.prefs.get(&jm).copied().unwrap_or(ClassPref::Any)
     }
 
     /// A JM proactively returns a container (Af decrease path).
@@ -184,7 +219,7 @@ impl Master {
     pub fn allocate(&mut self, cluster: &mut Cluster) -> Vec<(JmId, Vec<ContainerId>)> {
         let mut pool = self.pool(cluster); // sorted => deterministic grants
         let mut fresh: BTreeMap<JmId, Vec<ContainerId>> = BTreeMap::new();
-        while let Some(&cid) = pool.last() {
+        while !pool.is_empty() {
             // FairShare: unsatisfied sub-job with the fewest grants.
             // Fifo: oldest unsatisfied job (stock YARN default queue).
             let next = match self.policy {
@@ -200,7 +235,24 @@ impl Master {
                     .min_by_key(|(jm, _)| **jm),
             };
             let Some((&jm, _)) = next else { break };
-            pool.pop();
+            // The chosen sub-job's class preference picks *which* free
+            // container it gets: Reliable takes the nearest-to-pop-order
+            // container hosted on an on-demand VM, falling back to plain
+            // pop order when none remains. With no preference this is
+            // exactly `pool.pop()` — the pre-subsystem order.
+            let at = match self.prefs.get(&jm) {
+                Some(ClassPref::Reliable) => pool
+                    .iter()
+                    .rposition(|cid| {
+                        matches!(
+                            cluster.node_class(cluster.containers[cid].node),
+                            InstanceClass::OnDemand
+                        )
+                    })
+                    .unwrap_or(pool.len() - 1),
+                _ => pool.len() - 1,
+            };
+            let cid = pool.remove(at);
             cluster.grant(cid, jm);
             self.granted.get_mut(&jm).unwrap().push(cid);
             fresh.entry(jm).or_default().push(cid);
@@ -359,6 +411,67 @@ mod tests {
             assert_eq!(cluster.container(*c).owner, Some(newer));
         }
         let _ = StageId(0);
+    }
+
+    #[test]
+    fn reliable_class_pref_steers_grants_onto_on_demand_nodes() {
+        // 4 nodes of 1 container: nodes 0 and 2 on-demand, 1 and 3 spot.
+        let mut cluster = Cluster::build(&["A".into()], 4, 1, 2, |_, idx| {
+            if idx % 2 == 0 {
+                InstanceClass::OnDemand
+            } else {
+                InstanceClass::Spot { bid: 0.05 }
+            }
+        });
+        let mut m = Master::new(DcId(0));
+        m.register(jm(0));
+        m.set_desire(jm(0), 2);
+        m.set_class_pref(jm(0), ClassPref::Reliable);
+        m.allocate(&mut cluster);
+        for &cid in m.granted(jm(0)) {
+            let node = cluster.container(cid).node;
+            assert_eq!(
+                cluster.node_class(node),
+                InstanceClass::OnDemand,
+                "reliable pref must pick on-demand hosts while any remain"
+            );
+        }
+        // A third grant must still succeed when only spot hosts remain.
+        m.set_desire(jm(0), 3);
+        m.allocate(&mut cluster);
+        assert_eq!(m.allocation(jm(0)), 3, "pref falls back to spot when exhausted");
+        // Clearing the pref removes the stored entry.
+        m.set_class_pref(jm(0), ClassPref::Any);
+        assert_eq!(m.class_pref(jm(0)), ClassPref::Any);
+    }
+
+    #[test]
+    fn no_class_pref_keeps_the_legacy_allocation_order() {
+        // Identical desires, identical pool: a master with no preference
+        // entries must produce exactly the pre-subsystem grants.
+        let build = || {
+            Cluster::build(&["A".into()], 6, 1, 2, |_, idx| {
+                if idx < 3 {
+                    InstanceClass::Spot { bid: 0.05 }
+                } else {
+                    InstanceClass::OnDemand
+                }
+            })
+        };
+        let run = |set_noop_pref: bool| {
+            let mut cluster = build();
+            let mut m = Master::new(DcId(0));
+            for j in 0..2 {
+                m.register(jm(j));
+                m.set_desire(jm(j), 3);
+            }
+            if set_noop_pref {
+                m.set_class_pref(jm(0), ClassPref::Any);
+            }
+            m.allocate(&mut cluster);
+            (m.granted(jm(0)).to_vec(), m.granted(jm(1)).to_vec())
+        };
+        assert_eq!(run(false), run(true), "Any pref must not perturb grant order");
     }
 
     /// Property: max-min fairness — after allocation, (1) a ≤ d for all,

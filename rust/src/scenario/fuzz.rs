@@ -66,6 +66,10 @@ pub struct FuzzSpace {
     pub straggler_factor_max: f64,
     /// Allow spot-market cells (revocations on, optional `spot_storm@`).
     pub allow_revocations: bool,
+    /// Bid-strategy axis: non-naive strategies a cell may overlay via
+    /// `bidding.strategy=...` (possibly with `bidding.insurance=true`).
+    /// Empty disables the axis; naive stays the implicit default.
+    pub strategies: Vec<crate::cloud::bidding::StrategyKind>,
 }
 
 impl Default for FuzzSpace {
@@ -81,6 +85,10 @@ impl Default for FuzzSpace {
             straggler_prob_max: 0.25,
             straggler_factor_max: 5.0,
             allow_revocations: true,
+            strategies: vec![
+                crate::cloud::bidding::StrategyKind::Adaptive,
+                crate::cloud::bidding::StrategyKind::Deadline,
+            ],
         }
     }
 }
@@ -278,6 +286,22 @@ impl Gen<FuzzCell> for CellGen<'_> {
             let f = round2(rng.uniform(1.5, space.straggler_factor_max.max(1.5)));
             overrides.push(format!("workload.straggler_prob={p}"));
             overrides.push(format!("workload.straggler_factor={f}"));
+        }
+        // Cost-aware bidding axis: overlay a non-naive strategy (and
+        // sometimes insurance replication) on any theme, so the bidding
+        // subsystem is fuzzed against every chaos family.
+        if !space.strategies.is_empty() && rng.chance(0.3) {
+            let strat = space.strategies[rng.index(space.strategies.len())];
+            overrides.push(format!("bidding.strategy={}", strat.name()));
+            if strat == crate::cloud::bidding::StrategyKind::Deadline {
+                // A deadline policy with no deadline is inert — give it
+                // one tight enough that jobs actually fall behind.
+                let deadline = [120.0, 300.0, 900.0][rng.index(3)];
+                overrides.push(format!("workload.deadline_secs={deadline}"));
+            }
+            if rng.chance(0.5) {
+                overrides.push("bidding.insurance=true".to_string());
+            }
         }
         // Occasional benign scheduler axis, to cross chaos with tuning.
         if rng.chance(0.2) {
@@ -567,6 +591,8 @@ fn shrink_event(ev: &ChaosEvent, home: DcId) -> Vec<ChaosEvent> {
 pub struct CellOutcome {
     pub violations: Vec<String>,
     pub digest: u64,
+    /// Run-level cost (machine + transfer): the fuzz report's cost column.
+    pub usd: f64,
 }
 
 /// Cell-execution oracle. The default ([`sim_oracle`]) runs the real
@@ -579,7 +605,7 @@ pub type Oracle<'a> = &'a (dyn Fn(&Config, &ScenarioSpec, u64) -> CellOutcome + 
 /// caught and reported as violations).
 pub fn sim_oracle(base: &Config, spec: &ScenarioSpec, seed: u64) -> CellOutcome {
     let rep = run_one(base, spec, seed);
-    CellOutcome { violations: rep.violations, digest: rep.digest }
+    CellOutcome { violations: rep.violations, digest: rep.digest, usd: rep.total_usd }
 }
 
 /// Fuzzer knobs (the CLI surface).
@@ -618,6 +644,8 @@ pub struct FuzzReport {
     pub cases: usize,
     pub workers: usize,
     pub case_digests: Vec<u64>,
+    /// Per-case run cost (USD, machine + transfer) in case order.
+    pub case_usd: Vec<f64>,
     pub failures: Vec<FuzzFailure>,
     pub wall_ms: u64,
 }
@@ -679,6 +707,12 @@ impl FuzzReport {
         let digests: Vec<String> =
             self.case_digests.iter().map(|d| format!("\"{d:016x}\"")).collect();
         out.push_str(&format!("  \"case_digests\": [{}],\n", digests.join(", ")));
+        let usds: Vec<String> = self
+            .case_usd
+            .iter()
+            .map(|u| if u.is_finite() { format!("{u}") } else { "null".to_string() })
+            .collect();
+        out.push_str(&format!("  \"case_usd\": [{}],\n", usds.join(", ")));
         out.push_str("  \"failures\": [\n");
         for (i, f) in self.failures.iter().enumerate() {
             out.push_str("    {");
@@ -730,6 +764,12 @@ pub fn verify_report_json(report: &FuzzReport, text: &str) -> Result<()> {
             u64::from_str_radix(s, 16).ok() == Some(*want),
             "digest {s} did not round-trip"
         );
+    }
+    let usds = doc.get("case_usd").and_then(Json::as_array).context("case_usd missing")?;
+    ensure!(usds.len() == report.case_usd.len(), "cost column did not round-trip");
+    for (got, want) in usds.iter().zip(&report.case_usd) {
+        let x = got.as_f64().context("case_usd entries must be numeric")?;
+        ensure!(x.to_bits() == want.to_bits(), "case_usd {x} did not round-trip");
     }
     let failures = doc.get("failures").and_then(Json::as_array).context("failures missing")?;
     ensure!(failures.len() == report.failures.len(), "failure count did not round-trip");
@@ -883,6 +923,7 @@ pub fn run_fuzz_with(
         cases: n,
         workers,
         case_digests: outcomes.iter().map(|o| o.digest).collect(),
+        case_usd: outcomes.iter().map(|o| o.usd).collect(),
         failures,
         wall_ms: t0.elapsed().as_millis() as u64,
     }
@@ -919,6 +960,7 @@ pub fn run_soak(base: &Config, space: &FuzzSpace, opts: &FuzzOpts, minutes: f64)
             Some(mut acc) => {
                 acc.cases += rep.cases;
                 acc.case_digests.extend(rep.case_digests);
+                acc.case_usd.extend(rep.case_usd);
                 let offset = acc.cases - rep.cases;
                 acc.failures.extend(rep.failures.into_iter().map(|mut f| {
                     f.case_index += offset;
@@ -1077,6 +1119,7 @@ mod tests {
                 vec!["synthetic: chaos observed".to_string()]
             },
             digest: s.events.len() as u64,
+            usd: 0.0,
         };
         let opts = FuzzOpts { cases: 24, seed: 5, parallelism: 2, max_shrink_iters: 200 };
         let rep = run_fuzz_with(&base, &space(), &opts, &oracle);

@@ -51,6 +51,8 @@ fn push(v: &mut Vec<Violation>, check: &'static str, detail: String) {
 /// * **master-leak** — no sub-job stays registered after its job ended.
 /// * **steal-conservation** — tasks stolen in never exceed tasks stolen
 ///   out; with no JM disruption the two are equal.
+/// * **insurance-leak / cost-sanity** — no insurance duplicate outlives
+///   its job, and per-job cost attribution stays finite and non-negative.
 /// * **runtime-probe** — anything [`probe_world`] recorded during the run.
 pub fn check_world(w: &World) -> Vec<Violation> {
     let mut v = Vec::new();
@@ -96,6 +98,17 @@ pub fn check_world(w: &World) -> Vec<Violation> {
                     push(&mut v, "jrt-sanity", format!("{id}: non-positive JRT {jrt}"));
                 }
             }
+        }
+        if !rt.insurance.is_empty() {
+            push(
+                &mut v,
+                "insurance-leak",
+                format!("{id}: {} insurance copies outlived the job", rt.insurance.len()),
+            );
+        }
+        let usd = rt.cost.total_usd();
+        if !usd.is_finite() || usd < 0.0 {
+            push(&mut v, "cost-sanity", format!("{id}: bad per-job cost {usd}"));
         }
     }
 
@@ -163,8 +176,13 @@ pub fn check_world(w: &World) -> Vec<Violation> {
 /// Checks:
 /// * **stamp-monotone** — `(time, seq)` stamps never go backwards (the
 ///   bus ordering contract);
-/// * **exactly-once** — no task finishes twice and no finished task is
-///   relaunched (a full job restart legally resets the job's slate);
+/// * **exactly-once, duplicate-safe** — no task finishes twice and no
+///   finished task is relaunched (a full job restart legally resets the
+///   job's slate). Insurance replication is the sanctioned exception to
+///   "one copy at a time": a duplicate must be *announced* on the bus as
+///   `InsuranceLaunched` (never a second `TaskLaunched`), at most one
+///   copy per task may be live, and however many copies run, exactly one
+///   `TaskFinished` may be published — first commit wins;
 /// * **completion** — a job completes at most once, and no task activity
 ///   follows its job's completion;
 /// * **steal-conservation** — cumulative tasks stolen in never exceed
@@ -174,6 +192,8 @@ pub struct StreamChecker {
     last: Option<(SimTime, u64)>,
     done: HashSet<TaskId>,
     completed: HashSet<JobId>,
+    /// Tasks with a live announced insurance duplicate.
+    insured: HashSet<TaskId>,
     stolen_out: u64,
     stolen_in: u64,
     violations: Vec<String>,
@@ -228,6 +248,9 @@ impl TraceSink for StreamChecker {
                         "stream-completion: {task} finished after {job} completed (t={at:.1}s)"
                     ));
                 }
+                // Whichever copy won, the single finish retires the
+                // task's insurance duplicate.
+                self.insured.remove(task);
             }
             TraceEvent::TaskLaunched { job, task, .. } => {
                 if self.done.contains(task) {
@@ -248,11 +271,35 @@ impl TraceSink for StreamChecker {
                     ));
                 }
             }
+            TraceEvent::TaskRequeued { task, .. }
+            | TraceEvent::SpeculativeRelaunch { task, .. } => {
+                // A re-queue or speculative abort kills every live copy,
+                // insurance included — the relaunch may legally re-insure.
+                self.insured.remove(task);
+            }
+            TraceEvent::InsuranceLaunched { job, task, .. } => {
+                if self.done.contains(task) {
+                    self.violate(format!(
+                        "stream-insurance: {task} insured after completion (t={at:.1}s)"
+                    ));
+                }
+                if self.completed.contains(job) {
+                    self.violate(format!(
+                        "stream-insurance: {task} insured after {job} completed (t={at:.1}s)"
+                    ));
+                }
+                if !self.insured.insert(*task) {
+                    self.violate(format!(
+                        "stream-insurance: {task} insured twice without completing (t={at:.1}s)"
+                    ));
+                }
+            }
             TraceEvent::JobRestarted { job } => {
                 // A full restart (centralized baseline) legally reruns
                 // every task of the job from scratch.
                 let job = *job;
                 self.done.retain(|t| t.job != job);
+                self.insured.retain(|t| t.job != job);
                 self.completed.remove(&job);
             }
             TraceEvent::StealGranted { tasks, .. } => {
@@ -358,6 +405,62 @@ mod tests {
         c.on_event(&st(12, 2, complete(1)));
         assert_eq!(c.violations().len(), 1);
         assert!(c.violations()[0].contains("steal-conservation"), "{:?}", c.violations());
+    }
+
+    #[test]
+    fn insurance_duplicates_are_exactly_once_safe() {
+        let insure = |i| TraceEvent::InsuranceLaunched { job: JobId(0), task: task(i), dc: DcId(1) };
+        // The legal shape: insure while running, single finish wins.
+        let mut c = StreamChecker::new();
+        c.on_event(&st(10, 0, insure(0)));
+        c.on_event(&st(12, 1, finished(0)));
+        assert!(c.violations().is_empty(), "{:?}", c.violations());
+        // Re-insuring after a re-queue (both copies died) is also legal.
+        let mut c = StreamChecker::new();
+        c.on_event(&st(10, 0, insure(1)));
+        c.on_event(&st(
+            11,
+            1,
+            TraceEvent::TaskRequeued { job: JobId(0), task: task(1), dc: DcId(1) },
+        ));
+        c.on_event(&st(20, 2, insure(1)));
+        c.on_event(&st(25, 3, finished(1)));
+        assert!(c.violations().is_empty(), "{:?}", c.violations());
+        // A speculative abort also kills the copy: re-insuring the
+        // relaunched attempt is legal, not a double-insure.
+        let mut c = StreamChecker::new();
+        c.on_event(&st(10, 0, insure(2)));
+        c.on_event(&st(
+            15,
+            1,
+            TraceEvent::SpeculativeRelaunch { job: JobId(0), task: task(2), dc: DcId(1) },
+        ));
+        c.on_event(&st(20, 2, insure(2)));
+        c.on_event(&st(25, 3, finished(2)));
+        assert!(c.violations().is_empty(), "{:?}", c.violations());
+    }
+
+    #[test]
+    fn flags_double_insurance_and_insurance_after_completion() {
+        let insure = |i| TraceEvent::InsuranceLaunched { job: JobId(0), task: task(i), dc: DcId(1) };
+        let mut c = StreamChecker::new();
+        c.on_event(&st(10, 0, insure(0)));
+        c.on_event(&st(11, 1, insure(0)));
+        assert_eq!(c.violations().len(), 1);
+        assert!(c.violations()[0].contains("insured twice"), "{:?}", c.violations());
+        let mut c = StreamChecker::new();
+        c.on_event(&st(10, 0, finished(0)));
+        c.on_event(&st(11, 1, insure(0)));
+        assert_eq!(c.violations().len(), 1);
+        assert!(c.violations()[0].contains("after completion"), "{:?}", c.violations());
+        // Two finishes of an insured task stay a violation: first commit
+        // wins is the contract, the duplicate must never also finish.
+        let mut c = StreamChecker::new();
+        c.on_event(&st(10, 0, insure(2)));
+        c.on_event(&st(12, 1, finished(2)));
+        c.on_event(&st(13, 2, finished(2)));
+        assert_eq!(c.violations().len(), 1);
+        assert!(c.violations()[0].contains("completed twice"), "{:?}", c.violations());
     }
 
     #[test]

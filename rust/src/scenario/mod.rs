@@ -49,8 +49,12 @@
 //! `cloud.revocations=true` to let the spikes kill instances).
 //! `overrides` strings reuse the CLI's `--set section.key=value`
 //! surface, so every config knob — including the straggler sweep axes
-//! `workload.straggler_prob` / `workload.straggler_factor` — is a
-//! scenario axis for free.
+//! `workload.straggler_prob` / `workload.straggler_factor` and the
+//! cost-aware bidding axes `bidding.strategy` / `bidding.insurance` —
+//! is a scenario axis for free. `strategy = "naive|adaptive|deadline"`
+//! is first-class sugar for the `bidding.strategy` override (validated
+//! at parse time). The full schema, every chaos kind and every axis are
+//! documented in `docs/CAMPAIGN.md`.
 //!
 //! Run a campaign with `houtu campaign [--spec FILE | --smoke]
 //! [--report out.json|out.csv]`; every run must pass the [`invariants`]
@@ -235,7 +239,7 @@ pub fn smoke_campaign() -> CampaignSpec {
 
 /// The built-in standard campaign: the same matrix `configs/campaign.toml`
 /// ships (kept in sync by a regression test), used when the CLI finds no
-/// spec file. 9 scenarios × 3 seeds = 27 runs. Scenario order matches the
+/// spec file. 10 scenarios × 3 seeds = 30 runs. Scenario order matches the
 /// TOML parse order (sections sort alphabetically in the subset parser).
 pub fn standard_campaign() -> CampaignSpec {
     CampaignSpec {
@@ -279,6 +283,25 @@ pub fn standard_campaign() -> CampaignSpec {
                 },
                 events: vec![],
                 overrides: vec![],
+            },
+            ScenarioSpec {
+                name: "bid-insurance-storm".to_string(),
+                deployment: Deployment::Houtu,
+                regions: 0,
+                workload: ScenarioWorkload::Trace { num_jobs: 3 },
+                events: vec![ChaosEvent::SpotStorm {
+                    at_secs: 120.0,
+                    dc: DcId(1),
+                    dur_secs: 600.0,
+                    sigma_factor: 3.0,
+                }],
+                overrides: vec![
+                    "cloud.revocations=true".to_string(),
+                    "cloud.bid_multiplier=1.5".to_string(),
+                    "cloud.market_period_secs=120.0".to_string(),
+                    "bidding.strategy=adaptive".to_string(),
+                    "bidding.insurance=true".to_string(),
+                ],
             },
             ScenarioSpec {
                 name: "dc-outage".to_string(),

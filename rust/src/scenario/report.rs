@@ -16,7 +16,7 @@ use crate::{anyhow, ensure};
 use super::runner::{CampaignReport, RunReport};
 
 /// Columns shared by the CSV header and the JSON run objects.
-const COLUMNS: [&str; 16] = [
+const COLUMNS: [&str; 18] = [
     "scenario",
     "seed",
     "deployment",
@@ -31,6 +31,8 @@ const COLUMNS: [&str; 16] = [
     "restarts",
     "cross_dc_bytes",
     "machine_usd",
+    "total_usd",
+    "job_usd",
     "digest",
     "violations",
 ];
@@ -69,6 +71,8 @@ impl CampaignReport {
             out.push_str(&format!("\"restarts\": {}, ", r.restarts));
             out.push_str(&format!("\"cross_dc_bytes\": {}, ", r.cross_dc_bytes));
             out.push_str(&format!("\"machine_usd\": {}, ", json_f64(r.machine_usd)));
+            out.push_str(&format!("\"total_usd\": {}, ", json_f64(r.total_usd)));
+            out.push_str(&format!("\"job_usd\": {}, ", json_f64(r.job_usd)));
             out.push_str(&format!("\"digest\": \"{:016x}\", ", r.digest));
             out.push_str(&format!("\"wall_ms\": {}, ", r.wall_ms));
             let viol: Vec<String> = r.violations.iter().map(|v| json::escape(v)).collect();
@@ -87,7 +91,7 @@ impl CampaignReport {
         for r in &self.runs {
             let viol = r.violations.join("; ");
             out.push_str(&format!(
-                "{},{},{},{},{},{:.3},{:.3},{},{},{},{},{},{},{:.4},{:016x},{}\n",
+                "{},{},{},{},{},{:.3},{:.3},{},{},{},{},{},{},{:.4},{:.4},{:.4},{:016x},{}\n",
                 csv_cell(&r.scenario),
                 r.seed,
                 csv_cell(r.deployment),
@@ -102,6 +106,8 @@ impl CampaignReport {
                 r.restarts,
                 r.cross_dc_bytes,
                 r.machine_usd,
+                r.total_usd,
+                r.job_usd,
                 r.digest,
                 csv_cell(&viol)
             ));
@@ -193,6 +199,19 @@ fn check_run(got: &Json, want: &RunReport) -> Result<()> {
         u64::from_str_radix(digest, 16).ok() == Some(want.digest),
         "{ctx}: digest did not round-trip"
     );
+    // Non-finite costs serialize as null and are a run bug anyway (the
+    // cost-sanity invariant flags them); the verifier requires a finite,
+    // bit-identical number.
+    let usd = got.get("total_usd").and_then(Json::as_f64).context("total_usd missing")?;
+    ensure!(
+        usd.to_bits() == want.total_usd.to_bits(),
+        "{ctx}: total_usd did not round-trip"
+    );
+    let job_usd = got.get("job_usd").and_then(Json::as_f64).context("job_usd missing")?;
+    ensure!(
+        job_usd.to_bits() == want.job_usd.to_bits(),
+        "{ctx}: job_usd did not round-trip"
+    );
     let viol = got.get("violations").and_then(Json::as_array).context("violations missing")?;
     ensure!(
         viol.len() == want.violations.len(),
@@ -246,6 +265,8 @@ mod tests {
             restarts: 0,
             cross_dc_bytes: 1 << 30,
             machine_usd: 12.34,
+            total_usd: 13.64,
+            job_usd: 11.02,
             digest,
             violations,
             wall_ms: 42,

@@ -258,6 +258,10 @@ pub struct RunReport {
     pub restarts: u32,
     pub cross_dc_bytes: u64,
     pub machine_usd: f64,
+    /// Run-level machine + transfer total (the §6.3 billing model).
+    pub total_usd: f64,
+    /// Sum of the per-job CostMeter attributions (the `CostCharged` payloads).
+    pub job_usd: f64,
     pub digest: u64,
     pub violations: Vec<String>,
     pub wall_ms: u64,
@@ -284,6 +288,8 @@ impl RunReport {
             restarts: 0,
             cross_dc_bytes: 0,
             machine_usd: 0.0,
+            total_usd: 0.0,
+            job_usd: 0.0,
             digest: 0,
             violations: vec![detail],
             wall_ms: 0,
@@ -331,6 +337,8 @@ pub fn run_one(base: &Config, spec: &ScenarioSpec, seed: u64) -> RunReport {
         restarts: w.metrics.jobs.values().map(|j| j.restarts).sum(),
         cross_dc_bytes: w.wan.stats.cross_dc_total_bytes(),
         machine_usd: w.cost.machine_usd,
+        total_usd: w.cost.total_usd(),
+        job_usd: w.jobs.values().map(|rt| rt.cost.total_usd()).sum(),
         digest: run_digest(&run),
         violations,
         wall_ms: t0.elapsed().as_millis() as u64,
@@ -367,14 +375,14 @@ impl CampaignReport {
         .unwrap();
         writeln!(
             out,
-            "{:>24} {:>6} {:>12} {:>6} {:>10} {:>10} {:>7} {:>6} {:>5}  {:>16}",
-            "scenario", "seed", "deployment", "jobs", "avgJRT(s)", "mkspan(s)", "steals", "recov", "viol", "digest"
+            "{:>24} {:>6} {:>12} {:>6} {:>10} {:>10} {:>7} {:>6} {:>9} {:>5}  {:>16}",
+            "scenario", "seed", "deployment", "jobs", "avgJRT(s)", "mkspan(s)", "steals", "recov", "usd", "viol", "digest"
         )
         .unwrap();
         for r in &self.runs {
             writeln!(
                 out,
-                "{:>24} {:>6} {:>12} {:>6} {:>10.1} {:>10.1} {:>7} {:>6} {:>5}  {:016x}",
+                "{:>24} {:>6} {:>12} {:>6} {:>10.1} {:>10.1} {:>7} {:>6} {:>9.3} {:>5}  {:016x}",
                 r.scenario,
                 r.seed,
                 r.deployment,
@@ -383,6 +391,7 @@ impl CampaignReport {
                 r.makespan_secs,
                 r.tasks_stolen,
                 r.recoveries + r.elections,
+                r.total_usd,
                 r.violations.len(),
                 r.digest
             )

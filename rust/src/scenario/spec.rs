@@ -316,8 +316,17 @@ impl ScenarioSpec {
     fn from_keys(name: &str, keys: &BTreeMap<String, Value>) -> Result<ScenarioSpec> {
         // A typo'd key (e.g. `event` for `events`) must not silently yield
         // a chaos-free scenario that then passes every invariant.
-        const KNOWN: [&str; 8] =
-            ["deployment", "workload", "size", "home", "num_jobs", "regions", "events", "overrides"];
+        const KNOWN: [&str; 9] = [
+            "deployment",
+            "workload",
+            "size",
+            "home",
+            "num_jobs",
+            "regions",
+            "events",
+            "overrides",
+            "strategy",
+        ];
         for k in keys.keys() {
             ensure!(
                 KNOWN.contains(&k.as_str()),
@@ -373,13 +382,22 @@ impl ScenarioSpec {
             .iter()
             .map(|s| ChaosEvent::parse(s))
             .collect::<Result<Vec<_>>>()?;
+        let mut overrides = str_array("overrides")?;
+        // `strategy = "adaptive"` is sugar for the bidding override: it
+        // validates the token at parse time and lands in `overrides`, so
+        // spec equality, repro TOMLs and the fuzzer all see one surface.
+        if let Some(s) = get_str("strategy") {
+            crate::cloud::bidding::StrategyKind::parse(s)
+                .with_context(|| format!("scenario {name:?}: bad strategy"))?;
+            overrides.push(format!("bidding.strategy={s}"));
+        }
         Ok(ScenarioSpec {
             name: name.to_string(),
             deployment,
             regions: get_i64("regions", 0).max(0) as usize,
             workload,
             events,
-            overrides: str_array("overrides")?,
+            overrides,
         })
     }
 }
@@ -604,6 +622,37 @@ mod tests {
         assert_eq!(b.deployment, Deployment::CentDyna);
         assert_eq!(b.workload, ScenarioWorkload::Trace { num_jobs: 5 });
         assert_eq!(b.overrides, vec!["cloud.revocations=true".to_string()]);
+    }
+
+    #[test]
+    fn strategy_key_desugars_to_a_bidding_override() {
+        let doc = toml::parse(
+            r#"
+            [campaign]
+            seeds = [1]
+            [scenario.bid]
+            workload = "trace"
+            num_jobs = 2
+            strategy = "adaptive"
+            overrides = ["cloud.revocations=true"]
+            "#,
+        )
+        .unwrap();
+        let c = CampaignSpec::from_doc(&doc).unwrap();
+        assert_eq!(
+            c.scenarios[0].overrides,
+            vec!["cloud.revocations=true".to_string(), "bidding.strategy=adaptive".to_string()]
+        );
+        // The materialized config actually carries the strategy.
+        let cfg = c.scenarios[0].build_config(&Config::default(), 1).unwrap();
+        assert_eq!(cfg.bidding.strategy, crate::cloud::bidding::StrategyKind::Adaptive);
+        // A bad token fails at parse time, not at run time.
+        let doc = toml::parse(
+            "[campaign]\nseeds = [1]\n[scenario.x]\nworkload = \"trace\"\nstrategy = \"greedy\"\n",
+        )
+        .unwrap();
+        let err = CampaignSpec::from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("bad strategy"), "{err}");
     }
 
     #[test]

@@ -25,6 +25,14 @@
 //!   `WanMessage` / `WanTransfer` (control vs bulk traffic).
 //! * **Cloud & chaos** — `SpotRevoked`, `NodeKilled`, `NodeRestarted`,
 //!   `RunBilled`, `ChaosInjected` (scenario-engine injections).
+//! * **Cost-aware bidding** — `BidPlaced` (a strategy's class + bid
+//!   decision at VM acquisition), `InsuranceLaunched` (PingAn-style
+//!   duplicate on a risky spot container), `CostCharged` (a job's
+//!   accumulated [`crate::cloud::CostMeter`] total at completion).
+//!   Published only when the bidding subsystem is active
+//!   (`BiddingConfig::active`), so the naive baseline's event stream —
+//!   and therefore every pre-subsystem replay digest — stays
+//!   bit-identical.
 //!
 //! # Ordering guarantees
 //!
@@ -113,6 +121,15 @@ pub enum TraceEvent {
     RunBilled { machine_usd: f64, transfer_usd: f64 },
     /// The scenario engine injected a chaos event (its DSL rendering).
     ChaosInjected { label: String },
+    /// A bid strategy decided the class (+ standing bid) of a worker VM
+    /// at (re-)acquisition. `bid` is 0 for on-demand decisions.
+    BidPlaced { node: NodeId, on_demand: bool, bid: f64 },
+    /// A duplicate insurance copy launched for a task running on a
+    /// high-revocation-risk spot container (first commit wins).
+    InsuranceLaunched { job: JobId, task: TaskId, dc: DcId },
+    /// A job completed with this accumulated per-job cost (machine
+    /// occupancy + cross-DC transfer attribution).
+    CostCharged { job: JobId, usd: f64 },
 }
 
 impl TraceEvent {
@@ -145,6 +162,9 @@ impl TraceEvent {
             TraceEvent::NodeRestarted { .. } => "node-restarted",
             TraceEvent::RunBilled { .. } => "run-billed",
             TraceEvent::ChaosInjected { .. } => "chaos-injected",
+            TraceEvent::BidPlaced { .. } => "bid-placed",
+            TraceEvent::InsuranceLaunched { .. } => "insurance-launched",
+            TraceEvent::CostCharged { .. } => "cost-charged",
         }
     }
 
@@ -254,6 +274,20 @@ impl TraceEvent {
                 h.u64(transfer_usd.to_bits());
             }
             TraceEvent::ChaosInjected { label } => h.bytes(label.as_bytes()),
+            TraceEvent::BidPlaced { node, on_demand, bid } => {
+                fold_node(h, node);
+                h.u64(*on_demand as u64);
+                h.u64(bid.to_bits());
+            }
+            TraceEvent::InsuranceLaunched { job, task, dc } => {
+                h.u64(job.0);
+                fold_task(h, task);
+                h.u64(dc.0 as u64);
+            }
+            TraceEvent::CostCharged { job, usd } => {
+                h.u64(job.0);
+                h.u64(usd.to_bits());
+            }
         }
     }
 }

@@ -32,6 +32,7 @@ fn kill_oracle(_base: &Config, spec: &ScenarioSpec, _seed: u64) -> CellOutcome {
     CellOutcome {
         violations: if bad { vec!["synthetic: kill events break this tree".into()] } else { vec![] },
         digest: spec.events.len() as u64,
+        usd: 0.0,
     }
 }
 

@@ -2,7 +2,7 @@
 //!
 //! The digest of a run is an order-sensitive fold of its *entire* trace
 //! stream, so it is the strongest replay check the repo has. This suite
-//! pins every cell of `standard_campaign()` (9 scenarios × 3 seeds) two
+//! pins every cell of `standard_campaign()` (10 scenarios × 3 seeds) two
 //! ways:
 //!
 //! 1. **Executable golden record.** The pre-swap queue engine is vendored
@@ -104,13 +104,13 @@ fn check_against_static_table(pins: &[CellPin]) {
     }
 }
 
-/// The tentpole acceptance gate: all 27 standard-campaign cells replay
+/// The tentpole acceptance gate: all 30 standard-campaign cells replay
 /// bit-identically on the pre-swap queue and the slab queue.
 #[test]
 fn standard_campaign_digests_survive_the_queue_swap() {
     let slab = compute_pins(QueueKind::Slab);
     let legacy = compute_pins(QueueKind::Legacy);
-    assert_eq!(slab.len(), 27, "expected the 9×3 standard matrix");
+    assert_eq!(slab.len(), 30, "expected the 10×3 standard matrix");
     assert_eq!(slab.len(), legacy.len());
     for (a, b) in slab.iter().zip(&legacy) {
         assert_eq!(

@@ -269,6 +269,7 @@ fn standard_campaign_risky_cells_run_clean() {
             "dc-outage",
             "spot-storm",
             "straggler-storm",
+            "bid-insurance-storm",
         ] {
             let rep = run_one(&base, &by_name(name), seed);
             assert!(rep.passed(), "{name}/seed{seed}: {:?}", rep.violations);
@@ -461,6 +462,7 @@ fn fuzz_results_are_worker_count_invariant() {
                 vec![]
             },
             digest: h,
+            usd: 0.0,
         }
     };
     let mut total_failures = 0;
