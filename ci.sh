@@ -8,16 +8,31 @@
 # path stays wired — then a seeded chaos-fuzz smoke batch (any invariant
 # violation is shrunk to a minimal repro TOML and fails the build), and
 # finally the perf harness: `bench --smoke` times every workload —
-# including the per-strategy bid-churn cost rows — and writes
-# BENCH_sim.json, whose util::json round-trip the CLI asserts — every
-# run extends the perf trajectory.
+# including the per-strategy bid-churn cost rows and the typed-vs-boxed
+# dispatch pair — writes BENCH_sim.json (whose util::json round-trip the
+# CLI asserts) and gates against BENCH_baseline.json: a workload that
+# regresses beyond the committed baseline's noise band exits non-zero.
+# The smoke campaign additionally records its executed event stream and
+# replays it through `houtu replay`, so persistent determinism (not just
+# in-process digests) is CI-gated.
 set -euo pipefail
 cd "$(dirname "$0")"
 
 cargo build --release --all-targets
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 cargo test -q
-cargo run --release --quiet -- campaign --smoke --report /tmp/smoke.json
+cargo run --release --quiet -- campaign --smoke --report /tmp/smoke.json --record /tmp/smoke-events.log
+cargo run --release --quiet -- replay /tmp/smoke-events.log
 cargo run --release --quiet -- fuzz --cases 8 --seed 1 --repro /tmp/fuzz-repro.toml
-cargo run --release --quiet -- bench --smoke --report BENCH_sim.json
+cargo run --release --quiet -- bench --smoke --report BENCH_sim.json --compare BENCH_baseline.json
+
+# The committed baseline starts life as a bootstrap (all-zero throughput
+# rows, which --compare skips). Promote the first green measured run so
+# later runs gate against real numbers; refresh intentionally by
+# re-copying after a known-good perf change.
+if ! grep -q '"events_per_sec": [1-9]' BENCH_baseline.json; then
+  cp BENCH_sim.json BENCH_baseline.json
+  echo "ci.sh: promoted BENCH_sim.json to BENCH_baseline.json (bootstrap)"
+fi
+
 echo "ci.sh: all green"

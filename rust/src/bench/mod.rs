@@ -29,6 +29,19 @@
 //!   wall time, so the report carries the measured cost/latency
 //!   trade-off per strategy (insurance replication rides along for the
 //!   non-naive strategies).
+//! * `dispatch-churn-{typed,boxed}` — the event-representation
+//!   microbenchmark behind the typed-payload refactor: the identical
+//!   schedule executed once as a typed payload enum (zero allocations on
+//!   the hot path) and once as per-event boxed closures (the
+//!   pre-refactor representation). The pair is the measured
+//!   typed-vs-boxed `events_per_sec` claim.
+//!
+//! # Baseline gate
+//!
+//! `houtu bench --compare BENCH_baseline.json` re-checks every workload's
+//! `events_per_sec` against a committed baseline report and fails (exit
+//! non-zero) on a regression beyond a generous noise band derived from
+//! the baseline's own wall-clock spread — see [`compare_to_baseline`].
 //!
 //! # Report schema (`BENCH_sim.json`)
 //!
@@ -63,7 +76,7 @@ use crate::scenario::{
     run_scenario_on, smoke_campaign, CellGen, ChaosEvent, FuzzSpace, ScenarioSpec,
     ScenarioWorkload,
 };
-use crate::sim::{every, QueueKind, Sim};
+use crate::sim::{every, Dispatch, QueueKind, Sim};
 use crate::testkit::Gen as _;
 use crate::util::error::{Context, Result};
 use crate::util::json::{self, Json};
@@ -112,6 +125,9 @@ pub enum BenchWorkload {
     DenseCancelChurn,
     /// Spot-storm trace under the given bid strategy (cost + wall time).
     BidChurn(StrategyKind),
+    /// The identical event schedule dispatched typed (payload enum) vs
+    /// boxed (one heap closure per event).
+    DispatchChurn { typed: bool },
 }
 
 impl BenchWorkload {
@@ -124,6 +140,8 @@ impl BenchWorkload {
             BenchWorkload::BidChurn(StrategyKind::Naive) => "bid-churn-naive",
             BenchWorkload::BidChurn(StrategyKind::Adaptive) => "bid-churn-adaptive",
             BenchWorkload::BidChurn(StrategyKind::Deadline) => "bid-churn-deadline",
+            BenchWorkload::DispatchChurn { typed: true } => "dispatch-churn-typed",
+            BenchWorkload::DispatchChurn { typed: false } => "dispatch-churn-boxed",
         }
     }
 
@@ -190,6 +208,10 @@ impl BenchWorkload {
             BenchWorkload::DenseCancelChurn => {
                 let n = if smoke { 60_000 } else { 200_000 };
                 dense_cancel_churn(queue, n)
+            }
+            BenchWorkload::DispatchChurn { typed } => {
+                let n = if smoke { 60_000 } else { 200_000 };
+                dispatch_churn(queue, n, typed)
             }
             BenchWorkload::BidChurn(strategy) => {
                 // The bid-insurance-storm shape: a revocation-heavy price
@@ -265,6 +287,73 @@ fn dense_cancel_churn(queue: QueueKind, n: usize) -> IterOut {
     });
     sim.run_to_completion();
     IterOut { events: sim.events_processed, peak_pending: sim.peak_pending(), usd: 0.0 }
+}
+
+/// The typed-vs-boxed dispatch microbenchmark: `n` one-shot adds at
+/// pseudo-random times plus 64 self-rescheduling 50-step chains — the
+/// recurring-timer shape — executed either as a typed payload enum or as
+/// one boxed closure per event. Both paths schedule the identical
+/// (time, order) stream, so `events_per_sec` differences isolate the
+/// representation: enum move + match vs heap allocation + indirect call.
+fn dispatch_churn(queue: QueueKind, n: usize, typed: bool) -> IterOut {
+    const CHAINS: u64 = 64;
+    const CHAIN_STEPS: u32 = 50;
+
+    enum Churn {
+        Add(u64),
+        Chain { left: u32, step: u64 },
+    }
+    impl Dispatch<u64> for Churn {
+        fn dispatch(self, sim: &mut Sim<u64, Churn>) {
+            match self {
+                Churn::Add(v) => sim.state = sim.state.wrapping_add(v),
+                Churn::Chain { left, step } => {
+                    sim.state = sim.state.wrapping_add(left as u64);
+                    if left > 0 {
+                        sim.schedule_event_in(step, Churn::Chain { left: left - 1, step });
+                    }
+                }
+            }
+        }
+        fn kind(&self) -> &'static str {
+            match self {
+                Churn::Add(_) => "add",
+                Churn::Chain { .. } => "chain",
+            }
+        }
+    }
+
+    fn chain_boxed(sim: &mut Sim<u64>, left: u32, step: u64) {
+        sim.state = sim.state.wrapping_add(left as u64);
+        if left > 0 {
+            sim.schedule_in(step, move |sim| chain_boxed(sim, left - 1, step));
+        }
+    }
+
+    let mut rng = Pcg::seeded(0xD15_0A7C);
+    if typed {
+        let mut sim: Sim<u64, Churn> = Sim::typed_with_queue(0u64, queue);
+        for i in 0..n {
+            sim.schedule_event_at(rng.below(1_000_000), Churn::Add(i as u64));
+        }
+        for c in 0..CHAINS {
+            sim.schedule_event_at(c, Churn::Chain { left: CHAIN_STEPS, step: 1_000 + c });
+        }
+        sim.run_to_completion();
+        IterOut { events: sim.events_processed, peak_pending: sim.peak_pending(), usd: 0.0 }
+    } else {
+        let mut sim = Sim::with_queue(0u64, queue);
+        for i in 0..n {
+            sim.schedule_at(rng.below(1_000_000), move |sim| {
+                sim.state = sim.state.wrapping_add(i as u64);
+            });
+        }
+        for c in 0..CHAINS {
+            sim.schedule_at(c, move |sim| chain_boxed(sim, CHAIN_STEPS, 1_000 + c));
+        }
+        sim.run_to_completion();
+        IterOut { events: sim.events_processed, peak_pending: sim.peak_pending(), usd: 0.0 }
+    }
 }
 
 /// One workload's timed outcome.
@@ -351,6 +440,8 @@ pub fn run_bench(base: &Config, opts: &BenchOpts) -> BenchReport {
         (BenchWorkload::BidChurn(StrategyKind::Naive), QueueKind::Slab),
         (BenchWorkload::BidChurn(StrategyKind::Adaptive), QueueKind::Slab),
         (BenchWorkload::BidChurn(StrategyKind::Deadline), QueueKind::Slab),
+        (BenchWorkload::DispatchChurn { typed: true }, QueueKind::Slab),
+        (BenchWorkload::DispatchChurn { typed: false }, QueueKind::Slab),
     ];
     let workloads =
         matrix.iter().map(|&(w, q)| time_workload(base, w, q, opts)).collect();
@@ -419,23 +510,15 @@ impl BenchReport {
             out.push_str(&format!("\"warmup\": {}, ", w.warmup));
             out.push_str(&format!("\"events_total\": {}, ", w.events_total));
             out.push_str(&format!("\"peak_pending\": {}, ", w.peak_pending));
-            out.push_str(&format!("\"wall_ms_mean\": {}, ", json_f64(w.wall_ms_mean)));
-            out.push_str(&format!("\"wall_ms_min\": {}, ", json_f64(w.wall_ms_min)));
-            out.push_str(&format!("\"wall_ms_max\": {}, ", json_f64(w.wall_ms_max)));
-            out.push_str(&format!("\"events_per_sec\": {}, ", json_f64(w.events_per_sec)));
-            out.push_str(&format!("\"usd\": {}", json_f64(w.usd)));
+            out.push_str(&format!("\"wall_ms_mean\": {}, ", json::num(w.wall_ms_mean)));
+            out.push_str(&format!("\"wall_ms_min\": {}, ", json::num(w.wall_ms_min)));
+            out.push_str(&format!("\"wall_ms_max\": {}, ", json::num(w.wall_ms_max)));
+            out.push_str(&format!("\"events_per_sec\": {}, ", json::num(w.events_per_sec)));
+            out.push_str(&format!("\"usd\": {}", json::num(w.usd)));
             out.push_str(if i + 1 == self.workloads.len() { "}\n" } else { "},\n" });
         }
         out.push_str("  ]\n}\n");
         out
-    }
-}
-
-fn json_f64(x: f64) -> String {
-    if x.is_finite() {
-        format!("{x}")
-    } else {
-        "null".to_string()
     }
 }
 
@@ -500,6 +583,46 @@ pub fn verify_report_json(report: &BenchReport, text: &str) -> Result<()> {
         ensure!(usd >= 0.0, "{}: negative usd", w.name);
     }
     Ok(())
+}
+
+/// Compare a fresh report against a committed baseline `BENCH_*.json`,
+/// returning one line per regressed workload (empty ⇒ the gate passes).
+///
+/// Per workload present in **both** reports, the current `events_per_sec`
+/// must stay above `baseline * band`. The band is derived from the
+/// baseline's own wall-clock spread (`wall_ms_min / wall_ms_mean`, 1.0
+/// when iters == 1) scaled by 0.5 and floored at 0.3: smoke runs time a
+/// single iteration on shared hardware, so only a gross (≳2–3×)
+/// slowdown should gate, never scheduler jitter. Baseline rows with
+/// zero/absent throughput are skipped — that's the committed *bootstrap*
+/// baseline, which ci.sh replaces with measured numbers on first run.
+pub fn compare_to_baseline(current: &BenchReport, baseline_text: &str) -> Result<Vec<String>> {
+    let doc = json::parse(baseline_text).map_err(|e| anyhow!("baseline json: {e}"))?;
+    let rows = doc
+        .get("workloads")
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow!("baseline has no workloads array"))?;
+    let mut regressions = Vec::new();
+    for row in rows {
+        let Some(name) = row.get("name").and_then(Json::as_str) else { continue };
+        let base_eps = row.get("events_per_sec").and_then(Json::as_f64).unwrap_or(0.0);
+        if !(base_eps > 0.0) {
+            continue; // bootstrap row (or null/NaN) — nothing to compare against
+        }
+        let Some(cur) = current.workloads.iter().find(|w| w.name == name) else { continue };
+        let mean = row.get("wall_ms_mean").and_then(Json::as_f64).unwrap_or(0.0);
+        let min = row.get("wall_ms_min").and_then(Json::as_f64).unwrap_or(0.0);
+        let spread = if mean > 0.0 { (min / mean).clamp(0.0, 1.0) } else { 1.0 };
+        let band = (0.5 * spread).max(0.3);
+        let floor = base_eps * band;
+        if cur.events_per_sec < floor {
+            regressions.push(format!(
+                "{name}: {:.0} events/s vs baseline {:.0} (floor {:.0}, band {:.2})",
+                cur.events_per_sec, base_eps, floor, band
+            ));
+        }
+    }
+    Ok(regressions)
 }
 
 /// Write the report as JSON, read the file back and verify the
@@ -586,6 +709,48 @@ mod tests {
         assert_eq!(a.events, c.events, "engines must execute the same schedule");
         assert_eq!(a.peak_pending, c.peak_pending);
         assert!(a.events > 5_000 / 2, "survivors + 1000 timer ticks executed");
+    }
+
+    #[test]
+    fn dispatch_churn_paths_execute_identical_schedules() {
+        // Typed and boxed must run the same (time, order) event stream —
+        // otherwise the events/s comparison measures different work.
+        let typed = dispatch_churn(QueueKind::Slab, 5_000, true);
+        let boxed = dispatch_churn(QueueKind::Slab, 5_000, false);
+        assert_eq!(typed.events, boxed.events, "schedules diverged");
+        assert_eq!(typed.peak_pending, boxed.peak_pending);
+        assert!(typed.events > 5_000, "adds + 64 chains of 50 steps");
+        // And identically across queue engines.
+        let legacy = dispatch_churn(QueueKind::Legacy, 5_000, true);
+        assert_eq!(typed.events, legacy.events);
+    }
+
+    #[test]
+    fn baseline_compare_flags_gross_regressions_only() {
+        let r = tiny_report();
+        // Baseline twice as fast as the current report: current sits at
+        // 0.5x, inside the generous 0.3 floor band — no regression.
+        let mut fast = tiny_report();
+        for w in &mut fast.workloads {
+            w.events_per_sec *= 2.0;
+        }
+        let ok = compare_to_baseline(&r, &fast.to_json()).unwrap();
+        assert!(ok.is_empty(), "2x baseline must not gate: {ok:?}");
+        // Baseline ten times as fast: current sits at 0.1x — regression.
+        let mut much_faster = tiny_report();
+        for w in &mut much_faster.workloads {
+            w.events_per_sec *= 10.0;
+        }
+        let bad = compare_to_baseline(&r, &much_faster.to_json()).unwrap();
+        assert_eq!(bad.len(), 2, "both rows regressed: {bad:?}");
+        // Bootstrap baseline (zero throughput) gates nothing.
+        let mut bootstrap = tiny_report();
+        for w in &mut bootstrap.workloads {
+            w.events_per_sec = 0.0;
+        }
+        assert!(compare_to_baseline(&r, &bootstrap.to_json()).unwrap().is_empty());
+        // Garbage baseline is an error, not a silent pass.
+        assert!(compare_to_baseline(&r, "not json").is_err());
     }
 
     #[test]

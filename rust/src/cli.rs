@@ -16,11 +16,15 @@
 //!   trace --deployment D                         run the online trace
 //!   campaign [--spec FILE | --smoke]             run a scenario-matrix campaign
 //!            [--report out.json|out.csv]         ... and export the report
+//!            [--record out.log]                  ... and persist the event streams
+//!   replay LOG                                   re-execute a recorded event log and
+//!                                                assert streams + digests match
 //!   fuzz [--cases N] [--seed S]                  chaos-fuzz random scenarios
 //!        [--soak MINUTES] [--repro out.toml]     ... soak / write minimal repro
 //!        [--report out.json]                     ... and export the fuzz report
 //!   bench [--smoke] [--iters N]                  time the sim hot-path workloads
 //!         [--report BENCH_sim.json]              ... and export the perf report
+//!         [--compare BENCH_baseline.json]        ... and gate events/s vs a baseline
 //!   all                                          every figure in sequence
 //! ```
 
@@ -32,10 +36,12 @@ use crate::ids::DcId;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: houtu <fig2|fig3|fig7|fig8|fig9|fig10|fig11|fig12|theorem1|run|trace|campaign|fuzz|bench|export|all> \
+        "usage: houtu <fig2|fig3|fig7|fig8|fig9|fig10|fig11|fig12|theorem1|run|trace|campaign|replay|fuzz|bench|export|all> \
          [--config FILE] [--set section.key=value]... [--deployment D] [--workload W] [--size S] \
-         [--spec FILE] [--smoke] [--report out.json|out.csv] \
-         [--cases N] [--seed S] [--soak MINUTES] [--repro out.toml] [--iters N]"
+         [--spec FILE] [--smoke] [--report out.json|out.csv] [--record out.log] \
+         [--cases N] [--seed S] [--soak MINUTES] [--repro out.toml] [--iters N] \
+         [--compare BENCH_baseline.json]\n\
+         replay takes the log path as its positional argument: houtu replay out.log"
     );
     std::process::exit(2);
 }
@@ -65,6 +71,12 @@ pub struct Cli {
     pub repro: Option<String>,
     /// Timed iterations per bench workload (`bench --iters N`).
     pub iters: Option<usize>,
+    /// Event-log path to record a campaign into (`campaign --record out.log`).
+    pub record: Option<String>,
+    /// Baseline bench report to gate against (`bench --compare FILE`).
+    pub compare: Option<String>,
+    /// Positional event-log path (`replay LOG`).
+    pub log_path: Option<String>,
 }
 
 pub fn parse(args: &[String]) -> Cli {
@@ -84,6 +96,9 @@ pub fn parse(args: &[String]) -> Cli {
     let mut soak_minutes = None;
     let mut repro = None;
     let mut iters = None;
+    let mut record = None;
+    let mut compare = None;
+    let mut log_path = None;
     let mut i = 1;
     while i < args.len() {
         match args[i].as_str() {
@@ -176,9 +191,22 @@ pub fn parse(args: &[String]) -> Cli {
                         .unwrap_or_else(|| usage()),
                 );
             }
+            "--record" => {
+                i += 1;
+                record = Some(args.get(i).unwrap_or_else(|| usage()).clone());
+            }
+            "--compare" => {
+                i += 1;
+                compare = Some(args.get(i).unwrap_or_else(|| usage()).clone());
+            }
             other => {
-                eprintln!("unknown flag {other:?}");
-                usage();
+                // `replay` takes its log path as the one positional arg.
+                if command == "replay" && !other.starts_with('-') && log_path.is_none() {
+                    log_path = Some(other.to_string());
+                } else {
+                    eprintln!("unknown flag {other:?}");
+                    usage();
+                }
             }
         }
         i += 1;
@@ -197,6 +225,9 @@ pub fn parse(args: &[String]) -> Cli {
         soak_minutes,
         repro,
         iters,
+        record,
+        compare,
+        log_path,
     }
 }
 
@@ -276,14 +307,16 @@ pub fn run(cli: &Cli) {
                     std::process::exit(1);
                 })
             };
-            let spec = if cli.smoke {
-                scenario::smoke_campaign()
+            // The recorded source tag lets `houtu replay` rebuild the
+            // same cell matrix without embedding scenario definitions.
+            let (spec, source) = if cli.smoke {
+                (scenario::smoke_campaign(), "smoke".to_string())
             } else if let Some(path) = &cli.spec {
-                load(path)
+                (load(path), format!("spec:{path}"))
             } else if std::path::Path::new("configs/campaign.toml").exists() {
-                load("configs/campaign.toml")
+                (load("configs/campaign.toml"), "spec:configs/campaign.toml".to_string())
             } else {
-                scenario::standard_campaign()
+                (scenario::standard_campaign(), "standard".to_string())
             };
             let report = scenario::run_campaign(cfg, &spec);
             print!("{}", report.render());
@@ -303,9 +336,37 @@ pub fn run(cli: &Cli) {
                     }
                 }
             }
+            if let Some(path) = &cli.record {
+                let recorded = scenario::record_campaign(cfg, &spec, &source)
+                    .and_then(|log| scenario::write_log(&log, path).map(|()| log));
+                match recorded {
+                    Ok(log) => println!(
+                        "recorded {path} ({} cells, {} events, round-trip OK)",
+                        log.cells.len(),
+                        log.cells.iter().map(|c| c.events).sum::<u64>()
+                    ),
+                    Err(e) => {
+                        eprintln!("event-log record failed: {e:#}");
+                        std::process::exit(1);
+                    }
+                }
+            }
             if !report.all_pass() {
                 eprintln!("campaign FAILED: {} violations", report.total_violations());
                 std::process::exit(1);
+            }
+        }
+        "replay" => {
+            let path = cli.log_path.as_deref().unwrap_or_else(|| usage());
+            match crate::scenario::replay_file(cfg, path) {
+                Ok(s) => println!(
+                    "replay OK: {} cells, {} events re-executed, streams and digests match",
+                    s.cells, s.events
+                ),
+                Err(e) => {
+                    eprintln!("replay FAILED: {e:#}");
+                    std::process::exit(1);
+                }
             }
         }
         "fuzz" => {
@@ -368,6 +429,27 @@ pub fn run(cli: &Cli) {
                     ),
                     Err(e) => {
                         eprintln!("bench report export failed: {e:#}");
+                        std::process::exit(1);
+                    }
+                }
+            }
+            if let Some(path) = &cli.compare {
+                let baseline = std::fs::read_to_string(path).unwrap_or_else(|e| {
+                    eprintln!("reading baseline {path}: {e}");
+                    std::process::exit(1);
+                });
+                match bench::compare_to_baseline(&report, &baseline) {
+                    Ok(regressions) if regressions.is_empty() => {
+                        println!("baseline check OK vs {path}");
+                    }
+                    Ok(regressions) => {
+                        for r in &regressions {
+                            eprintln!("bench REGRESSION: {r}");
+                        }
+                        std::process::exit(1);
+                    }
+                    Err(e) => {
+                        eprintln!("baseline compare failed: {e:#}");
                         std::process::exit(1);
                     }
                 }

@@ -1,0 +1,401 @@
+//! The typed DES event vocabulary ([`SimEvent`]) and its dispatcher.
+//!
+//! Every recurring event shape in the deployment layer — lifecycle steps,
+//! scheduling/heartbeat/market/WAN ticks, steal protocol messages,
+//! failure detection and recovery, and the scenario engine's chaos
+//! injections — is one variant of [`SimEvent`]. The engine dispatches a
+//! variant by matching on it ([`Dispatch::dispatch`]) instead of calling
+//! a boxed closure, so the common scheduling path allocates nothing
+//! beyond what the event's own payload needs (most variants are a few
+//! `Copy` ids; only task shipments, steal grants and chaos labels carry
+//! owned data).
+//!
+//! Because variants are plain data, an executed event stream can be
+//! *persisted*: [`SimEvent::log_line`] renders the canonical
+//! `{"t":..,"seq":..,"ev":..,...}` JSON line that
+//! [`crate::scenario::replay`] records with `houtu campaign --record` and
+//! verifies with `houtu replay`. Closures scheduled through
+//! [`crate::sim::Sim::schedule_at`] still work (tests, `every` ticks, the
+//! invariant probe) — they ride the `Custom` payload arm and log as
+//! `"ev":"custom"` markers.
+//!
+//! # Taxonomy
+//!
+//! | family | variants |
+//! |---|---|
+//! | lifecycle | `SubmitJob`, `SpawnJm`, `ReleaseReady`, `EnqueueTasks`, `ContainerUpdate`, `TaskFinished` |
+//! | network | `EndTransfer` |
+//! | periodic | `Tick` (scheduling period, heartbeat, WAN resample, spot market) |
+//! | stealing | `StealAtVictim`, `StealResponse` |
+//! | failure/recovery | `RestartNode`, `DetectJmFailure`, `RespawnJm`, `ElectPrimary`, `CascadeKill` |
+//! | chaos | `ChaosInjectHogs`, `ChaosKillJm`, `ChaosCascade`, `ChaosKillNode`, `ChaosKillDc`, `ChaosWanDegrade`, `ChaosSpotStorm`, `ChaosWanPairDegrade` |
+
+use crate::dag::{SizeClass, WorkloadKind};
+use crate::ids::{ContainerId, DcId, JobId, NodeId, TaskId};
+use crate::jm::{Assignment, ContainerView, Role, WaitingTask};
+use crate::sim::{Dispatch, SimTime};
+use crate::trace::TraceEvent;
+use crate::util::json;
+
+use super::world::{World, WorldSim};
+use super::{failure, lifecycle, scheduling};
+
+/// Which recurring world timer a [`SimEvent::Tick`] drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TickKind {
+    /// Scheduling-period boundary (§4.2): Af → desires → allocation.
+    Period,
+    /// JM heartbeat: re-offer free executors, stragglers, stealing.
+    Heartbeat,
+    /// WAN bandwidth re-sampling.
+    WanResample,
+    /// Spot-market price step + revocations.
+    Market,
+}
+
+impl TickKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TickKind::Period => "period",
+            TickKind::Heartbeat => "heartbeat",
+            TickKind::WanResample => "wan_resample",
+            TickKind::Market => "market",
+        }
+    }
+}
+
+/// One typed simulation event. See the module docs for the taxonomy.
+#[derive(Debug, Clone)]
+pub enum SimEvent {
+    /// A trace arrival: submit a job (§3.1 step 0).
+    SubmitJob { kind: WorkloadKind, size: SizeClass, home: DcId },
+    /// Create the (job, dc) JM replica (steps 1–2b); retries itself while
+    /// the DC has no free container.
+    SpawnJm { job: JobId, dc: DcId },
+    /// pJM releases every stage whose parents completed (step 3).
+    ReleaseReady { job: JobId },
+    /// A taskMap shipment lands at the (job, dc) JM's queue.
+    EnqueueTasks { job: JobId, dc: DcId, tasks: Vec<WaitingTask>, generation: u32 },
+    /// UPDATE: one container reports free capacity; Parades assigns.
+    ContainerUpdate { job: JobId, dc: DcId, cid: ContainerId },
+    /// A WAN transfer on the (from, to) link completes.
+    EndTransfer { from: DcId, to: DcId },
+    /// A task attempt finishes on `cid` (step 5). Stale attempts drop.
+    TaskFinished { job: JobId, dc: DcId, task: TaskId, cid: ContainerId, attempt: u32 },
+    /// A recurring world timer fires, then re-arms itself while
+    /// `now + period ≤ horizon`.
+    Tick { kind: TickKind, period: SimTime, horizon: SimTime },
+    /// ONRECEIVESTEAL: the thief's offered container arrives at the victim.
+    StealAtVictim { job: JobId, victim: DcId, thief: DcId, view: ContainerView, sent_at: f64 },
+    /// The stolen tasks arrive back at the thief.
+    StealResponse { job: JobId, thief: DcId, victim: DcId, stolen: Vec<Assignment>, sent_at: f64 },
+    /// A killed worker VM re-acquires a (re-priced) replacement instance.
+    RestartNode { node: NodeId, slots: usize },
+    /// The zk session timeout elapses after a JM host died (§3.2.2).
+    DetectJmFailure { job: JobId, dc: DcId },
+    /// Regenerate a JM replica; inherits containers via master tokens.
+    RespawnJm { job: JobId, dc: DcId, role: Role, failed_at: f64 },
+    /// Election among live sJMs after the pJM died.
+    ElectPrimary { job: JobId, failed_dc: DcId, failed_at: f64 },
+    /// Next kill of a `kill_jm_cascade` chain (`target` = None hits the
+    /// current primary; polls until one is live).
+    CascadeKill { job: JobId, target: Option<DcId>, remaining: u32, gap: SimTime },
+    /// Chaos: occupy (almost) all spare containers of the DCs (Fig 9).
+    ChaosInjectHogs { label: String, dcs: Vec<DcId> },
+    /// Chaos: kill the VM hosting job 0's JM in a DC (Fig 11).
+    ChaosKillJm { label: String, job: JobId, dc: DcId },
+    /// Chaos: start a cascading JM-kill chain.
+    ChaosCascade { label: String, job: JobId, dc: DcId, count: u32, gap: SimTime },
+    /// Chaos: spot-style termination of one worker VM.
+    ChaosKillNode { label: String, node: NodeId },
+    /// Chaos: correlated whole-DC outage.
+    ChaosKillDc { label: String, dc: DcId },
+    /// Chaos: scale all cross-DC bandwidth (1.0 restores).
+    ChaosWanDegrade { factor: f64 },
+    /// Chaos: scale one region's spot-price volatility (1.0 restores).
+    ChaosSpotStorm { dc: usize, factor: f64 },
+    /// Chaos: scale one (a, b) link only (asymmetric partition).
+    ChaosWanPairDegrade { label: String, a: DcId, b: DcId, factor: f64 },
+}
+
+impl Dispatch<World> for SimEvent {
+    fn dispatch(self, sim: &mut WorldSim) {
+        match self {
+            SimEvent::SubmitJob { kind, size, home } => {
+                lifecycle::submit_job(sim, kind, size, home);
+            }
+            SimEvent::SpawnJm { job, dc } => {
+                lifecycle::spawn_jm(sim, job, dc);
+            }
+            SimEvent::ReleaseReady { job } => {
+                lifecycle::release_ready(sim, job);
+            }
+            SimEvent::EnqueueTasks { job, dc, tasks, generation } => {
+                lifecycle::enqueue_tasks(sim, job, dc, tasks, generation);
+            }
+            SimEvent::ContainerUpdate { job, dc, cid } => {
+                lifecycle::container_update(sim, job, dc, cid);
+            }
+            SimEvent::EndTransfer { from, to } => {
+                sim.state.wan.end_transfer(from, to);
+            }
+            SimEvent::TaskFinished { job, dc, task, cid, attempt } => {
+                lifecycle::task_finished(sim, job, dc, task, cid, attempt);
+            }
+            SimEvent::Tick { kind, period, horizon } => {
+                match kind {
+                    TickKind::Period => scheduling::period_tick(sim),
+                    TickKind::Heartbeat => scheduling::heartbeat_tick(sim),
+                    TickKind::WanResample => sim.state.wan.resample(),
+                    TickKind::Market => failure::market_tick(sim),
+                }
+                arm_tick(sim, kind, period, horizon);
+            }
+            SimEvent::StealAtVictim { job, victim, thief, view, sent_at } => {
+                scheduling::steal_at_victim(sim, job, victim, thief, view, sent_at);
+            }
+            SimEvent::StealResponse { job, thief, victim, stolen, sent_at } => {
+                scheduling::steal_response(sim, job, thief, victim, stolen, sent_at);
+            }
+            SimEvent::RestartNode { node, slots } => {
+                failure::restart_node(sim, node, slots);
+            }
+            SimEvent::DetectJmFailure { job, dc } => {
+                failure::detect_jm_failure(sim, job, dc);
+            }
+            SimEvent::RespawnJm { job, dc, role, failed_at } => {
+                failure::respawn_jm(sim, job, dc, role, failed_at);
+            }
+            SimEvent::ElectPrimary { job, failed_dc, failed_at } => {
+                failure::elect_new_primary(sim, job, failed_dc, failed_at);
+            }
+            SimEvent::CascadeKill { job, target, remaining, gap } => {
+                failure::cascade_kill(sim, job, target, remaining, gap);
+            }
+            SimEvent::ChaosInjectHogs { label, dcs } => {
+                sim.state.emit(TraceEvent::ChaosInjected { label });
+                failure::inject_hogs(sim, &dcs);
+            }
+            SimEvent::ChaosKillJm { label, job, dc } => {
+                sim.state.emit(TraceEvent::ChaosInjected { label });
+                failure::kill_jm_host(sim, job, dc);
+            }
+            SimEvent::ChaosCascade { label, job, dc, count, gap } => {
+                sim.state.emit(TraceEvent::ChaosInjected { label });
+                failure::cascade_kill(sim, job, Some(dc), count, gap);
+            }
+            SimEvent::ChaosKillNode { label, node } => {
+                sim.state.emit(TraceEvent::ChaosInjected { label });
+                failure::kill_node(sim, node);
+            }
+            SimEvent::ChaosKillDc { label, dc } => {
+                sim.state.emit(TraceEvent::ChaosInjected { label });
+                failure::kill_dc(sim, dc);
+            }
+            SimEvent::ChaosWanDegrade { factor } => {
+                sim.state.emit(TraceEvent::ChaosInjected { label: format!("wan-factor={factor}") });
+                sim.state.wan.set_degrade(factor);
+            }
+            SimEvent::ChaosSpotStorm { dc, factor } => {
+                sim.state.emit(TraceEvent::ChaosInjected {
+                    label: format!("spot_storm:dc{dc}-factor={factor}"),
+                });
+                sim.state.markets[dc].set_storm(factor);
+            }
+            SimEvent::ChaosWanPairDegrade { label, a, b, factor } => {
+                sim.state.emit(TraceEvent::ChaosInjected { label });
+                sim.state.wan.set_pair_degrade(a, b, factor);
+            }
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            SimEvent::SubmitJob { .. } => "submit_job",
+            SimEvent::SpawnJm { .. } => "spawn_jm",
+            SimEvent::ReleaseReady { .. } => "release_ready",
+            SimEvent::EnqueueTasks { .. } => "enqueue_tasks",
+            SimEvent::ContainerUpdate { .. } => "container_update",
+            SimEvent::EndTransfer { .. } => "end_transfer",
+            SimEvent::TaskFinished { .. } => "task_finished",
+            SimEvent::Tick { kind: TickKind::Period, .. } => "tick:period",
+            SimEvent::Tick { kind: TickKind::Heartbeat, .. } => "tick:heartbeat",
+            SimEvent::Tick { kind: TickKind::WanResample, .. } => "tick:wan_resample",
+            SimEvent::Tick { kind: TickKind::Market, .. } => "tick:market",
+            SimEvent::StealAtVictim { .. } => "steal_at_victim",
+            SimEvent::StealResponse { .. } => "steal_response",
+            SimEvent::RestartNode { .. } => "restart_node",
+            SimEvent::DetectJmFailure { .. } => "detect_jm_failure",
+            SimEvent::RespawnJm { .. } => "respawn_jm",
+            SimEvent::ElectPrimary { .. } => "elect_primary",
+            SimEvent::CascadeKill { .. } => "cascade_kill",
+            SimEvent::ChaosInjectHogs { .. } => "chaos:hogs",
+            SimEvent::ChaosKillJm { .. } => "chaos:kill_jm",
+            SimEvent::ChaosCascade { .. } => "chaos:kill_jm_cascade",
+            SimEvent::ChaosKillNode { .. } => "chaos:kill_node",
+            SimEvent::ChaosKillDc { .. } => "chaos:kill_dc",
+            SimEvent::ChaosWanDegrade { .. } => "chaos:wan",
+            SimEvent::ChaosSpotStorm { .. } => "chaos:spot_storm",
+            SimEvent::ChaosWanPairDegrade { .. } => "chaos:wan_pair",
+        }
+    }
+}
+
+/// Schedule the next [`SimEvent::Tick`] unless it would land past the
+/// horizon — shared by [`scheduling::install_timers`] (the initial arm)
+/// and the tick's own dispatch (the re-arm), so the two can never drift.
+pub(super) fn arm_tick(sim: &mut WorldSim, kind: TickKind, period: SimTime, horizon: SimTime) {
+    if sim.now() + period > horizon {
+        return;
+    }
+    sim.schedule_event_in(period, SimEvent::Tick { kind, period, horizon });
+}
+
+impl SimEvent {
+    /// Render the canonical event-log line for this event as executed at
+    /// `(t, seq)`. The stream of these lines is what `houtu campaign
+    /// --record` persists and `houtu replay` verifies (see
+    /// [`crate::scenario::replay`] for the file schema). Lines are
+    /// compared *as strings*, so any deterministic rendering works; this
+    /// one is also valid JSON for offline tooling.
+    pub fn log_line(&self, t: SimTime, seq: u64) -> String {
+        format!("{{\"t\":{t},\"seq\":{seq},{}}}", self.log_fields())
+    }
+
+    fn log_fields(&self) -> String {
+        let ev = |name: &str, rest: String| {
+            if rest.is_empty() {
+                format!("\"ev\":\"{name}\"")
+            } else {
+                format!("\"ev\":\"{name}\",{rest}")
+            }
+        };
+        match self {
+            SimEvent::SubmitJob { kind, size, home } => ev(
+                "submit_job",
+                format!("\"kind\":\"{}\",\"size\":\"{}\",\"home\":{}", kind.name(), size.name(), home.0),
+            ),
+            SimEvent::SpawnJm { job, dc } => {
+                ev("spawn_jm", format!("\"job\":{},\"dc\":{}", job.0, dc.0))
+            }
+            SimEvent::ReleaseReady { job } => ev("release_ready", format!("\"job\":{}", job.0)),
+            SimEvent::EnqueueTasks { job, dc, tasks, generation } => ev(
+                "enqueue_tasks",
+                format!("\"job\":{},\"dc\":{},\"n\":{},\"gen\":{}", job.0, dc.0, tasks.len(), generation),
+            ),
+            SimEvent::ContainerUpdate { job, dc, cid } => ev(
+                "container_update",
+                format!("\"job\":{},\"dc\":{},\"c\":{}", job.0, dc.0, cid.0),
+            ),
+            SimEvent::EndTransfer { from, to } => {
+                ev("end_transfer", format!("\"from\":{},\"to\":{}", from.0, to.0))
+            }
+            SimEvent::TaskFinished { job, dc, task, cid, attempt } => ev(
+                "task_finished",
+                format!(
+                    "\"job\":{},\"dc\":{},\"task\":\"{task}\",\"c\":{},\"attempt\":{attempt}",
+                    job.0, dc.0, cid.0
+                ),
+            ),
+            SimEvent::Tick { kind, .. } => ev("tick", format!("\"kind\":\"{}\"", kind.name())),
+            SimEvent::StealAtVictim { job, victim, thief, view, sent_at } => ev(
+                "steal_at_victim",
+                format!(
+                    "\"job\":{},\"victim\":{},\"thief\":{},\"c\":{},\"sent\":{sent_at}",
+                    job.0, victim.0, thief.0, view.id.0
+                ),
+            ),
+            SimEvent::StealResponse { job, thief, victim, stolen, sent_at } => ev(
+                "steal_response",
+                format!(
+                    "\"job\":{},\"thief\":{},\"victim\":{},\"n\":{},\"sent\":{sent_at}",
+                    job.0, thief.0, victim.0, stolen.len()
+                ),
+            ),
+            SimEvent::RestartNode { node, slots } => {
+                ev("restart_node", format!("\"node\":\"{node}\",\"slots\":{slots}"))
+            }
+            SimEvent::DetectJmFailure { job, dc } => {
+                ev("detect_jm_failure", format!("\"job\":{},\"dc\":{}", job.0, dc.0))
+            }
+            SimEvent::RespawnJm { job, dc, role, failed_at } => ev(
+                "respawn_jm",
+                format!(
+                    "\"job\":{},\"dc\":{},\"role\":\"{}\",\"failed_at\":{failed_at}",
+                    job.0,
+                    dc.0,
+                    match role {
+                        Role::Primary => "primary",
+                        Role::SemiActive => "semi",
+                    }
+                ),
+            ),
+            SimEvent::ElectPrimary { job, failed_dc, failed_at } => ev(
+                "elect_primary",
+                format!("\"job\":{},\"failed_dc\":{},\"failed_at\":{failed_at}", job.0, failed_dc.0),
+            ),
+            SimEvent::CascadeKill { job, target, remaining, .. } => ev(
+                "cascade_kill",
+                format!(
+                    "\"job\":{},\"target\":{},\"remaining\":{remaining}",
+                    job.0,
+                    match target {
+                        Some(dc) => dc.0.to_string(),
+                        None => "null".to_string(),
+                    }
+                ),
+            ),
+            SimEvent::ChaosInjectHogs { label, .. }
+            | SimEvent::ChaosKillJm { label, .. }
+            | SimEvent::ChaosCascade { label, .. }
+            | SimEvent::ChaosKillNode { label, .. }
+            | SimEvent::ChaosKillDc { label, .. }
+            | SimEvent::ChaosWanPairDegrade { label, .. } => {
+                format!("\"ev\":\"chaos\",\"label\":{}", json::escape(label))
+            }
+            SimEvent::ChaosWanDegrade { factor } => {
+                ev("chaos_wan", format!("\"factor\":{factor}"))
+            }
+            SimEvent::ChaosSpotStorm { dc, factor } => {
+                ev("chaos_spot_storm", format!("\"dc\":{dc},\"factor\":{factor}"))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Dispatch as _;
+
+    #[test]
+    fn log_lines_are_valid_json_with_stamps() {
+        let evs = [
+            SimEvent::SpawnJm { job: JobId(3), dc: DcId(1) },
+            SimEvent::ReleaseReady { job: JobId(0) },
+            SimEvent::EnqueueTasks { job: JobId(1), dc: DcId(2), tasks: vec![], generation: 4 },
+            SimEvent::ContainerUpdate { job: JobId(0), dc: DcId(0), cid: ContainerId(17) },
+            SimEvent::EndTransfer { from: DcId(0), to: DcId(3) },
+            SimEvent::Tick { kind: TickKind::Heartbeat, period: 1000, horizon: 9000 },
+            SimEvent::RestartNode { node: NodeId { dc: DcId(1), idx: 4 }, slots: 2 },
+            SimEvent::CascadeKill { job: JobId(0), target: None, remaining: 2, gap: 1000 },
+            SimEvent::ChaosKillDc { label: "kill_dc@60:dc2 \"quoted\"".into(), dc: DcId(2) },
+            SimEvent::ChaosWanDegrade { factor: 0.25 },
+        ];
+        for e in &evs {
+            let line = e.log_line(1234, 56);
+            let doc = json::parse(&line).unwrap_or_else(|err| panic!("{line}: {err}"));
+            assert_eq!(doc.get("t").and_then(json::Json::as_u64), Some(1234), "{line}");
+            assert_eq!(doc.get("seq").and_then(json::Json::as_u64), Some(56), "{line}");
+            assert!(doc.get("ev").and_then(json::Json::as_str).is_some(), "{line}");
+        }
+    }
+
+    #[test]
+    fn kinds_are_distinct_per_variant_family() {
+        let a = SimEvent::SpawnJm { job: JobId(0), dc: DcId(0) };
+        let b = SimEvent::Tick { kind: TickKind::Market, period: 1, horizon: 2 };
+        assert_eq!(a.kind(), "spawn_jm");
+        assert_eq!(b.kind(), "tick:market");
+    }
+}

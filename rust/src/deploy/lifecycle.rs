@@ -16,6 +16,7 @@ use crate::jm::{Assignment, ContainerView, IntermediateInfo, JobManager, Partiti
 use crate::sim::{secs_f, SimTime};
 use crate::trace::{TraceEvent, TraceSink as _};
 
+use super::events::SimEvent;
 use super::world::{JobRt, WorldSim};
 
 /// Spawn-time for a fresh JM container process (seconds).
@@ -75,7 +76,7 @@ pub fn submit_job(sim: &mut WorldSim, kind: WorkloadKind, size: SizeClass, home:
         (job, spawns)
     };
     for (dc, delay) in spawns {
-        sim.schedule_in(delay, move |sim| spawn_jm(sim, job, dc));
+        sim.schedule_event_in(delay, SimEvent::SpawnJm { job, dc });
     }
     job
 }
@@ -128,11 +129,11 @@ pub fn spawn_jm(sim: &mut WorldSim, job: JobId, dc: DcId) {
     match next {
         Next::Abort => {}
         Next::Retry => {
-            sim.schedule_in(secs_f(2.0), move |sim| spawn_jm(sim, job, dc));
+            sim.schedule_event_in(secs_f(2.0), SimEvent::SpawnJm { job, dc });
         }
         Next::Done(is_primary) => {
             if is_primary {
-                sim.defer(move |sim| release_ready(sim, job));
+                sim.defer_event(SimEvent::ReleaseReady { job });
             }
         }
     }
@@ -239,7 +240,7 @@ pub fn release_ready(sim: &mut WorldSim, job: JobId) {
         sim.state.emit(TraceEvent::StageReleased { job, stage, tasks });
     }
     for (dc, tasks, delay, generation) in shipments {
-        sim.schedule_in(delay, move |sim| enqueue_tasks(sim, job, dc, tasks, generation));
+        sim.schedule_event_in(delay, SimEvent::EnqueueTasks { job, dc, tasks, generation });
     }
     replicate_info(sim, job);
 }
@@ -258,7 +259,7 @@ pub fn proportional_targets(weights: &[u64], n: usize, home: DcId) -> Vec<DcId> 
     order.sort_by(|&a, &b| {
         let fa = fracs[a] - fracs[a].floor();
         let fb = fracs[b] - fracs[b].floor();
-        fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
+        fb.total_cmp(&fa).then(a.cmp(&b))
     });
     let mut i = 0;
     while assigned < n {
@@ -295,7 +296,7 @@ pub fn enqueue_tasks(sim: &mut WorldSim, job: JobId, dc: DcId, tasks: Vec<Waitin
     };
     if !accepted {
         // JM not up yet (or dead): retry shortly; tasks are not lost.
-        sim.schedule_in(secs_f(1.0), move |sim| enqueue_tasks(sim, job, dc, tasks, generation));
+        sim.schedule_event_in(secs_f(1.0), SimEvent::EnqueueTasks { job, dc, tasks, generation });
         return;
     }
     poke_executors(sim, job, dc);
@@ -323,7 +324,7 @@ pub fn poke_executors(sim: &mut WorldSim, job: JobId, dc: DcId) {
             .collect()
     };
     for cid in cids {
-        sim.defer(move |sim| container_update(sim, job, dc, cid));
+        sim.defer_event(SimEvent::ContainerUpdate { job, dc, cid });
     }
 }
 
@@ -468,13 +469,17 @@ pub fn start_assignment(sim: &mut WorldSim, job: JobId, dc: DcId, a: Assignment)
     };
     let run_ms = secs_f(true_p);
     for (s, d) in links {
-        sim.schedule_in(fetch_ms, move |sim| sim.state.wan.end_transfer(s, d));
+        sim.schedule_event_in(fetch_ms, SimEvent::EndTransfer { from: s, to: d });
     }
-    sim.schedule_in(fetch_ms + run_ms, move |sim| task_finished(sim, job, dc, t, cid, attempt));
+    sim.schedule_event_in(
+        fetch_ms + run_ms,
+        SimEvent::TaskFinished { job, dc, task: t, cid, attempt },
+    );
     if let Some((backup, spec_p)) = insured {
-        sim.schedule_in(fetch_ms + secs_f(spec_p), move |sim| {
-            task_finished(sim, job, dc, t, backup, attempt)
-        });
+        sim.schedule_event_in(
+            fetch_ms + secs_f(spec_p),
+            SimEvent::TaskFinished { job, dc, task: t, cid: backup, attempt },
+        );
     }
 }
 
@@ -579,13 +584,13 @@ pub fn task_finished(
             finish_job(sim, job);
         }
         After::StageDone => {
-            sim.defer(move |sim| release_ready(sim, job));
+            sim.defer_event(SimEvent::ReleaseReady { job });
             replicate_info(sim, job);
-            sim.defer(move |sim| container_update(sim, job, dc, cid));
+            sim.defer_event(SimEvent::ContainerUpdate { job, dc, cid });
         }
         After::TaskDone => {
             replicate_info(sim, job);
-            sim.defer(move |sim| container_update(sim, job, dc, cid));
+            sim.defer_event(SimEvent::ContainerUpdate { job, dc, cid });
         }
     }
 }

@@ -6,12 +6,14 @@
 //! `decent-stat` — and drives online job traces through them on the
 //! deterministic DES.
 
+pub mod events;
 pub mod failure;
 pub mod lifecycle;
 pub mod scheduling;
 pub mod world;
 
-pub use failure::{inject_hogs, kill_dc, kill_jm_host, kill_node};
+pub use events::{SimEvent, TickKind};
+pub use failure::{cascade_kill, inject_hogs, kill_dc, kill_jm_host, kill_node};
 pub use lifecycle::submit_job;
 pub use scheduling::{install_timers, should_steal};
 pub use world::{JobRt, World, WorldSim};
@@ -42,7 +44,7 @@ pub fn build_sim_with(
 ) -> WorldSim {
     let world = World::new(cfg, mode);
     let clock = world.tracer.clock();
-    let mut sim = Sim::with_queue(world, queue);
+    let mut sim = Sim::typed_with_queue(world, queue);
     sim.attach_clock(clock);
     install_timers(&mut sim, horizon);
     sim
@@ -51,10 +53,10 @@ pub fn build_sim_with(
 /// Schedule an online trace of submissions.
 pub fn schedule_trace(sim: &mut WorldSim, trace: &[TraceEntry]) {
     for e in trace {
-        let (kind, size, home) = (e.kind, e.size, e.home_dc);
-        sim.schedule_at(secs_f(e.arrival_secs), move |sim| {
-            submit_job(sim, kind, size, home);
-        });
+        sim.schedule_event_at(
+            secs_f(e.arrival_secs),
+            SimEvent::SubmitJob { kind: e.kind, size: e.size, home: e.home_dc },
+        );
     }
 }
 

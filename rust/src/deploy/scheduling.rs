@@ -7,43 +7,23 @@ use crate::jm::{Assignment, ContainerView};
 use crate::sim::{secs_f, SimTime};
 use crate::trace::{TraceEvent, TraceSink as _};
 
+use super::events::{arm_tick, SimEvent, TickKind};
 use super::lifecycle::{container_update, poke_executors, start_assignment};
 use super::world::WorldSim;
 
 /// Install the recurring world timers: period ticks, heartbeats, WAN
-/// resampling, spot-market steps. Call once after building the sim.
+/// resampling, spot-market steps. Call once after building the sim. Each
+/// timer is a typed [`SimEvent::Tick`] that re-arms itself on dispatch
+/// until the next firing would pass `horizon`.
 pub fn install_timers(sim: &mut WorldSim, horizon: SimTime) {
     let period = secs_f(sim.state.cfg.scheduler.period_l_secs);
     let heartbeat = secs_f(sim.state.cfg.scheduler.heartbeat_secs);
     let resample = sim.state.wan.resample_period();
     let market = secs_f(sim.state.cfg.cloud.market_period_secs);
-    schedule_recurring(sim, period, horizon, period_tick);
-    schedule_recurring(sim, heartbeat, horizon, heartbeat_tick);
-    schedule_recurring(sim, resample, horizon, |sim| sim.state.wan.resample());
-    schedule_recurring(sim, market, horizon, super::failure::market_tick);
-}
-
-fn schedule_recurring(
-    sim: &mut WorldSim,
-    period: SimTime,
-    horizon: SimTime,
-    tick: impl Fn(&mut WorldSim) + Clone + 'static,
-) {
-    fn arm(
-        sim: &mut WorldSim,
-        period: SimTime,
-        horizon: SimTime,
-        tick: impl Fn(&mut WorldSim) + Clone + 'static,
-    ) {
-        if sim.now() + period > horizon {
-            return;
-        }
-        sim.schedule_in(period, move |sim| {
-            tick(sim);
-            arm(sim, period, horizon, tick);
-        });
-    }
-    arm(sim, period, horizon, tick);
+    arm_tick(sim, TickKind::Period, period, horizon);
+    arm_tick(sim, TickKind::Heartbeat, heartbeat, horizon);
+    arm_tick(sim, TickKind::WanResample, resample, horizon);
+    arm_tick(sim, TickKind::Market, market, horizon);
 }
 
 /// The scheduling-period boundary for every master (§4.2 / Appendix A):
@@ -335,14 +315,15 @@ pub fn maybe_steal(sim: &mut WorldSim, job: JobId, dc: DcId) {
         return;
     };
     let sent_at = now;
-    sim.schedule_in(delay, move |sim| {
-        steal_at_victim(sim, job, victim, dc, view, sent_at);
-    });
+    sim.schedule_event_in(
+        delay,
+        SimEvent::StealAtVictim { job, victim, thief: dc, view, sent_at },
+    );
 }
 
 /// ONRECEIVESTEAL at the victim: treat the thief's container as an UPDATE
 /// event; ship any stolen tasks back.
-fn steal_at_victim(
+pub(super) fn steal_at_victim(
     sim: &mut WorldSim,
     job: JobId,
     victim: DcId,
@@ -366,14 +347,15 @@ fn steal_at_victim(
         w.metrics.on_event(&st);
         (picks, delay)
     };
-    sim.schedule_in(delay, move |sim| {
-        steal_response(sim, job, thief, victim, stolen, sent_at);
-    });
+    sim.schedule_event_in(
+        delay,
+        SimEvent::StealResponse { job, thief, victim, stolen, sent_at },
+    );
 }
 
 /// The thief receives the stolen tasks: start what still fits, queue the
 /// rest locally; update the taskMap.
-fn steal_response(
+pub(super) fn steal_response(
     sim: &mut WorldSim,
     job: JobId,
     thief: DcId,

@@ -15,6 +15,8 @@ use crate::master::Master;
 use crate::metrics::Metrics;
 use crate::net::Wan;
 use crate::sim::Sim;
+
+use super::events::SimEvent;
 use crate::storage::Dfs;
 use crate::trace::{TraceEvent, TraceSink, Tracer};
 use crate::util::Pcg;
@@ -172,7 +174,7 @@ pub struct World {
     pub probe_violations: Vec<String>,
 }
 
-pub type WorldSim = Sim<World>;
+pub type WorldSim = Sim<World, SimEvent>;
 
 impl World {
     pub fn new(cfg: Config, mode: Deployment) -> World {

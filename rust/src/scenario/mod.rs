@@ -57,7 +57,11 @@
 //! documented in `docs/CAMPAIGN.md`.
 //!
 //! Run a campaign with `houtu campaign [--spec FILE | --smoke]
-//! [--report out.json|out.csv]`; every run must pass the [`invariants`]
+//! [--report out.json|out.csv] [--record out.log]`; `--record` persists
+//! every cell's executed `(time, seq, event)` stream as a [`replay`]
+//! event log, and `houtu replay out.log` re-executes the cells in
+//! lockstep and asserts the streams and digests match bit-for-bit (the
+//! determinism regression gate). Every run must pass the [`invariants`]
 //! checkers — the streaming [`invariants::StreamChecker`] riding the
 //! [`crate::trace`] bus (exactly-once at the offending event's
 //! timestamp, steal conservation, stamp monotonicity), the periodic
@@ -78,6 +82,7 @@
 
 pub mod fuzz;
 pub mod invariants;
+pub mod replay;
 pub mod report;
 pub mod runner;
 pub mod spec;
@@ -87,10 +92,14 @@ pub use fuzz::{
     CellOutcome, FuzzCell, FuzzFailure, FuzzOpts, FuzzReport, FuzzSpace,
 };
 pub use invariants::{check_world, probe_world, StreamChecker, Violation};
+pub use replay::{
+    record_campaign, record_cells, replay_file, replay_log, write_log, CellRecord, EventLog,
+    ReplaySummary,
+};
 pub use report::write_and_verify;
 pub use runner::{
-    run_campaign, run_digest, run_one, run_scenario, run_scenario_on, CampaignReport, FinishedRun,
-    RunReport,
+    run_campaign, run_digest, run_one, run_scenario, run_scenario_hooked, run_scenario_on,
+    CampaignReport, FinishedRun, RunReport,
 };
 pub use spec::{CampaignSpec, ChaosEvent, ScenarioSpec, ScenarioWorkload};
 

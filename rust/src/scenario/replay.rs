@@ -1,0 +1,424 @@
+//! Persistent event-log record/replay: `houtu campaign --record out.log`
+//! and `houtu replay out.log`.
+//!
+//! Recording re-runs every (scenario, seed) cell of a campaign with the
+//! engine's event recorder installed
+//! ([`crate::sim::Sim::set_event_recorder`]) and persists the executed
+//! `(time, seq, event)` stream. Replaying rebuilds the campaign from the
+//! log's `campaign` source tag, re-executes each recorded cell in
+//! lockstep — every generated log line is string-compared against the
+//! recorded prefix while a rolling FNV folds the *whole* stream — and
+//! asserts the event count, stream hash and final run digest all match.
+//! A replay mismatch is a determinism regression: the binary no longer
+//! executes the schedule it executed when the log was written.
+//!
+//! # Log schema (version 1)
+//!
+//! One JSON document (parsed by the in-repo [`crate::util::json`]):
+//!
+//! ```json
+//! {
+//!   "houtu_event_log": 1,
+//!   "campaign": "standard",
+//!   "cells": [
+//!     {"scenario": "pjm-kill", "seed": 42, "queue": "slab",
+//!      "events": 187234, "log_fnv": "9ab3…16 hex…", "digest": "04f2…",
+//!      "log": ["{\"t\":1,\"seq\":0,\"ev\":\"submit_job\",…}", "…"]}
+//!   ]
+//! }
+//! ```
+//!
+//! * `campaign` names the cell source: `"smoke"`, `"standard"`, or
+//!   `"spec:<path>"` for a `campaign --spec` file. Replay rebuilds the
+//!   same matrix from it, so the log never embeds scenario definitions.
+//! * `log` keeps at most [`RECORD_LINE_CAP`] lines per cell (standard
+//!   campaign cells run hundreds of thousands of events — persisting all
+//!   of them would dwarf the repo), while `events` and `log_fnv` cover
+//!   the entire stream, so truncation costs diff granularity but never
+//!   verification strength.
+//! * `log_fnv`/`digest` are 16-digit hex strings: JSON numbers are f64s
+//!   and cannot carry a u64 exactly.
+//! * Custom (closure) events have no typed payload to render; they log
+//!   as `{"t":T,"seq":S,"ev":"custom"}` markers — position, time and seq
+//!   still verify, only the payload is opaque.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::config::Config;
+use crate::deploy::SimEvent;
+use crate::sim::{QueueKind, SimTime};
+use crate::trace::Fnv64;
+use crate::util::error::{Context, Result};
+use crate::util::json::{self, Json};
+use crate::{anyhow, bail, ensure};
+
+use super::runner::{run_digest, run_scenario_hooked};
+use super::spec::{CampaignSpec, ScenarioSpec};
+use super::{smoke_campaign, standard_campaign};
+
+/// Per-cell cap on persisted log lines; the count and stream FNV always
+/// cover the full run regardless.
+pub const RECORD_LINE_CAP: usize = 100_000;
+
+/// One recorded (scenario, seed) cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellRecord {
+    pub scenario: String,
+    pub seed: u64,
+    /// Queue engine the cell ran on (`"slab"` / `"legacy"`).
+    pub queue: String,
+    /// Events executed over the whole run.
+    pub events: u64,
+    /// FNV-1a fold over every log line of the run (beyond the cap too).
+    pub log_fnv: u64,
+    /// The run's final trace digest ([`run_digest`]).
+    pub digest: u64,
+    /// First [`RECORD_LINE_CAP`] log lines.
+    pub log: Vec<String>,
+}
+
+/// A persisted campaign event log.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventLog {
+    /// Cell source: `"smoke"`, `"standard"`, or `"spec:<path>"`.
+    pub campaign: String,
+    pub cells: Vec<CellRecord>,
+}
+
+/// What a successful replay verified.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplaySummary {
+    pub cells: usize,
+    pub events: u64,
+}
+
+/// Render one executed step as a log line.
+fn line_for(t: SimTime, seq: u64, ev: Option<&SimEvent>) -> String {
+    match ev {
+        Some(e) => e.log_line(t, seq),
+        None => format!("{{\"t\":{t},\"seq\":{seq},\"ev\":\"custom\"}}"),
+    }
+}
+
+struct Capture {
+    kept: Vec<String>,
+    total: u64,
+    fnv: Fnv64,
+}
+
+/// Record the given cells (on the slab queue) into an [`EventLog`] with
+/// the given `source` tag. Cells run serially — recording is a
+/// diagnostic pass, and the recorder closure is not `Sync`.
+pub fn record_cells(
+    base: &Config,
+    plans: &[(ScenarioSpec, u64)],
+    source: &str,
+) -> Result<EventLog> {
+    let mut cells = Vec::with_capacity(plans.len());
+    for (sc, seed) in plans {
+        let cap = Rc::new(RefCell::new(Capture {
+            kept: Vec::new(),
+            total: 0,
+            fnv: Fnv64::new(),
+        }));
+        let sink = Rc::clone(&cap);
+        let run = run_scenario_hooked(base, sc, *seed, QueueKind::Slab, move |sim| {
+            sim.set_event_recorder(move |t, seq, ev| {
+                let line = line_for(t, seq, ev);
+                let mut c = sink.borrow_mut();
+                c.fnv.bytes(line.as_bytes());
+                c.total += 1;
+                if c.kept.len() < RECORD_LINE_CAP {
+                    c.kept.push(line);
+                }
+            });
+        })
+        .with_context(|| format!("recording {}/seed{}", sc.name, seed))?;
+        let digest = run_digest(&run);
+        let mut c = cap.borrow_mut();
+        ensure!(
+            c.total == run.events_processed,
+            "{}/seed{}: recorder saw {} events, engine executed {}",
+            sc.name,
+            seed,
+            c.total,
+            run.events_processed
+        );
+        cells.push(CellRecord {
+            scenario: sc.name.clone(),
+            seed: *seed,
+            queue: QueueKind::Slab.name().to_string(),
+            events: c.total,
+            log_fnv: c.fnv.0,
+            digest,
+            log: std::mem::take(&mut c.kept),
+        });
+    }
+    Ok(EventLog { campaign: source.to_string(), cells })
+}
+
+/// [`record_cells`] over a whole campaign's scenario × seed matrix.
+pub fn record_campaign(base: &Config, spec: &CampaignSpec, source: &str) -> Result<EventLog> {
+    record_cells(base, &spec.expand(), source)
+}
+
+/// Serialize a log to its JSON document (schema in the module docs).
+pub fn render_log(log: &EventLog) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"houtu_event_log\": 1,\n");
+    out.push_str(&format!("  \"campaign\": {},\n", json::escape(&log.campaign)));
+    out.push_str("  \"cells\": [\n");
+    for (i, c) in log.cells.iter().enumerate() {
+        out.push_str("    {");
+        out.push_str(&format!("\"scenario\": {}, ", json::escape(&c.scenario)));
+        out.push_str(&format!("\"seed\": {}, ", c.seed));
+        out.push_str(&format!("\"queue\": {}, ", json::escape(&c.queue)));
+        out.push_str(&format!("\"events\": {}, ", c.events));
+        out.push_str(&format!("\"log_fnv\": \"{:016x}\", ", c.log_fnv));
+        out.push_str(&format!("\"digest\": \"{:016x}\", ", c.digest));
+        out.push_str("\"log\": [");
+        for (j, line) in c.log.iter().enumerate() {
+            if j > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&json::escape(line));
+        }
+        out.push_str("]}");
+        out.push_str(if i + 1 == log.cells.len() { "\n" } else { ",\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn hex_field(cell: &Json, key: &str) -> Result<u64> {
+    let s = cell
+        .get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("cell missing hex field {key:?}"))?;
+    u64::from_str_radix(s, 16).map_err(|e| anyhow!("bad {key} {s:?}: {e}"))
+}
+
+/// Parse a log document back into an [`EventLog`].
+pub fn read_log(text: &str) -> Result<EventLog> {
+    let doc = json::parse(text).map_err(|e| anyhow!("event log: {e}"))?;
+    ensure!(
+        doc.get("houtu_event_log").and_then(Json::as_u64) == Some(1),
+        "not a houtu event log (or an unknown version)"
+    );
+    let campaign = doc
+        .get("campaign")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("log missing campaign source"))?
+        .to_string();
+    let rows = doc
+        .get("cells")
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow!("log missing cells array"))?;
+    let mut cells = Vec::with_capacity(rows.len());
+    for row in rows {
+        let scenario = row
+            .get("scenario")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("cell missing scenario"))?
+            .to_string();
+        let seed = row
+            .get("seed")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("{scenario}: cell missing seed"))?;
+        let queue = row
+            .get("queue")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("{scenario}: cell missing queue"))?
+            .to_string();
+        let events = row
+            .get("events")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("{scenario}: cell missing events"))?;
+        let log_fnv = hex_field(row, "log_fnv")?;
+        let digest = hex_field(row, "digest")?;
+        let log = row
+            .get("log")
+            .and_then(Json::as_array)
+            .ok_or_else(|| anyhow!("{scenario}: cell missing log"))?
+            .iter()
+            .map(|l| {
+                l.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("{scenario}: non-string log line"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        cells.push(CellRecord { scenario, seed, queue, events, log_fnv, digest, log });
+    }
+    Ok(EventLog { campaign, cells })
+}
+
+/// Rebuild the campaign a log was recorded from.
+fn campaign_for_source(source: &str) -> Result<CampaignSpec> {
+    if source == "smoke" {
+        Ok(smoke_campaign())
+    } else if source == "standard" {
+        Ok(standard_campaign())
+    } else if let Some(path) = source.strip_prefix("spec:") {
+        CampaignSpec::from_file(path)
+    } else {
+        bail!("unknown campaign source {source:?} in event log")
+    }
+}
+
+fn queue_for_name(name: &str) -> Result<QueueKind> {
+    match name {
+        "slab" => Ok(QueueKind::Slab),
+        "legacy" => Ok(QueueKind::Legacy),
+        other => bail!("unknown queue engine {other:?} in event log"),
+    }
+}
+
+struct VerifyState {
+    expected: Vec<String>,
+    total: u64,
+    fnv: Fnv64,
+    /// First divergence from the recorded prefix, if any.
+    mismatch: Option<String>,
+}
+
+/// Re-execute every recorded cell and assert it reproduces the log:
+/// same per-line prefix, same full-stream FNV, same event count, same
+/// final digest. Errors identify the first diverging cell (and line).
+pub fn replay_log(base: &Config, log: &EventLog) -> Result<ReplaySummary> {
+    let campaign = campaign_for_source(&log.campaign)?;
+    let plans = campaign.expand();
+    let mut events_total = 0u64;
+    for cell in &log.cells {
+        let (sc, seed) = plans
+            .iter()
+            .find(|(sc, seed)| sc.name == cell.scenario && *seed == cell.seed)
+            .ok_or_else(|| {
+                anyhow!(
+                    "log cell {}/seed{} is not in campaign {:?}",
+                    cell.scenario,
+                    cell.seed,
+                    log.campaign
+                )
+            })?;
+        let queue = queue_for_name(&cell.queue)?;
+        let st = Rc::new(RefCell::new(VerifyState {
+            expected: cell.log.clone(),
+            total: 0,
+            fnv: Fnv64::new(),
+            mismatch: None,
+        }));
+        let sink = Rc::clone(&st);
+        let run = run_scenario_hooked(base, sc, *seed, queue, move |sim| {
+            sim.set_event_recorder(move |t, seq, ev| {
+                let line = line_for(t, seq, ev);
+                let mut v = sink.borrow_mut();
+                v.fnv.bytes(line.as_bytes());
+                let i = v.total as usize;
+                v.total += 1;
+                if v.mismatch.is_none() && i < v.expected.len() && v.expected[i] != line {
+                    v.mismatch = Some(format!(
+                        "line {i}: recorded {:?}, replay produced {line:?}",
+                        v.expected[i]
+                    ));
+                }
+            });
+        })
+        .with_context(|| format!("replaying {}/seed{}", cell.scenario, cell.seed))?;
+        let v = st.borrow();
+        let who = format!("{}/seed{}", cell.scenario, cell.seed);
+        if let Some(m) = &v.mismatch {
+            bail!("{who}: replay diverged at {m}");
+        }
+        ensure!(
+            v.total == cell.events,
+            "{who}: replay executed {} events, log recorded {}",
+            v.total,
+            cell.events
+        );
+        ensure!(
+            v.fnv.0 == cell.log_fnv,
+            "{who}: replay stream fnv {:016x} != recorded {:016x}",
+            v.fnv.0,
+            cell.log_fnv
+        );
+        let digest = run_digest(&run);
+        ensure!(
+            digest == cell.digest,
+            "{who}: replay digest {digest:016x} != recorded {:016x}",
+            cell.digest
+        );
+        events_total += v.total;
+    }
+    Ok(ReplaySummary { cells: log.cells.len(), events: events_total })
+}
+
+/// Write a log to `path` and verify the file parses back identical.
+pub fn write_log(log: &EventLog, path: &str) -> Result<()> {
+    let text = render_log(log);
+    std::fs::write(path, &text).with_context(|| format!("writing {path}"))?;
+    let back =
+        read_log(&std::fs::read_to_string(path).with_context(|| format!("re-reading {path}"))?)?;
+    ensure!(back == *log, "event log {path:?} did not round-trip");
+    Ok(())
+}
+
+/// The `houtu replay PATH` entry point: read, parse, re-execute, verify.
+pub fn replay_file(base: &Config, path: &str) -> Result<ReplaySummary> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let log = read_log(&text)?;
+    replay_log(base, &log)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_log() -> EventLog {
+        EventLog {
+            campaign: "smoke".to_string(),
+            cells: vec![CellRecord {
+                scenario: "baseline-wordcount".to_string(),
+                seed: 42,
+                queue: "slab".to_string(),
+                events: 3,
+                log_fnv: 0xDEAD_BEEF_0123_4567,
+                digest: 0x0123_4567_89AB_CDEF,
+                log: vec![
+                    "{\"t\":1,\"seq\":0,\"ev\":\"submit_job\",\"kind\":\"wordcount\"}".to_string(),
+                    "{\"t\":2,\"seq\":1,\"ev\":\"custom\"}".to_string(),
+                ],
+            }],
+        }
+    }
+
+    #[test]
+    fn log_serialization_round_trips() {
+        let log = tiny_log();
+        let text = render_log(&log);
+        let back = read_log(&text).expect("render_log output must parse");
+        assert_eq!(back, log);
+    }
+
+    #[test]
+    fn read_log_rejects_malformed_documents() {
+        assert!(read_log("not json").is_err());
+        assert!(read_log("{}").is_err(), "missing version marker");
+        assert!(
+            read_log("{\"houtu_event_log\": 2, \"campaign\": \"smoke\", \"cells\": []}").is_err(),
+            "future versions must not parse as v1"
+        );
+        // Digest must be a hex string, not a (lossy) JSON number.
+        let bad = render_log(&tiny_log()).replace("\"digest\": \"0123456789abcdef\"", "\"digest\": 3");
+        assert!(read_log(&bad).is_err());
+    }
+
+    #[test]
+    fn unknown_campaign_source_is_an_error() {
+        let mut log = tiny_log();
+        log.campaign = "galaxy-brain".to_string();
+        let base = Config::default();
+        assert!(replay_log(&base, &log).is_err());
+    }
+}

@@ -12,10 +12,10 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::config::Config;
-use crate::deploy::{build_sim_with, inject_hogs, kill_dc, kill_jm_host, kill_node, schedule_trace, submit_job, World, WorldSim};
-use crate::ids::{DcId, JmId, JobId};
+use crate::deploy::{build_sim_with, schedule_trace, SimEvent, World, WorldSim};
+use crate::ids::{JmId, JobId};
 use crate::sim::{secs, secs_f, QueueKind, SimTime};
-use crate::trace::{Fnv64, TraceEvent};
+use crate::trace::Fnv64;
 use crate::util::error::Result;
 
 use super::invariants::{check_world, probe_world, StreamChecker};
@@ -52,15 +52,29 @@ pub fn run_scenario_on(
     seed: u64,
     queue: QueueKind,
 ) -> Result<FinishedRun> {
+    run_scenario_hooked(base, spec, seed, queue, |_| {})
+}
+
+/// [`run_scenario_on`] with a hook called on the fully-built simulation —
+/// workload, probe and chaos events already scheduled — just before it
+/// runs. The record/replay layer uses the hook to install the engine's
+/// event recorder ([`crate::sim::Sim::set_event_recorder`]); everything
+/// else goes through the no-op wrappers above. The hook must not execute
+/// events itself, or the digest no longer matches the unhooked run.
+pub fn run_scenario_hooked(
+    base: &Config,
+    spec: &ScenarioSpec,
+    seed: u64,
+    queue: QueueKind,
+    before: impl FnOnce(&mut WorldSim),
+) -> Result<FinishedRun> {
     let cfg = spec.build_config(base, seed)?;
     let mode = cfg.deployment;
     let (mut sim, horizon) = match spec.workload {
         ScenarioWorkload::SingleJob { kind, size, home } => {
             let horizon = secs(14_400);
             let mut sim = build_sim_with(cfg, mode, horizon, queue);
-            sim.schedule_at(1, move |sim| {
-                submit_job(sim, kind, size, home);
-            });
+            sim.schedule_event_at(1, SimEvent::SubmitJob { kind, size, home });
             (sim, horizon)
         }
         ScenarioWorkload::Trace { .. } => {
@@ -76,6 +90,7 @@ pub fn run_scenario_on(
     // `check_world` folds into the campaign verdict.
     let stream = StreamChecker::install(&sim.state);
     schedule_events(&mut sim, &spec.events);
+    before(&mut sim);
     sim.run_until(horizon);
     let makespan = sim.state.metrics.makespan();
     sim.state.bill_machines(makespan);
@@ -105,35 +120,25 @@ fn schedule_events(sim: &mut WorldSim, events: &[ChaosEvent]) {
         let label = ev.to_string();
         match ev {
             ChaosEvent::InjectHogs { at_secs, dcs } => {
-                sim.schedule_at(secs_f(at_secs), move |sim| {
-                    sim.state.emit(TraceEvent::ChaosInjected { label });
-                    inject_hogs(sim, &dcs);
-                });
+                sim.schedule_event_at(secs_f(at_secs), SimEvent::ChaosInjectHogs { label, dcs });
             }
             ChaosEvent::KillJm { at_secs, dc } => {
-                sim.schedule_at(secs_f(at_secs), move |sim| {
-                    sim.state.emit(TraceEvent::ChaosInjected { label });
-                    kill_jm_host(sim, JobId(0), dc);
-                });
+                sim.schedule_event_at(
+                    secs_f(at_secs),
+                    SimEvent::ChaosKillJm { label, job: JobId(0), dc },
+                );
             }
             ChaosEvent::KillJmCascade { at_secs, dc, count, gap_secs } => {
-                let gap = secs_f(gap_secs);
-                sim.schedule_at(secs_f(at_secs), move |sim| {
-                    sim.state.emit(TraceEvent::ChaosInjected { label });
-                    cascade_kill(sim, JobId(0), Some(dc), count, gap);
-                });
+                sim.schedule_event_at(
+                    secs_f(at_secs),
+                    SimEvent::ChaosCascade { label, job: JobId(0), dc, count, gap: secs_f(gap_secs) },
+                );
             }
             ChaosEvent::KillNode { at_secs, node } => {
-                sim.schedule_at(secs_f(at_secs), move |sim| {
-                    sim.state.emit(TraceEvent::ChaosInjected { label });
-                    kill_node(sim, node);
-                });
+                sim.schedule_event_at(secs_f(at_secs), SimEvent::ChaosKillNode { label, node });
             }
             ChaosEvent::KillDc { at_secs, dc } => {
-                sim.schedule_at(secs_f(at_secs), move |sim| {
-                    sim.state.emit(TraceEvent::ChaosInjected { label });
-                    kill_dc(sim, dc);
-                });
+                sim.schedule_event_at(secs_f(at_secs), SimEvent::ChaosKillDc { label, dc });
             }
             ChaosEvent::SpotStorm { at_secs, dc, dur_secs, sigma_factor } => {
                 storm_actions.push((at_secs, true, dc.0, sigma_factor));
@@ -144,71 +149,23 @@ fn schedule_events(sim: &mut WorldSim, events: &[ChaosEvent]) {
                 wan_actions.push((until_secs, false, 1.0));
             }
             ChaosEvent::WanPairDegrade { at_secs, a, b, factor } => {
-                sim.schedule_at(secs_f(at_secs), move |sim| {
-                    sim.state.emit(TraceEvent::ChaosInjected { label });
-                    sim.state.wan.set_pair_degrade(a, b, factor);
-                });
+                sim.schedule_event_at(
+                    secs_f(at_secs),
+                    SimEvent::ChaosWanPairDegrade { label, a, b, factor },
+                );
             }
         }
     }
-    wan_actions.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+    // NaN-proof two-key sorts: `total_cmp` on the time key cannot panic
+    // the campaign on a malformed sample (spec validation rejects NaN
+    // times, but a sort must never be the thing that takes the run down).
+    wan_actions.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
     for (t, _, factor) in wan_actions {
-        sim.schedule_at(secs_f(t), move |sim| {
-            sim.state.emit(TraceEvent::ChaosInjected { label: format!("wan-factor={factor}") });
-            sim.state.wan.set_degrade(factor);
-        });
+        sim.schedule_event_at(secs_f(t), SimEvent::ChaosWanDegrade { factor });
     }
-    storm_actions.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+    storm_actions.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
     for (t, _, dc, factor) in storm_actions {
-        sim.schedule_at(secs_f(t), move |sim| {
-            sim.state.emit(TraceEvent::ChaosInjected {
-                label: format!("spot_storm:dc{dc}-factor={factor}"),
-            });
-            sim.state.markets[dc].set_storm(factor);
-        });
-    }
-}
-
-/// Cascading JM kills (generalizing the hand-coded
-/// `kill_pjm_then_new_pjm_too` path): the first kill hits the spec'd DC;
-/// each subsequent kill, `gap` later, hits whichever DC hosts job 0's
-/// *current* primary — i.e. the freshly-elected pJM. If the gap elapses
-/// before detection + election finished (the primary pointer still names
-/// a dead replica), the kill waits and retries instead of silently
-/// re-hitting the dead DC — the cascade always lands `count` kills on
-/// live primaries unless the job finishes first.
-fn cascade_kill(sim: &mut WorldSim, job: JobId, target: Option<DcId>, remaining: u32, gap: SimTime) {
-    if remaining == 0 {
-        return;
-    }
-    let dc = {
-        let Some(rt) = sim.state.jobs.get(&job) else { return };
-        if rt.done {
-            return;
-        }
-        match target {
-            Some(dc) => dc,
-            None => {
-                let primary_alive =
-                    rt.jms.get(&rt.primary).map(|jm| jm.alive).unwrap_or(false);
-                if !primary_alive {
-                    // Election still in flight: poll until a live primary
-                    // exists (bounded by job completion / the horizon).
-                    sim.schedule_in(secs_f(1.0), move |sim| {
-                        cascade_kill(sim, job, None, remaining, gap);
-                    });
-                    return;
-                }
-                sim.state.jobs[&job].primary
-            }
-        }
-    };
-    sim.state.emit(TraceEvent::ChaosInjected {
-        label: format!("kill_jm_cascade:kill@dc{} ({} left)", dc.0, remaining - 1),
-    });
-    kill_jm_host(sim, job, dc);
-    if remaining > 1 {
-        sim.schedule_in(gap, move |sim| cascade_kill(sim, job, None, remaining - 1, gap));
+        sim.schedule_event_at(secs_f(t), SimEvent::ChaosSpotStorm { dc, factor });
     }
 }
 
@@ -471,4 +428,39 @@ pub fn run_campaign(base: &Config, spec: &CampaignSpec) -> CampaignReport {
         h.u64(r.digest);
     }
     CampaignReport { name: spec.name.clone(), workers, runs, campaign_digest: h.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Deployment;
+    use crate::ids::DcId;
+
+    /// The WAN-window / spot-storm two-key sorts must never panic on a
+    /// NaN time — `partial_cmp(..).unwrap()` did exactly that before the
+    /// `total_cmp` sweep. (Spec validation rejects NaN-timed events, but
+    /// the fuzzer and future callers reach `schedule_events` directly.)
+    #[test]
+    fn nan_chaos_times_do_not_panic_the_schedulers() {
+        let cfg = Config::default();
+        let mut sim = build_sim_with(cfg, Deployment::Houtu, secs(100), QueueKind::Slab);
+        let events = vec![
+            ChaosEvent::WanDegrade { from_secs: f64::NAN, until_secs: f64::NAN, factor: 0.5 },
+            ChaosEvent::WanDegrade { from_secs: 10.0, until_secs: 20.0, factor: 0.5 },
+            ChaosEvent::SpotStorm {
+                at_secs: f64::NAN,
+                dc: DcId(0),
+                dur_secs: 5.0,
+                sigma_factor: 2.0,
+            },
+            ChaosEvent::SpotStorm {
+                at_secs: 1.0,
+                dc: DcId(1),
+                dur_secs: 5.0,
+                sigma_factor: 2.0,
+            },
+        ];
+        schedule_events(&mut sim, &events);
+        assert!(sim.pending() > 0, "events were scheduled, not dropped");
+    }
 }

@@ -277,7 +277,7 @@ impl ScenarioSpec {
                 _ => None,
             })
             .collect();
-        windows.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        windows.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
         for pair in windows.windows(2) {
             ensure!(
                 pair[0].1 <= pair[1].0,
@@ -301,7 +301,9 @@ impl ScenarioSpec {
                 _ => None,
             })
             .collect();
-        storms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        storms.sort_by(|a, b| {
+            a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)).then(a.2.total_cmp(&b.2))
+        });
         for pair in storms.windows(2) {
             ensure!(
                 pair[0].0 != pair[1].0 || pair[0].2 <= pair[1].1,
@@ -529,6 +531,44 @@ mod tests {
                 sigma_factor: 4.0
             }
         );
+    }
+
+    #[test]
+    fn nan_event_times_fail_validation_without_panicking() {
+        // The window/storm overlap checks sort by f64 keys; the old
+        // `partial_cmp(..).unwrap()` panicked on the first NaN instead of
+        // rejecting the spec. NaN never satisfies `a <= b`, so the overlap
+        // ensure now reports these as invalid.
+        let spec = ScenarioSpec {
+            name: "nan-windows".into(),
+            deployment: Deployment::Houtu,
+            regions: 0,
+            workload: ScenarioWorkload::Trace { num_jobs: 1 },
+            events: vec![
+                ChaosEvent::WanDegrade { from_secs: 10.0, until_secs: 20.0, factor: 0.5 },
+                ChaosEvent::WanDegrade { from_secs: f64::NAN, until_secs: f64::NAN, factor: 0.5 },
+            ],
+            overrides: vec![],
+        };
+        assert!(spec.build_config(&Config::default(), 1).is_err());
+
+        let spec = ScenarioSpec {
+            name: "nan-storms".into(),
+            deployment: Deployment::Houtu,
+            regions: 0,
+            workload: ScenarioWorkload::Trace { num_jobs: 1 },
+            events: vec![
+                ChaosEvent::SpotStorm { at_secs: 5.0, dc: DcId(0), dur_secs: 10.0, sigma_factor: 2.0 },
+                ChaosEvent::SpotStorm {
+                    at_secs: f64::NAN,
+                    dc: DcId(0),
+                    dur_secs: 10.0,
+                    sigma_factor: 2.0,
+                },
+            ],
+            overrides: vec![],
+        };
+        assert!(spec.build_config(&Config::default(), 1).is_err());
     }
 
     #[test]

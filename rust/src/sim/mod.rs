@@ -3,9 +3,33 @@
 //! The whole geo-distributed testbed (four data centers, WAN, spot market,
 //! masters, job managers) runs on this engine: a virtual millisecond clock
 //! and an event queue with a monotone tie-breaking sequence number, so a
-//! run is a pure function of (config, seed). Events are boxed
-//! `FnOnce(&mut Sim<S>)` closures over the world state `S`; an event may
+//! run is a pure function of (config, seed). An event payload is a
+//! [`Payload`]: either a **typed** value of the sim's event vocabulary
+//! `E` (a plain enum the engine dispatches through [`Dispatch`] — no heap
+//! allocation on the common path) or a **custom** boxed
+//! `FnOnce(&mut Sim<S, E>)` closure for the rare bespoke case (tests,
+//! [`every`] ticks, probe loops that carry ad-hoc state). An event may
 //! freely inspect/mutate the state and schedule further events.
+//!
+//! # Typed events
+//!
+//! A sim is `Sim<S, E>` where `E: Dispatch<S>` is its event vocabulary;
+//! plain `Sim<S>` defaults to the empty vocabulary [`NoEvent`] so
+//! closure-only sims (unit tests, micro-benches) stay as before. The
+//! deployment stack's vocabulary is `deploy::events::SimEvent` — the
+//! full taxonomy (job lifecycle, scheduling ticks, steal protocol,
+//! failure detection/recovery, WAN transfer completions, chaos
+//! injections) is documented there. Typed events buy two things over
+//! boxed closures:
+//!
+//! * **No allocator round-trip per event.** The payload is stored inline
+//!   in the queue slab; scheduling the common event shapes allocates
+//!   nothing (beyond what the event itself owns).
+//! * **Serializability.** The executed `(time, seq, event)` stream can
+//!   be persisted (`houtu campaign --record`) and lockstep-verified
+//!   against a re-execution (`houtu replay`); custom closures are opaque
+//!   and appear in the log as `"ev":"custom"` markers. The event-log
+//!   schema is documented in `scenario::replay`.
 //!
 //! # Queue invariants
 //!
@@ -31,7 +55,7 @@
 //!    by other events firing at `t` (periodic re-arms landing on the
 //!    horizon included) — before stopping, then leaves the clock at `t`.
 //!
-//! The production engine ([`queue::SlabQueue`]) keeps closures in a
+//! The production engine ([`queue::SlabQueue`]) keeps event payloads in a
 //! generation-stamped slab and orders bare `(time, seq, slot)` triples in
 //! an index-only 4-ary heap: cancels vacate the slot in O(1) and stale
 //! heap entries are skipped lazily at pop, so no tombstone sets exist.
@@ -101,10 +125,65 @@ impl EventId {
     }
 }
 
-/// Boxed event closure over world state `S`.
-pub type EventFn<S> = Box<dyn FnOnce(&mut Sim<S>)>;
+/// Boxed event closure over world state `S` (the `Custom` payload).
+pub type EventFn<S, E = NoEvent> = Box<dyn FnOnce(&mut Sim<S, E>)>;
+
+/// A typed event vocabulary the engine can execute. `dispatch` consumes
+/// the event and performs its effect against the sim; `kind` is a cheap
+/// static tag used by diagnostics (the runaway-guard panic) and the
+/// event log.
+pub trait Dispatch<S>: Sized {
+    fn dispatch(self, sim: &mut Sim<S, Self>);
+    fn kind(&self) -> &'static str;
+}
+
+/// The empty event vocabulary — the default for closure-only sims.
+/// Uninhabited, so the typed arm of [`Payload`] is statically dead and
+/// `Sim<S>` behaves exactly like the pre-typed engine.
+pub enum NoEvent {}
+
+impl<S> Dispatch<S> for NoEvent {
+    fn dispatch(self, _sim: &mut Sim<S, Self>) {
+        match self {}
+    }
+
+    fn kind(&self) -> &'static str {
+        match *self {}
+    }
+}
+
+/// What the queue stores per event: a typed value of the sim's event
+/// vocabulary (common path — no boxing) or a boxed closure (bespoke
+/// path).
+pub enum Payload<S, E> {
+    Typed(E),
+    Custom(EventFn<S, E>),
+}
+
+impl<S, E: Dispatch<S>> Payload<S, E> {
+    /// Static tag for diagnostics: the typed event's kind, or "custom".
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Payload::Typed(e) => e.kind(),
+            Payload::Custom(_) => "custom",
+        }
+    }
+}
 
 type StepHook<S> = Box<dyn FnMut(&mut S, SimTime)>;
+
+/// Observer for the executed event stream: called once per step with
+/// `(time, seq, Some(&event))` for typed events and `(time, seq, None)`
+/// for custom closures (which are opaque). The record/replay layer
+/// installs one to persist and to lockstep-verify runs.
+type EventRecorder<E> = Box<dyn FnMut(SimTime, u64, Option<&E>)>;
+
+/// Default runaway guard for [`Sim::run_to_completion`]: large enough
+/// that no legitimate drain in this repo comes near it (the heaviest
+/// campaign cells run low millions of events), small enough that a
+/// self-rearming event fails in seconds instead of spinning forever.
+/// Override per-sim with [`Sim::set_event_budget`].
+pub const DEFAULT_EVENT_BUDGET: u64 = 200_000_000;
 
 /// Shared `(now, steps)` cells the sim advances inline on every step —
 /// the zero-dispatch replacement for clock-only step hooks. The trace
@@ -138,32 +217,45 @@ impl StepClock {
     }
 }
 
-/// The simulation engine over world state `S`.
-pub struct Sim<S> {
-    /// The world; event closures mutate it.
+/// The simulation engine over world state `S` with typed event
+/// vocabulary `E` (default: the empty [`NoEvent`], i.e. closures only).
+pub struct Sim<S, E = NoEvent> {
+    /// The world; events mutate it.
     pub state: S,
     now: SimTime,
     seq: u64,
-    queue: QueueImpl<S>,
-    /// Advanced inline before each event closure (no dynamic dispatch).
+    queue: QueueImpl<Payload<S, E>>,
+    /// Advanced inline before each event runs (no dynamic dispatch).
     clock: Option<Rc<StepClock>>,
     /// Called after the clock advances to each event's time, before the
-    /// event closure runs.
+    /// event runs.
     hook: Option<StepHook<S>>,
+    /// Observes each executed event (record/replay layer).
+    recorder: Option<EventRecorder<E>>,
     /// Total events executed (for perf accounting / runaway detection).
     pub events_processed: u64,
     peak_pending: usize,
+    event_budget: u64,
 }
 
 impl<S> Sim<S> {
-    /// A sim on the production slab queue.
+    /// A closure-only sim on the production slab queue.
     pub fn new(state: S) -> Self {
         Sim::with_queue(state, QueueKind::Slab)
     }
 
-    /// A sim on an explicit queue engine (differential tests and
-    /// `houtu bench` run the same schedule on both).
+    /// A closure-only sim on an explicit queue engine (differential
+    /// tests and `houtu bench` run the same schedule on both).
     pub fn with_queue(state: S, kind: QueueKind) -> Self {
+        Sim::typed_with_queue(state, kind)
+    }
+}
+
+impl<S, E> Sim<S, E> {
+    /// A sim with typed event vocabulary `E` on an explicit queue
+    /// engine. (Named distinctly from [`Sim::with_queue`] so closure-only
+    /// call sites keep inferring `E = NoEvent`.)
+    pub fn typed_with_queue(state: S, kind: QueueKind) -> Self {
         Sim {
             state,
             now: 0,
@@ -171,8 +263,10 @@ impl<S> Sim<S> {
             queue: QueueImpl::new(kind),
             clock: None,
             hook: None,
+            recorder: None,
             events_processed: 0,
             peak_pending: 0,
+            event_budget: DEFAULT_EVENT_BUDGET,
         }
     }
 
@@ -195,6 +289,21 @@ impl<S> Sim<S> {
     /// when all the hook would do is advance a clock.
     pub fn set_step_hook(&mut self, hook: impl FnMut(&mut S, SimTime) + 'static) {
         self.hook = Some(Box::new(hook));
+    }
+
+    /// Install the executed-event observer: called once per step with
+    /// `(time, seq, Some(&event))` for typed events, `(time, seq, None)`
+    /// for custom closures — *before* the event runs. The record/replay
+    /// layer uses this to persist and lockstep-verify runs.
+    pub fn set_event_recorder(&mut self, rec: impl FnMut(SimTime, u64, Option<&E>) + 'static) {
+        self.recorder = Some(Box::new(rec));
+    }
+
+    /// Configure the [`Sim::run_to_completion`] runaway guard (default
+    /// [`DEFAULT_EVENT_BUDGET`]): exceeding it panics with the offending
+    /// event's time and kind.
+    pub fn set_event_budget(&mut self, budget: u64) {
+        self.event_budget = budget;
     }
 
     /// Current virtual time (ms).
@@ -220,12 +329,13 @@ impl<S> Sim<S> {
         self.peak_pending
     }
 
-    /// Schedule `f` at absolute virtual time `t` (clamped to now).
-    pub fn schedule_at(&mut self, t: SimTime, f: impl FnOnce(&mut Sim<S>) + 'static) -> EventId {
+    /// The one enqueue path: clamp to now, allocate the next seq, track
+    /// the pending high-water mark.
+    fn enqueue(&mut self, t: SimTime, payload: Payload<S, E>) -> EventId {
         let t = t.max(self.now);
         let seq = self.seq;
         self.seq += 1;
-        let id = self.queue.schedule(t, seq, Box::new(f));
+        let id = self.queue.schedule(t, seq, payload);
         let live = self.queue.pending();
         if live > self.peak_pending {
             self.peak_pending = live;
@@ -233,19 +343,46 @@ impl<S> Sim<S> {
         id
     }
 
-    /// Schedule `f` after `delay` ms.
+    /// Schedule a custom closure at absolute virtual time `t` (clamped
+    /// to now).
+    pub fn schedule_at(
+        &mut self,
+        t: SimTime,
+        f: impl FnOnce(&mut Sim<S, E>) + 'static,
+    ) -> EventId {
+        self.enqueue(t, Payload::Custom(Box::new(f)))
+    }
+
+    /// Schedule a custom closure after `delay` ms.
     pub fn schedule_in(
         &mut self,
         delay: SimTime,
-        f: impl FnOnce(&mut Sim<S>) + 'static,
+        f: impl FnOnce(&mut Sim<S, E>) + 'static,
     ) -> EventId {
         self.schedule_at(self.now + delay, f)
     }
 
     /// Schedule `f` to run "immediately" (after currently-queued same-time
     /// events — useful for decoupling call stacks).
-    pub fn defer(&mut self, f: impl FnOnce(&mut Sim<S>) + 'static) -> EventId {
+    pub fn defer(&mut self, f: impl FnOnce(&mut Sim<S, E>) + 'static) -> EventId {
         self.schedule_at(self.now, f)
+    }
+
+    /// Schedule a typed event at absolute virtual time `t` (clamped to
+    /// now) — the allocation-free common path.
+    pub fn schedule_event_at(&mut self, t: SimTime, ev: E) -> EventId {
+        self.enqueue(t, Payload::Typed(ev))
+    }
+
+    /// Schedule a typed event after `delay` ms.
+    pub fn schedule_event_in(&mut self, delay: SimTime, ev: E) -> EventId {
+        self.enqueue(self.now + delay, Payload::Typed(ev))
+    }
+
+    /// Schedule a typed event to run "immediately" (FIFO after
+    /// currently-queued same-time events).
+    pub fn defer_event(&mut self, ev: E) -> EventId {
+        self.enqueue(self.now, Payload::Typed(ev))
     }
 
     /// Cancel a scheduled event. A true no-op after the event has fired
@@ -255,6 +392,13 @@ impl<S> Sim<S> {
         self.queue.cancel(id)
     }
 
+    /// Pop the next event without executing it (runaway diagnostics).
+    fn pop_next(&mut self) -> Option<Popped<Payload<S, E>>> {
+        self.queue.pop()
+    }
+}
+
+impl<S, E: Dispatch<S>> Sim<S, E> {
     /// Execute the next event; returns false when the queue is empty.
     pub fn step(&mut self) -> bool {
         match self.queue.pop() {
@@ -268,7 +412,16 @@ impl<S> Sim<S> {
                 if let Some(hook) = self.hook.as_mut() {
                     hook(&mut self.state, e.time);
                 }
-                (e.f)(self);
+                if let Some(rec) = self.recorder.as_mut() {
+                    match &e.payload {
+                        Payload::Typed(ev) => rec(e.time, e.seq, Some(ev)),
+                        Payload::Custom(_) => rec(e.time, e.seq, None),
+                    }
+                }
+                match e.payload {
+                    Payload::Typed(ev) => ev.dispatch(self),
+                    Payload::Custom(f) => f(self),
+                }
                 true
             }
             None => false,
@@ -303,10 +456,29 @@ impl<S> Sim<S> {
         self.now = self.now.max(t);
     }
 
-    /// Drain the queue entirely (with a generous runaway guard).
+    /// Drain the queue entirely, guarded by the configurable event
+    /// budget ([`Sim::set_event_budget`], default
+    /// [`DEFAULT_EVENT_BUDGET`]). A schedule that exceeds the budget
+    /// with events still queued — the runaway signature of a
+    /// self-rearming event — panics with the next event's time and kind
+    /// instead of spinning effectively forever.
     pub fn run_to_completion(&mut self) {
-        let n = self.run(u64::MAX / 2);
-        let _ = n;
+        let budget = self.event_budget;
+        let n = self.run(budget);
+        if n >= budget {
+            if let Some(e) = self.pop_next() {
+                panic!(
+                    "sim event budget exhausted: {} events executed and {} still queued; \
+                     next event is `{}` at t={}ms (seq {}) — runaway self-rearming event? \
+                     Raise Sim::set_event_budget if the schedule is legitimate",
+                    n,
+                    self.queue.pending() + 1,
+                    e.payload.kind(),
+                    e.time,
+                    e.seq,
+                );
+            }
+        }
     }
 }
 
@@ -319,15 +491,15 @@ impl<S> Sim<S> {
 /// against already-queued same-time events. (It used to run inline at
 /// arm time, invisibly to the step hook — the clock stamped its effects
 /// with the *previous* event's time.)
-pub fn every<S: 'static>(
-    sim: &mut Sim<S>,
+pub fn every<S: 'static, E: 'static>(
+    sim: &mut Sim<S, E>,
     period: SimTime,
-    mut tick: impl FnMut(&mut Sim<S>) -> bool + 'static,
+    mut tick: impl FnMut(&mut Sim<S, E>) -> bool + 'static,
 ) {
-    fn arm<S: 'static>(
-        sim: &mut Sim<S>,
+    fn arm<S: 'static, E: 'static>(
+        sim: &mut Sim<S, E>,
         period: SimTime,
-        mut tick: impl FnMut(&mut Sim<S>) -> bool + 'static,
+        mut tick: impl FnMut(&mut Sim<S, E>) -> bool + 'static,
     ) {
         sim.schedule_in(period, move |sim| {
             if tick(sim) {
@@ -609,5 +781,104 @@ mod tests {
         let n = sim.run(10);
         assert_eq!(n, 10);
         assert_eq!(sim.state, 10);
+    }
+
+    /// Minimal typed vocabulary for engine-level tests.
+    enum TestEvent {
+        Push(u32),
+        Chain { next_in: SimTime, value: u32 },
+    }
+
+    impl Dispatch<Vec<u32>> for TestEvent {
+        fn dispatch(self, sim: &mut Sim<Vec<u32>, TestEvent>) {
+            match self {
+                TestEvent::Push(v) => sim.state.push(v),
+                TestEvent::Chain { next_in, value } => {
+                    sim.state.push(value);
+                    if value < 3 {
+                        sim.schedule_event_in(
+                            next_in,
+                            TestEvent::Chain { next_in, value: value + 1 },
+                        );
+                    }
+                }
+            }
+        }
+
+        fn kind(&self) -> &'static str {
+            match self {
+                TestEvent::Push(_) => "push",
+                TestEvent::Chain { .. } => "chain",
+            }
+        }
+    }
+
+    /// Typed and custom events share one queue and one (time, seq)
+    /// order: interleavings are FIFO at equal times, and typed events
+    /// can re-arm themselves from dispatch.
+    #[test]
+    fn typed_and_custom_events_interleave_fifo() {
+        for kind in [QueueKind::Slab, QueueKind::Legacy] {
+            let mut sim: Sim<Vec<u32>, TestEvent> = Sim::typed_with_queue(Vec::new(), kind);
+            sim.schedule_event_at(5, TestEvent::Push(1));
+            sim.schedule_at(5, |s| s.state.push(2));
+            sim.schedule_event_at(5, TestEvent::Push(3));
+            sim.schedule_event_at(2, TestEvent::Chain { next_in: 10, value: 0 });
+            sim.run_to_completion();
+            assert_eq!(sim.state, vec![0, 1, 2, 3, 1, 2, 3], "{kind:?}");
+            assert_eq!(sim.events_processed, 7, "{kind:?}");
+        }
+    }
+
+    /// The recorder sees every executed step before it runs: typed
+    /// events by reference, custom closures as opaque `None` markers.
+    #[test]
+    fn recorder_observes_typed_and_custom_steps() {
+        let log: Rc<RefCell<Vec<(SimTime, u64, Option<&'static str>)>>> = Rc::default();
+        let l2 = log.clone();
+        let mut sim: Sim<Vec<u32>, TestEvent> =
+            Sim::typed_with_queue(Vec::new(), QueueKind::Slab);
+        sim.set_event_recorder(move |t, seq, ev| {
+            l2.borrow_mut().push((t, seq, ev.map(|e| e.kind())));
+        });
+        sim.schedule_event_at(3, TestEvent::Push(7));
+        sim.schedule_at(4, |_| {});
+        sim.run_to_completion();
+        assert_eq!(*log.borrow(), vec![(3, 0, Some("push")), (4, 1, None)]);
+    }
+
+    /// Satellite pin: the runaway guard is a real budget — a
+    /// self-rearming event trips it and the panic names the offending
+    /// event's time and kind.
+    #[test]
+    fn run_to_completion_panics_on_runaway_with_diagnostics() {
+        let result = std::panic::catch_unwind(|| {
+            let mut sim = Sim::new(0u64);
+            sim.set_event_budget(100);
+            every(&mut sim, 1, |_| true); // re-arms forever
+            sim.run_to_completion();
+        });
+        let err = result.expect_err("a runaway schedule must panic, not spin");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("event budget exhausted"), "{msg}");
+        assert!(msg.contains("`custom`"), "diagnostic must name the event kind: {msg}");
+        assert!(msg.contains("t="), "diagnostic must carry the event time: {msg}");
+    }
+
+    /// The budget only guards `run_to_completion` runaways; a legitimate
+    /// drain below the budget is untouched.
+    #[test]
+    fn budget_does_not_trip_on_legitimate_drains() {
+        let mut sim = Sim::new(0u64);
+        sim.set_event_budget(1000);
+        for t in 0..1000u64 {
+            sim.schedule_at(t, |s| s.state += 1);
+        }
+        sim.run_to_completion();
+        assert_eq!(sim.state, 1000);
     }
 }

@@ -1,14 +1,17 @@
 //! Event-queue implementations behind the simulation core.
 //!
-//! Two interchangeable engines live here:
+//! Two interchangeable engines live here, both generic over an opaque
+//! event payload `T` — the queues order `(time, seq)` and never look
+//! inside the payload (the sim stores a [`crate::sim::Payload`]: a typed
+//! event or a boxed closure):
 //!
 //! * [`SlabQueue`] — the production queue: a generation-stamped slab holds
-//!   the event closures, an index-only 4-ary min-heap orders bare
+//!   the event payloads, an index-only 4-ary min-heap orders bare
 //!   `(time, seq, slot)` triples. Cancel is O(1) (vacate the slot; the
 //!   stale heap entry is skipped lazily at pop), `pending()` is an exact
 //!   counter, and there are no side tombstone sets.
 //! * [`LegacyQueue`] — the pre-overhaul queue (`BinaryHeap<Entry>` of
-//!   boxed closures plus `live`/`cancelled` `HashSet`s), vendored
+//!   payloads plus `live`/`cancelled` `HashSet`s), vendored
 //!   verbatim. It is the executable golden record: the differential
 //!   suites (`rust/tests/sim_queue.rs`, `rust/tests/golden_digests.rs`)
 //!   replay generated schedules and whole campaign cells on both engines
@@ -25,7 +28,7 @@
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashSet};
 
-use super::{EventFn, EventId, SimTime};
+use super::{EventId, SimTime};
 
 /// Which queue engine a [`crate::sim::Sim`] runs on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -45,11 +48,11 @@ impl QueueKind {
     }
 }
 
-/// A popped event: its scheduled time, schedule seq, and closure.
-pub struct Popped<S> {
+/// A popped event: its scheduled time, schedule seq, and payload.
+pub struct Popped<T> {
     pub time: SimTime,
     pub seq: u64,
-    pub f: EventFn<S>,
+    pub payload: T,
 }
 
 // ---------------------------------------------------------------------------
@@ -59,16 +62,16 @@ pub struct Popped<S> {
 /// Sentinel for "no free slot" in the slab free list.
 const NO_FREE: u32 = u32::MAX;
 
-struct Slot<S> {
+struct Slot<T> {
     /// Bumped every time the slot is vacated (fire or cancel), so stale
     /// [`EventId`]s held by callers can never cancel a reused slot.
     gen: u32,
     /// Free-list link, meaningful only while vacant.
     next_free: u32,
-    /// Schedule seq of the occupying event; `f.is_some()` ⇒ valid.
+    /// Schedule seq of the occupying event; `payload.is_some()` ⇒ valid.
     seq: u64,
-    /// The closure; `Some` iff the slot is occupied (event still live).
-    f: Option<EventFn<S>>,
+    /// The payload; `Some` iff the slot is occupied (event still live).
+    payload: Option<T>,
 }
 
 /// Bare ordering triple the 4-ary heap stores — no closure, 24 bytes.
@@ -85,39 +88,39 @@ fn key(e: &HeapEntry) -> (SimTime, u64) {
 }
 
 /// The production event queue. See the module docs for the design.
-pub struct SlabQueue<S> {
-    slots: Vec<Slot<S>>,
+pub struct SlabQueue<T> {
+    slots: Vec<Slot<T>>,
     free_head: u32,
     heap: Vec<HeapEntry>,
     /// Exact count of live (scheduled, not fired, not cancelled) events.
     live: usize,
 }
 
-impl<S> Default for SlabQueue<S> {
+impl<T> Default for SlabQueue<T> {
     fn default() -> Self {
         SlabQueue::new()
     }
 }
 
-impl<S> SlabQueue<S> {
+impl<T> SlabQueue<T> {
     pub fn new() -> Self {
         SlabQueue { slots: Vec::new(), free_head: NO_FREE, heap: Vec::new(), live: 0 }
     }
 
-    /// Schedule a closure. `seq` must be strictly monotone across calls
+    /// Schedule a payload. `seq` must be strictly monotone across calls
     /// (the sim owns the counter); it is both the FIFO tie-break and the
     /// staleness check for lazily-skipped heap entries.
-    pub fn schedule(&mut self, time: SimTime, seq: u64, f: EventFn<S>) -> EventId {
+    pub fn schedule(&mut self, time: SimTime, seq: u64, payload: T) -> EventId {
         let slot = if self.free_head != NO_FREE {
             let s = self.free_head as usize;
             self.free_head = self.slots[s].next_free;
             self.slots[s].seq = seq;
-            self.slots[s].f = Some(f);
+            self.slots[s].payload = Some(payload);
             s as u32
         } else {
             let s = self.slots.len();
             assert!(s < NO_FREE as usize, "event slab exhausted");
-            self.slots.push(Slot { gen: 0, next_free: NO_FREE, seq, f: Some(f) });
+            self.slots.push(Slot { gen: 0, next_free: NO_FREE, seq, payload: Some(payload) });
             s as u32
         };
         self.heap_push(HeapEntry { time, seq, slot });
@@ -125,14 +128,14 @@ impl<S> SlabQueue<S> {
         EventId::pack(slot, self.slots[slot as usize].gen)
     }
 
-    /// O(1) cancel: vacate the slot (dropping the closure now, not at
+    /// O(1) cancel: vacate the slot (dropping the payload now, not at
     /// pop) and bump its generation. The heap entry stays behind and is
     /// skipped at pop because its `seq` no longer matches the slot.
     pub fn cancel(&mut self, id: EventId) -> bool {
         let (slot, gen) = id.unpack();
         match self.slots.get_mut(slot as usize) {
-            Some(s) if s.gen == gen && s.f.is_some() => {
-                s.f = None;
+            Some(s) if s.gen == gen && s.payload.is_some() => {
+                s.payload = None;
                 self.vacate(slot);
                 true
             }
@@ -141,15 +144,15 @@ impl<S> SlabQueue<S> {
     }
 
     /// Pop the earliest live event, discarding stale heap entries.
-    pub fn pop(&mut self) -> Option<Popped<S>> {
+    pub fn pop(&mut self) -> Option<Popped<T>> {
         while let Some(e) = self.heap_pop() {
             let s = &mut self.slots[e.slot as usize];
-            if s.seq != e.seq || s.f.is_none() {
+            if s.seq != e.seq || s.payload.is_none() {
                 continue; // cancelled (or slot since reused): stale entry
             }
-            let f = s.f.take().expect("occupied slot");
+            let payload = s.payload.take().expect("occupied slot");
             self.vacate(e.slot);
-            return Some(Popped { time: e.time, seq: e.seq, f });
+            return Some(Popped { time: e.time, seq: e.seq, payload });
         }
         None
     }
@@ -159,7 +162,7 @@ impl<S> SlabQueue<S> {
     pub fn next_time(&mut self) -> Option<SimTime> {
         while let Some(&e) = self.heap.first() {
             let s = &self.slots[e.slot as usize];
-            if s.seq == e.seq && s.f.is_some() {
+            if s.seq == e.seq && s.payload.is_some() {
                 return Some(e.time);
             }
             self.heap_pop();
@@ -174,7 +177,7 @@ impl<S> SlabQueue<S> {
 
     fn vacate(&mut self, slot: u32) {
         let s = &mut self.slots[slot as usize];
-        debug_assert!(s.f.is_none());
+        debug_assert!(s.payload.is_none());
         s.gen = s.gen.wrapping_add(1);
         s.next_free = self.free_head;
         self.free_head = slot;
@@ -232,24 +235,24 @@ impl<S> SlabQueue<S> {
 // LegacyQueue: the pre-overhaul engine, vendored as the golden baseline.
 // ---------------------------------------------------------------------------
 
-struct Entry<S> {
+struct Entry<T> {
     time: SimTime,
     seq: u64,
-    f: EventFn<S>,
+    payload: T,
 }
 
-impl<S> PartialEq for Entry<S> {
+impl<T> PartialEq for Entry<T> {
     fn eq(&self, other: &Self) -> bool {
         self.time == other.time && self.seq == other.seq
     }
 }
-impl<S> Eq for Entry<S> {}
-impl<S> PartialOrd for Entry<S> {
+impl<T> Eq for Entry<T> {}
+impl<T> PartialOrd for Entry<T> {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
-impl<S> Ord for Entry<S> {
+impl<T> Ord for Entry<T> {
     fn cmp(&self, other: &Self) -> Ordering {
         // BinaryHeap is a max-heap; invert so the earliest (time, seq)
         // pops first. seq keeps same-time events FIFO.
@@ -257,30 +260,30 @@ impl<S> Ord for Entry<S> {
     }
 }
 
-/// The pre-overhaul queue: boxed closures inside the heap, cancellation
+/// The pre-overhaul queue: payloads inside the heap, cancellation
 /// via `live`/`cancelled` tombstone sets checked at pop time. Kept (not
 /// deleted) so the differential suites and `houtu bench` can replay any
 /// schedule on the exact pre-swap semantics and compare bit-for-bit.
-pub struct LegacyQueue<S> {
-    queue: BinaryHeap<Entry<S>>,
+pub struct LegacyQueue<T> {
+    queue: BinaryHeap<Entry<T>>,
     live: HashSet<u64>,
     cancelled: HashSet<u64>,
 }
 
-impl<S> Default for LegacyQueue<S> {
+impl<T> Default for LegacyQueue<T> {
     fn default() -> Self {
         LegacyQueue::new()
     }
 }
 
-impl<S> LegacyQueue<S> {
+impl<T> LegacyQueue<T> {
     pub fn new() -> Self {
         LegacyQueue { queue: BinaryHeap::new(), live: HashSet::new(), cancelled: HashSet::new() }
     }
 
-    pub fn schedule(&mut self, time: SimTime, seq: u64, f: EventFn<S>) -> EventId {
+    pub fn schedule(&mut self, time: SimTime, seq: u64, payload: T) -> EventId {
         self.live.insert(seq);
-        self.queue.push(Entry { time, seq, f });
+        self.queue.push(Entry { time, seq, payload });
         EventId::pack_seq(seq)
     }
 
@@ -294,13 +297,13 @@ impl<S> LegacyQueue<S> {
         }
     }
 
-    pub fn pop(&mut self) -> Option<Popped<S>> {
+    pub fn pop(&mut self) -> Option<Popped<T>> {
         while let Some(e) = self.queue.pop() {
             if self.cancelled.remove(&e.seq) {
                 continue;
             }
             self.live.remove(&e.seq);
-            return Some(Popped { time: e.time, seq: e.seq, f: e.f });
+            return Some(Popped { time: e.time, seq: e.seq, payload: e.payload });
         }
         None
     }
@@ -329,12 +332,12 @@ impl<S> LegacyQueue<S> {
 // event producer.
 // ---------------------------------------------------------------------------
 
-pub(crate) enum QueueImpl<S> {
-    Slab(SlabQueue<S>),
-    Legacy(LegacyQueue<S>),
+pub(crate) enum QueueImpl<T> {
+    Slab(SlabQueue<T>),
+    Legacy(LegacyQueue<T>),
 }
 
-impl<S> QueueImpl<S> {
+impl<T> QueueImpl<T> {
     pub(crate) fn new(kind: QueueKind) -> Self {
         match kind {
             QueueKind::Slab => QueueImpl::Slab(SlabQueue::new()),
@@ -350,10 +353,10 @@ impl<S> QueueImpl<S> {
     }
 
     #[inline]
-    pub(crate) fn schedule(&mut self, time: SimTime, seq: u64, f: EventFn<S>) -> EventId {
+    pub(crate) fn schedule(&mut self, time: SimTime, seq: u64, payload: T) -> EventId {
         match self {
-            QueueImpl::Slab(q) => q.schedule(time, seq, f),
-            QueueImpl::Legacy(q) => q.schedule(time, seq, f),
+            QueueImpl::Slab(q) => q.schedule(time, seq, payload),
+            QueueImpl::Legacy(q) => q.schedule(time, seq, payload),
         }
     }
 
@@ -366,7 +369,7 @@ impl<S> QueueImpl<S> {
     }
 
     #[inline]
-    pub(crate) fn pop(&mut self) -> Option<Popped<S>> {
+    pub(crate) fn pop(&mut self) -> Option<Popped<T>> {
         match self {
             QueueImpl::Slab(q) => q.pop(),
             QueueImpl::Legacy(q) => q.pop(),
@@ -395,19 +398,17 @@ mod tests {
     use super::*;
     use crate::util::Pcg;
 
+    // The queues are payload-agnostic; unit payloads keep the tests on
+    // pure (time, seq) ordering.
     type Q = SlabQueue<()>;
-
-    fn noop() -> EventFn<()> {
-        Box::new(|_| {})
-    }
 
     #[test]
     fn pops_in_time_then_seq_order() {
         let mut q = Q::new();
-        q.schedule(30, 0, noop());
-        q.schedule(10, 1, noop());
-        q.schedule(20, 2, noop());
-        q.schedule(10, 3, noop());
+        q.schedule(30, 0, ());
+        q.schedule(10, 1, ());
+        q.schedule(20, 2, ());
+        q.schedule(10, 3, ());
         let order: Vec<(SimTime, u64)> = std::iter::from_fn(|| q.pop())
             .map(|p| (p.time, p.seq))
             .collect();
@@ -418,8 +419,8 @@ mod tests {
     #[test]
     fn cancel_is_o1_and_exact() {
         let mut q = Q::new();
-        let a = q.schedule(5, 0, noop());
-        let b = q.schedule(5, 1, noop());
+        let a = q.schedule(5, 0, ());
+        let b = q.schedule(5, 1, ());
         assert_eq!(q.pending(), 2);
         assert!(q.cancel(a));
         assert!(!q.cancel(a), "double cancel");
@@ -434,10 +435,10 @@ mod tests {
     #[test]
     fn slot_reuse_does_not_resurrect_stale_ids() {
         let mut q = Q::new();
-        let a = q.schedule(5, 0, noop());
+        let a = q.schedule(5, 0, ());
         assert!(q.cancel(a));
         // The vacated slot is reused by a new event.
-        let b = q.schedule(3, 1, noop());
+        let b = q.schedule(3, 1, ());
         assert!(!q.cancel(a), "stale id must not hit the reused slot");
         assert_eq!(q.pending(), 1);
         // The stale heap entry for `a` is skipped, `b` pops.
@@ -450,8 +451,8 @@ mod tests {
     #[test]
     fn next_time_skips_cancelled_heads() {
         let mut q = Q::new();
-        let a = q.schedule(1, 0, noop());
-        q.schedule(9, 1, noop());
+        let a = q.schedule(1, 0, ());
+        q.schedule(9, 1, ());
         assert_eq!(q.next_time(), Some(1));
         assert!(q.cancel(a));
         assert_eq!(q.next_time(), Some(9));
@@ -464,7 +465,7 @@ mod tests {
         let mut rng = Pcg::seeded(5);
         let mut q = Q::new();
         for seq in 0..5000u64 {
-            q.schedule(rng.below(1000), seq, noop());
+            q.schedule(rng.below(1000), seq, ());
         }
         let mut last = (0u64, 0u64);
         let mut n = 0;
@@ -490,7 +491,7 @@ mod tests {
             match rng.index(4) {
                 0 | 1 => {
                     let t = rng.below(500);
-                    ids.push((slab.schedule(t, seq, noop()), legacy.schedule(t, seq, noop())));
+                    ids.push((slab.schedule(t, seq, ()), legacy.schedule(t, seq, ())));
                     seq += 1;
                 }
                 2 if !ids.is_empty() => {

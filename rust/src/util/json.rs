@@ -88,6 +88,18 @@ pub fn escape(s: &str) -> String {
     out
 }
 
+/// Render an `f64` for embedding in a JSON document. JSON has no NaN or
+/// ±∞ literal, and [`parse`] (rightly) rejects them — writers that rendered
+/// non-finite values with `{}` produced documents the round-trip check
+/// could never read back. Non-finite values become `null`.
+pub fn num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
 /// Parse a JSON document. Errors carry the byte offset of the problem.
 pub fn parse(text: &str) -> Result<Json, String> {
     let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
@@ -317,6 +329,19 @@ mod tests {
     fn rejects_garbage() {
         for s in ["", "{", "[1,", "{\"a\" 1}", "nul", "1.2.3", "\"open", "{} extra", "NaN"] {
             assert!(parse(s).is_err(), "{s:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn num_maps_non_finite_to_null() {
+        assert_eq!(num(1.5), "1.5");
+        assert_eq!(num(-0.0), "-0");
+        assert_eq!(num(f64::NAN), "null");
+        assert_eq!(num(f64::INFINITY), "null");
+        assert_eq!(num(f64::NEG_INFINITY), "null");
+        // Whatever `num` emits must parse back.
+        for x in [0.25, f64::NAN, f64::INFINITY] {
+            assert!(parse(&num(x)).is_ok());
         }
     }
 

@@ -25,7 +25,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     percentile_sorted(&v, p)
 }
 
@@ -44,18 +44,27 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
+/// Smallest sample; 0.0 for an empty slice. (An ∞ sentinel would leak
+/// into reports — and `util::json` rejects non-finite numbers outright.)
 pub fn min(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
     xs.iter().copied().fold(f64::INFINITY, f64::min)
 }
 
+/// Largest sample; 0.0 for an empty slice (see [`min`]).
 pub fn max(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
 
 /// Empirical CDF: returns (value, fraction ≤ value) pairs, one per sample.
 pub fn cdf(xs: &[f64]) -> Vec<(f64, f64)> {
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let n = v.len() as f64;
     v.iter()
         .enumerate()
@@ -66,7 +75,7 @@ pub fn cdf(xs: &[f64]) -> Vec<(f64, f64)> {
 /// Sample the empirical CDF at fixed fractions (for compact table output).
 pub fn cdf_at(xs: &[f64], fractions: &[f64]) -> Vec<(f64, f64)> {
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     fractions
         .iter()
         .map(|&f| (percentile_sorted(&v, f * 100.0), f))
@@ -89,7 +98,7 @@ pub struct Summary {
 impl Summary {
     pub fn of(xs: &[f64]) -> Summary {
         let mut v = xs.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         Summary {
             n: v.len(),
             mean: mean(&v),
@@ -144,21 +153,29 @@ impl TimeWeighted {
 }
 
 /// Fixed-width histogram over [lo, hi) with `bins` buckets (under/overflow
-/// clamp to the edge buckets).
+/// clamp to the edge buckets). NaN samples are tallied in [`Histogram::nan`]
+/// rather than silently landing in bucket 0 — `(NaN).clamp(0.0, hi)` is NaN,
+/// and `NaN as usize` is 0, so the old code quietly inflated the first bucket.
 #[derive(Debug, Clone)]
 pub struct Histogram {
     pub lo: f64,
     pub hi: f64,
     pub counts: Vec<u64>,
+    /// Number of NaN samples fed to [`Histogram::add`].
+    pub nan: u64,
 }
 
 impl Histogram {
     pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
         assert!(hi > lo && bins > 0);
-        Histogram { lo, hi, counts: vec![0; bins] }
+        Histogram { lo, hi, counts: vec![0; bins], nan: 0 }
     }
 
     pub fn add(&mut self, x: f64) {
+        if x.is_nan() {
+            self.nan += 1;
+            return;
+        }
         let bins = self.counts.len();
         let idx = ((x - self.lo) / (self.hi - self.lo) * bins as f64)
             .floor()
@@ -166,6 +183,7 @@ impl Histogram {
         self.counts[idx] += 1;
     }
 
+    /// Total finite (bucketed) samples; excludes the NaN tally.
     pub fn total(&self) -> u64 {
         self.counts.iter().sum()
     }
@@ -188,6 +206,28 @@ mod tests {
         assert_eq!(std_dev(&[]), 0.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
         assert!(cdf(&[]).is_empty());
+        // min/max of nothing must be a finite, JSON-encodable number — the
+        // ±∞ fold seeds used to leak straight into reports.
+        assert_eq!(min(&[]), 0.0);
+        assert_eq!(max(&[]), 0.0);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic_the_folds() {
+        // `partial_cmp(..).unwrap()` used to panic on the first NaN; the
+        // `total_cmp` sorts order NaN after every finite value instead.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        let p = percentile(&xs, 0.0);
+        assert_eq!(p, 1.0);
+        let c = cdf(&xs);
+        assert_eq!(c.len(), 4);
+        assert_eq!(c[0].0, 1.0);
+        let s = Summary::of(&xs);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan(), "NaN sorts last under total_cmp");
+        let at = cdf_at(&xs, &[0.0, 0.5]);
+        assert_eq!(at[0].0, 1.0);
     }
 
     #[test]
@@ -243,5 +283,16 @@ mod tests {
         assert_eq!(h.counts[0], 2);
         assert_eq!(h.counts[9], 2);
         assert_eq!(h.total(), 4);
+    }
+
+    #[test]
+    fn histogram_counts_nan_separately() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.add(f64::NAN);
+        h.add(0.5);
+        h.add(f64::NAN);
+        assert_eq!(h.nan, 2, "NaN must not be bucketed");
+        assert_eq!(h.counts[0], 1, "bucket 0 holds only the finite sample");
+        assert_eq!(h.total(), 1);
     }
 }

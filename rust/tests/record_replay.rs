@@ -1,0 +1,126 @@
+//! Record → replay round-trips: a campaign recorded with the engine's
+//! event recorder must re-execute bit-identically — same per-event log
+//! lines, same full-stream FNV, same event counts, same run digests.
+//! This is the persistent-determinism companion to `golden_digests` (which
+//! pins digests across queue engines in-process): the event log survives
+//! the process, so a replay failure in a later build means the binary no
+//! longer executes the schedule it used to.
+
+use houtu::config::Config;
+use houtu::scenario::replay::{read_log, render_log};
+use houtu::scenario::{
+    record_campaign, record_cells, replay_log, smoke_campaign, standard_campaign,
+};
+use houtu::util::json;
+
+#[test]
+fn smoke_campaign_records_and_replays_bit_identically() {
+    let base = Config::default();
+    let log = record_campaign(&base, &smoke_campaign(), "smoke").expect("record");
+    assert_eq!(log.cells.len(), 4, "2 scenarios x 2 seeds");
+    for cell in &log.cells {
+        assert!(cell.events > 0, "{}: empty run", cell.scenario);
+        assert!(!cell.log.is_empty(), "{}: no lines kept", cell.scenario);
+        assert_eq!(cell.queue, "slab");
+    }
+    let summary = replay_log(&base, &log).expect("replay must reproduce the recording");
+    assert_eq!(summary.cells, 4);
+    assert_eq!(summary.events, log.cells.iter().map(|c| c.events).sum::<u64>());
+}
+
+#[test]
+fn smoke_log_survives_serialization() {
+    let base = Config::default();
+    let log = record_campaign(&base, &smoke_campaign(), "smoke").expect("record");
+    let text = render_log(&log);
+    let back = read_log(&text).expect("rendered log must parse");
+    assert_eq!(back, log, "serialization round-trip");
+    // Replay from the parsed copy, exactly what `houtu replay` does.
+    replay_log(&base, &back).expect("replay from disk form");
+}
+
+#[test]
+fn recorded_lines_are_valid_stamped_json() {
+    let base = Config::default();
+    let plans: Vec<_> = smoke_campaign()
+        .expand()
+        .into_iter()
+        .filter(|(_, seed)| *seed == 42)
+        .collect();
+    let log = record_cells(&base, &plans, "smoke").expect("record");
+    let cell = &log.cells[0];
+    let mut last = (0u64, 0u64);
+    for (i, line) in cell.log.iter().enumerate() {
+        let v = json::parse(line).unwrap_or_else(|e| panic!("line {i} {line:?}: {e}"));
+        let t = v.get("t").and_then(json::Json::as_u64).expect("t stamp");
+        let seq = v.get("seq").and_then(json::Json::as_u64).expect("seq stamp");
+        assert!(v.get("ev").and_then(json::Json::as_str).is_some(), "ev tag");
+        if i > 0 {
+            assert!(
+                t > last.0 || (t == last.0 && seq > last.1),
+                "line {i}: (t,seq) not monotone: {last:?} -> ({t},{seq})"
+            );
+        }
+        last = (t, seq);
+    }
+}
+
+#[test]
+fn standard_campaign_cells_record_and_replay() {
+    // A diverse slice of the standard campaign at one seed: baseline,
+    // pJM kill + election, cascading kills, spot storm with revocations,
+    // and the asymmetric WAN partition. (The full 30-cell matrix is
+    // covered in-process by golden_digests; recording it here would run
+    // it twice more, serially.)
+    let keep = [
+        "baseline-wordcount",
+        "pjm-kill",
+        "jm-kill-cascade",
+        "spot-storm",
+        "asym-wan-partition",
+    ];
+    let base = Config::default();
+    let plans: Vec<_> = standard_campaign()
+        .expand()
+        .into_iter()
+        .filter(|(sc, seed)| *seed == 42 && keep.contains(&sc.name.as_str()))
+        .collect();
+    assert_eq!(plans.len(), keep.len(), "every picked scenario exists");
+    let log = record_cells(&base, &plans, "standard").expect("record");
+    let summary = replay_log(&base, &log).expect("replay must reproduce the recording");
+    assert_eq!(summary.cells, keep.len());
+}
+
+#[test]
+fn tampered_logs_fail_replay() {
+    let base = Config::default();
+    let plans: Vec<_> = smoke_campaign()
+        .expand()
+        .into_iter()
+        .filter(|(sc, seed)| *seed == 42 && sc.name == "baseline-wordcount")
+        .collect();
+    let log = record_cells(&base, &plans, "smoke").expect("record");
+
+    // Flipped digest: the run itself matches, the final digest doesn't.
+    let mut bad = log.clone();
+    bad.cells[0].digest ^= 1;
+    let err = replay_log(&base, &bad).expect_err("digest tamper must fail");
+    assert!(format!("{err:#}").contains("digest"), "{err:#}");
+
+    // Flipped stream hash.
+    let mut bad = log.clone();
+    bad.cells[0].log_fnv ^= 1;
+    let err = replay_log(&base, &bad).expect_err("fnv tamper must fail");
+    assert!(format!("{err:#}").contains("fnv"), "{err:#}");
+
+    // Edited log line: lockstep comparison reports the exact line.
+    let mut bad = log.clone();
+    bad.cells[0].log[0] = "{\"t\":0,\"seq\":0,\"ev\":\"imposter\"}".to_string();
+    let err = replay_log(&base, &bad).expect_err("line tamper must fail");
+    assert!(format!("{err:#}").contains("diverged"), "{err:#}");
+
+    // Wrong event count.
+    let mut bad = log;
+    bad.cells[0].events += 1;
+    assert!(replay_log(&base, &bad).is_err(), "count tamper must fail");
+}

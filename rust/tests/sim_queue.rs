@@ -15,7 +15,7 @@
 //! * the `run_until`/`every` horizon-boundary contract (queue invariant
 //!   5 in `rust/src/sim/mod.rs`).
 
-use houtu::sim::{every, EventFn, EventId, LegacyQueue, QueueKind, Sim, SimTime, SlabQueue};
+use houtu::sim::{every, EventId, LegacyQueue, QueueKind, Sim, SimTime, SlabQueue};
 use houtu::testkit::{forall_cases, Gen};
 use houtu::trace::Fnv64;
 use houtu::util::Pcg;
@@ -107,10 +107,6 @@ impl VecModel {
     }
 }
 
-fn noop() -> EventFn<()> {
-    Box::new(|_| {})
-}
-
 /// Pop all three implementations once and check they agree; fold the
 /// popped `(time, seq)` into each engine's replay digest.
 fn pop_pair(
@@ -153,8 +149,8 @@ fn run_script(ops: &[Op]) -> Result<(), String> {
         match *op {
             Op::Schedule(t) => {
                 let t = t as SimTime;
-                let a = slab.schedule(t, seq, noop());
-                let b = legacy.schedule(t, seq, noop());
+                let a = slab.schedule(t, seq, ());
+                let b = legacy.schedule(t, seq, ());
                 model.schedule(t, seq);
                 ids.push((a, b, seq));
                 seq += 1;
@@ -225,8 +221,8 @@ fn same_time_fifo_order_is_exact() {
     let mut slab: SlabQueue<()> = SlabQueue::new();
     let mut legacy: LegacyQueue<()> = LegacyQueue::new();
     for seq in 0..500u64 {
-        slab.schedule(77, seq, noop());
-        legacy.schedule(77, seq, noop());
+        slab.schedule(77, seq, ());
+        legacy.schedule(77, seq, ());
     }
     for expect in 0..500u64 {
         assert_eq!(slab.pop().map(|p| p.seq), Some(expect), "slab broke FIFO at {expect}");
