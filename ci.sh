@@ -5,16 +5,20 @@
 # suite, then a smoke scenario campaign through the real CLI with a
 # report export whose round-trip the CLI asserts (it re-reads and
 # re-parses the file, exiting non-zero on any mismatch) — so the export
-# path stays wired — then a seeded chaos-fuzz smoke batch (any invariant
-# violation is shrunk to a minimal repro TOML and fails the build), and
-# finally the perf harness: `bench --smoke` times every workload —
-# including the per-strategy bid-churn cost rows and the typed-vs-boxed
-# dispatch pair — writes BENCH_sim.json (whose util::json round-trip the
-# CLI asserts) and gates against BENCH_baseline.json: a workload that
-# regresses beyond the committed baseline's noise band exits non-zero.
-# The smoke campaign additionally records its executed event stream and
-# replays it through `houtu replay`, so persistent determinism (not just
-# in-process digests) is CI-gated.
+# path stays wired — then the same smoke campaign on the sharded queue
+# engine with a digest diff against the sequential report (the
+# parallel-DES determinism gate at the CLI level), then a seeded
+# chaos-fuzz smoke batch (any invariant violation is shrunk to a minimal
+# repro TOML and fails the build), and finally the perf harness:
+# `bench --smoke` times every workload — including the per-strategy
+# bid-churn cost rows, the typed-vs-boxed dispatch pair and the
+# sharded-vs-sequential multi-DC pair — writes BENCH_sim.json (whose
+# util::json round-trip the CLI asserts), appends one trajectory row to
+# BENCH_history.jsonl and gates against BENCH_baseline.json: a workload
+# that regresses beyond the committed baseline's noise band exits
+# non-zero. The smoke campaign additionally records its executed event
+# stream and replays it through `houtu replay`, so persistent
+# determinism (not just in-process digests) is CI-gated.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -23,8 +27,20 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 cargo test -q
 cargo run --release --quiet -- campaign --smoke --report /tmp/smoke.json --record /tmp/smoke-events.log
 cargo run --release --quiet -- replay /tmp/smoke-events.log
+cargo run --release --quiet -- campaign --smoke --shards 4 --report /tmp/smoke-sharded.json
+
+# Engine-invariance gate: the sharded campaign must reproduce the
+# sequential per-run digests bit-for-bit.
+grep -o '"digest": "[0-9a-f]*"' /tmp/smoke.json > /tmp/smoke-digests.txt
+grep -o '"digest": "[0-9a-f]*"' /tmp/smoke-sharded.json > /tmp/smoke-sharded-digests.txt
+if ! diff -u /tmp/smoke-digests.txt /tmp/smoke-sharded-digests.txt; then
+  echo "ci.sh: sharded campaign digests diverged from the sequential engine" >&2
+  exit 1
+fi
+echo "ci.sh: sharded campaign digests match the sequential engine"
+
 cargo run --release --quiet -- fuzz --cases 8 --seed 1 --repro /tmp/fuzz-repro.toml
-cargo run --release --quiet -- bench --smoke --report BENCH_sim.json --compare BENCH_baseline.json
+cargo run --release --quiet -- bench --smoke --report BENCH_sim.json --history BENCH_history.jsonl --compare BENCH_baseline.json
 
 # The committed baseline starts life as a bootstrap (all-zero throughput
 # rows, which --compare skips). Promote the first green measured run so

@@ -35,6 +35,16 @@
 //!   the hot path) and once as per-event boxed closures (the
 //!   pre-refactor representation). The pair is the measured
 //!   typed-vs-boxed `events_per_sec` claim.
+//! * `multi-dc-churn` — the parallel-engine workload: token chains
+//!   hopping between four DC parts with WAN-floor delays and a heavy
+//!   hash-mixing core per hop, run once on the sequential engine and
+//!   once (`…-sharded`) on the conservative-parallel
+//!   [`crate::sim::ShardedSim`] with one thread per shard. Both drivers
+//!   share one pure hop core, so event counts and state checksums match
+//!   exactly and the row pair is the measured sharded-vs-sequential
+//!   speedup. `campaign-smoke` also gets a `…-sharded` row — that one
+//!   exercises the exact-merge [`crate::sim::ShardedQueue`] under the
+//!   full deployment stack (a determinism gate, not a parallel claim).
 //!
 //! # Baseline gate
 //!
@@ -42,6 +52,14 @@
 //! `events_per_sec` against a committed baseline report and fails (exit
 //! non-zero) on a regression beyond a generous noise band derived from
 //! the baseline's own wall-clock spread — see [`compare_to_baseline`].
+//!
+//! # History trajectory
+//!
+//! `houtu bench --history BENCH_history.jsonl` appends one JSON line
+//! per run — UTC seconds, the repo's short git SHA, the smoke flag and
+//! every workload's `events_per_sec` keyed by name — so the perf
+//! trajectory accumulates across commits instead of each report
+//! overwriting the last ([`append_history`]).
 //!
 //! # Report schema (`BENCH_sim.json`)
 //!
@@ -73,10 +91,10 @@ use crate::cloud::bidding::StrategyKind;
 use crate::config::{Config, Deployment};
 use crate::ids::DcId;
 use crate::scenario::{
-    run_scenario_on, smoke_campaign, CellGen, ChaosEvent, FuzzSpace, ScenarioSpec,
-    ScenarioWorkload,
+    resolve_threads, run_scenario_on, smoke_campaign, CellGen, ChaosEvent, FuzzSpace,
+    ScenarioSpec, ScenarioWorkload,
 };
-use crate::sim::{every, Dispatch, QueueKind, Sim};
+use crate::sim::{every, Dispatch, Lookahead, QueueKind, ShardCtx, ShardEvent, ShardedSim, Sim};
 use crate::testkit::Gen as _;
 use crate::util::error::{Context, Result};
 use crate::util::json::{self, Json};
@@ -93,18 +111,21 @@ pub struct BenchOpts {
     pub iters: usize,
     /// Untimed warmup iterations per workload.
     pub warmup: usize,
+    /// Thread/shard count for the sharded rows (0 = `HOUTU_THREADS`,
+    /// else one per core — [`resolve_threads`]).
+    pub threads: usize,
 }
 
 impl Default for BenchOpts {
     fn default() -> Self {
-        BenchOpts { smoke: false, iters: 3, warmup: 1 }
+        BenchOpts { smoke: false, iters: 3, warmup: 1, threads: 0 }
     }
 }
 
 impl BenchOpts {
     /// The fast ci.sh configuration.
     pub fn smoke() -> Self {
-        BenchOpts { smoke: true, iters: 1, warmup: 0 }
+        BenchOpts { smoke: true, iters: 1, warmup: 0, threads: 0 }
     }
 }
 
@@ -128,6 +149,10 @@ pub enum BenchWorkload {
     /// The identical event schedule dispatched typed (payload enum) vs
     /// boxed (one heap closure per event).
     DispatchChurn { typed: bool },
+    /// Token chains hopping between DC parts over WAN-floor delays —
+    /// sequential on [`QueueKind::Slab`], thread-per-shard on
+    /// [`QueueKind::Sharded`] (the measured parallel speedup pair).
+    MultiDcChurn,
 }
 
 impl BenchWorkload {
@@ -142,6 +167,7 @@ impl BenchWorkload {
             BenchWorkload::BidChurn(StrategyKind::Deadline) => "bid-churn-deadline",
             BenchWorkload::DispatchChurn { typed: true } => "dispatch-churn-typed",
             BenchWorkload::DispatchChurn { typed: false } => "dispatch-churn-boxed",
+            BenchWorkload::MultiDcChurn => "multi-dc-churn",
         }
     }
 
@@ -212,6 +238,10 @@ impl BenchWorkload {
             BenchWorkload::DispatchChurn { typed } => {
                 let n = if smoke { 60_000 } else { 200_000 };
                 dispatch_churn(queue, n, typed)
+            }
+            BenchWorkload::MultiDcChurn => {
+                let (chains, hops) = if smoke { (256, 150) } else { (1024, 400) };
+                multi_dc_churn(queue, chains, hops).0
             }
             BenchWorkload::BidChurn(strategy) => {
                 // The bid-insurance-storm shape: a revocation-heavy price
@@ -356,6 +386,133 @@ fn dispatch_churn(queue: QueueKind, n: usize, typed: bool) -> IterOut {
     }
 }
 
+/// Parts (DCs), cross-part floor and per-hop mixing work of the
+/// `multi-dc-churn` workload. The floor mirrors the default WAN's
+/// one-way cross-DC latency (rtt 30 ms ⇒ 15 ms); the work rounds make
+/// one hop expensive enough that LBTS barrier costs amortize away on a
+/// multi-core runner.
+const HOP_DCS: usize = 4;
+const HOP_CROSS_MS: u64 = 15;
+const HOP_WORK_ROUNDS: u32 = 192;
+
+/// splitmix64 finalizer — the hop core's unit of "real work".
+fn hop_mix(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    x
+}
+
+/// One hop's pure core, shared verbatim by the sequential and sharded
+/// drivers: burn [`HOP_WORK_ROUNDS`] of mixing on the token, fold it
+/// into the part accumulator (`wrapping_add` — tie-order independent),
+/// and derive the next hop. Destination, extra delay and the next token
+/// are functions of the token alone, so both engines schedule
+/// bit-identical arrival times and end at the same checksum.
+fn hop_core(acc: &mut u64, part: usize, token: u64) -> (usize, u64, u64) {
+    let mut x = token ^ (part as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    for _ in 0..HOP_WORK_ROUNDS {
+        x = hop_mix(x);
+    }
+    *acc = acc.wrapping_add(x);
+    let to = (x % HOP_DCS as u64) as usize;
+    let extra = (x >> 32) & 0x3f; // up to 63 ms of per-hop jitter
+    (to, extra, x)
+}
+
+fn hop_floor(from: usize, to: usize) -> u64 {
+    if from == to {
+        1
+    } else {
+        HOP_CROSS_MS
+    }
+}
+
+/// The sharded-vs-sequential workload driver. Returns the iteration
+/// outcome plus the summed part-accumulator checksum — the parity tests
+/// assert the checksum and event count are engine- and
+/// shard-count-invariant, so the two timed rows measure the same work.
+fn multi_dc_churn(queue: QueueKind, chains: usize, hops: u32) -> (IterOut, u64) {
+    struct Hop {
+        token: u64,
+        left: u32,
+    }
+    impl ShardEvent<u64> for Hop {
+        fn apply(self, ctx: &mut ShardCtx<'_, u64, Hop>) {
+            let part = ctx.part();
+            let (to, extra, x) = hop_core(ctx.state, part, self.token);
+            if self.left > 0 {
+                // `send` adds the lookahead floor itself: arrival is
+                // now + floor(part, to) + extra, same as the twin below.
+                ctx.send(to, extra, Hop { token: x, left: self.left - 1 });
+            }
+        }
+        fn kind(&self) -> &'static str {
+            "hop"
+        }
+    }
+    struct SeqHop {
+        part: usize,
+        token: u64,
+        left: u32,
+    }
+    impl Dispatch<Vec<u64>> for SeqHop {
+        fn dispatch(self, sim: &mut Sim<Vec<u64>, SeqHop>) {
+            let (to, extra, x) = hop_core(&mut sim.state[self.part], self.part, self.token);
+            if self.left > 0 {
+                let delay = hop_floor(self.part, to) + extra;
+                sim.schedule_event_in(delay, SeqHop { part: to, token: x, left: self.left - 1 });
+            }
+        }
+        fn kind(&self) -> &'static str {
+            "hop"
+        }
+        fn affinity(&self) -> Option<usize> {
+            Some(self.part)
+        }
+    }
+
+    let seed_token = |i: usize| hop_mix(0x5eed ^ (i as u64).wrapping_mul(0x2545_f491_4f6c_dd1d));
+    match queue {
+        QueueKind::Sharded(shards) => {
+            let la = Lookahead::from_fn(HOP_DCS, hop_floor);
+            let mut sim = ShardedSim::new(vec![0u64; HOP_DCS], la, shards);
+            for i in 0..chains {
+                sim.seed(i % HOP_DCS, 1 + (i as u64 % 7), Hop { token: seed_token(i), left: hops });
+            }
+            sim.run();
+            let checksum =
+                (0..HOP_DCS).fold(0u64, |a, p| a.wrapping_add(*sim.part_state(p)));
+            let out = IterOut {
+                events: sim.events_processed(),
+                peak_pending: sim.peak_pending(),
+                usd: 0.0,
+            };
+            (out, checksum)
+        }
+        _ => {
+            let mut sim: Sim<Vec<u64>, SeqHop> =
+                Sim::typed_with_queue(vec![0u64; HOP_DCS], queue);
+            for i in 0..chains {
+                sim.schedule_event_at(
+                    1 + (i as u64 % 7),
+                    SeqHop { part: i % HOP_DCS, token: seed_token(i), left: hops },
+                );
+            }
+            sim.run_to_completion();
+            let checksum = sim.state.iter().fold(0u64, |a, v| a.wrapping_add(*v));
+            let out = IterOut {
+                events: sim.events_processed,
+                peak_pending: sim.peak_pending(),
+                usd: 0.0,
+            };
+            (out, checksum)
+        }
+    }
+}
+
 /// One workload's timed outcome.
 #[derive(Debug, Clone)]
 pub struct WorkloadResult {
@@ -411,6 +568,7 @@ fn time_workload(
     let name = match queue {
         QueueKind::Slab => w.name().to_string(),
         QueueKind::Legacy => format!("{}-legacy", w.name()),
+        QueueKind::Sharded(_) => format!("{}-sharded", w.name()),
     };
     WorkloadResult {
         name,
@@ -428,11 +586,15 @@ fn time_workload(
 }
 
 /// Run the full workload matrix. The two hot workloads run on both queue
-/// engines so the report always carries the old-vs-new comparison.
+/// engines so the report always carries the old-vs-new comparison, and
+/// the multi-DC workload runs sequential + sharded so it always carries
+/// the parallel one.
 pub fn run_bench(base: &Config, opts: &BenchOpts) -> BenchReport {
+    let threads = resolve_threads(opts.threads);
     let matrix: &[(BenchWorkload, QueueKind)] = &[
         (BenchWorkload::CampaignSmoke, QueueKind::Slab),
         (BenchWorkload::CampaignSmoke, QueueKind::Legacy),
+        (BenchWorkload::CampaignSmoke, QueueKind::Sharded(threads)),
         (BenchWorkload::FuzzBatch, QueueKind::Slab),
         (BenchWorkload::SoakSlice, QueueKind::Slab),
         (BenchWorkload::DenseCancelChurn, QueueKind::Slab),
@@ -442,6 +604,8 @@ pub fn run_bench(base: &Config, opts: &BenchOpts) -> BenchReport {
         (BenchWorkload::BidChurn(StrategyKind::Deadline), QueueKind::Slab),
         (BenchWorkload::DispatchChurn { typed: true }, QueueKind::Slab),
         (BenchWorkload::DispatchChurn { typed: false }, QueueKind::Slab),
+        (BenchWorkload::MultiDcChurn, QueueKind::Slab),
+        (BenchWorkload::MultiDcChurn, QueueKind::Sharded(threads)),
     ];
     let workloads =
         matrix.iter().map(|&(w, q)| time_workload(base, w, q, opts)).collect();
@@ -456,6 +620,20 @@ impl BenchReport {
             self.workloads.iter().find(|w| w.name == format!("{workload}-legacy"))?;
         if legacy.events_per_sec > 0.0 {
             Some(slab.events_per_sec / legacy.events_per_sec)
+        } else {
+            None
+        }
+    }
+
+    /// Speedup of a workload's `-sharded` twin over its sequential row,
+    /// if both ran — the sharded-vs-sequential claim of the parallel
+    /// engine (> 1 means the sharded row is faster).
+    pub fn sharded_speedup(&self, workload: &str) -> Option<f64> {
+        let seq = self.workloads.iter().find(|w| w.name == workload)?;
+        let sharded =
+            self.workloads.iter().find(|w| w.name == format!("{workload}-sharded"))?;
+        if seq.events_per_sec > 0.0 {
+            Some(sharded.events_per_sec / seq.events_per_sec)
         } else {
             None
         }
@@ -490,6 +668,12 @@ impl BenchReport {
         for base in ["campaign-smoke", "dense-cancel-churn"] {
             if let Some(x) = self.speedup(base) {
                 writeln!(out, "{base}: slab is {x:.2}x the legacy queue (events/s)").unwrap();
+            }
+        }
+        for base in ["multi-dc-churn", "campaign-smoke"] {
+            if let Some(x) = self.sharded_speedup(base) {
+                writeln!(out, "{base}: sharded is {x:.2}x the sequential engine (events/s)")
+                    .unwrap();
             }
         }
         out
@@ -636,6 +820,61 @@ pub fn write_report(report: &BenchReport, path: &str) -> Result<()> {
     verify_report_json(report, &back)
 }
 
+/// The repo's short git SHA, or `"unknown"` outside a work tree (the
+/// history file must still append — a missing `git` never fails a bench
+/// run).
+fn git_short_sha() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Render one history row (JSONL) for this run: timestamp, git SHA,
+/// smoke flag and every workload's `events_per_sec` keyed by name.
+fn history_row(report: &BenchReport, ts: u64, sha: &str) -> String {
+    let mut row = String::new();
+    row.push_str(&format!(
+        "{{\"ts\": {ts}, \"sha\": {}, \"smoke\": {}, \"workloads\": {{",
+        json::escape(sha),
+        report.smoke
+    ));
+    for (i, w) in report.workloads.iter().enumerate() {
+        if i > 0 {
+            row.push_str(", ");
+        }
+        row.push_str(&format!("{}: {}", json::escape(&w.name), json::num(w.events_per_sec)));
+    }
+    row.push_str("}}\n");
+    row
+}
+
+/// Append this run's row to a JSONL history file (`houtu bench
+/// --history BENCH_history.jsonl`), creating it on first use. Each line
+/// is independently parseable, so the trajectory survives partial
+/// writes and ad-hoc tooling can `grep`/`jq` it per commit.
+pub fn append_history(report: &BenchReport, path: &str) -> Result<()> {
+    use std::io::Write as _;
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let row = history_row(report, ts, &git_short_sha());
+    json::parse(row.trim()).map_err(|e| anyhow!("history row does not parse: {e}"))?;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("opening {path}"))?;
+    f.write_all(row.as_bytes()).with_context(|| format!("appending {path}"))?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -723,6 +962,59 @@ mod tests {
         // And identically across queue engines.
         let legacy = dispatch_churn(QueueKind::Legacy, 5_000, true);
         assert_eq!(typed.events, legacy.events);
+    }
+
+    #[test]
+    fn multi_dc_churn_parity_across_engines_and_shard_counts() {
+        // The speedup pair must measure the same work: the sequential
+        // twin and the sharded engine execute the same hop count and
+        // reach the same part-accumulator checksum at every shard count
+        // (1 = the serial-round twin path, >1 = real threads).
+        let (seq, sum_seq) = multi_dc_churn(QueueKind::Slab, 48, 30);
+        assert_eq!(seq.events, 48 * 31, "each chain is left+1 hops");
+        for shards in [1usize, 2, 4] {
+            let (sh, sum_sh) = multi_dc_churn(QueueKind::Sharded(shards), 48, 30);
+            assert_eq!(seq.events, sh.events, "event count diverged at {shards} shards");
+            assert_eq!(sum_seq, sum_sh, "checksum diverged at {shards} shards");
+        }
+    }
+
+    #[test]
+    fn history_rows_append_and_parse() {
+        let r = tiny_report();
+        let path = std::env::temp_dir()
+            .join(format!("houtu-bench-history-{}.jsonl", std::process::id()));
+        let path = path.to_str().expect("utf8 temp path").to_string();
+        let _ = std::fs::remove_file(&path);
+        append_history(&r, &path).expect("first append");
+        append_history(&r, &path).expect("second append");
+        let text = std::fs::read_to_string(&path).expect("history readable");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "one row per run");
+        for line in lines {
+            let doc = json::parse(line).unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert!(doc.get("sha").and_then(Json::as_str).is_some(), "{line}");
+            assert!(doc.get("ts").and_then(Json::as_u64).is_some(), "{line}");
+            let eps = doc
+                .get("workloads")
+                .and_then(|w| w.get("campaign-smoke"))
+                .and_then(Json::as_f64);
+            assert_eq!(eps, Some(9_876_543.21), "{line}");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn sharded_speedup_reads_the_sharded_twin() {
+        let mut r = tiny_report();
+        let mut sharded = r.workloads[0].clone();
+        sharded.name = "campaign-smoke-sharded".to_string();
+        sharded.queue = "sharded";
+        sharded.events_per_sec = r.workloads[0].events_per_sec * 3.0;
+        r.workloads.push(sharded);
+        let x = r.sharded_speedup("campaign-smoke").expect("both rows present");
+        assert!((x - 3.0).abs() < 1e-9, "speedup {x}");
+        assert!(r.sharded_speedup("multi-dc-churn").is_none());
     }
 
     #[test]

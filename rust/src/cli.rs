@@ -17,16 +17,25 @@
 //!   campaign [--spec FILE | --smoke]             run a scenario-matrix campaign
 //!            [--report out.json|out.csv]         ... and export the report
 //!            [--record out.log]                  ... and persist the event streams
+//!            [--shards N]                        ... on the sharded queue engine
+//!                                                (0 = auto; digests must not change)
+//!            [--threads N]                       ... on N worker threads
 //!   replay LOG                                   re-execute a recorded event log and
 //!                                                assert streams + digests match
 //!   fuzz [--cases N] [--seed S]                  chaos-fuzz random scenarios
 //!        [--soak MINUTES] [--repro out.toml]     ... soak / write minimal repro
 //!        [--report out.json]                     ... and export the fuzz report
 //!   bench [--smoke] [--iters N]                  time the sim hot-path workloads
+//!         [--threads N]                          ... sharded rows on N threads
 //!         [--report BENCH_sim.json]              ... and export the perf report
 //!         [--compare BENCH_baseline.json]        ... and gate events/s vs a baseline
+//!         [--history BENCH_history.jsonl]        ... and append one trajectory row
 //!   all                                          every figure in sequence
 //! ```
+//!
+//! `--threads 0` (the default) resolves through the `HOUTU_THREADS`
+//! environment variable, then one worker per core — the same rule every
+//! thread pool in the crate uses.
 
 use crate::config::{Config, Deployment};
 use crate::dag::{SizeClass, WorkloadKind};
@@ -39,8 +48,9 @@ fn usage() -> ! {
         "usage: houtu <fig2|fig3|fig7|fig8|fig9|fig10|fig11|fig12|theorem1|run|trace|campaign|replay|fuzz|bench|export|all> \
          [--config FILE] [--set section.key=value]... [--deployment D] [--workload W] [--size S] \
          [--spec FILE] [--smoke] [--report out.json|out.csv] [--record out.log] \
+         [--shards N] [--threads N] \
          [--cases N] [--seed S] [--soak MINUTES] [--repro out.toml] [--iters N] \
-         [--compare BENCH_baseline.json]\n\
+         [--compare BENCH_baseline.json] [--history BENCH_history.jsonl]\n\
          replay takes the log path as its positional argument: houtu replay out.log"
     );
     std::process::exit(2);
@@ -75,6 +85,14 @@ pub struct Cli {
     pub record: Option<String>,
     /// Baseline bench report to gate against (`bench --compare FILE`).
     pub compare: Option<String>,
+    /// JSONL perf-history file to append to (`bench --history FILE`).
+    pub history: Option<String>,
+    /// Worker-thread knob for campaign/bench pools and the sharded
+    /// engine (0 = `HOUTU_THREADS`, else one per core).
+    pub threads: usize,
+    /// Run the campaign on the sharded queue engine with this shard
+    /// count (`campaign --shards N`; 0 = auto). `None` = sequential.
+    pub shards: Option<usize>,
     /// Positional event-log path (`replay LOG`).
     pub log_path: Option<String>,
 }
@@ -98,6 +116,9 @@ pub fn parse(args: &[String]) -> Cli {
     let mut iters = None;
     let mut record = None;
     let mut compare = None;
+    let mut history = None;
+    let mut threads = 0usize;
+    let mut shards = None;
     let mut log_path = None;
     let mut i = 1;
     while i < args.len() {
@@ -199,6 +220,21 @@ pub fn parse(args: &[String]) -> Cli {
                 i += 1;
                 compare = Some(args.get(i).unwrap_or_else(|| usage()).clone());
             }
+            "--history" => {
+                i += 1;
+                history = Some(args.get(i).unwrap_or_else(|| usage()).clone());
+            }
+            "--threads" => {
+                i += 1;
+                threads =
+                    args.get(i).and_then(|s| s.parse::<usize>().ok()).unwrap_or_else(|| usage());
+            }
+            "--shards" => {
+                i += 1;
+                shards = Some(
+                    args.get(i).and_then(|s| s.parse::<usize>().ok()).unwrap_or_else(|| usage()),
+                );
+            }
             other => {
                 // `replay` takes its log path as the one positional arg.
                 if command == "replay" && !other.starts_with('-') && log_path.is_none() {
@@ -227,6 +263,9 @@ pub fn parse(args: &[String]) -> Cli {
         iters,
         record,
         compare,
+        history,
+        threads,
+        shards,
         log_path,
     }
 }
@@ -309,7 +348,7 @@ pub fn run(cli: &Cli) {
             };
             // The recorded source tag lets `houtu replay` rebuild the
             // same cell matrix without embedding scenario definitions.
-            let (spec, source) = if cli.smoke {
+            let (mut spec, source) = if cli.smoke {
                 (scenario::smoke_campaign(), "smoke".to_string())
             } else if let Some(path) = &cli.spec {
                 (load(path), format!("spec:{path}"))
@@ -318,7 +357,14 @@ pub fn run(cli: &Cli) {
             } else {
                 (scenario::standard_campaign(), "standard".to_string())
             };
-            let report = scenario::run_campaign(cfg, &spec);
+            if cli.threads > 0 {
+                spec.parallelism = cli.threads;
+            }
+            let queue = match cli.shards {
+                Some(n) => crate::sim::QueueKind::Sharded(scenario::resolve_threads(n)),
+                None => crate::sim::QueueKind::Slab,
+            };
+            let report = scenario::run_campaign_on(cfg, &spec, queue);
             print!("{}", report.render());
             // Export before the pass/fail gate so failing campaigns
             // still leave their report (violations included) behind.
@@ -419,6 +465,7 @@ pub fn run(cli: &Cli) {
             if let Some(n) = cli.iters {
                 opts.iters = n;
             }
+            opts.threads = cli.threads;
             let report = bench::run_bench(cfg, &opts);
             print!("{}", report.render());
             if let Some(path) = &cli.report {
@@ -429,6 +476,17 @@ pub fn run(cli: &Cli) {
                     ),
                     Err(e) => {
                         eprintln!("bench report export failed: {e:#}");
+                        std::process::exit(1);
+                    }
+                }
+            }
+            // History appends before the baseline gate, so a regressed
+            // run still lands in the trajectory.
+            if let Some(path) = &cli.history {
+                match bench::append_history(&report, path) {
+                    Ok(()) => println!("appended history row to {path}"),
+                    Err(e) => {
+                        eprintln!("bench history append failed: {e:#}");
                         std::process::exit(1);
                     }
                 }

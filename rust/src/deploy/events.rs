@@ -209,6 +209,40 @@ impl Dispatch<World> for SimEvent {
         }
     }
 
+    /// Which DC's shard should own this event under
+    /// [`crate::sim::QueueKind::Sharded`]. Routing is *advisory*: the
+    /// sharded queue is an exact `(time, seq)` merge, so any mapping —
+    /// including the `None → shard 0` fallback used by global events
+    /// like `Tick` and WAN-wide chaos — produces bit-identical runs.
+    fn affinity(&self) -> Option<usize> {
+        match self {
+            SimEvent::SubmitJob { home, .. } => Some(home.0),
+            SimEvent::SpawnJm { dc, .. }
+            | SimEvent::EnqueueTasks { dc, .. }
+            | SimEvent::ContainerUpdate { dc, .. }
+            | SimEvent::TaskFinished { dc, .. }
+            | SimEvent::DetectJmFailure { dc, .. }
+            | SimEvent::RespawnJm { dc, .. }
+            | SimEvent::ChaosKillJm { dc, .. }
+            | SimEvent::ChaosCascade { dc, .. }
+            | SimEvent::ChaosKillDc { dc, .. } => Some(dc.0),
+            SimEvent::ReleaseReady { .. } => None,
+            SimEvent::EndTransfer { to, .. } => Some(to.0),
+            SimEvent::StealAtVictim { victim, .. } => Some(victim.0),
+            SimEvent::StealResponse { thief, .. } => Some(thief.0),
+            SimEvent::RestartNode { node, .. } | SimEvent::ChaosKillNode { node, .. } => {
+                Some(node.dc.0)
+            }
+            SimEvent::ElectPrimary { failed_dc, .. } => Some(failed_dc.0),
+            SimEvent::CascadeKill { target, .. } => target.map(|dc| dc.0),
+            SimEvent::ChaosSpotStorm { dc, .. } => Some(*dc),
+            SimEvent::Tick { .. }
+            | SimEvent::ChaosInjectHogs { .. }
+            | SimEvent::ChaosWanDegrade { .. }
+            | SimEvent::ChaosWanPairDegrade { .. } => None,
+        }
+    }
+
     fn kind(&self) -> &'static str {
         match self {
             SimEvent::SubmitJob { .. } => "submit_job",
@@ -389,6 +423,19 @@ mod tests {
             assert_eq!(doc.get("seq").and_then(json::Json::as_u64), Some(56), "{line}");
             assert!(doc.get("ev").and_then(json::Json::as_str).is_some(), "{line}");
         }
+    }
+
+    #[test]
+    fn affinity_follows_the_owning_dc() {
+        let dc_scoped = SimEvent::SpawnJm { job: JobId(0), dc: DcId(2) };
+        assert_eq!(dc_scoped.affinity(), Some(2));
+        let node_scoped =
+            SimEvent::RestartNode { node: NodeId { dc: DcId(1), idx: 9 }, slots: 2 };
+        assert_eq!(node_scoped.affinity(), Some(1));
+        let global = SimEvent::Tick { kind: TickKind::Period, period: 1, horizon: 2 };
+        assert_eq!(global.affinity(), None);
+        let transfer = SimEvent::EndTransfer { from: DcId(0), to: DcId(3) };
+        assert_eq!(transfer.affinity(), Some(3));
     }
 
     #[test]

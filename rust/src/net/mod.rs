@@ -228,6 +228,19 @@ impl Wan {
     }
 }
 
+/// Conservative-lookahead table for the sharded DES engine
+/// ([`crate::sim::shard`]): the per-pair WAN latency *floor*, derived
+/// from the same constants as [`Wan::latency_ms`] — 0.5 ms intra-DC,
+/// one-way `rtt/2` cross-DC — rounded down and clamped `≥ 1` ms (the
+/// engine's progress requirement). Every actual delay the fabric
+/// computes adds serialization on top and is itself floored at 1 ms
+/// ([`Wan::message_delay`], [`Wan::begin_transfer`]), so no event can
+/// undercut these floors: they are safe lookahead.
+pub fn wan_lookahead(cfg: &WanConfig, parts: usize) -> crate::sim::shard::Lookahead {
+    let cross = (cfg.rtt_ms / 2.0).floor().max(1.0) as u64;
+    crate::sim::shard::Lookahead::from_fn(parts, |a, b| if a == b { 1 } else { cross })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -236,6 +249,30 @@ mod tests {
     fn wan() -> Wan {
         let cfg = Config::default();
         Wan::new(cfg.wan, Pcg::seeded(1))
+    }
+
+    /// The lookahead table must be a true lower bound on every delay the
+    /// fabric can produce — otherwise conservative parallel execution
+    /// would be unsound.
+    #[test]
+    fn lookahead_floors_never_exceed_actual_delays() {
+        let mut w = wan();
+        let cfg = Config::default();
+        let la = wan_lookahead(&cfg.wan, w.num_dcs());
+        for a in 0..w.num_dcs() {
+            for b in 0..w.num_dcs() {
+                assert!(la.floor(a, b) >= 1, "progress requires floors >= 1");
+                let msg = w.message_delay(DcId(a), DcId(b), 64);
+                assert!(
+                    la.floor(a, b) <= msg,
+                    "floor({a},{b})={} exceeds message delay {msg}",
+                    la.floor(a, b)
+                );
+                let xfer = w.begin_transfer(DcId(a), DcId(b), 1024);
+                w.end_transfer(DcId(a), DcId(b));
+                assert!(la.floor(a, b) <= xfer, "floor exceeds transfer time");
+            }
+        }
     }
 
     #[test]

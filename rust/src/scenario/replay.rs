@@ -271,6 +271,9 @@ fn queue_for_name(name: &str) -> Result<QueueKind> {
     match name {
         "slab" => Ok(QueueKind::Slab),
         "legacy" => Ok(QueueKind::Legacy),
+        // Recorded sharded runs don't persist the shard count — the
+        // merge is exact, so any count replays to the same stream.
+        "sharded" => Ok(QueueKind::Sharded(4)),
         other => bail!("unknown queue engine {other:?} in event log"),
     }
 }

@@ -257,8 +257,15 @@ impl RunReport {
 /// Run one (scenario, seed) cell: execute, check invariants, digest.
 /// Never panics — simulator panics become violations.
 pub fn run_one(base: &Config, spec: &ScenarioSpec, seed: u64) -> RunReport {
+    run_one_on(base, spec, seed, QueueKind::Slab)
+}
+
+/// [`run_one`] on an explicit queue engine — the sharded CI leg runs the
+/// whole smoke campaign on [`QueueKind::Sharded`] through this and diffs
+/// the report digests against the sequential leg.
+pub fn run_one_on(base: &Config, spec: &ScenarioSpec, seed: u64, queue: QueueKind) -> RunReport {
     let t0 = std::time::Instant::now();
-    let outcome = catch_unwind(AssertUnwindSafe(|| run_scenario(base, spec, seed)));
+    let outcome = catch_unwind(AssertUnwindSafe(|| run_scenario_on(base, spec, seed, queue)));
     let run = match outcome {
         Ok(Ok(run)) => run,
         Ok(Err(e)) => return RunReport::broken(spec, seed, format!("spec: {e}")),
@@ -372,15 +379,30 @@ impl CampaignReport {
     }
 }
 
-/// Resolve a parallelism knob (0 = one worker per core) against a job
-/// count.
-pub(crate) fn resolve_workers(parallelism: usize, jobs: usize) -> usize {
-    if parallelism > 0 {
-        parallelism
-    } else {
-        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+/// Resolve a thread-count knob: an explicit `n > 0` wins, then a
+/// positive `HOUTU_THREADS` environment variable, then one worker per
+/// available core. This is the single sizing rule for every pool in the
+/// crate — the campaign runner, the fuzzer, the bench harness and the
+/// sharded engine's shard count all route through it, so `--threads N`
+/// and `HOUTU_THREADS=N` mean the same thing everywhere.
+pub fn resolve_threads(n: usize) -> usize {
+    if n > 0 {
+        return n;
     }
-    .min(jobs.max(1))
+    if let Ok(v) = std::env::var("HOUTU_THREADS") {
+        if let Ok(k) = v.trim().parse::<usize>() {
+            if k > 0 {
+                return k;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+}
+
+/// Resolve a parallelism knob (0 = `HOUTU_THREADS`, else one worker per
+/// core) against a job count.
+pub(crate) fn resolve_workers(parallelism: usize, jobs: usize) -> usize {
+    resolve_threads(parallelism).min(jobs.max(1))
 }
 
 /// Run `n` indexed jobs on a pool of `workers` `std::thread`s and collect
@@ -415,11 +437,19 @@ pub fn par_map<T: Send>(workers: usize, n: usize, f: impl Fn(usize) -> T + Sync)
 /// the per-run reports (in stable matrix order, independent of worker
 /// interleaving).
 pub fn run_campaign(base: &Config, spec: &CampaignSpec) -> CampaignReport {
+    run_campaign_on(base, spec, QueueKind::Slab)
+}
+
+/// [`run_campaign`] on an explicit queue engine (`houtu campaign
+/// --shards N` routes here with [`QueueKind::Sharded`]). Digests are
+/// engine-invariant, so the two reports must agree bit-for-bit — `ci.sh`
+/// diffs them on every run.
+pub fn run_campaign_on(base: &Config, spec: &CampaignSpec, queue: QueueKind) -> CampaignReport {
     let plans = spec.expand();
     let workers = resolve_workers(spec.parallelism, plans.len());
     let runs: Vec<RunReport> = par_map(workers, plans.len(), |i| {
         let (sc, seed) = &plans[i];
-        run_one(base, sc, *seed)
+        run_one_on(base, sc, *seed, queue)
     });
     let mut h = Fnv64::new();
     for r in &runs {

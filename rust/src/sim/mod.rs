@@ -77,8 +77,10 @@ use std::cell::Cell;
 use std::rc::Rc;
 
 pub mod queue;
+pub mod shard;
 
-pub use queue::{LegacyQueue, Popped, QueueKind, SlabQueue};
+pub use queue::{LegacyQueue, Popped, QueueKind, ShardedQueue, SlabQueue};
+pub use shard::{Lookahead, ShardClock, ShardCtx, ShardEvent, ShardedSim};
 use queue::QueueImpl;
 
 /// Virtual time in milliseconds since simulation start.
@@ -135,6 +137,14 @@ pub type EventFn<S, E = NoEvent> = Box<dyn FnOnce(&mut Sim<S, E>)>;
 pub trait Dispatch<S>: Sized {
     fn dispatch(self, sim: &mut Sim<S, Self>);
     fn kind(&self) -> &'static str;
+
+    /// Topology shard this event belongs to — the DC whose state it
+    /// mutates — or `None` for global events (ticks, chaos sweeps,
+    /// custom closures). [`QueueKind::Sharded`] routes on it; the flat
+    /// engines ignore it, so the default costs nothing elsewhere.
+    fn affinity(&self) -> Option<usize> {
+        None
+    }
 }
 
 /// The empty event vocabulary — the default for closure-only sims.
@@ -252,6 +262,16 @@ impl<S> Sim<S> {
 }
 
 impl<S, E> Sim<S, E> {
+    /// A sim whose queue is partitioned into `shards` topology shards
+    /// (shard = DC): events route to the subqueue named by their
+    /// [`Dispatch::affinity`] and pop through an exact `(time, seq)`
+    /// merge, so the executed stream is bit-identical to the flat
+    /// engines for any shard count — pinned over every standard
+    /// campaign cell by `rust/tests/golden_digests.rs`.
+    pub fn with_topology_shards(state: S, shards: usize) -> Self {
+        Sim::typed_with_queue(state, QueueKind::Sharded(shards))
+    }
+
     /// A sim with typed event vocabulary `E` on an explicit queue
     /// engine. (Named distinctly from [`Sim::with_queue`] so closure-only
     /// call sites keep inferring `E = NoEvent`.)
@@ -330,12 +350,14 @@ impl<S, E> Sim<S, E> {
     }
 
     /// The one enqueue path: clamp to now, allocate the next seq, track
-    /// the pending high-water mark.
-    fn enqueue(&mut self, t: SimTime, payload: Payload<S, E>) -> EventId {
+    /// the pending high-water mark. `affinity` is the event's topology
+    /// shard (0 for global/custom events); only [`QueueKind::Sharded`]
+    /// routes on it.
+    fn enqueue(&mut self, t: SimTime, affinity: usize, payload: Payload<S, E>) -> EventId {
         let t = t.max(self.now);
         let seq = self.seq;
         self.seq += 1;
-        let id = self.queue.schedule(t, seq, payload);
+        let id = self.queue.schedule(t, seq, affinity, payload);
         let live = self.queue.pending();
         if live > self.peak_pending {
             self.peak_pending = live;
@@ -350,7 +372,7 @@ impl<S, E> Sim<S, E> {
         t: SimTime,
         f: impl FnOnce(&mut Sim<S, E>) + 'static,
     ) -> EventId {
-        self.enqueue(t, Payload::Custom(Box::new(f)))
+        self.enqueue(t, 0, Payload::Custom(Box::new(f)))
     }
 
     /// Schedule a custom closure after `delay` ms.
@@ -368,23 +390,6 @@ impl<S, E> Sim<S, E> {
         self.schedule_at(self.now, f)
     }
 
-    /// Schedule a typed event at absolute virtual time `t` (clamped to
-    /// now) — the allocation-free common path.
-    pub fn schedule_event_at(&mut self, t: SimTime, ev: E) -> EventId {
-        self.enqueue(t, Payload::Typed(ev))
-    }
-
-    /// Schedule a typed event after `delay` ms.
-    pub fn schedule_event_in(&mut self, delay: SimTime, ev: E) -> EventId {
-        self.enqueue(self.now + delay, Payload::Typed(ev))
-    }
-
-    /// Schedule a typed event to run "immediately" (FIFO after
-    /// currently-queued same-time events).
-    pub fn defer_event(&mut self, ev: E) -> EventId {
-        self.enqueue(self.now, Payload::Typed(ev))
-    }
-
     /// Cancel a scheduled event. A true no-op after the event has fired
     /// (or was already cancelled). Returns whether the id was newly
     /// cancelled — i.e. whether it was still live.
@@ -399,6 +404,26 @@ impl<S, E> Sim<S, E> {
 }
 
 impl<S, E: Dispatch<S>> Sim<S, E> {
+    /// Schedule a typed event at absolute virtual time `t` (clamped to
+    /// now) — the allocation-free common path. The event's
+    /// [`Dispatch::affinity`] decides its subqueue under
+    /// [`QueueKind::Sharded`].
+    pub fn schedule_event_at(&mut self, t: SimTime, ev: E) -> EventId {
+        let aff = ev.affinity().unwrap_or(0);
+        self.enqueue(t, aff, Payload::Typed(ev))
+    }
+
+    /// Schedule a typed event after `delay` ms.
+    pub fn schedule_event_in(&mut self, delay: SimTime, ev: E) -> EventId {
+        self.schedule_event_at(self.now + delay, ev)
+    }
+
+    /// Schedule a typed event to run "immediately" (FIFO after
+    /// currently-queued same-time events).
+    pub fn defer_event(&mut self, ev: E) -> EventId {
+        self.schedule_event_at(self.now, ev)
+    }
+
     /// Execute the next event; returns false when the queue is empty.
     pub fn step(&mut self) -> bool {
         match self.queue.pop() {
@@ -533,7 +558,7 @@ mod tests {
 
     #[test]
     fn same_time_events_are_fifo() {
-        for kind in [QueueKind::Slab, QueueKind::Legacy] {
+        for kind in [QueueKind::Slab, QueueKind::Legacy, QueueKind::Sharded(3)] {
             let mut sim = Sim::with_queue(Vec::<u32>::new(), kind);
             for i in 0..100 {
                 sim.schedule_at(secs(5), move |s| s.state.push(i));
@@ -557,7 +582,7 @@ mod tests {
 
     #[test]
     fn cancellation_skips_event() {
-        for kind in [QueueKind::Slab, QueueKind::Legacy] {
+        for kind in [QueueKind::Slab, QueueKind::Legacy, QueueKind::Sharded(2)] {
             let mut sim = Sim::with_queue(0u64, kind);
             let id = sim.schedule_at(10, |s| s.state += 1);
             sim.schedule_at(5, |s| s.state += 100);
@@ -686,6 +711,13 @@ mod tests {
             run_once(QueueKind::Legacy),
             "both engines must replay the same schedule identically"
         );
+        for shards in [1usize, 2, 4] {
+            assert_eq!(
+                run_once(QueueKind::Slab),
+                run_once(QueueKind::Sharded(shards)),
+                "the {shards}-shard merge must replay the same schedule identically"
+            );
+        }
     }
 
     #[test]
@@ -818,7 +850,7 @@ mod tests {
     /// can re-arm themselves from dispatch.
     #[test]
     fn typed_and_custom_events_interleave_fifo() {
-        for kind in [QueueKind::Slab, QueueKind::Legacy] {
+        for kind in [QueueKind::Slab, QueueKind::Legacy, QueueKind::Sharded(2)] {
             let mut sim: Sim<Vec<u32>, TestEvent> = Sim::typed_with_queue(Vec::new(), kind);
             sim.schedule_event_at(5, TestEvent::Push(1));
             sim.schedule_at(5, |s| s.state.push(2));

@@ -1,6 +1,6 @@
 //! Event-queue implementations behind the simulation core.
 //!
-//! Two interchangeable engines live here, both generic over an opaque
+//! Three interchangeable engines live here, all generic over an opaque
 //! event payload `T` — the queues order `(time, seq)` and never look
 //! inside the payload (the sim stores a [`crate::sim::Payload`]: a typed
 //! event or a boxed closure):
@@ -18,6 +18,11 @@
 //!   and assert bit-identical pop orders and replay digests, and
 //!   `houtu bench` runs the campaign-smoke workload on both so every
 //!   report carries the measured old-vs-new ratio.
+//! * [`ShardedQueue`] — one [`SlabQueue`] per topology shard (shard = DC),
+//!   events routed by scheduling affinity, popped through an exact
+//!   `(time, seq)` n-way merge — the single-threaded, bit-identical half
+//!   of the sharded DES work ([`crate::sim::shard`] holds the parallel
+//!   engine).
 //!
 //! Both engines implement the same contract (see the invariants block in
 //! [`crate::sim`]): pops are ordered by `(time, seq)` with `seq` the
@@ -37,6 +42,16 @@ pub enum QueueKind {
     Slab,
     /// Pre-overhaul `BinaryHeap` + tombstone sets (differential baseline).
     Legacy,
+    /// Topology-sharded queue: one [`SlabQueue`] per shard (shard = DC in
+    /// the deployment stack), events routed by their
+    /// [`crate::sim::Dispatch::affinity`], popped through an exact
+    /// `(time, seq)` n-way merge so the executed stream — and every
+    /// replay digest — is bit-identical to [`QueueKind::Slab`] for any
+    /// shard count. This is the single-threaded half of the sharded-DES
+    /// story: it proves the DC partition routing on every standard
+    /// campaign cell, while [`crate::sim::shard::ShardedSim`] runs truly
+    /// partitioned worlds on one thread per shard.
+    Sharded(usize),
 }
 
 impl QueueKind {
@@ -44,6 +59,7 @@ impl QueueKind {
         match self {
             QueueKind::Slab => "slab",
             QueueKind::Legacy => "legacy",
+            QueueKind::Sharded(_) => "sharded",
         }
     }
 }
@@ -160,10 +176,17 @@ impl<T> SlabQueue<T> {
     /// Timestamp of the earliest live event, discarding stale heap
     /// entries on the way (which is why this takes `&mut self`).
     pub fn next_time(&mut self) -> Option<SimTime> {
+        self.next_key().map(|(t, _)| t)
+    }
+
+    /// `(time, seq)` of the earliest live event — the full ordering key,
+    /// which [`ShardedQueue`] uses for its exact n-way merge (the
+    /// timestamp alone cannot break same-time ties across shards).
+    pub fn next_key(&mut self) -> Option<(SimTime, u64)> {
         while let Some(&e) = self.heap.first() {
             let s = &self.slots[e.slot as usize];
             if s.seq == e.seq && s.payload.is_some() {
-                return Some(e.time);
+                return Some((e.time, e.seq));
             }
             self.heap_pop();
         }
@@ -327,6 +350,101 @@ impl<T> LegacyQueue<T> {
 }
 
 // ---------------------------------------------------------------------------
+// ShardedQueue: one SlabQueue per topology shard, exact (time, seq) merge.
+// ---------------------------------------------------------------------------
+
+/// Shard tag width inside an [`EventId`] slot word: the low 24 bits are
+/// the subqueue slot, the next 8 bits the shard index. Bounds both the
+/// shard count (≤ 256) and the live events per shard (< 2^24).
+const SHARD_SLOT_BITS: u32 = 24;
+const SHARD_SLOT_MASK: u32 = (1 << SHARD_SLOT_BITS) - 1;
+
+/// Maximum shard count a [`ShardedQueue`] supports (id-encoding bound).
+pub const MAX_QUEUE_SHARDS: usize = 256;
+
+/// The topology-sharded queue behind [`QueueKind::Sharded`]: `n`
+/// independent [`SlabQueue`]s, one per shard (shard = DC in the
+/// deployment stack), with events routed to a subqueue by the caller's
+/// affinity and popped through an **exact** `(time, seq)` n-way merge.
+///
+/// Because the merge compares the full ordering key — not just the
+/// timestamp — the pop stream is bit-identical to a single
+/// [`SlabQueue`]'s for *any* shard count and *any* routing function;
+/// `rust/tests/golden_digests.rs` pins that over all 30 standard
+/// campaign cells for 1/2/4 shards. Cancellation stays O(1): issued
+/// [`EventId`]s carry the shard index in the high bits of the slot word,
+/// so a cancel goes straight to the owning subqueue.
+pub struct ShardedQueue<T> {
+    shards: Vec<SlabQueue<T>>,
+    /// Exact live count across subqueues (maintained, never summed).
+    live: usize,
+}
+
+impl<T> ShardedQueue<T> {
+    pub fn new(shards: usize) -> Self {
+        let n = shards.clamp(1, MAX_QUEUE_SHARDS);
+        ShardedQueue { shards: (0..n).map(|_| SlabQueue::new()).collect(), live: 0 }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Schedule onto the subqueue `affinity % num_shards` (closures and
+    /// affinity-free events route to shard 0). `seq` is the global
+    /// schedule counter — unique across subqueues, so the merge's
+    /// `(time, seq)` comparison never ties.
+    pub fn schedule(&mut self, time: SimTime, seq: u64, affinity: usize, payload: T) -> EventId {
+        let shard = affinity % self.shards.len();
+        let (slot, gen) = self.shards[shard].schedule(time, seq, payload).unpack();
+        assert!(slot <= SHARD_SLOT_MASK, "sharded subqueue slot space exhausted");
+        self.live += 1;
+        EventId::pack(((shard as u32) << SHARD_SLOT_BITS) | slot, gen)
+    }
+
+    pub fn cancel(&mut self, id: EventId) -> bool {
+        let (slot, gen) = id.unpack();
+        let shard = (slot >> SHARD_SLOT_BITS) as usize;
+        if shard >= self.shards.len() {
+            return false;
+        }
+        let hit = self.shards[shard].cancel(EventId::pack(slot & SHARD_SLOT_MASK, gen));
+        if hit {
+            self.live -= 1;
+        }
+        hit
+    }
+
+    /// Pop the globally earliest live event: argmin of the subqueue
+    /// heads by the full `(time, seq)` key.
+    pub fn pop(&mut self) -> Option<Popped<T>> {
+        let mut best: Option<(usize, (SimTime, u64))> = None;
+        for (i, q) in self.shards.iter_mut().enumerate() {
+            if let Some(k) = q.next_key() {
+                if best.map_or(true, |(_, bk)| k < bk) {
+                    best = Some((i, k));
+                }
+            }
+        }
+        let (i, _) = best?;
+        let popped = self.shards[i].pop();
+        debug_assert!(popped.is_some(), "peeked head must pop");
+        if popped.is_some() {
+            self.live -= 1;
+        }
+        popped
+    }
+
+    pub fn next_time(&mut self) -> Option<SimTime> {
+        self.shards.iter_mut().filter_map(|q| q.next_key()).min().map(|(t, _)| t)
+    }
+
+    pub fn pending(&self) -> usize {
+        self.live
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Runtime dispatch: one branch per op, so the whole deployment stack can
 // run on either engine without threading a type parameter through every
 // event producer.
@@ -335,6 +453,7 @@ impl<T> LegacyQueue<T> {
 pub(crate) enum QueueImpl<T> {
     Slab(SlabQueue<T>),
     Legacy(LegacyQueue<T>),
+    Sharded(ShardedQueue<T>),
 }
 
 impl<T> QueueImpl<T> {
@@ -342,6 +461,7 @@ impl<T> QueueImpl<T> {
         match kind {
             QueueKind::Slab => QueueImpl::Slab(SlabQueue::new()),
             QueueKind::Legacy => QueueImpl::Legacy(LegacyQueue::new()),
+            QueueKind::Sharded(n) => QueueImpl::Sharded(ShardedQueue::new(n)),
         }
     }
 
@@ -349,14 +469,24 @@ impl<T> QueueImpl<T> {
         match self {
             QueueImpl::Slab(_) => QueueKind::Slab,
             QueueImpl::Legacy(_) => QueueKind::Legacy,
+            QueueImpl::Sharded(q) => QueueKind::Sharded(q.num_shards()),
         }
     }
 
+    /// `affinity` is the scheduling event's topology shard (DC index);
+    /// only the sharded engine routes on it — the flat engines ignore it.
     #[inline]
-    pub(crate) fn schedule(&mut self, time: SimTime, seq: u64, payload: T) -> EventId {
+    pub(crate) fn schedule(
+        &mut self,
+        time: SimTime,
+        seq: u64,
+        affinity: usize,
+        payload: T,
+    ) -> EventId {
         match self {
             QueueImpl::Slab(q) => q.schedule(time, seq, payload),
             QueueImpl::Legacy(q) => q.schedule(time, seq, payload),
+            QueueImpl::Sharded(q) => q.schedule(time, seq, affinity, payload),
         }
     }
 
@@ -365,6 +495,7 @@ impl<T> QueueImpl<T> {
         match self {
             QueueImpl::Slab(q) => q.cancel(id),
             QueueImpl::Legacy(q) => q.cancel(id),
+            QueueImpl::Sharded(q) => q.cancel(id),
         }
     }
 
@@ -373,6 +504,7 @@ impl<T> QueueImpl<T> {
         match self {
             QueueImpl::Slab(q) => q.pop(),
             QueueImpl::Legacy(q) => q.pop(),
+            QueueImpl::Sharded(q) => q.pop(),
         }
     }
 
@@ -381,6 +513,7 @@ impl<T> QueueImpl<T> {
         match self {
             QueueImpl::Slab(q) => q.next_time(),
             QueueImpl::Legacy(q) => q.next_time(),
+            QueueImpl::Sharded(q) => q.next_time(),
         }
     }
 
@@ -389,6 +522,7 @@ impl<T> QueueImpl<T> {
         match self {
             QueueImpl::Slab(q) => q.pending(),
             QueueImpl::Legacy(q) => q.pending(),
+            QueueImpl::Sharded(q) => q.pending(),
         }
     }
 }
@@ -475,6 +609,79 @@ mod tests {
             n += 1;
         }
         assert_eq!(n, 5000);
+    }
+
+    /// The sharded merge must reproduce the flat slab's pop stream
+    /// exactly, for any shard count and any routing of events to
+    /// subqueues — the full (time, seq) key comparison guarantees it.
+    #[test]
+    fn sharded_merge_matches_flat_slab_for_any_routing() {
+        for shards in [1usize, 2, 3, 4, 7] {
+            let mut rng = Pcg::seeded(42 + shards as u64);
+            let mut flat: SlabQueue<u64> = SlabQueue::new();
+            let mut sharded: ShardedQueue<u64> = ShardedQueue::new(shards);
+            let mut ids: Vec<(EventId, EventId)> = Vec::new();
+            let mut seq = 0u64;
+            for _ in 0..3000 {
+                match rng.index(4) {
+                    0 | 1 => {
+                        let t = rng.below(400);
+                        let aff = rng.index(8); // deliberately != shard count
+                        ids.push((
+                            flat.schedule(t, seq, seq),
+                            sharded.schedule(t, seq, aff, seq),
+                        ));
+                        seq += 1;
+                    }
+                    2 if !ids.is_empty() => {
+                        let (a, b) = ids[rng.index(ids.len())];
+                        assert_eq!(flat.cancel(a), sharded.cancel(b));
+                    }
+                    _ => {
+                        let (p1, p2) = (flat.pop(), sharded.pop());
+                        assert_eq!(
+                            p1.as_ref().map(|p| (p.time, p.seq, p.payload)),
+                            p2.as_ref().map(|p| (p.time, p.seq, p.payload)),
+                            "{shards} shards"
+                        );
+                    }
+                }
+                assert_eq!(flat.pending(), sharded.pending(), "{shards} shards");
+                assert_eq!(flat.next_time(), sharded.next_time(), "{shards} shards");
+            }
+            // Drain both to the end: the tails must agree too.
+            loop {
+                let (p1, p2) = (flat.pop(), sharded.pop());
+                assert_eq!(
+                    p1.as_ref().map(|p| (p.time, p.seq, p.payload)),
+                    p2.as_ref().map(|p| (p.time, p.seq, p.payload))
+                );
+                if p1.is_none() {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Sharded ids carry the shard tag: cancels hit the owning subqueue
+    /// and stale ids stay dead after slot reuse, exactly like the flat
+    /// engine.
+    #[test]
+    fn sharded_cancel_is_exact_across_subqueues() {
+        let mut q: ShardedQueue<()> = ShardedQueue::new(4);
+        let a = q.schedule(5, 0, 0, ());
+        let b = q.schedule(5, 1, 3, ());
+        let c = q.schedule(1, 2, 2, ());
+        assert_eq!(q.pending(), 3);
+        assert!(q.cancel(b));
+        assert!(!q.cancel(b), "double cancel");
+        assert_eq!(q.pending(), 2);
+        assert_eq!(q.pop().expect("c first").seq, 2);
+        assert_eq!(q.pop().expect("a next").seq, 0);
+        assert!(q.pop().is_none());
+        assert!(!q.cancel(a), "cancel after fire");
+        assert!(!q.cancel(c), "cancel after fire");
+        assert_eq!(q.pending(), 0);
     }
 
     #[test]

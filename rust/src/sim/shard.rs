@@ -1,0 +1,894 @@
+//! Conservative parallel DES: one shard per data center, WAN latency as
+//! lookahead.
+//!
+//! [`ShardedSim`] runs a *partitioned* world — one state value per
+//! **part** (part = DC in the deployment stack) — on one OS thread per
+//! **shard** (a contiguous block of parts), synchronized with a
+//! null-message / lower-bound-on-timestamp (LBTS) protocol in the
+//! Chandy–Misra–Bryant tradition. The paper's own topology is the
+//! partition argument: intra-DC events never cross a shard boundary, and
+//! every cross-DC interaction pays a WAN latency floor ([`Lookahead`],
+//! built from the same constants as `net::Wan`), so a shard may safely
+//! execute up to `min over other shards t of (next_t + lookahead(t, me))`
+//! without ever receiving an event from its past.
+//!
+//! # Protocol
+//!
+//! Execution proceeds in barrier-delimited rounds; every round each
+//! shard:
+//!
+//! 1. **Drain** its per-sender mailboxes into its local queue (a
+//!    [`SlabQueue`], exactly the production engine's), then **publish**
+//!    the timestamp of its earliest pending event (`u64::MAX` when
+//!    empty) and its cumulative executed-event count.
+//! 2. **Barrier.** Everyone now sees the same published snapshot, so the
+//!    termination / budget decision below is taken identically — and
+//!    therefore consistently — on every thread.
+//! 3. **Execute** every local event with `time < H`, where
+//!    `H = min over t≠me of (next_t + la(t → me))` is this shard's LBTS
+//!    horizon. Events for parts on other shards are buffered into
+//!    per-destination outboxes and flushed to the shared mailboxes at
+//!    the end of the phase.
+//! 4. **Barrier**, making every flushed message visible before the next
+//!    round's drain.
+//!
+//! **Safety.** A message from shard `t` is stamped
+//! `recv = send.now + floor(from, to) + extra ≥ next_t + la(t → me) ≥ H`,
+//! and shard `me` only executed events strictly below `H` — so no
+//! delivery ever lands in a shard's past (debug-asserted at delivery).
+//! **Progress.** Lookahead floors are clamped `≥ 1` ms, so the shard
+//! holding the global-minimum timestamp always has `H > next_me` and
+//! executes at least one event per round; rounds with an all-`MAX`
+//! snapshot terminate the run (mailboxes are drained before publishing,
+//! so `MAX` means globally idle, not in-flight).
+//!
+//! # Determinism contract
+//!
+//! Every event carries a globally unique canonical key
+//! `(born_part << 48) | born_seq`, allocated from the scheduling part's
+//! monotone counter, and each shard's queue orders `(time, key)`. Three
+//! invariants make the executed streams — and hence [`ShardedSim::digest`]
+//! — a pure function of the seeded schedule, **independent of shard
+//! count and thread interleaving** (pinned by `rust/tests/shard_sim.rs`):
+//!
+//! 1. A created event is strictly greater than its creator in
+//!    `(time, key)`: local schedules keep `time ≥ now` with a fresh
+//!    (maximal) `born_seq`; cross-part sends add a `≥ 1` ms floor.
+//! 2. Keys never collide (part-tagged monotone counters), so `(time,
+//!    key)` is a total order on all events that every shard's queue
+//!    agrees with; restricted to any single part it is the same sequence
+//!    no matter which shard executes the part.
+//! 3. Handlers only touch their own part's state plus the [`ShardCtx`]
+//!    scheduling surface — enforced by construction, since `apply` gets
+//!    `&mut S` for exactly one part.
+//!
+//! The per-part digest folds `(time, key)` per executed event (FNV-1a),
+//! and the run digest folds the per-part `(events, digest)` pairs in
+//! global part order. The single-threaded twin [`ShardedSim::run_serial`]
+//! drives the *identical* round protocol with no atomics or barriers, so
+//! `run()` ≡ `run_serial()` bit-for-bit is a CI-pinned property, the same
+//! golden-baseline discipline `LegacyQueue` established in PR 4.
+//!
+//! The flip side of conservative parallelism is that the whole-world
+//! `deploy::World` (shared WAN fair-sharing, cross-DC work stealing,
+//! elections) stays on the sequential engine; its sharded story is
+//! [`super::queue::ShardedQueue`] — per-DC subqueues behind an exact
+//! merge, bit-identical on every standard campaign cell. This module is
+//! the throughput path for partitioned workloads (`houtu bench`'s
+//! `multi-dc-churn` rows), and the substrate for ROADMAP item 3's
+//! planet-scale worlds.
+//!
+//! A panicking event handler poisons the round protocol: the panic is
+//! captured, every worker exits at the next barrier, and [`ShardedSim::run`]
+//! resumes the unwind on the calling thread.
+
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex};
+
+use super::queue::SlabQueue;
+use super::{SimTime, DEFAULT_EVENT_BUDGET};
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn fold(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(FNV_PRIME)
+}
+
+/// Bits reserved for the born-part tag in a canonical event key; the
+/// low 48 bits are the part's monotone birth counter.
+const KEY_PART_SHIFT: u32 = 48;
+
+#[inline]
+fn canonical_key(part: u32, born_seq: u64) -> u64 {
+    debug_assert!(born_seq < (1u64 << KEY_PART_SHIFT), "per-part birth counter overflow");
+    ((part as u64) << KEY_PART_SHIFT) | born_seq
+}
+
+/// Thread-safe step clock — the sharded counterpart of
+/// [`super::StepClock`], whose `Cell`s are single-thread only. One lives
+/// in each shard runner; `advance` is two relaxed atomic stores on the
+/// hot path (the barrier protocol provides all cross-thread ordering
+/// anyone reads it under).
+#[derive(Debug, Default)]
+pub struct ShardClock {
+    now: AtomicU64,
+    steps: AtomicU64,
+}
+
+impl ShardClock {
+    #[inline]
+    pub fn advance(&self, t: SimTime) {
+        self.now.store(t, Ordering::Relaxed);
+        self.steps.store(self.steps.load(Ordering::Relaxed) + 1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn now(&self) -> SimTime {
+        self.now.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub fn steps(&self) -> u64 {
+        self.steps.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-pair lower bounds on cross-part event latency, in sim ms — the
+/// protocol's lookahead. Floors are clamped `≥ 1` so the global-minimum
+/// shard always makes progress. Built from the WAN latency constants by
+/// `net::wan_lookahead` for deployment topologies, or directly for
+/// synthetic workloads.
+#[derive(Debug, Clone)]
+pub struct Lookahead {
+    parts: usize,
+    floor_ms: Vec<u64>,
+}
+
+impl Lookahead {
+    /// The same floor between every pair (including a part to itself).
+    pub fn uniform(parts: usize, floor: u64) -> Lookahead {
+        Lookahead { parts, floor_ms: vec![floor.max(1); parts * parts] }
+    }
+
+    /// Per-pair floors from `f(from, to)`, each clamped `≥ 1` ms.
+    pub fn from_fn(parts: usize, mut f: impl FnMut(usize, usize) -> u64) -> Lookahead {
+        let mut floor_ms = Vec::with_capacity(parts * parts);
+        for a in 0..parts {
+            for b in 0..parts {
+                floor_ms.push(f(a, b).max(1));
+            }
+        }
+        Lookahead { parts, floor_ms }
+    }
+
+    pub fn parts(&self) -> usize {
+        self.parts
+    }
+
+    /// The minimum latency any event scheduled by `from` for `to` pays.
+    #[inline]
+    pub fn floor(&self, from: usize, to: usize) -> u64 {
+        self.floor_ms[from * self.parts + to]
+    }
+}
+
+/// A typed event vocabulary for the partitioned engine. Unlike
+/// [`super::Dispatch`], `apply` sees only its target part's state plus
+/// the [`ShardCtx`] scheduling surface — the isolation that makes
+/// per-part execution order (and the digest) independent of the
+/// part→shard mapping.
+pub trait ShardEvent<S>: Send + Sized {
+    fn apply(self, ctx: &mut ShardCtx<'_, S, Self>);
+
+    /// Cheap static tag for diagnostics.
+    fn kind(&self) -> &'static str {
+        "event"
+    }
+}
+
+/// A cross-shard message: an event stamped with its arrival time and
+/// canonical `(time, key, part)` identity, so merged order is
+/// deterministic regardless of thread interleaving.
+struct Msg<E> {
+    time: SimTime,
+    key: u64,
+    part: u32,
+    ev: E,
+}
+
+/// What an executing event sees: exclusive access to its part's state
+/// and the scheduling surface. Local schedules go straight into the
+/// shard's queue; cross-part sends pay the lookahead floor and are
+/// routed through the mailbox protocol when the target part lives on
+/// another shard.
+pub struct ShardCtx<'a, S, E> {
+    /// The target part's state — and nothing else's.
+    pub state: &'a mut S,
+    now: SimTime,
+    part: u32,
+    nparts: u32,
+    born_seq: &'a mut u64,
+    queue: &'a mut SlabQueue<(u32, E)>,
+    outbox: &'a mut [Vec<Msg<E>>],
+    part_shard: &'a [u32],
+    my_shard: u32,
+    la: &'a Lookahead,
+}
+
+impl<'a, S, E> ShardCtx<'a, S, E> {
+    /// The executing event's virtual time (ms).
+    #[inline]
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// The part (DC) this event targets.
+    #[inline]
+    pub fn part(&self) -> usize {
+        self.part as usize
+    }
+
+    /// Total parts in the world.
+    #[inline]
+    pub fn nparts(&self) -> usize {
+        self.nparts as usize
+    }
+
+    #[inline]
+    fn next_key(&mut self) -> u64 {
+        let k = canonical_key(self.part, *self.born_seq);
+        *self.born_seq += 1;
+        k
+    }
+
+    /// Schedule `ev` on this same part after `delay` ms (0 = same-time,
+    /// FIFO in birth order behind this event).
+    pub fn schedule_in(&mut self, delay: SimTime, ev: E) {
+        let t = self.now + delay;
+        let key = self.next_key();
+        let part = self.part;
+        self.queue.schedule(t, key, (part, ev));
+    }
+
+    /// Send `ev` to `to_part`, arriving at
+    /// `now + lookahead_floor(part, to_part) + extra_delay`. The floor is
+    /// the WAN latency lower bound that makes conservative parallel
+    /// execution safe; `extra_delay` models everything above it
+    /// (serialization, queueing, transfer time).
+    pub fn send(&mut self, to_part: usize, extra_delay: SimTime, ev: E) {
+        assert!(to_part < self.nparts as usize, "send to unknown part {to_part}");
+        let t = self.now + self.la.floor(self.part as usize, to_part) + extra_delay;
+        let key = self.next_key();
+        let to = to_part as u32;
+        let dst_shard = self.part_shard[to_part];
+        if dst_shard == self.my_shard {
+            self.queue.schedule(t, key, (to, ev));
+        } else {
+            self.outbox[dst_shard as usize].push(Msg { time: t, key, part: to, ev });
+        }
+    }
+}
+
+/// Per-part bookkeeping: the state, the birth counter behind canonical
+/// keys, and the executed-stream digest the determinism contract pins.
+struct PartCell<S> {
+    state: S,
+    born_seq: u64,
+    events: u64,
+    digest: u64,
+}
+
+/// One shard: a contiguous block of parts, their own [`SlabQueue`]
+/// ordered by `(time, key)`, per-destination outboxes, and a
+/// thread-safe clock. Runs on exactly one thread at a time.
+struct ShardRunner<S, E> {
+    shard: u32,
+    part_base: u32,
+    parts: Vec<PartCell<S>>,
+    queue: SlabQueue<(u32, E)>,
+    outbox: Vec<Vec<Msg<E>>>,
+    now: SimTime,
+    events: u64,
+    peak_pending: usize,
+    clock: ShardClock,
+}
+
+/// Read-only world geometry threaded into the execution hot loop.
+#[derive(Clone, Copy)]
+struct ShardEnv<'x> {
+    part_shard: &'x [u32],
+    la: &'x Lookahead,
+    nparts: u32,
+}
+
+impl<S, E: ShardEvent<S>> ShardRunner<S, E> {
+    fn next_time(&mut self) -> SimTime {
+        self.queue.next_time().unwrap_or(SimTime::MAX)
+    }
+
+    fn deliver(&mut self, m: Msg<E>) {
+        debug_assert!(
+            m.time >= self.now,
+            "lookahead violation: message for t={} delivered at shard time {}",
+            m.time,
+            self.now
+        );
+        self.queue.schedule(m.time, m.key, (m.part, m.ev));
+    }
+
+    /// Execute every local event strictly below `limit` (the LBTS
+    /// horizon), stopping early at the `cap` runaway guard. Cross-shard
+    /// sends accumulate in `self.outbox`.
+    fn exec_round(&mut self, limit: SimTime, cap: u64, env: &ShardEnv<'_>) {
+        loop {
+            match self.queue.next_time() {
+                Some(t) if t < limit => {}
+                _ => break,
+            }
+            if self.events >= cap {
+                break;
+            }
+            let popped = self.queue.pop().expect("peeked event must pop");
+            let (part, ev) = popped.payload;
+            let t = popped.time;
+            debug_assert!(t >= self.now, "time went backwards within a shard");
+            self.now = t;
+            self.events += 1;
+            self.clock.advance(t);
+            let cell = &mut self.parts[(part - self.part_base) as usize];
+            cell.events += 1;
+            cell.digest = fold(fold(cell.digest, t), popped.seq);
+            let mut ctx = ShardCtx {
+                state: &mut cell.state,
+                now: t,
+                part,
+                nparts: env.nparts,
+                born_seq: &mut cell.born_seq,
+                queue: &mut self.queue,
+                outbox: &mut self.outbox,
+                part_shard: env.part_shard,
+                my_shard: self.shard,
+                la: env.la,
+            };
+            ev.apply(&mut ctx);
+            let live = self.queue.pending();
+            if live > self.peak_pending {
+                self.peak_pending = live;
+            }
+        }
+    }
+}
+
+/// Shared synchronization state for one parallel run. Mailboxes are
+/// per-(destination, sender) so two senders never contend on a lock, and
+/// a destination drains each slot with its sender's messages already in
+/// canonical order (the queue re-sorts anyway — order here is irrelevant
+/// by design).
+struct Shared<E> {
+    next: Vec<AtomicU64>,
+    executed: Vec<AtomicU64>,
+    inbox: Vec<Mutex<Vec<Msg<E>>>>,
+    poisoned: AtomicBool,
+    panics: Mutex<Vec<Box<dyn Any + Send>>>,
+    barrier: Barrier,
+}
+
+fn worker<S, E: ShardEvent<S>>(
+    r: &mut ShardRunner<S, E>,
+    shared: &Shared<E>,
+    env: ShardEnv<'_>,
+    shard_la: &[u64],
+    nshards: usize,
+    budget: u64,
+) {
+    let me = r.shard as usize;
+    let n = nshards;
+    let mut nexts = vec![0u64; n];
+    loop {
+        // Phase A: drain mailboxes, publish (next event time, executed).
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            for src in 0..n {
+                if src == me {
+                    continue;
+                }
+                let msgs = {
+                    let mut slot = shared.inbox[me * n + src].lock().unwrap();
+                    std::mem::take(&mut *slot)
+                };
+                for m in msgs {
+                    r.deliver(m);
+                }
+            }
+            shared.next[me].store(r.next_time(), Ordering::SeqCst);
+            shared.executed[me].store(r.events, Ordering::SeqCst);
+        }));
+        if let Err(p) = res {
+            shared.poisoned.store(true, Ordering::SeqCst);
+            shared.next[me].store(u64::MAX, Ordering::SeqCst);
+            shared.panics.lock().unwrap().push(p);
+        }
+        shared.barrier.wait();
+        if shared.poisoned.load(Ordering::SeqCst) {
+            return;
+        }
+
+        // Decision point: every thread reads the same published snapshot
+        // and takes the same branch, so exits are always collective and
+        // no thread is left waiting at a barrier.
+        for (t, slot) in nexts.iter_mut().enumerate() {
+            *slot = shared.next[t].load(Ordering::SeqCst);
+        }
+        let gmin = nexts.iter().copied().min().unwrap_or(u64::MAX);
+        let total: u64 = (0..n).map(|t| shared.executed[t].load(Ordering::SeqCst)).sum();
+        if gmin == u64::MAX || total > budget {
+            return;
+        }
+
+        // Phase B: execute below the LBTS horizon, flush outboxes.
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            let mut h = u64::MAX;
+            for t in 0..n {
+                if t != me {
+                    h = h.min(nexts[t].saturating_add(shard_la[t * n + me]));
+                }
+            }
+            r.exec_round(h, budget.saturating_add(1), &env);
+            for dst in 0..n {
+                if dst != me && !r.outbox[dst].is_empty() {
+                    let mut slot = shared.inbox[dst * n + me].lock().unwrap();
+                    slot.append(&mut r.outbox[dst]);
+                }
+            }
+        }));
+        if let Err(p) = res {
+            shared.poisoned.store(true, Ordering::SeqCst);
+            shared.panics.lock().unwrap().push(p);
+        }
+        shared.barrier.wait();
+        if shared.poisoned.load(Ordering::SeqCst) {
+            return;
+        }
+    }
+}
+
+/// The conservative parallel engine. See the module docs for the
+/// protocol, the safety/progress arguments, and the determinism
+/// contract.
+pub struct ShardedSim<S, E> {
+    nparts: u32,
+    nshards: usize,
+    part_shard: Vec<u32>,
+    /// `nshards × nshards` matrix: the minimum part-pair floor between
+    /// two shards — what the horizon computation may safely assume about
+    /// any message from `t` to `me`.
+    shard_la: Vec<u64>,
+    la: Lookahead,
+    runners: Vec<ShardRunner<S, E>>,
+    budget: u64,
+}
+
+impl<S: Send, E: ShardEvent<S>> ShardedSim<S, E> {
+    /// Partition `states` (one per part, in global part order) into
+    /// `shards` contiguous blocks. `shards` is clamped to `[1, parts]`;
+    /// `la` must cover every part pair.
+    pub fn new(states: Vec<S>, la: Lookahead, shards: usize) -> Self {
+        let nparts = states.len();
+        assert!(nparts > 0, "a sharded sim needs at least one part");
+        assert!(nparts < (1 << 16), "part index space is 16 bits");
+        assert_eq!(la.parts(), nparts, "lookahead table must cover every part");
+        let nshards = shards.clamp(1, nparts);
+        let part_shard: Vec<u32> =
+            (0..nparts).map(|p| (p * nshards / nparts) as u32).collect();
+
+        let mut shard_la = vec![u64::MAX; nshards * nshards];
+        for a in 0..nparts {
+            for b in 0..nparts {
+                let (s, t) = (part_shard[a] as usize, part_shard[b] as usize);
+                if s != t {
+                    let f = la.floor(a, b);
+                    let e = &mut shard_la[s * nshards + t];
+                    if f < *e {
+                        *e = f;
+                    }
+                }
+            }
+        }
+
+        let mut runners: Vec<ShardRunner<S, E>> = (0..nshards)
+            .map(|s| ShardRunner {
+                shard: s as u32,
+                part_base: 0,
+                parts: Vec::new(),
+                queue: SlabQueue::new(),
+                outbox: (0..nshards).map(|_| Vec::new()).collect(),
+                now: 0,
+                events: 0,
+                peak_pending: 0,
+                clock: ShardClock::default(),
+            })
+            .collect();
+        for (p, state) in states.into_iter().enumerate() {
+            let r = &mut runners[part_shard[p] as usize];
+            if r.parts.is_empty() {
+                r.part_base = p as u32;
+            }
+            r.parts.push(PartCell { state, born_seq: 0, events: 0, digest: FNV_OFFSET });
+        }
+        debug_assert!(runners.iter().all(|r| !r.parts.is_empty()), "empty shard");
+
+        ShardedSim {
+            nparts: nparts as u32,
+            nshards,
+            part_shard,
+            shard_la,
+            la,
+            runners,
+            budget: DEFAULT_EVENT_BUDGET,
+        }
+    }
+
+    pub fn num_parts(&self) -> usize {
+        self.nparts as usize
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.nshards
+    }
+
+    pub fn lookahead(&self) -> &Lookahead {
+        &self.la
+    }
+
+    /// Configure the runaway guard (default
+    /// [`DEFAULT_EVENT_BUDGET`]): a run that exceeds it exits the round
+    /// protocol collectively and panics with diagnostics.
+    pub fn set_event_budget(&mut self, budget: u64) {
+        self.budget = budget;
+    }
+
+    /// Seed an event for `part` at absolute time `time` (before running).
+    pub fn seed(&mut self, part: usize, time: SimTime, ev: E) {
+        assert!(part < self.nparts as usize, "seed for unknown part {part}");
+        let r = &mut self.runners[self.part_shard[part] as usize];
+        let key = {
+            let cell = &mut r.parts[part - r.part_base as usize];
+            let k = canonical_key(part as u32, cell.born_seq);
+            cell.born_seq += 1;
+            k
+        };
+        r.queue.schedule(time, key, (part as u32, ev));
+    }
+
+    /// Drain every queue: one thread per shard when `num_shards() > 1`,
+    /// the serial twin otherwise. Panics if the event budget is
+    /// exceeded, and resumes any handler panic on this thread.
+    pub fn run(&mut self) {
+        if self.nshards <= 1 {
+            self.run_rounds_serial();
+        } else {
+            self.run_parallel();
+        }
+        self.enforce_budget();
+    }
+
+    /// The executable golden twin: the *identical* round/horizon math on
+    /// one thread, no atomics, no barriers. `run()` must match it
+    /// bit-for-bit (digest and per-part event counts) for every shard
+    /// count — the differential pin `rust/tests/shard_sim.rs` enforces.
+    pub fn run_serial(&mut self) {
+        self.run_rounds_serial();
+        self.enforce_budget();
+    }
+
+    fn run_rounds_serial(&mut self) {
+        let n = self.nshards;
+        let mut inbox: Vec<Vec<Msg<E>>> = (0..n * n).map(|_| Vec::new()).collect();
+        let mut nexts = vec![0u64; n];
+        loop {
+            for me in 0..n {
+                for src in 0..n {
+                    if src == me {
+                        continue;
+                    }
+                    let msgs = std::mem::take(&mut inbox[me * n + src]);
+                    let r = &mut self.runners[me];
+                    for m in msgs {
+                        r.deliver(m);
+                    }
+                }
+                nexts[me] = self.runners[me].next_time();
+            }
+            let gmin = nexts.iter().copied().min().unwrap_or(u64::MAX);
+            let total: u64 = self.runners.iter().map(|r| r.events).sum();
+            if gmin == u64::MAX || total > self.budget {
+                break;
+            }
+            for me in 0..n {
+                let mut h = u64::MAX;
+                for t in 0..n {
+                    if t != me {
+                        h = h.min(nexts[t].saturating_add(self.shard_la[t * n + me]));
+                    }
+                }
+                let env = ShardEnv {
+                    part_shard: &self.part_shard,
+                    la: &self.la,
+                    nparts: self.nparts,
+                };
+                let r = &mut self.runners[me];
+                r.exec_round(h, self.budget.saturating_add(1), &env);
+                for dst in 0..n {
+                    if dst != me && !r.outbox[dst].is_empty() {
+                        let msgs = std::mem::take(&mut r.outbox[dst]);
+                        inbox[dst * n + me].extend(msgs);
+                    }
+                }
+            }
+        }
+    }
+
+    fn run_parallel(&mut self) {
+        let n = self.nshards;
+        let shared: Shared<E> = Shared {
+            next: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            executed: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            inbox: (0..n * n).map(|_| Mutex::new(Vec::new())).collect(),
+            poisoned: AtomicBool::new(false),
+            panics: Mutex::new(Vec::new()),
+            barrier: Barrier::new(n),
+        };
+        let env = ShardEnv { part_shard: &self.part_shard, la: &self.la, nparts: self.nparts };
+        let shard_la: &[u64] = &self.shard_la;
+        let budget = self.budget;
+        let shared_ref = &shared;
+        std::thread::scope(|scope| {
+            for r in self.runners.iter_mut() {
+                scope.spawn(move || worker(r, shared_ref, env, shard_la, n, budget));
+            }
+        });
+        if shared.poisoned.load(Ordering::SeqCst) {
+            match shared.panics.lock().unwrap().pop() {
+                Some(p) => std::panic::resume_unwind(p),
+                None => panic!("shard worker poisoned the run without a payload"),
+            }
+        }
+    }
+
+    fn enforce_budget(&mut self) {
+        let total = self.events_processed();
+        if total <= self.budget {
+            return;
+        }
+        let pending: usize = self.runners.iter().map(|r| r.queue.pending()).sum();
+        let next = self
+            .runners
+            .iter_mut()
+            .filter_map(|r| r.queue.next_key().map(|(t, _)| (t, r.shard)))
+            .min();
+        match next {
+            Some((t, shard)) => panic!(
+                "shard sim event budget exhausted: {total} events executed and {pending} \
+                 still queued; next event at t={t}ms on shard {shard} — runaway \
+                 self-rearming event? Raise ShardedSim::set_event_budget if the schedule \
+                 is legitimate"
+            ),
+            None => panic!("shard sim event budget exhausted: {total} events executed"),
+        }
+    }
+
+    fn cell(&self, part: usize) -> &PartCell<S> {
+        let r = &self.runners[self.part_shard[part] as usize];
+        &r.parts[part - r.part_base as usize]
+    }
+
+    /// Shared read access to a part's state (between/after runs).
+    pub fn part_state(&self, part: usize) -> &S {
+        &self.cell(part).state
+    }
+
+    /// Events executed against `part`.
+    pub fn part_events(&self, part: usize) -> u64 {
+        self.cell(part).events
+    }
+
+    /// Total events executed across all shards.
+    pub fn events_processed(&self) -> u64 {
+        self.runners.iter().map(|r| r.events).sum()
+    }
+
+    /// Largest single-shard pending-queue high-water mark observed.
+    pub fn peak_pending(&self) -> usize {
+        self.runners.iter().map(|r| r.peak_pending).max().unwrap_or(0)
+    }
+
+    /// Maximum shard-local virtual time reached.
+    pub fn now(&self) -> SimTime {
+        self.runners.iter().map(|r| r.now).max().unwrap_or(0)
+    }
+
+    /// Steps counted by one shard's thread-safe clock.
+    pub fn shard_clock(&self, shard: usize) -> &ShardClock {
+        &self.runners[shard].clock
+    }
+
+    /// The run's determinism digest: an order-sensitive FNV-1a fold of
+    /// every part's `(events, executed-stream digest)` in global part
+    /// order. Identical for any shard count and any thread interleaving
+    /// of the same seeded schedule.
+    pub fn digest(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        for p in 0..self.nparts as usize {
+            let c = self.cell(p);
+            h = fold(h, c.events);
+            h = fold(h, c.digest);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mix(a: u64, b: u64) -> u64 {
+        let mut x = a.wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ b.wrapping_add(0x2545_f491_4f6c_dd1d);
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        x ^= x >> 27;
+        x
+    }
+
+    /// A hop chain: accumulate a hash into the part's counter, then
+    /// either stay local or cross to another part, deterministically
+    /// derived from (part, left) so order at time ties is irrelevant.
+    struct Hop {
+        left: u32,
+        stride: u32,
+    }
+
+    impl ShardEvent<u64> for Hop {
+        fn apply(self, ctx: &mut ShardCtx<'_, u64, Self>) {
+            let m = mix(ctx.part() as u64, self.left as u64);
+            *ctx.state = ctx.state.wrapping_add(m);
+            if self.left == 0 {
+                return;
+            }
+            let next = Hop { left: self.left - 1, stride: self.stride };
+            if m % 3 == 0 {
+                let to = (ctx.part() + self.stride as usize) % ctx.nparts();
+                if to != ctx.part() {
+                    ctx.send(to, m % 9, next);
+                    return;
+                }
+            }
+            ctx.schedule_in(1 + m % 13, next);
+        }
+
+        fn kind(&self) -> &'static str {
+            "hop"
+        }
+    }
+
+    fn run_hops(nshards: usize, serial: bool) -> (u64, u64, Vec<u64>) {
+        const PARTS: usize = 4;
+        let la = Lookahead::from_fn(PARTS, |a, b| if a == b { 1 } else { 15 });
+        let mut sim: ShardedSim<u64, Hop> =
+            ShardedSim::new(vec![0u64; PARTS], la, nshards);
+        for p in 0..PARTS {
+            for c in 0..8u32 {
+                sim.seed(p, (c as u64) % 5, Hop { left: 40, stride: 1 + c % 3 });
+            }
+        }
+        if serial {
+            sim.run_serial();
+        } else {
+            sim.run();
+        }
+        let states = (0..PARTS).map(|p| *sim.part_state(p)).collect();
+        (sim.digest(), sim.events_processed(), states)
+    }
+
+    /// The tentpole pin: digest, event count, and final states are
+    /// identical for every shard count — parallel or serial.
+    #[test]
+    fn digest_invariant_across_shard_counts_and_modes() {
+        let golden = run_hops(1, true);
+        assert!(golden.1 > 1000, "workload must be non-trivial: {} events", golden.1);
+        for nshards in [1usize, 2, 3, 4] {
+            assert_eq!(run_hops(nshards, true), golden, "serial, {nshards} shards");
+            assert_eq!(run_hops(nshards, false), golden, "parallel, {nshards} shards");
+        }
+    }
+
+    #[test]
+    fn parallel_runs_are_reproducible() {
+        assert_eq!(run_hops(4, false), run_hops(4, false));
+    }
+
+    /// Cross-shard sends arrive at exactly `now + floor + extra`.
+    struct Stamp {
+        forward: bool,
+    }
+
+    impl ShardEvent<Vec<SimTime>> for Stamp {
+        fn apply(self, ctx: &mut ShardCtx<'_, Vec<SimTime>, Self>) {
+            let now = ctx.now();
+            ctx.state.push(now);
+            if self.forward {
+                ctx.send(1, 3, Stamp { forward: false });
+            }
+        }
+    }
+
+    #[test]
+    fn send_pays_the_lookahead_floor() {
+        let la = Lookahead::uniform(2, 10);
+        let mut sim: ShardedSim<Vec<SimTime>, Stamp> =
+            ShardedSim::new(vec![Vec::new(), Vec::new()], la, 2);
+        sim.seed(0, 5, Stamp { forward: true });
+        sim.run();
+        assert_eq!(sim.part_state(0), &vec![5]);
+        assert_eq!(sim.part_state(1), &vec![5 + 10 + 3], "arrival = now + floor + extra");
+        assert_eq!(sim.events_processed(), 2);
+    }
+
+    /// A same-time self-rearming event trips the collective budget exit
+    /// and the run panics with diagnostics instead of spinning.
+    struct Rearm;
+
+    impl ShardEvent<u64> for Rearm {
+        fn apply(self, ctx: &mut ShardCtx<'_, u64, Self>) {
+            *ctx.state += 1;
+            ctx.schedule_in(0, Rearm);
+        }
+
+        fn kind(&self) -> &'static str {
+            "rearm"
+        }
+    }
+
+    #[test]
+    fn runaway_schedule_trips_the_budget_collectively() {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let la = Lookahead::uniform(2, 5);
+            let mut sim: ShardedSim<u64, Rearm> = ShardedSim::new(vec![0, 0], la, 2);
+            sim.set_event_budget(10_000);
+            sim.seed(0, 1, Rearm);
+            sim.run();
+        }));
+        let err = result.expect_err("a runaway schedule must panic, not hang");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("budget exhausted"), "{msg}");
+    }
+
+    /// A panicking handler must not deadlock the barrier protocol: the
+    /// panic is captured, every worker exits, and `run()` resumes it.
+    struct Bomb;
+
+    impl ShardEvent<u64> for Bomb {
+        fn apply(self, _ctx: &mut ShardCtx<'_, u64, Self>) {
+            panic!("boom in a shard handler");
+        }
+    }
+
+    #[test]
+    fn handler_panic_propagates_instead_of_deadlocking() {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let la = Lookahead::uniform(4, 5);
+            let mut sim: ShardedSim<u64, Bomb> = ShardedSim::new(vec![0; 4], la, 4);
+            sim.seed(2, 7, Bomb);
+            sim.run();
+        }));
+        let err = result.expect_err("the handler panic must reach the caller");
+        let msg = err.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert!(msg.contains("boom"), "{msg}");
+    }
+}

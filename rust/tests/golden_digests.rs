@@ -18,6 +18,10 @@
 //!    future behavioral drift, queue-related or not. Regenerate it (after
 //!    auditing the drift is intentional) with:
 //!    `HOUTU_PIN_GOLDEN=1 cargo test --test golden_digests`.
+//! 3. **Sharded-engine pin.** Every cell also runs on
+//!    [`QueueKind::Sharded`] at 1, 2 and 4 shards and must reproduce the
+//!    slab digests bit-identically — the determinism gate for the
+//!    per-DC sharded queue (`houtu campaign --shards N`).
 
 use houtu::config::Config;
 use houtu::scenario::runner::par_map;
@@ -146,4 +150,39 @@ fn standard_campaign_digests_survive_the_queue_swap() {
         );
     }
     check_against_static_table(&slab);
+}
+
+/// The sharded-engine acceptance gate: all 30 standard-campaign cells
+/// replay bit-identically on the sharded queue — and the result is
+/// invariant to the shard count (1, 2 and 4 shards), because the n-way
+/// merge restores the exact global `(time, seq)` order no matter how
+/// events were routed across sub-queues.
+#[test]
+fn standard_campaign_digests_are_shard_count_invariant() {
+    let slab = compute_pins(QueueKind::Slab);
+    assert_eq!(slab.len(), 30, "expected the 10×3 standard matrix");
+    for shards in [1usize, 2, 4] {
+        let sharded = compute_pins(QueueKind::Sharded(shards));
+        assert_eq!(slab.len(), sharded.len());
+        for (a, b) in slab.iter().zip(&sharded) {
+            assert_eq!(
+                (&a.scenario, a.seed),
+                (&b.scenario, b.seed),
+                "cell order must be engine-independent"
+            );
+            assert_eq!(
+                format!("{:016x}", a.digest),
+                format!("{:016x}", b.digest),
+                "{}/seed{}: replay digest drifted on the sharded queue ({shards} shards)",
+                a.scenario,
+                a.seed
+            );
+            assert_eq!(
+                a.events, b.events,
+                "{}/seed{}: event count drifted on the sharded queue ({shards} shards)",
+                a.scenario,
+                a.seed
+            );
+        }
+    }
 }

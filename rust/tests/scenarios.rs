@@ -513,3 +513,22 @@ fn cli_parses_fuzz_flags() {
     assert_eq!(cli.cases, 32, "default case count");
     assert_eq!(cli.fuzz_seed, 1, "default fuzz seed");
 }
+
+#[test]
+fn cli_parses_sharded_threads_and_history_flags() {
+    let args: Vec<String> = ["campaign", "--smoke", "--shards", "4", "--threads", "2"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let cli = houtu::cli::parse(&args);
+    assert_eq!(cli.shards, Some(4));
+    assert_eq!(cli.threads, 2);
+    let args: Vec<String> = ["bench", "--smoke", "--history", "/tmp/h.jsonl"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let cli = houtu::cli::parse(&args);
+    assert_eq!(cli.history.as_deref(), Some("/tmp/h.jsonl"));
+    assert_eq!(cli.shards, None, "default stays on the sequential engine");
+    assert_eq!(cli.threads, 0, "default resolves via HOUTU_THREADS, then cores");
+}
