@@ -7,7 +7,10 @@
 # re-parses the file, exiting non-zero on any mismatch) — so the export
 # path stays wired — then the same smoke campaign on the sharded queue
 # engine with a digest diff against the sequential report (the
-# parallel-DES determinism gate at the CLI level), then a seeded
+# parallel-DES determinism gate at the CLI level), then the open-loop
+# load smoke ramp (`houtu load --smoke`) on both engines with its
+# round-trip-verified report's digest and knee diffed (the load
+# determinism gate), then a seeded
 # chaos-fuzz smoke batch (any invariant violation is shrunk to a minimal
 # repro TOML and fails the build), and finally the perf harness:
 # `bench --smoke` times every workload — including the per-strategy
@@ -38,6 +41,24 @@ if ! diff -u /tmp/smoke-digests.txt /tmp/smoke-sharded-digests.txt; then
   exit 1
 fi
 echo "ci.sh: sharded campaign digests match the sequential engine"
+
+# Open-loop load smoke: a tiny fixed-seed ramp through the real CLI with
+# a round-trip-verified report, run on both queue engines — the digest
+# and the reported knee must be engine-invariant (the load determinism
+# gate; same shape as the campaign gate above).
+cargo run --release --quiet -- load --smoke --seed 42 --report /tmp/load-smoke.json
+cargo run --release --quiet -- load --smoke --seed 42 --shards 4 --report /tmp/load-smoke-sharded.json
+for f in /tmp/load-smoke.json /tmp/load-smoke-sharded.json; do
+  grep -o '"digest": "[0-9a-f]*"' "$f"
+  grep '"knee"' "$f"
+done > /tmp/load-digests.txt
+head -2 /tmp/load-digests.txt > /tmp/load-seq.txt
+tail -2 /tmp/load-digests.txt > /tmp/load-sharded.txt
+if ! diff -u /tmp/load-seq.txt /tmp/load-sharded.txt; then
+  echo "ci.sh: sharded load digest/knee diverged from the sequential engine" >&2
+  exit 1
+fi
+echo "ci.sh: load smoke digest and knee match across engines"
 
 cargo run --release --quiet -- fuzz --cases 8 --seed 1 --repro /tmp/fuzz-repro.toml
 cargo run --release --quiet -- bench --smoke --report BENCH_sim.json --history BENCH_history.jsonl --compare BENCH_baseline.json

@@ -143,6 +143,9 @@ pub enum BenchWorkload {
     CampaignSmoke,
     FuzzBatch,
     SoakSlice,
+    /// The smoke load ramp (`houtu load --smoke`): open-loop arrivals,
+    /// per-step folding and knee detection — the latency-under-load axis.
+    LoadKnee,
     DenseCancelChurn,
     /// Spot-storm trace under the given bid strategy (cost + wall time).
     BidChurn(StrategyKind),
@@ -161,6 +164,7 @@ impl BenchWorkload {
             BenchWorkload::CampaignSmoke => "campaign-smoke",
             BenchWorkload::FuzzBatch => "fuzz-batch",
             BenchWorkload::SoakSlice => "soak-slice",
+            BenchWorkload::LoadKnee => "load-knee",
             BenchWorkload::DenseCancelChurn => "dense-cancel-churn",
             BenchWorkload::BidChurn(StrategyKind::Naive) => "bid-churn-naive",
             BenchWorkload::BidChurn(StrategyKind::Adaptive) => "bid-churn-adaptive",
@@ -230,6 +234,12 @@ impl BenchWorkload {
                     out.peak_pending = out.peak_pending.max(run.peak_pending);
                 }
                 out
+            }
+            BenchWorkload::LoadKnee => {
+                let spec = crate::load::smoke_spec();
+                let out = crate::load::run_load_on(base, &spec, 42, queue)
+                    .expect("smoke load spec is always valid");
+                IterOut { events: out.events_processed, peak_pending: out.peak_pending, usd: 0.0 }
             }
             BenchWorkload::DenseCancelChurn => {
                 let n = if smoke { 60_000 } else { 200_000 };
@@ -597,6 +607,7 @@ pub fn run_bench(base: &Config, opts: &BenchOpts) -> BenchReport {
         (BenchWorkload::CampaignSmoke, QueueKind::Sharded(threads)),
         (BenchWorkload::FuzzBatch, QueueKind::Slab),
         (BenchWorkload::SoakSlice, QueueKind::Slab),
+        (BenchWorkload::LoadKnee, QueueKind::Slab),
         (BenchWorkload::DenseCancelChurn, QueueKind::Slab),
         (BenchWorkload::DenseCancelChurn, QueueKind::Legacy),
         (BenchWorkload::BidChurn(StrategyKind::Naive), QueueKind::Slab),
@@ -858,6 +869,14 @@ fn history_row(report: &BenchReport, ts: u64, sha: &str) -> String {
 /// --history BENCH_history.jsonl`), creating it on first use. Each line
 /// is independently parseable, so the trajectory survives partial
 /// writes and ad-hoc tooling can `grep`/`jq` it per commit.
+///
+/// Torn-write hardening: the whole row (parse-checked first) lands in
+/// one flushed `write_all`, and if a previous run crashed mid-append —
+/// leaving a final line with no trailing newline — this append starts
+/// with a `\n` so the torn fragment stays isolated on its own line
+/// instead of corrupting the new row too. [`read_history`] then skips
+/// such fragments with a warning rather than failing every later
+/// parse-check.
 pub fn append_history(report: &BenchReport, path: &str) -> Result<()> {
     use std::io::Write as _;
     let ts = std::time::SystemTime::now()
@@ -866,13 +885,48 @@ pub fn append_history(report: &BenchReport, path: &str) -> Result<()> {
         .unwrap_or(0);
     let row = history_row(report, ts, &git_short_sha());
     json::parse(row.trim()).map_err(|e| anyhow!("history row does not parse: {e}"))?;
+    let torn_tail = match std::fs::read(path) {
+        Ok(bytes) => !bytes.is_empty() && bytes.last() != Some(&b'\n'),
+        Err(_) => false, // absent file: OpenOptions creates it below
+    };
+    let mut buf = String::with_capacity(row.len() + 1);
+    if torn_tail {
+        eprintln!("warning: {path} ends in a torn row (crash mid-append?); starting a fresh line");
+        buf.push('\n');
+    }
+    buf.push_str(&row);
     let mut f = std::fs::OpenOptions::new()
         .create(true)
         .append(true)
         .open(path)
         .with_context(|| format!("opening {path}"))?;
-    f.write_all(row.as_bytes()).with_context(|| format!("appending {path}"))?;
+    f.write_all(buf.as_bytes()).with_context(|| format!("appending {path}"))?;
+    f.flush().with_context(|| format!("flushing {path}"))?;
     Ok(())
+}
+
+/// Parse a JSONL history file, skipping (with a stderr warning) any line
+/// that does not parse — the residue of a torn append — instead of
+/// failing the run. Returns the parsed rows and the skipped-line count.
+/// I/O errors still fail: an unreadable trajectory is a real problem, a
+/// single torn line is not.
+pub fn read_history(path: &str) -> Result<(Vec<Json>, usize)> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let mut rows = Vec::new();
+    let mut skipped = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match json::parse(line) {
+            Ok(doc) => rows.push(doc),
+            Err(e) => {
+                skipped += 1;
+                eprintln!("warning: {path}:{}: skipping torn history row ({e})", i + 1);
+            }
+        }
+    }
+    Ok((rows, skipped))
 }
 
 #[cfg(test)]
@@ -1001,6 +1055,40 @@ mod tests {
                 .and_then(Json::as_f64);
             assert_eq!(eps, Some(9_876_543.21), "{line}");
         }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_history_tail_is_repaired_and_skipped() {
+        use std::io::Write as _;
+        let r = tiny_report();
+        let path = std::env::temp_dir()
+            .join(format!("houtu-bench-history-torn-{}.jsonl", std::process::id()));
+        let path = path.to_str().expect("utf8 temp path").to_string();
+        let _ = std::fs::remove_file(&path);
+        append_history(&r, &path).expect("first append");
+        // Simulate a crash mid-append: half a JSON row, no newline.
+        {
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"{\"ts\": 12, \"sha").unwrap();
+        }
+        // The next append must not fail, and must isolate the fragment
+        // on its own line so the new row parses.
+        append_history(&r, &path).expect("append over a torn tail");
+        let text = std::fs::read_to_string(&path).expect("history readable");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "good, torn, good: {lines:?}");
+        assert!(json::parse(lines[0]).is_ok());
+        assert!(json::parse(lines[1]).is_err(), "the torn fragment stays visible");
+        assert!(json::parse(lines[2]).is_ok(), "the fresh row must parse");
+        // The parse-check skips the torn line with a warning instead of
+        // failing the run.
+        let (rows, skipped) = read_history(&path).expect("read_history");
+        assert_eq!(rows.len(), 2);
+        assert_eq!(skipped, 1);
+        assert!(rows
+            .iter()
+            .all(|d| d.get("sha").and_then(Json::as_str).is_some()));
         let _ = std::fs::remove_file(&path);
     }
 

@@ -14,6 +14,10 @@
 //!   theorem1                                     check the makespan bound
 //!   run --deployment D --workload W --size S     run one job
 //!   trace --deployment D                         run the online trace
+//!   load [--spec FILE | --smoke]                 open-loop ramp to the saturation knee
+//!        [--seed S] [--report out.json|out.csv]  ... fixed seed / export the ramp report
+//!        [--shards N]                            ... on the sharded queue engine
+//!                                                (digest must not change)
 //!   campaign [--spec FILE | --smoke]             run a scenario-matrix campaign
 //!            [--report out.json|out.csv]         ... and export the report
 //!            [--record out.log]                  ... and persist the event streams
@@ -45,7 +49,7 @@ use crate::ids::DcId;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: houtu <fig2|fig3|fig7|fig8|fig9|fig10|fig11|fig12|theorem1|run|trace|campaign|replay|fuzz|bench|export|all> \
+        "usage: houtu <fig2|fig3|fig7|fig8|fig9|fig10|fig11|fig12|theorem1|run|trace|load|campaign|replay|fuzz|bench|export|all> \
          [--config FILE] [--set section.key=value]... [--deployment D] [--workload W] [--size S] \
          [--spec FILE] [--smoke] [--report out.json|out.csv] [--record out.log] \
          [--shards N] [--threads N] \
@@ -335,6 +339,46 @@ pub fn run(cli: &Cli) {
                 Err(e) => {
                     eprintln!("export failed: {e}");
                     std::process::exit(1);
+                }
+            }
+        }
+        "load" => {
+            use crate::load::{self, LoadSpec};
+            let spec = if cli.smoke {
+                load::smoke_spec()
+            } else if let Some(path) = &cli.spec {
+                LoadSpec::from_file(path).unwrap_or_else(|e| {
+                    eprintln!("error: {e:#}");
+                    std::process::exit(1);
+                })
+            } else {
+                eprintln!("load needs --spec FILE or --smoke");
+                usage();
+            };
+            let queue = match cli.shards {
+                Some(n) => {
+                    crate::sim::QueueKind::Sharded(crate::scenario::resolve_threads(n))
+                }
+                None => crate::sim::QueueKind::Slab,
+            };
+            // `--seed` (shared with fuzz) picks the arrival-stream and
+            // world seed; default 1, ci.sh pins 42.
+            let out = crate::load::run_load_on(cfg, &spec, cli.fuzz_seed, queue)
+                .unwrap_or_else(|e| {
+                    eprintln!("error: {e:#}");
+                    std::process::exit(1);
+                });
+            print!("{}", out.render());
+            if let Some(path) = &cli.report {
+                match load::write_and_verify(&out, path) {
+                    Ok(format) => println!(
+                        "wrote {path} ({format}, {} steps, round-trip OK)",
+                        out.steps.len()
+                    ),
+                    Err(e) => {
+                        eprintln!("load report export failed: {e:#}");
+                        std::process::exit(1);
+                    }
                 }
             }
         }

@@ -17,6 +17,7 @@ pub mod config;
 pub mod consensus;
 pub mod ids;
 pub mod jm;
+pub mod load;
 pub mod master;
 pub mod metrics;
 pub mod net;

@@ -1,0 +1,103 @@
+//! Open-loop load engine: ramp a mixed arrival stream to the saturation
+//! knee (`houtu load`).
+//!
+//! Every campaign cell runs a fixed handful of jobs; this subsystem
+//! measures what the replicated-JM architecture does under a
+//! *continuous* arrival stream — the regime a practical geo-distributed
+//! service actually lives in. Three pieces:
+//!
+//! * **[`spec`]** — a TOML-described workload: job classes
+//!   (kind × size × weight × home) crossed with arrival processes
+//!   (Poisson, bursty MMPP-2, diurnal), plus the ramp controller
+//!   (`initial_rps` / `increment_rps` / `step_secs` / `max_rps`) and the
+//!   SLO (`slo_p99_secs`, `slo_goodput_frac`). Chaos events and config
+//!   overrides reuse the campaign DSL unchanged, so a load cell composes
+//!   with `kill_dc@` / `spot_storm@` like any scenario.
+//! * **[`gen`]** — the *open-loop* generator: the whole arrival schedule
+//!   is a pure function of `(spec, seed, topology)`, materialized up
+//!   front and scheduled as typed [`crate::deploy::SimEvent`]s.
+//!   Submission never waits for completion, so queueing delay shows up
+//!   in the JRT instead of being hidden closed-loop style.
+//! * **[`run`]** + **[`report`]** — one continuous simulation per ramp;
+//!   per-step windows (keyed by submission time) fold p50/p99/p999 JRT
+//!   and goodput from the metrics layer; the first step that breaks the
+//!   SLO is the **knee**. Reports render as a table and export as
+//!   JSON/CSV with round-trip verification; every run carries the same
+//!   order-sensitive trace digest as campaign cells, so `same spec +
+//!   seed ⇒ same digest` on every queue engine.
+//!
+//! CLI: `houtu load [--spec FILE | --smoke] [--seed S]
+//! [--report out.json|out.csv] [--shards N]`. `ci.sh` pins the smoke
+//! ramp's digest across engines; `houtu bench` times the same cell as
+//! the `load-knee` workload. See `docs/LOAD.md` for the schema and the
+//! knee definition.
+
+pub mod gen;
+pub mod report;
+pub mod run;
+pub mod spec;
+
+pub use gen::{arrivals, Arrival};
+pub use report::write_and_verify;
+pub use run::{run_load, run_load_on, Knee, LoadOutcome, StepStats};
+pub use spec::{ArrivalProcess, ClassSpec, LoadSpec, RampSpec, SloSpec};
+
+use crate::config::Deployment;
+use crate::dag::{SizeClass, WorkloadKind};
+use crate::ids::DcId;
+
+/// The built-in smoke ramp (`houtu load --smoke`, the `load-knee` bench
+/// workload, and the ci.sh determinism gate): a three-class mix — steady
+/// Poisson wordcount, bursty ML, diurnal PageRank — ramped 0.03 → 0.09
+/// jobs/s in 120 s steps over the default 4-DC topology. Small enough
+/// to finish in seconds, busy enough (~20 arrivals) to exercise every
+/// arrival process and the per-step folding.
+pub fn smoke_spec() -> LoadSpec {
+    LoadSpec {
+        name: "smoke-ramp".to_string(),
+        deployment: Deployment::Houtu,
+        classes: vec![
+            ClassSpec {
+                name: "ml-burst".to_string(),
+                kind: WorkloadKind::IterativeMl,
+                size: SizeClass::Small,
+                weight: 1.0,
+                home: Some(DcId(1)),
+                arrival: ArrivalProcess::Bursty {
+                    factor: 4.0,
+                    burst_secs: 30.0,
+                    calm_secs: 120.0,
+                },
+            },
+            ClassSpec {
+                name: "pr-diurnal".to_string(),
+                kind: WorkloadKind::PageRank,
+                size: SizeClass::Small,
+                weight: 1.0,
+                home: None,
+                arrival: ArrivalProcess::Diurnal { period_secs: 240.0, amplitude: 0.8 },
+            },
+            ClassSpec {
+                name: "wc-steady".to_string(),
+                kind: WorkloadKind::WordCount,
+                size: SizeClass::Small,
+                weight: 3.0,
+                home: None,
+                arrival: ArrivalProcess::Poisson,
+            },
+        ],
+        ramp: RampSpec {
+            initial_rps: 0.03,
+            increment_rps: 0.03,
+            step_secs: 120.0,
+            max_rps: 0.09,
+            drain_secs: 480.0,
+        },
+        // Generous on purpose: the smoke gate pins determinism (digest +
+        // knee), not a tuned saturation point — 64 containers at
+        // ≤ 0.09 jobs/s of smalls is far from the knee.
+        slo: SloSpec { p99_secs: 900.0, goodput_frac: 0.5 },
+        events: vec![],
+        overrides: vec![],
+    }
+}

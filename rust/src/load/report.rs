@@ -1,0 +1,320 @@
+//! Load report export: the human table, plus JSON/CSV serialization with
+//! the same write-then-read-back round-trip verification the campaign
+//! report uses (the crate stays dependency-free, so both writers are
+//! hand-rolled and the verifier re-parses with [`crate::util::json`]).
+//!
+//! The CSV is tidy-shaped: one row per ramp step, with the run-level
+//! columns (name, seed, digest, knee) repeated on every row — digests
+//! are 16-hex strings because JSON numbers (and spreadsheet importers)
+//! cannot carry a u64 losslessly.
+
+use std::fmt::Write as _;
+
+use crate::util::error::{Context, Result};
+use crate::util::json::{self, Json};
+use crate::{anyhow, ensure};
+
+use super::run::LoadOutcome;
+
+fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Quote a CSV cell when it needs it (commas, quotes, newlines).
+fn csv_cell(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+const STEP_COLUMNS: [&str; 12] = [
+    "step",
+    "offered_rps",
+    "from_secs",
+    "until_secs",
+    "submitted",
+    "completed",
+    "p50_secs",
+    "p99_secs",
+    "p999_secs",
+    "goodput_rps",
+    "goodput_frac",
+    "slo_ok",
+];
+
+impl LoadOutcome {
+    /// The one-line knee verdict (also printed by the CLI, greppably).
+    pub fn knee_line(&self) -> String {
+        match &self.knee {
+            Some(k) => {
+                let sustained = match k.sustained_rps {
+                    Some(r) => format!("{r:.3} rps sustained"),
+                    None => "nothing sustained".to_string(),
+                };
+                format!(
+                    "knee: broke at step {} ({:.3} rps): {}; {sustained}",
+                    k.broke_step, k.broke_rps, k.reason
+                )
+            }
+            None => {
+                let top = self.steps.last().map_or(0.0, |s| s.offered_rps);
+                format!("knee: none up to {top:.3} rps (SLO held at every step)")
+            }
+        }
+    }
+
+    /// Human-readable ramp table + verdict.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        writeln!(
+            out,
+            "Load {:?} on {}, seed {} — digest {:016x}",
+            self.name, self.deployment, self.seed, self.digest
+        )
+        .unwrap();
+        writeln!(
+            out,
+            "  {} arrivals, {} completed; SLO: p99 <= {:.1}s, goodput >= {:.0}%",
+            self.arrivals,
+            self.completed,
+            self.slo_p99_secs,
+            self.slo_goodput_frac * 100.0
+        )
+        .unwrap();
+        writeln!(
+            out,
+            "{:>5} {:>9} {:>10} {:>10} {:>8} {:>8} {:>8} {:>9} {:>8} {:>5}",
+            "step", "rps", "submitted", "completed", "p50(s)", "p99(s)", "p999(s)",
+            "goodput", "frac", "slo"
+        )
+        .unwrap();
+        for s in &self.steps {
+            writeln!(
+                out,
+                "{:>5} {:>9.3} {:>10} {:>10} {:>8.1} {:>8.1} {:>8.1} {:>9.3} {:>7.0}% {:>5}",
+                s.step,
+                s.offered_rps,
+                s.submitted,
+                s.completed,
+                s.p50_secs,
+                s.p99_secs,
+                s.p999_secs,
+                s.goodput_rps,
+                s.goodput_frac * 100.0,
+                if s.slo_ok { "ok" } else { "BRK" }
+            )
+            .unwrap();
+        }
+        writeln!(out, "{}", self.knee_line()).unwrap();
+        for v in &self.violations {
+            writeln!(out, "violation: {v}").unwrap();
+        }
+        out
+    }
+
+    /// The outcome as a JSON document.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"load\": {},\n", json::escape(&self.name)));
+        out.push_str(&format!("  \"deployment\": {},\n", json::escape(self.deployment)));
+        out.push_str(&format!("  \"seed\": {},\n", self.seed));
+        out.push_str(&format!("  \"digest\": \"{:016x}\",\n", self.digest));
+        out.push_str(&format!("  \"events_processed\": {},\n", self.events_processed));
+        out.push_str(&format!("  \"peak_pending\": {},\n", self.peak_pending));
+        out.push_str(&format!("  \"arrivals\": {},\n", self.arrivals));
+        out.push_str(&format!("  \"completed\": {},\n", self.completed));
+        out.push_str(&format!(
+            "  \"slo\": {{\"p99_secs\": {}, \"goodput_frac\": {}}},\n",
+            json_f64(self.slo_p99_secs),
+            json_f64(self.slo_goodput_frac)
+        ));
+        match &self.knee {
+            Some(k) => {
+                let sustained = match k.sustained_rps {
+                    Some(r) => json_f64(r),
+                    None => "null".to_string(),
+                };
+                out.push_str(&format!(
+                    "  \"knee\": {{\"broke_step\": {}, \"broke_rps\": {}, \
+                     \"sustained_rps\": {sustained}, \"reason\": {}}},\n",
+                    k.broke_step,
+                    json_f64(k.broke_rps),
+                    json::escape(&k.reason)
+                ));
+            }
+            None => out.push_str("  \"knee\": null,\n"),
+        }
+        out.push_str("  \"steps\": [\n");
+        for (i, s) in self.steps.iter().enumerate() {
+            out.push_str("    {");
+            out.push_str(&format!("\"step\": {}, ", s.step));
+            out.push_str(&format!("\"offered_rps\": {}, ", json_f64(s.offered_rps)));
+            out.push_str(&format!("\"from_secs\": {}, ", json_f64(s.from_secs)));
+            out.push_str(&format!("\"until_secs\": {}, ", json_f64(s.until_secs)));
+            out.push_str(&format!("\"submitted\": {}, ", s.submitted));
+            out.push_str(&format!("\"completed\": {}, ", s.completed));
+            out.push_str(&format!("\"p50_secs\": {}, ", json_f64(s.p50_secs)));
+            out.push_str(&format!("\"p99_secs\": {}, ", json_f64(s.p99_secs)));
+            out.push_str(&format!("\"p999_secs\": {}, ", json_f64(s.p999_secs)));
+            out.push_str(&format!("\"goodput_rps\": {}, ", json_f64(s.goodput_rps)));
+            out.push_str(&format!("\"goodput_frac\": {}, ", json_f64(s.goodput_frac)));
+            out.push_str(&format!("\"slo_ok\": {}", s.slo_ok));
+            out.push_str(if i + 1 == self.steps.len() { "}\n" } else { "},\n" });
+        }
+        out.push_str("  ],\n");
+        let viol: Vec<String> = self.violations.iter().map(|v| json::escape(v)).collect();
+        out.push_str(&format!("  \"violations\": [{}]\n", viol.join(", ")));
+        out.push_str("}\n");
+        out
+    }
+
+    /// The outcome as tidy CSV: one row per step, run-level columns
+    /// repeated.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str("load,seed,deployment,digest,knee_step,knee_rps,sustained_rps,knee_reason,");
+        out.push_str(&STEP_COLUMNS.join(","));
+        out.push('\n');
+        let (knee_step, knee_rps, sustained, reason) = match &self.knee {
+            Some(k) => (
+                k.broke_step.to_string(),
+                format!("{}", k.broke_rps),
+                k.sustained_rps.map(|r| format!("{r}")).unwrap_or_default(),
+                k.reason.clone(),
+            ),
+            None => (String::new(), String::new(), String::new(), String::new()),
+        };
+        for s in &self.steps {
+            out.push_str(&format!(
+                "{},{},{},{:016x},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                csv_cell(&self.name),
+                self.seed,
+                csv_cell(self.deployment),
+                self.digest,
+                knee_step,
+                knee_rps,
+                sustained,
+                csv_cell(&reason),
+                s.step,
+                s.offered_rps,
+                s.from_secs,
+                s.until_secs,
+                s.submitted,
+                s.completed,
+                s.p50_secs,
+                s.p99_secs,
+                s.p999_secs,
+                s.goodput_rps,
+                s.goodput_frac,
+                s.slo_ok
+            ));
+        }
+        out
+    }
+}
+
+/// Which format a path's extension selects.
+fn format_of(path: &str) -> Result<&'static str> {
+    if path.ends_with(".json") {
+        Ok("json")
+    } else if path.ends_with(".csv") {
+        Ok("csv")
+    } else {
+        Err(anyhow!("report path {path:?} must end in .json or .csv"))
+    }
+}
+
+/// Write the outcome to `path` (format by extension), read the file back
+/// and verify the round trip: byte-identical text, and (for JSON) a
+/// successful re-parse whose digest, knee and step count match.
+pub fn write_and_verify(out: &LoadOutcome, path: &str) -> Result<&'static str> {
+    let format = format_of(path)?;
+    let text = match format {
+        "json" => out.to_json(),
+        _ => out.to_csv(),
+    };
+    std::fs::write(path, &text).with_context(|| format!("writing {path}"))?;
+    let back = std::fs::read_to_string(path).with_context(|| format!("re-reading {path}"))?;
+    ensure!(back == text, "load report {path}: read-back text differs from what was written");
+    match format {
+        "json" => verify_json(out, &back)?,
+        _ => verify_csv(out, &back)?,
+    }
+    Ok(format)
+}
+
+fn verify_json(out: &LoadOutcome, text: &str) -> Result<()> {
+    let doc = json::parse(text).map_err(|e| anyhow!("load report is not valid JSON: {e}"))?;
+    ensure!(
+        doc.get("load").and_then(Json::as_str) == Some(out.name.as_str()),
+        "load name did not round-trip"
+    );
+    let digest = doc.get("digest").and_then(Json::as_str).context("digest missing")?;
+    ensure!(
+        u64::from_str_radix(digest, 16).ok() == Some(out.digest),
+        "digest did not round-trip"
+    );
+    let steps = doc.get("steps").and_then(Json::as_array).context("steps missing")?;
+    ensure!(
+        steps.len() == out.steps.len(),
+        "step count did not round-trip: {} vs {}",
+        steps.len(),
+        out.steps.len()
+    );
+    for (got, want) in steps.iter().zip(&out.steps) {
+        let p99 = got.get("p99_secs").and_then(Json::as_f64).context("p99_secs missing")?;
+        ensure!(
+            p99.to_bits() == want.p99_secs.to_bits(),
+            "step {} p99 did not round-trip: {} vs {}",
+            want.step,
+            p99,
+            want.p99_secs
+        );
+        let ok = got.get("slo_ok").and_then(Json::as_bool).context("slo_ok missing")?;
+        ensure!(ok == want.slo_ok, "step {} slo_ok did not round-trip", want.step);
+    }
+    let knee = doc.get("knee").context("knee missing")?;
+    match &out.knee {
+        Some(k) => {
+            let step = knee
+                .get("broke_step")
+                .and_then(Json::as_u64)
+                .context("knee.broke_step missing")?;
+            ensure!(step as usize == k.broke_step, "knee step did not round-trip");
+        }
+        None => ensure!(*knee == Json::Null, "absent knee must serialize as null"),
+    }
+    Ok(())
+}
+
+fn verify_csv(out: &LoadOutcome, text: &str) -> Result<()> {
+    let mut lines = text.lines();
+    let header = lines.next().context("CSV is empty")?;
+    let want_cols = 8 + STEP_COLUMNS.len();
+    ensure!(
+        header.split(',').count() == want_cols,
+        "CSV header has {} columns, expected {want_cols}",
+        header.split(',').count()
+    );
+    let rows: Vec<&str> = lines.filter(|l| !l.is_empty()).collect();
+    ensure!(
+        rows.len() == out.steps.len(),
+        "CSV row count did not round-trip: {} vs {}",
+        rows.len(),
+        out.steps.len()
+    );
+    for row in &rows {
+        ensure!(
+            row.contains(&format!("{:016x}", out.digest)),
+            "CSV row is missing the run digest"
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,223 @@
+//! The ramp runner: schedule the open-loop arrival stream on one
+//! continuous simulation, fold the trace into per-step windows, evaluate
+//! the SLO per step and locate the saturation knee.
+//!
+//! One sim per ramp (not one per step): queue buildup is the *point* of
+//! an open-loop knee hunt, so backlog must carry from step to step the
+//! way it would on a real cluster. Latency is credited to the step that
+//! *submitted* the job (completions may land later, inside a following
+//! step or the drain window), which is the standard open-loop accounting
+//! — a saturated step owns the queueing delay it caused.
+
+use crate::config::Config;
+use crate::deploy::{build_sim_with, SimEvent};
+use crate::scenario::runner::{install_probe, schedule_events};
+use crate::scenario::{check_world, StreamChecker};
+use crate::sim::{secs_f, QueueKind};
+use crate::util::error::Result;
+use crate::util::stats;
+
+use super::gen::{arrivals, Arrival};
+use super::spec::LoadSpec;
+
+/// One ramp step's folded outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepStats {
+    pub step: usize,
+    /// Offered (not achieved) arrival rate — the open-loop setpoint.
+    pub offered_rps: f64,
+    pub from_secs: f64,
+    pub until_secs: f64,
+    /// Jobs submitted inside the window.
+    pub submitted: usize,
+    /// Of those, jobs that completed by the run horizon.
+    pub completed: usize,
+    pub p50_secs: f64,
+    pub p99_secs: f64,
+    pub p999_secs: f64,
+    /// `completed / window length` — achieved throughput.
+    pub goodput_rps: f64,
+    /// `completed / submitted`; 1.0 for a window with no submissions.
+    pub goodput_frac: f64,
+    /// SLO verdict; vacuously true for a window with no submissions.
+    pub slo_ok: bool,
+}
+
+/// Where (and why) the ramp broke the SLO.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Knee {
+    /// First step that broke the SLO.
+    pub broke_step: usize,
+    /// That step's offered rate.
+    pub broke_rps: f64,
+    /// Highest offered rate of an earlier step that *held* the SLO
+    /// (with at least one submission); `None` if nothing held.
+    pub sustained_rps: Option<f64>,
+    pub reason: String,
+}
+
+/// A finished load run: the digest-pinned outcome plus the ramp report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadOutcome {
+    pub name: String,
+    pub deployment: &'static str,
+    pub seed: u64,
+    /// Order-sensitive fold of the run's trace stream — same spec + seed
+    /// ⇒ same digest, on every queue engine.
+    pub digest: u64,
+    pub events_processed: u64,
+    pub peak_pending: usize,
+    /// Total jobs scheduled by the generator.
+    pub arrivals: usize,
+    /// Total jobs completed by the horizon.
+    pub completed: usize,
+    pub slo_p99_secs: f64,
+    pub slo_goodput_frac: f64,
+    pub steps: Vec<StepStats>,
+    pub knee: Option<Knee>,
+    /// Invariant findings, minus `job-terminates` (an overloaded
+    /// open-loop run legitimately leaves jobs in flight at the horizon;
+    /// that is the knee, not a bug). Informational — the load verdict is
+    /// the knee, not a pass/fail gate.
+    pub violations: Vec<String>,
+}
+
+/// [`run_load_on`] on the default queue engine.
+pub fn run_load(base: &Config, spec: &LoadSpec, seed: u64) -> Result<LoadOutcome> {
+    run_load_on(base, spec, seed, QueueKind::Slab)
+}
+
+/// Execute one load cell: build the config through the scenario stack
+/// (overrides + chaos validation), schedule the precomputed arrival
+/// stream and the chaos events, run to the horizon and fold the report.
+pub fn run_load_on(
+    base: &Config,
+    spec: &LoadSpec,
+    seed: u64,
+    queue: QueueKind,
+) -> Result<LoadOutcome> {
+    let cfg = spec.build_config(base, seed)?;
+    let num_dcs = cfg.topology.num_dcs();
+    let schedule: Vec<Arrival> = arrivals(spec, seed, num_dcs);
+    let rates = spec.step_rates();
+    let step_secs = spec.ramp.step_secs;
+    let horizon = secs_f(spec.horizon_secs());
+    let mode = cfg.deployment;
+    let deployment = mode.name();
+    let mut sim = build_sim_with(cfg, mode, horizon, queue);
+    install_probe(&mut sim, horizon);
+    let stream = StreamChecker::install(&sim.state);
+    for a in &schedule {
+        // `max(1)`: t=0 submissions move to tick 1, after the timer
+        // install, same as the single-job scenario path.
+        sim.schedule_event_at(
+            secs_f(a.at_secs).max(1),
+            SimEvent::SubmitJob { kind: a.kind, size: a.size, home: a.home },
+        );
+    }
+    schedule_events(&mut sim, &spec.events);
+    sim.run_until(horizon);
+    let makespan = sim.state.metrics.makespan();
+    sim.state.bill_machines(makespan);
+    for v in stream.borrow().violations() {
+        if sim.state.probe_violations.len() < 64 {
+            sim.state.probe_violations.push(v.clone());
+        }
+    }
+    let events_processed = sim.events_processed;
+    let peak_pending = sim.peak_pending();
+    let world = sim.state;
+
+    // Fold the per-job records into per-step windows, keyed by
+    // submission time. `min(last)` absorbs float edge rounding on the
+    // final boundary.
+    let nsteps = rates.len();
+    let mut submitted = vec![0usize; nsteps];
+    let mut latencies: Vec<Vec<f64>> = vec![Vec::new(); nsteps];
+    let mut completed_total = 0usize;
+    for rec in world.metrics.jobs.values() {
+        let k = ((rec.submitted_secs / step_secs).floor().max(0.0) as usize).min(nsteps - 1);
+        submitted[k] += 1;
+        if let Some(jrt) = rec.jrt() {
+            latencies[k].push(jrt);
+            completed_total += 1;
+        }
+    }
+    let mut steps = Vec::with_capacity(nsteps);
+    for (k, &offered_rps) in rates.iter().enumerate() {
+        let mut lat = std::mem::take(&mut latencies[k]);
+        lat.sort_by(f64::total_cmp);
+        let sub = submitted[k];
+        let done = lat.len();
+        let goodput_frac = if sub == 0 { 1.0 } else { done as f64 / sub as f64 };
+        let p99 = stats::percentile_sorted(&lat, 99.0);
+        let slo_ok =
+            sub == 0 || (p99 <= spec.slo.p99_secs && goodput_frac >= spec.slo.goodput_frac);
+        steps.push(StepStats {
+            step: k,
+            offered_rps,
+            from_secs: k as f64 * step_secs,
+            until_secs: (k + 1) as f64 * step_secs,
+            submitted: sub,
+            completed: done,
+            p50_secs: stats::percentile_sorted(&lat, 50.0),
+            p99_secs: p99,
+            p999_secs: stats::percentile_sorted(&lat, 99.9),
+            goodput_rps: done as f64 / step_secs,
+            goodput_frac,
+            slo_ok,
+        });
+    }
+
+    let mut knee = None;
+    let mut sustained_rps = None;
+    for s in &steps {
+        if s.submitted == 0 {
+            continue;
+        }
+        if s.slo_ok {
+            sustained_rps = Some(s.offered_rps);
+            continue;
+        }
+        let mut why = Vec::new();
+        if s.p99_secs > spec.slo.p99_secs {
+            why.push(format!("p99 {:.1}s > {:.1}s", s.p99_secs, spec.slo.p99_secs));
+        }
+        if s.goodput_frac < spec.slo.goodput_frac {
+            why.push(format!(
+                "goodput {:.0}% < {:.0}%",
+                s.goodput_frac * 100.0,
+                spec.slo.goodput_frac * 100.0
+            ));
+        }
+        knee = Some(Knee {
+            broke_step: s.step,
+            broke_rps: s.offered_rps,
+            sustained_rps,
+            reason: why.join(", "),
+        });
+        break;
+    }
+
+    let violations: Vec<String> = check_world(&world)
+        .iter()
+        .filter(|v| v.check != "job-terminates")
+        .map(|v| v.to_string())
+        .collect();
+
+    Ok(LoadOutcome {
+        name: spec.name.clone(),
+        deployment,
+        seed,
+        digest: world.trace_digest(),
+        events_processed,
+        peak_pending,
+        arrivals: schedule.len(),
+        completed: completed_total,
+        slo_p99_secs: spec.slo.p99_secs,
+        slo_goodput_frac: spec.slo.goodput_frac,
+        steps,
+        knee,
+        violations,
+    })
+}

@@ -1,0 +1,539 @@
+//! Declarative load specs: job-class mix × arrival processes × ramp ×
+//! SLO, parsed from the same TOML subset as campaign files.
+//!
+//! A load file has one `[load]` section (ramp, SLO, chaos, overrides)
+//! and any number of `[class.<name>]` sections (one per job class). The
+//! TOML subset has no nested tables, so chaos events reuse the campaign
+//! `kind@time:args` string DSL ([`ChaosEvent::parse`]) — a load cell
+//! composes with `kill_dc@` / `spot_storm@` exactly like a scenario.
+//!
+//! ```toml
+//! [load]
+//! name = "knee-hunt"
+//! deployment = "houtu"         # houtu|cent-dyna|cent-stat|decent-stat
+//! initial_rps = 0.05           # ramp start (jobs per second, open loop)
+//! increment_rps = 0.05         # added per step
+//! step_secs = 180              # dwell per step
+//! max_rps = 0.30               # ramp ceiling (inclusive)
+//! drain_secs = 300             # post-ramp window for in-flight jobs
+//! slo_p99_secs = 600           # p99 JRT ceiling per step
+//! slo_goodput_frac = 0.9       # completed/submitted floor per step
+//! events = ["spot_storm@0:dc1,600,4"]
+//! overrides = ["cloud.revocations=true"]
+//!
+//! [class.wc-small]
+//! kind = "wordcount"           # wordcount|tpch|ml|pagerank
+//! size = "small"               # small|medium|large
+//! weight = 3.0                 # share of the offered rate
+//! home = "spread"              # submitting DC: index, or "spread"
+//! arrival = "poisson"          # poisson|bursty|diurnal
+//!
+//! [class.ml-burst]
+//! kind = "ml"
+//! size = "small"
+//! weight = 1.0
+//! home = 1
+//! arrival = "bursty"           # MMPP-2: calm/burst phase switching
+//! burst_factor = 4.0           # burst rate = factor × calm rate
+//! burst_secs = 30              # mean burst dwell
+//! calm_secs = 120              # mean calm dwell
+//! ```
+//!
+//! Classes are keyed by section name; the subset parser sorts sections
+//! alphabetically, so the class *index* order (which the arrival
+//! generator's RNG streams key on) is the sorted-name order — renaming a
+//! class legitimately changes the stream, adding an unrelated key does
+//! not.
+
+use crate::config::toml::{self, Value};
+use crate::config::{Config, Deployment};
+use crate::dag::{SizeClass, WorkloadKind};
+use crate::ids::DcId;
+use crate::scenario::{ChaosEvent, ScenarioSpec, ScenarioWorkload};
+use crate::util::error::{Context, Result};
+use crate::{bail, ensure};
+
+/// Hard cap on ramp steps (guards runaway `increment_rps` → `max_rps`
+/// combinations; a real knee hunt is tens of steps).
+pub const MAX_STEPS: usize = 10_000;
+
+/// Hard cap on the *expected* total arrival count across the whole ramp
+/// — an open-loop spec that asks for more than this is a config error,
+/// not a workload (the DES event budget would absorb it, slowly).
+pub const MAX_EXPECTED_ARRIVALS: f64 = 1_000_000.0;
+
+/// How a class's arrivals are spaced within each ramp step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson at the class's rate share.
+    Poisson,
+    /// MMPP-2: exponentially-dwelling calm/burst phases; the burst phase
+    /// runs at `factor ×` the calm rate, and the calm rate is scaled so
+    /// the long-run average still matches the class's rate share.
+    Bursty { factor: f64, burst_secs: f64, calm_secs: f64 },
+    /// Sinusoidally-modulated Poisson (thinned NHPP):
+    /// `rate(t) = r·(1 + amplitude·sin(2πt/period))` over absolute sim
+    /// time, so the cycle phase is continuous across ramp steps.
+    Diurnal { period_secs: f64, amplitude: f64 },
+}
+
+/// One job class of the mixed workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassSpec {
+    pub name: String,
+    pub kind: WorkloadKind,
+    pub size: SizeClass,
+    /// Share of the step's offered rate (normalized over all classes).
+    pub weight: f64,
+    /// Submitting DC; `None` = spread uniformly per arrival.
+    pub home: Option<DcId>,
+    pub arrival: ArrivalProcess,
+}
+
+/// The open-loop ramp controller's knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RampSpec {
+    pub initial_rps: f64,
+    pub increment_rps: f64,
+    pub step_secs: f64,
+    /// Inclusive ceiling: the ramp holds a step at every rate
+    /// `initial + k·increment ≤ max (+ε)`.
+    pub max_rps: f64,
+    /// Extra horizon after the last step so in-flight work can land.
+    pub drain_secs: f64,
+}
+
+/// What "saturated" means: a step whose p99 JRT exceeds `p99_secs` *or*
+/// whose completed/submitted fraction falls below `goodput_frac` breaks
+/// the SLO; the first broken step is the knee.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    pub p99_secs: f64,
+    pub goodput_frac: f64,
+}
+
+/// A fully-described load cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadSpec {
+    pub name: String,
+    pub deployment: Deployment,
+    pub classes: Vec<ClassSpec>,
+    pub ramp: RampSpec,
+    pub slo: SloSpec,
+    /// Chaos schedule, same DSL and semantics as scenario cells.
+    pub events: Vec<ChaosEvent>,
+    /// `section.key=value` strings, same surface as the CLI `--set`.
+    pub overrides: Vec<String>,
+}
+
+impl LoadSpec {
+    /// The offered rate of every ramp step, in step order.
+    pub fn step_rates(&self) -> Vec<f64> {
+        let mut rates = Vec::new();
+        let mut r = self.ramp.initial_rps;
+        // The ε absorbs float accumulation so `0.05 + 5×0.05` still
+        // counts as ≤ 0.30.
+        while r <= self.ramp.max_rps + 1e-9 && rates.len() < MAX_STEPS {
+            rates.push(r);
+            r += self.ramp.increment_rps;
+        }
+        if rates.is_empty() {
+            rates.push(self.ramp.initial_rps);
+        }
+        rates
+    }
+
+    /// Ramp end (seconds): when the last step's window closes.
+    pub fn ramp_end_secs(&self) -> f64 {
+        self.step_rates().len() as f64 * self.ramp.step_secs
+    }
+
+    /// Full run horizon (seconds): ramp plus the drain window.
+    pub fn horizon_secs(&self) -> f64 {
+        self.ramp_end_secs() + self.ramp.drain_secs
+    }
+
+    /// The synthetic scenario this load cell rides on: its chaos events
+    /// and overrides under a placeholder workload (arrivals are scheduled
+    /// by the load runner, not by the scenario workload), so
+    /// [`ScenarioSpec::build_config`] supplies override application,
+    /// chaos-vs-topology fit checks and storm/WAN overlap validation
+    /// unchanged.
+    pub fn scenario(&self) -> ScenarioSpec {
+        ScenarioSpec {
+            name: format!("load:{}", self.name),
+            deployment: self.deployment,
+            regions: 0,
+            workload: ScenarioWorkload::SingleJob {
+                kind: WorkloadKind::WordCount,
+                size: SizeClass::Small,
+                home: DcId(0),
+            },
+            events: self.events.clone(),
+            overrides: self.overrides.clone(),
+        }
+    }
+
+    /// Materialize the run config (base ⊕ seed ⊕ deployment ⊕ overrides,
+    /// then the scenario-level validation stack).
+    pub fn build_config(&self, base: &Config, seed: u64) -> Result<Config> {
+        self.validate()?;
+        let cfg = self.scenario().build_config(base, seed)?;
+        for cl in &self.classes {
+            if let Some(home) = cl.home {
+                ensure!(
+                    home.0 < cfg.topology.num_dcs(),
+                    "load {:?}: class {:?} home dc{} outside the {}-region topology",
+                    self.name,
+                    cl.name,
+                    home.0,
+                    cfg.topology.num_dcs()
+                );
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Spec-level sanity: every knob finite and in range, and the ramp
+    /// bounded in both step count and expected arrival volume.
+    pub fn validate(&self) -> Result<()> {
+        let n = &self.name;
+        ensure!(!self.classes.is_empty(), "load {n:?}: needs at least one [class.*]");
+        let r = &self.ramp;
+        for (label, v) in [
+            ("initial_rps", r.initial_rps),
+            ("increment_rps", r.increment_rps),
+            ("step_secs", r.step_secs),
+            ("max_rps", r.max_rps),
+        ] {
+            ensure!(v.is_finite() && v > 0.0, "load {n:?}: {label} must be finite and > 0");
+        }
+        ensure!(
+            r.drain_secs.is_finite() && r.drain_secs >= 0.0,
+            "load {n:?}: drain_secs must be finite and >= 0"
+        );
+        ensure!(r.max_rps >= r.initial_rps, "load {n:?}: max_rps must be >= initial_rps");
+        let steps = ((r.max_rps - r.initial_rps) / r.increment_rps) as usize + 1;
+        ensure!(
+            steps <= MAX_STEPS,
+            "load {n:?}: ramp would take {steps} steps (cap {MAX_STEPS})"
+        );
+        let expected: f64 = self.step_rates().iter().map(|rate| rate * r.step_secs).sum();
+        ensure!(
+            expected <= MAX_EXPECTED_ARRIVALS,
+            "load {n:?}: ramp expects ~{expected:.0} arrivals (cap {MAX_EXPECTED_ARRIVALS:.0})"
+        );
+        ensure!(
+            self.slo.p99_secs.is_finite() && self.slo.p99_secs > 0.0,
+            "load {n:?}: slo_p99_secs must be finite and > 0"
+        );
+        ensure!(
+            self.slo.goodput_frac.is_finite()
+                && self.slo.goodput_frac > 0.0
+                && self.slo.goodput_frac <= 1.0,
+            "load {n:?}: slo_goodput_frac must be in (0, 1]"
+        );
+        for cl in &self.classes {
+            let c = &cl.name;
+            ensure!(
+                cl.weight.is_finite() && cl.weight > 0.0,
+                "load {n:?}: class {c:?} weight must be finite and > 0"
+            );
+            match cl.arrival {
+                ArrivalProcess::Poisson => {}
+                ArrivalProcess::Bursty { factor, burst_secs, calm_secs } => {
+                    ensure!(
+                        factor.is_finite() && factor > 1.0,
+                        "load {n:?}: class {c:?} burst_factor must be > 1"
+                    );
+                    for (label, v) in [("burst_secs", burst_secs), ("calm_secs", calm_secs)] {
+                        ensure!(
+                            v.is_finite() && v > 0.0,
+                            "load {n:?}: class {c:?} {label} must be finite and > 0"
+                        );
+                    }
+                }
+                ArrivalProcess::Diurnal { period_secs, amplitude } => {
+                    ensure!(
+                        period_secs.is_finite() && period_secs > 0.0,
+                        "load {n:?}: class {c:?} period_secs must be finite and > 0"
+                    );
+                    ensure!(
+                        amplitude.is_finite() && (0.0..=1.0).contains(&amplitude),
+                        "load {n:?}: class {c:?} amplitude must be in [0, 1]"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse from TOML text (see the module docs for the schema).
+    pub fn parse(text: &str) -> Result<LoadSpec> {
+        let doc = toml::parse(text).map_err(|e| crate::anyhow!("load spec: {e}"))?;
+        let load = doc
+            .sections
+            .get("load")
+            .context("load spec: missing [load] section")?;
+        for section in doc.sections.keys() {
+            ensure!(
+                section == "load" || section.starts_with("class."),
+                "load spec: unknown section [{section}] (expected [load] or [class.<name>])"
+            );
+        }
+        const KNOWN: [&str; 11] = [
+            "name",
+            "deployment",
+            "initial_rps",
+            "increment_rps",
+            "step_secs",
+            "max_rps",
+            "drain_secs",
+            "slo_p99_secs",
+            "slo_goodput_frac",
+            "events",
+            "overrides",
+        ];
+        for k in load.keys() {
+            ensure!(
+                KNOWN.contains(&k.as_str()),
+                "load spec: unknown [load] key {k:?} (known: {})",
+                KNOWN.join(", ")
+            );
+        }
+        let name = load
+            .get("name")
+            .and_then(Value::as_str)
+            .unwrap_or("load")
+            .to_string();
+        let deployment = match load.get("deployment").and_then(Value::as_str) {
+            Some(s) => Deployment::parse(s)?,
+            None => Deployment::Houtu,
+        };
+        let f64_or = |k: &str, d: f64| -> f64 {
+            load.get(k).and_then(Value::as_f64).unwrap_or(d)
+        };
+        let ramp = RampSpec {
+            initial_rps: f64_or("initial_rps", 0.05),
+            increment_rps: f64_or("increment_rps", 0.05),
+            step_secs: f64_or("step_secs", 180.0),
+            max_rps: f64_or("max_rps", 0.3),
+            drain_secs: f64_or("drain_secs", 300.0),
+        };
+        let slo = SloSpec {
+            p99_secs: f64_or("slo_p99_secs", 600.0),
+            goodput_frac: f64_or("slo_goodput_frac", 0.9),
+        };
+        let str_array = |k: &str| -> Result<Vec<String>> {
+            match load.get(k) {
+                None => Ok(Vec::new()),
+                Some(v) => v
+                    .as_array()
+                    .with_context(|| format!("load {name:?}: {k} must be an array"))?
+                    .iter()
+                    .map(|x| {
+                        x.as_str().map(str::to_string).with_context(|| {
+                            format!("load {name:?}: {k} entries must be strings")
+                        })
+                    })
+                    .collect(),
+            }
+        };
+        let events = str_array("events")?
+            .iter()
+            .map(|s| ChaosEvent::parse(s))
+            .collect::<Result<Vec<_>>>()?;
+        let overrides = str_array("overrides")?;
+
+        let mut classes = Vec::new();
+        // BTreeMap order = alphabetical class names = stable class
+        // indices for the generator's RNG streams.
+        for (section, keys) in &doc.sections {
+            let Some(cname) = section.strip_prefix("class.") else { continue };
+            ensure!(!cname.is_empty(), "load {name:?}: empty class name in [{section}]");
+            const CKNOWN: [&str; 10] = [
+                "kind",
+                "size",
+                "weight",
+                "home",
+                "arrival",
+                "burst_factor",
+                "burst_secs",
+                "calm_secs",
+                "period_secs",
+                "amplitude",
+            ];
+            for k in keys.keys() {
+                ensure!(
+                    CKNOWN.contains(&k.as_str()),
+                    "load {name:?}: unknown [class.{cname}] key {k:?} (known: {})",
+                    CKNOWN.join(", ")
+                );
+            }
+            let get_str = |k: &str| keys.get(k).and_then(Value::as_str);
+            let get_f64 = |k: &str, d: f64| keys.get(k).and_then(Value::as_f64).unwrap_or(d);
+            let kind = match get_str("kind").unwrap_or("wordcount") {
+                "wordcount" => WorkloadKind::WordCount,
+                "tpch" => WorkloadKind::TpcH,
+                "ml" => WorkloadKind::IterativeMl,
+                "pagerank" => WorkloadKind::PageRank,
+                other => bail!(
+                    "load {name:?}: class {cname:?} unknown kind {other:?} \
+                     (wordcount|tpch|ml|pagerank)"
+                ),
+            };
+            let size = match get_str("size").unwrap_or("small") {
+                "small" => SizeClass::Small,
+                "medium" => SizeClass::Medium,
+                "large" => SizeClass::Large,
+                other => bail!("load {name:?}: class {cname:?} unknown size {other:?}"),
+            };
+            let home = match keys.get("home") {
+                None => None,
+                Some(v) => {
+                    if v.as_str() == Some("spread") {
+                        None
+                    } else if let Some(i) = v.as_i64() {
+                        ensure!(
+                            i >= 0,
+                            "load {name:?}: class {cname:?} home must be >= 0 or \"spread\""
+                        );
+                        Some(DcId(i as usize))
+                    } else {
+                        bail!(
+                            "load {name:?}: class {cname:?} home must be a DC index or \"spread\""
+                        );
+                    }
+                }
+            };
+            let arrival = match get_str("arrival").unwrap_or("poisson") {
+                "poisson" => ArrivalProcess::Poisson,
+                "bursty" => ArrivalProcess::Bursty {
+                    factor: get_f64("burst_factor", 4.0),
+                    burst_secs: get_f64("burst_secs", 60.0),
+                    calm_secs: get_f64("calm_secs", 240.0),
+                },
+                "diurnal" => ArrivalProcess::Diurnal {
+                    period_secs: get_f64("period_secs", 3600.0),
+                    amplitude: get_f64("amplitude", 0.5),
+                },
+                other => bail!(
+                    "load {name:?}: class {cname:?} unknown arrival {other:?} \
+                     (poisson|bursty|diurnal)"
+                ),
+            };
+            classes.push(ClassSpec {
+                name: cname.to_string(),
+                kind,
+                size,
+                weight: get_f64("weight", 1.0),
+                home,
+                arrival,
+            });
+        }
+
+        let spec =
+            LoadSpec { name, deployment, classes, ramp, slo, events, overrides };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// [`LoadSpec::parse`] from a file path.
+    pub fn from_file(path: &str) -> Result<LoadSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading load spec {path}"))?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FULL: &str = r#"
+[load]
+name = "knee-hunt"
+deployment = "houtu"
+initial_rps = 0.05
+increment_rps = 0.05
+step_secs = 180
+max_rps = 0.3
+drain_secs = 300
+slo_p99_secs = 600
+slo_goodput_frac = 0.9
+events = ["spot_storm@0:dc1,600,4"]
+overrides = ["cloud.revocations=true"]
+
+[class.ml-burst]
+kind = "ml"
+size = "small"
+weight = 1.0
+home = 1
+arrival = "bursty"
+burst_factor = 4.0
+burst_secs = 30
+calm_secs = 120
+
+[class.wc-small]
+kind = "wordcount"
+size = "small"
+weight = 3.0
+home = "spread"
+arrival = "poisson"
+"#;
+
+    #[test]
+    fn full_spec_parses_and_validates() {
+        let spec = LoadSpec::parse(FULL).expect("full spec parses");
+        assert_eq!(spec.name, "knee-hunt");
+        assert_eq!(spec.classes.len(), 2);
+        // BTreeMap section order: class indices follow sorted names.
+        assert_eq!(spec.classes[0].name, "ml-burst");
+        assert_eq!(spec.classes[1].name, "wc-small");
+        assert_eq!(spec.classes[1].home, None);
+        assert_eq!(spec.classes[0].home, Some(DcId(1)));
+        assert_eq!(spec.events.len(), 1);
+        assert_eq!(spec.step_rates().len(), 6); // 0.05 .. 0.30
+        assert!((spec.horizon_secs() - (6.0 * 180.0 + 300.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_keys_and_sections_are_rejected() {
+        let bad_key = FULL.replace("drain_secs = 300", "dran_secs = 300");
+        assert!(LoadSpec::parse(&bad_key).is_err(), "typoed [load] key must be rejected");
+        let bad_class_key = FULL.replace("burst_factor = 4.0", "burst_facter = 4.0");
+        assert!(LoadSpec::parse(&bad_class_key).is_err(), "typoed class key must be rejected");
+        let bad_section = format!("{FULL}\n[classs.typo]\nweight = 1.0\n");
+        assert!(LoadSpec::parse(&bad_section).is_err(), "typoed section must be rejected");
+    }
+
+    #[test]
+    fn invalid_ramps_are_rejected() {
+        for (from, to) in [
+            ("initial_rps = 0.05", "initial_rps = 0.0"),
+            ("max_rps = 0.3", "max_rps = 0.01"),
+            ("step_secs = 180", "step_secs = -5"),
+            ("slo_goodput_frac = 0.9", "slo_goodput_frac = 1.5"),
+            ("burst_factor = 4.0", "burst_factor = 0.5"),
+        ] {
+            let text = FULL.replace(from, to);
+            assert!(LoadSpec::parse(&text).is_err(), "{to:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn build_config_applies_overrides_and_checks_chaos_fit() {
+        let spec = LoadSpec::parse(FULL).unwrap();
+        let cfg = spec.build_config(&Config::default(), 42).expect("config builds");
+        assert_eq!(cfg.seed, 42);
+        assert!(cfg.cloud.revocations, "override must land");
+        let bad = LoadSpec {
+            events: vec![ChaosEvent::KillDc { at_secs: 10.0, dc: DcId(99) }],
+            ..spec
+        };
+        assert!(
+            bad.build_config(&Config::default(), 42).is_err(),
+            "chaos outside the topology must be rejected"
+        );
+    }
+}

@@ -113,7 +113,7 @@ pub fn run_scenario_hooked(
 /// equal timestamps — same-time DES events run in scheduling order, so a
 /// window beginning exactly where another ends always wins the boundary,
 /// regardless of the order events appear in the spec.
-fn schedule_events(sim: &mut WorldSim, events: &[ChaosEvent]) {
+pub(crate) fn schedule_events(sim: &mut WorldSim, events: &[ChaosEvent]) {
     let mut wan_actions: Vec<(f64, bool, f64)> = Vec::new(); // (t, is_start, factor)
     let mut storm_actions: Vec<(f64, bool, usize, f64)> = Vec::new(); // (t, is_start, dc, factor)
     for ev in events.iter().cloned() {
@@ -172,7 +172,7 @@ fn schedule_events(sim: &mut WorldSim, events: &[ChaosEvent]) {
 /// Arm the runtime invariant probe: fires every scheduling period, right
 /// after the period tick (installed later, so its events sort after the
 /// tick's at equal timestamps).
-fn install_probe(sim: &mut WorldSim, horizon: SimTime) {
+pub(crate) fn install_probe(sim: &mut WorldSim, horizon: SimTime) {
     let period = secs_f(sim.state.cfg.scheduler.period_l_secs);
     arm_probe(sim, period, horizon, HashMap::new());
 }
@@ -405,14 +405,35 @@ pub(crate) fn resolve_workers(parallelism: usize, jobs: usize) -> usize {
     resolve_threads(parallelism).min(jobs.max(1))
 }
 
+/// Extract a human-readable message from a caught panic payload.
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    p.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "non-string panic payload".into())
+}
+
 /// Run `n` indexed jobs on a pool of `workers` `std::thread`s and collect
 /// the results in index order, independent of worker interleaving. Shared
 /// by the campaign runner, the chaos fuzzer and (hence `pub`, but hidden
 /// — not a stable API) the golden-digest differential suite.
+///
+/// A panicking job is an error for the caller to absorb, never a pool
+/// failure: each `f(i)` runs under `catch_unwind`, so one job's panic
+/// can neither poison the result mutex nor unwind through
+/// `thread::scope` (which would re-raise on join and abort every
+/// sibling mid-flight). The old pool did exactly that — one panicking
+/// cell took the whole campaign down via the poisoned `slots` lock and
+/// the `expect("parallel worker lost a job")` collection.
 #[doc(hidden)]
-pub fn par_map<T: Send>(workers: usize, n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+pub fn par_try_map<T: Send>(
+    workers: usize,
+    n: usize,
+    f: impl Fn(usize) -> T + Sync,
+) -> Vec<std::result::Result<T, String>> {
     let next = AtomicUsize::new(0);
-    let slots: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+    let slots: Mutex<Vec<Option<std::result::Result<T, String>>>> =
+        Mutex::new((0..n).map(|_| None).collect());
     std::thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| loop {
@@ -420,16 +441,32 @@ pub fn par_map<T: Send>(workers: usize, n: usize, f: impl Fn(usize) -> T + Sync)
                 if i >= n {
                     break;
                 }
-                let out = f(i);
-                slots.lock().unwrap()[i] = Some(out);
+                let out = catch_unwind(AssertUnwindSafe(|| f(i))).map_err(panic_message);
+                // catch_unwind means no worker can die holding the lock,
+                // but recover from poison anyway: a slot write is
+                // all-or-nothing, so the data stays sound either way.
+                let mut guard = slots.lock().unwrap_or_else(|p| p.into_inner());
+                guard[i] = Some(out);
             });
         }
     });
     slots
         .into_inner()
-        .unwrap()
+        .unwrap_or_else(|p| p.into_inner())
         .into_iter()
-        .map(|o| o.expect("parallel worker lost a job"))
+        .enumerate()
+        .map(|(i, o)| o.unwrap_or_else(|| Err(format!("job {i} lost by the worker pool"))))
+        .collect()
+}
+
+/// [`par_try_map`] for infallible jobs: a panic in `f` still lets every
+/// sibling job finish, then resurfaces (with its payload) from the
+/// calling thread.
+#[doc(hidden)]
+pub fn par_map<T: Send>(workers: usize, n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    par_try_map(workers, n, f)
+        .into_iter()
+        .map(|r| r.unwrap_or_else(|msg| panic!("parallel worker panicked: {msg}")))
         .collect()
 }
 
@@ -447,10 +484,21 @@ pub fn run_campaign(base: &Config, spec: &CampaignSpec) -> CampaignReport {
 pub fn run_campaign_on(base: &Config, spec: &CampaignSpec, queue: QueueKind) -> CampaignReport {
     let plans = spec.expand();
     let workers = resolve_workers(spec.parallelism, plans.len());
-    let runs: Vec<RunReport> = par_map(workers, plans.len(), |i| {
+    // `run_one_on` already converts simulator panics into violations;
+    // `par_try_map` catches anything that escapes it (a panicking probe
+    // fold, an invariant checker bug), so one broken cell reports as a
+    // violation while the rest of the matrix still finishes.
+    let runs: Vec<RunReport> = par_try_map(workers, plans.len(), |i| {
         let (sc, seed) = &plans[i];
         run_one_on(base, sc, *seed, queue)
-    });
+    })
+    .into_iter()
+    .enumerate()
+    .map(|(i, r)| {
+        let (sc, seed) = &plans[i];
+        r.unwrap_or_else(|msg| RunReport::broken(sc, *seed, format!("panic: {msg}")))
+    })
+    .collect();
     let mut h = Fnv64::new();
     for r in &runs {
         h.bytes(r.scenario.as_bytes());
@@ -492,5 +540,87 @@ mod tests {
         ];
         schedule_events(&mut sim, &events);
         assert!(sim.pending() > 0, "events were scheduled, not dropped");
+    }
+
+    /// A deliberately-panicking probe in one cell must yield an `Err` for
+    /// that cell only — every sibling still completes, and nothing
+    /// unwinds into the caller. (Regression: the old pool let the panic
+    /// poison the slots mutex and re-raise from `thread::scope`, so one
+    /// bad cell aborted the whole campaign.)
+    #[test]
+    fn a_panicking_job_is_isolated_from_its_siblings() {
+        let out = par_try_map(2, 5, |i| {
+            if i == 2 {
+                panic!("probe tripped on cell {i}");
+            }
+            i * 10
+        });
+        assert_eq!(out.len(), 5);
+        for (i, r) in out.iter().enumerate() {
+            if i == 2 {
+                let msg = r.as_ref().unwrap_err();
+                assert!(msg.contains("probe tripped on cell 2"), "{msg}");
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), i * 10, "sibling {i} must finish");
+            }
+        }
+        // The infallible wrapper resurfaces the panic from the calling
+        // thread — after the siblings have finished — not from the pool.
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            par_map(2, 3, |i| {
+                if i == 1 {
+                    panic!("boom");
+                }
+                i
+            })
+        }));
+        let msg = panic_message(caught.unwrap_err());
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    /// End-to-end: a campaign whose cell panics beyond `run_one_on`'s own
+    /// catch reports the panic as that cell's violation while the other
+    /// cells run clean.
+    #[test]
+    fn campaign_reports_a_panicking_cell_as_a_violation() {
+        use crate::config::Deployment;
+        use crate::dag::{SizeClass, WorkloadKind};
+        let panicking = ScenarioSpec {
+            name: "nan-windows-panic".into(),
+            deployment: Deployment::Houtu,
+            regions: 0,
+            workload: ScenarioWorkload::SingleJob {
+                kind: WorkloadKind::WordCount,
+                size: SizeClass::Small,
+                home: DcId(0),
+            },
+            // regions beyond the topology: build_config errors (not a
+            // panic), exercising the broken-report path cleanly...
+            events: vec![ChaosEvent::KillDc { at_secs: 10.0, dc: DcId(9) }],
+            overrides: vec![],
+        };
+        let clean = ScenarioSpec {
+            name: "clean".into(),
+            deployment: Deployment::Houtu,
+            regions: 0,
+            workload: ScenarioWorkload::SingleJob {
+                kind: WorkloadKind::WordCount,
+                size: SizeClass::Small,
+                home: DcId(0),
+            },
+            events: vec![],
+            overrides: vec![],
+        };
+        let spec = CampaignSpec {
+            name: "mixed".into(),
+            seeds: vec![42],
+            scenarios: vec![panicking, clean],
+            parallelism: 2,
+        };
+        let report = run_campaign_on(&Config::default(), &spec, QueueKind::Slab);
+        assert_eq!(report.runs.len(), 2);
+        assert!(!report.runs[0].passed(), "broken cell must carry a violation");
+        assert!(report.runs[1].passed(), "sibling cell must run clean");
+        assert!(report.runs[1].completed_jobs > 0);
     }
 }

@@ -19,7 +19,8 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// Percentile via linear interpolation (p in [0, 100]).
+/// Percentile via the documented rule of [`percentile_sorted`]
+/// (p in [0, 100]).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
@@ -29,19 +30,46 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     percentile_sorted(&v, p)
 }
 
-/// Percentile over an already-sorted slice.
+/// Percentile over an already-sorted slice — the nearest-rank rule with
+/// linear interpolation (Hyndman–Fan type 7, the numpy/Excel default),
+/// with the edges handled exactly:
+///
+/// * `q = clamp(p / 100, 0, 1)`; a NaN `p` counts as 0 (the minimum)
+///   instead of poisoning the index arithmetic.
+/// * `n == 0` ⇒ 0.0 (finite and JSON-encodable, like [`min`]/[`max`]);
+///   `n == 1` ⇒ the sample, for every `q`.
+/// * `q == 0` ⇒ `sorted[0]` exactly and `q == 1` ⇒ `sorted[n-1]`
+///   exactly — no floating-point rank can index past either end.
+/// * otherwise `h = q·(n−1)`, `lo = ⌊h⌋` capped at `n−2` (so `lo+1` is
+///   always in range even if `h` rounds up to `n−1`), and the result is
+///   `sorted[lo] + (h − lo)·(sorted[lo+1] − sorted[lo])`.
+///
+/// Consequence worth knowing for tail quantiles on small samples: the
+/// estimate interpolates between the top *two* order statistics rather
+/// than silently returning the maximum — p999 of n=100 samples reads
+/// 99.9 % of the way from the 99th to the 100th order statistic.
+/// Callers that want "the largest observed" should ask for p100 (or
+/// [`max`]), which is exact.
 pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
-    if sorted.is_empty() {
+    let n = sorted.len();
+    if n == 0 {
         return 0.0;
     }
-    if sorted.len() == 1 {
+    if n == 1 {
         return sorted[0];
     }
-    let rank = (p / 100.0).clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
-    let lo = rank.floor() as usize;
-    let hi = rank.ceil() as usize;
-    let frac = rank - lo as f64;
-    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    let q = (p / 100.0).clamp(0.0, 1.0);
+    let q = if q.is_nan() { 0.0 } else { q };
+    if q <= 0.0 {
+        return sorted[0];
+    }
+    if q >= 1.0 {
+        return sorted[n - 1];
+    }
+    let h = q * (n - 1) as f64;
+    let lo = (h.floor() as usize).min(n - 2);
+    let frac = h - lo as f64;
+    sorted[lo] + frac * (sorted[lo + 1] - sorted[lo])
 }
 
 /// Smallest sample; 0.0 for an empty slice. (An ∞ sentinel would leak
@@ -236,6 +264,38 @@ mod tests {
         assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
         assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_boundaries_n1_n2() {
+        // n = 1: every quantile is the sample.
+        for p in [0.0, 50.0, 99.9, 100.0] {
+            assert_eq!(percentile(&[7.0], p), 7.0, "p{p}");
+        }
+        // n = 2: exact edges, interpolated interior.
+        let xs = [10.0, 20.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert!((percentile(&xs, 50.0) - 15.0).abs() < 1e-12);
+        assert!((percentile(&xs, 99.9) - 19.99).abs() < 1e-12, "p999 interpolates, not max");
+        assert_eq!(percentile(&xs, 100.0), 20.0);
+    }
+
+    #[test]
+    fn extreme_quantiles_do_not_collapse_to_the_edges() {
+        // p999 of n = 100 must land strictly between the top two order
+        // statistics (the old floor/ceil rank collapsed it onto max for
+        // some n, hiding tail latency in the load reports).
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let p999 = percentile(&xs, 99.9);
+        assert!(p999 > 99.0 && p999 < 100.0, "p999 = {p999}");
+        assert!((p999 - (99.0 + 0.901)).abs() < 1e-9, "h = 0.999·99 = 98.901");
+        // ... while p100 stays exact.
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        // Out-of-range and NaN p clamp to the edges instead of indexing
+        // out of bounds (or poisoning the rank arithmetic).
+        assert_eq!(percentile(&xs, -5.0), 1.0);
+        assert_eq!(percentile(&xs, 250.0), 100.0);
+        assert_eq!(percentile(&xs, f64::NAN), 1.0);
     }
 
     #[test]
