@@ -7,7 +7,12 @@
 # re-parses the file, exiting non-zero on any mismatch) — so the export
 # path stays wired — then the same smoke campaign on the sharded queue
 # engine with a digest diff against the sequential report (the
-# parallel-DES determinism gate at the CLI level), then the open-loop
+# parallel-DES determinism gate at the CLI level), then the same smoke
+# campaign on the World-as-parts ShardedSim engine serial and at 4
+# threads with an internal digest diff (the threaded-determinism gate;
+# the bench harness additionally times that pair as the
+# campaign-smoke-parts / campaign-smoke-threaded rows, which land in
+# BENCH_history.jsonl like every other row), then the open-loop
 # load smoke ramp (`houtu load --smoke`) on both engines with its
 # round-trip-verified report's digest and knee diffed (the load
 # determinism gate), then a seeded
@@ -59,6 +64,23 @@ if ! diff -u /tmp/load-seq.txt /tmp/load-sharded.txt; then
   exit 1
 fi
 echo "ci.sh: load smoke digest and knee match across engines"
+
+# World-as-parts engine gate: the same smoke campaign on the ShardedSim
+# parts model, serial vs 4 worker threads. The parts engine has its own
+# digest domain (a differently-factored state model), so the diff is
+# internal to the engine: the 4-thread run must reproduce the serial
+# parts digests bit-for-bit (the threaded-determinism gate at the CLI
+# level; the in-process walls live in tests/golden_digests.rs and
+# tests/part_world.rs).
+cargo run --release --quiet -- campaign --smoke --engine sharded-sim --threads 1 --report /tmp/smoke-parts.json
+cargo run --release --quiet -- campaign --smoke --engine sharded-sim --threads 4 --report /tmp/smoke-parts-threaded.json
+grep -o '"digest": "[0-9a-f]*"' /tmp/smoke-parts.json > /tmp/smoke-parts-digests.txt
+grep -o '"digest": "[0-9a-f]*"' /tmp/smoke-parts-threaded.json > /tmp/smoke-parts-threaded-digests.txt
+if ! diff -u /tmp/smoke-parts-digests.txt /tmp/smoke-parts-threaded-digests.txt; then
+  echo "ci.sh: threaded parts-engine digests diverged from the serial parts run" >&2
+  exit 1
+fi
+echo "ci.sh: parts-engine campaign digests are thread-count invariant"
 
 cargo run --release --quiet -- fuzz --cases 8 --seed 1 --repro /tmp/fuzz-repro.toml
 cargo run --release --quiet -- bench --smoke --report BENCH_sim.json --history BENCH_history.jsonl --compare BENCH_baseline.json

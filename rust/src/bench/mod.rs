@@ -45,6 +45,13 @@
 //!   speedup. `campaign-smoke` also gets a `…-sharded` row — that one
 //!   exercises the exact-merge [`crate::sim::ShardedQueue`] under the
 //!   full deployment stack (a determinism gate, not a parallel claim).
+//! * `campaign-smoke-parts` / `campaign-smoke-threaded` — the smoke
+//!   campaign on the World-as-parts model ([`crate::deploy::parts`]):
+//!   the identical cell matrix executed on [`crate::sim::ShardedSim`]'s
+//!   serial round twin (1 shard) and on 4 real threads. The digests are
+//!   pinned thread-count-invariant by the differential wall, so the row
+//!   pair is the measured threaded-vs-sequential campaign speedup
+//!   ([`BenchReport::threaded_speedup`]).
 //!
 //! # Baseline gate
 //!
@@ -156,6 +163,10 @@ pub enum BenchWorkload {
     /// sequential on [`QueueKind::Slab`], thread-per-shard on
     /// [`QueueKind::Sharded`] (the measured parallel speedup pair).
     MultiDcChurn,
+    /// The smoke campaign on the World-as-parts model, with this many
+    /// ShardedSim shards (1 = the serial round twin; the matrix pairs it
+    /// with 4 for the threaded-vs-sequential campaign speedup).
+    CampaignSmokeParts { threads: usize },
 }
 
 impl BenchWorkload {
@@ -172,6 +183,8 @@ impl BenchWorkload {
             BenchWorkload::DispatchChurn { typed: true } => "dispatch-churn-typed",
             BenchWorkload::DispatchChurn { typed: false } => "dispatch-churn-boxed",
             BenchWorkload::MultiDcChurn => "multi-dc-churn",
+            BenchWorkload::CampaignSmokeParts { threads: 1 } => "campaign-smoke-parts",
+            BenchWorkload::CampaignSmokeParts { .. } => "campaign-smoke-threaded",
         }
     }
 
@@ -252,6 +265,16 @@ impl BenchWorkload {
             BenchWorkload::MultiDcChurn => {
                 let (chains, hops) = if smoke { (256, 150) } else { (1024, 400) };
                 multi_dc_churn(queue, chains, hops).0
+            }
+            BenchWorkload::CampaignSmokeParts { threads } => {
+                let spec = smoke_campaign();
+                let report = crate::deploy::run_campaign_parts(base, &spec, threads)
+                    .expect("smoke campaign cells are always valid on the parts engine");
+                IterOut {
+                    events: report.cells.iter().map(|c| c.events).sum(),
+                    peak_pending: report.cells.iter().map(|c| c.peak).max().unwrap_or(0),
+                    usd: 0.0,
+                }
             }
             BenchWorkload::BidChurn(strategy) => {
                 // The bid-insurance-storm shape: a revocation-heavy price
@@ -617,6 +640,10 @@ pub fn run_bench(base: &Config, opts: &BenchOpts) -> BenchReport {
         (BenchWorkload::DispatchChurn { typed: false }, QueueKind::Slab),
         (BenchWorkload::MultiDcChurn, QueueKind::Slab),
         (BenchWorkload::MultiDcChurn, QueueKind::Sharded(threads)),
+        // The parts model runs its own ShardedSim internally, so both
+        // rows sit on the Slab axis and keep their plain names.
+        (BenchWorkload::CampaignSmokeParts { threads: 1 }, QueueKind::Slab),
+        (BenchWorkload::CampaignSmokeParts { threads: 4 }, QueueKind::Slab),
     ];
     let workloads =
         matrix.iter().map(|&(w, q)| time_workload(base, w, q, opts)).collect();
@@ -631,6 +658,21 @@ impl BenchReport {
             self.workloads.iter().find(|w| w.name == format!("{workload}-legacy"))?;
         if legacy.events_per_sec > 0.0 {
             Some(slab.events_per_sec / legacy.events_per_sec)
+        } else {
+            None
+        }
+    }
+
+    /// Speedup of `campaign-smoke-threaded` (the parts model on 4
+    /// ShardedSim shards) over `campaign-smoke-parts` (the same model on
+    /// the serial round twin), if both ran — the threaded-vs-sequential
+    /// campaign claim (> 1 means the threads paid for their barriers).
+    pub fn threaded_speedup(&self) -> Option<f64> {
+        let serial = self.workloads.iter().find(|w| w.name == "campaign-smoke-parts")?;
+        let threaded =
+            self.workloads.iter().find(|w| w.name == "campaign-smoke-threaded")?;
+        if serial.events_per_sec > 0.0 {
+            Some(threaded.events_per_sec / serial.events_per_sec)
         } else {
             None
         }
@@ -686,6 +728,14 @@ impl BenchReport {
                 writeln!(out, "{base}: sharded is {x:.2}x the sequential engine (events/s)")
                     .unwrap();
             }
+        }
+        if let Some(x) = self.threaded_speedup() {
+            writeln!(
+                out,
+                "campaign-smoke-threaded: parts on 4 threads is {x:.2}x the serial \
+                 parts engine (events/s)"
+            )
+            .unwrap();
         }
         out
     }
@@ -1131,6 +1181,43 @@ mod tests {
         assert!(compare_to_baseline(&r, &bootstrap.to_json()).unwrap().is_empty());
         // Garbage baseline is an error, not a silent pass.
         assert!(compare_to_baseline(&r, "not json").is_err());
+    }
+
+    #[test]
+    fn threaded_speedup_reads_the_parts_row_pair() {
+        let mut r = tiny_report();
+        assert!(r.threaded_speedup().is_none(), "no parts rows yet");
+        let mut serial = r.workloads[0].clone();
+        serial.name = "campaign-smoke-parts".to_string();
+        let mut threaded = r.workloads[0].clone();
+        threaded.name = "campaign-smoke-threaded".to_string();
+        threaded.events_per_sec = serial.events_per_sec * 2.5;
+        r.workloads.push(serial);
+        r.workloads.push(threaded);
+        let x = r.threaded_speedup().expect("both parts rows present");
+        assert!((x - 2.5).abs() < 1e-9, "speedup {x}");
+    }
+
+    #[test]
+    fn parts_workload_rows_measure_identical_work() {
+        // The speedup pair must time the same schedule: event totals and
+        // digest-bearing cells are thread-count invariant by the wall,
+        // so the serial and 4-thread rows only differ in wall time.
+        let base = Config::default();
+        let serial = BenchWorkload::CampaignSmokeParts { threads: 1 }
+            .run_once(&base, QueueKind::Slab, true);
+        let threaded = BenchWorkload::CampaignSmokeParts { threads: 4 }
+            .run_once(&base, QueueKind::Slab, true);
+        assert!(serial.events > 0, "parts cells must execute events");
+        assert_eq!(serial.events, threaded.events, "row pair diverged");
+        assert_eq!(
+            BenchWorkload::CampaignSmokeParts { threads: 1 }.name(),
+            "campaign-smoke-parts"
+        );
+        assert_eq!(
+            BenchWorkload::CampaignSmokeParts { threads: 4 }.name(),
+            "campaign-smoke-threaded"
+        );
     }
 
     #[test]

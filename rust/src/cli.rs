@@ -23,7 +23,12 @@
 //!            [--record out.log]                  ... and persist the event streams
 //!            [--shards N]                        ... on the sharded queue engine
 //!                                                (0 = auto; digests must not change)
-//!            [--threads N]                       ... on N worker threads
+//!            [--threads N]                       ... on N worker threads (N >= 1)
+//!            [--engine slab|sharded-sim]         ... slab (default): the sequential
+//!                                                World; sharded-sim: the World-as-parts
+//!                                                model on the threaded ShardedSim
+//!                                                (--threads picks the shard count;
+//!                                                digests are thread-count invariant)
 //!   replay LOG                                   re-execute a recorded event log and
 //!                                                assert streams + digests match
 //!   fuzz [--cases N] [--seed S]                  chaos-fuzz random scenarios
@@ -52,7 +57,7 @@ fn usage() -> ! {
         "usage: houtu <fig2|fig3|fig7|fig8|fig9|fig10|fig11|fig12|theorem1|run|trace|load|campaign|replay|fuzz|bench|export|all> \
          [--config FILE] [--set section.key=value]... [--deployment D] [--workload W] [--size S] \
          [--spec FILE] [--smoke] [--report out.json|out.csv] [--record out.log] \
-         [--shards N] [--threads N] \
+         [--shards N] [--threads N] [--engine slab|sharded-sim] \
          [--cases N] [--seed S] [--soak MINUTES] [--repro out.toml] [--iters N] \
          [--compare BENCH_baseline.json] [--history BENCH_history.jsonl]\n\
          replay takes the log path as its positional argument: houtu replay out.log"
@@ -97,6 +102,10 @@ pub struct Cli {
     /// Run the campaign on the sharded queue engine with this shard
     /// count (`campaign --shards N`; 0 = auto). `None` = sequential.
     pub shards: Option<usize>,
+    /// Campaign execution engine (`campaign --engine slab|sharded-sim`).
+    /// `None`/`slab` runs the sequential World; `sharded-sim` runs the
+    /// World-as-parts model on the threaded ShardedSim.
+    pub engine: Option<String>,
     /// Positional event-log path (`replay LOG`).
     pub log_path: Option<String>,
 }
@@ -123,6 +132,7 @@ pub fn parse(args: &[String]) -> Cli {
     let mut history = None;
     let mut threads = 0usize;
     let mut shards = None;
+    let mut engine = None;
     let mut log_path = None;
     let mut i = 1;
     while i < args.len() {
@@ -232,6 +242,24 @@ pub fn parse(args: &[String]) -> Cli {
                 i += 1;
                 threads =
                     args.get(i).and_then(|s| s.parse::<usize>().ok()).unwrap_or_else(|| usage());
+                // Reject the explicit zero instead of silently falling
+                // back to auto-sizing (omit the flag for that).
+                if threads == 0 {
+                    eprintln!(
+                        "error: --threads must be >= 1 (omit the flag or unset \
+                         HOUTU_THREADS for auto-sizing)"
+                    );
+                    std::process::exit(2);
+                }
+            }
+            "--engine" => {
+                i += 1;
+                let e = args.get(i).unwrap_or_else(|| usage()).clone();
+                if e != "slab" && e != "sharded-sim" {
+                    eprintln!("error: unknown engine {e:?} (known: slab, sharded-sim)");
+                    std::process::exit(2);
+                }
+                engine = Some(e);
             }
             "--shards" => {
                 i += 1;
@@ -270,6 +298,7 @@ pub fn parse(args: &[String]) -> Cli {
         history,
         threads,
         shards,
+        engine,
         log_path,
     }
 }
@@ -403,6 +432,34 @@ pub fn run(cli: &Cli) {
             };
             if cli.threads > 0 {
                 spec.parallelism = cli.threads;
+            }
+            if cli.engine.as_deref() == Some("sharded-sim") {
+                // The World-as-parts model on ShardedSim: `--threads`
+                // picks the shard count (digests are invariant to it).
+                if cli.record.is_some() {
+                    eprintln!("--record is not supported on --engine sharded-sim");
+                    std::process::exit(2);
+                }
+                let threads = scenario::resolve_threads(cli.threads);
+                let report = crate::deploy::run_campaign_parts(cfg, &spec, threads)
+                    .unwrap_or_else(|e| {
+                        eprintln!("error: {e:#}");
+                        std::process::exit(1);
+                    });
+                print!("{}", report.render());
+                if let Some(path) = &cli.report {
+                    match std::fs::write(path, report.to_json()) {
+                        Ok(()) => println!(
+                            "wrote {path} (json, {} cells, engine sharded-sim)",
+                            report.cells.len()
+                        ),
+                        Err(e) => {
+                            eprintln!("report export failed: {e}");
+                            std::process::exit(1);
+                        }
+                    }
+                }
+                return;
             }
             let queue = match cli.shards {
                 Some(n) => crate::sim::QueueKind::Sharded(scenario::resolve_threads(n)),

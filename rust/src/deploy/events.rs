@@ -200,7 +200,7 @@ impl Dispatch<World> for SimEvent {
                 sim.state.emit(TraceEvent::ChaosInjected {
                     label: format!("spot_storm:dc{dc}-factor={factor}"),
                 });
-                sim.state.markets[dc].set_storm(factor);
+                sim.state.parts[dc].market.set_storm(factor);
             }
             SimEvent::ChaosWanPairDegrade { label, a, b, factor } => {
                 sim.state.emit(TraceEvent::ChaosInjected { label });

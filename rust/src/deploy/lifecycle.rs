@@ -17,7 +17,7 @@ use crate::sim::{secs_f, SimTime};
 use crate::trace::{TraceEvent, TraceSink as _};
 
 use super::events::SimEvent;
-use super::world::{JobRt, WorldSim};
+use super::world::{master_for, JobRt, WorldSim};
 
 /// Spawn-time for a fresh JM container process (seconds).
 pub const JM_SPAWN_SECS: f64 = 1.0;
@@ -99,8 +99,7 @@ pub fn spawn_jm(sim: &mut WorldSim, job: JobId, dc: DcId) {
                 let home = rt.primary;
                 let role = if dc == home { Role::Primary } else { Role::SemiActive };
                 let jm_id = JmId { job, dc };
-                let centralized = w.mode.centralized();
-                let master = if centralized { &mut w.masters[0] } else { &mut w.masters[dc.0] };
+                let master = master_for(&mut w.global, &mut w.parts, dc);
                 match master.spawn_jm_container_at(jm_id, &mut w.cluster, dc) {
                     None => Next::Retry,
                     Some(container) => {
@@ -430,7 +429,7 @@ pub fn start_assignment(sim: &mut WorldSim, job: JobId, dc: DcId, a: Assignment)
             let node = w.cluster.container(a.container).node;
             let risky = match w.cluster.node_class(node) {
                 crate::cloud::InstanceClass::Spot { bid } => {
-                    let m = &w.markets[node.dc.0];
+                    let m = &w.parts[node.dc.0].market;
                     m.storm() > 1.0 || m.price() * w.cfg.bidding.risk_margin >= bid
                 }
                 crate::cloud::InstanceClass::OnDemand => false,
@@ -611,10 +610,9 @@ pub fn finish_job(sim: &mut WorldSim, job: JobId) {
         w.metrics.on_event(&st);
     }
     let dcs: Vec<DcId> = rt.jms.keys().copied().collect();
-    let centralized = w.mode.centralized();
     for dc in dcs {
         let jm_id = JmId { job, dc };
-        let master = if centralized { &mut w.masters[0] } else { &mut w.masters[dc.0] };
+        let master = master_for(&mut w.global, &mut w.parts, dc);
         let held = master.unregister(jm_id);
         for cid in held {
             if w.cluster.containers.get(&cid).map(|c| c.alive).unwrap_or(false) {

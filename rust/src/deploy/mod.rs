@@ -9,14 +9,16 @@
 pub mod events;
 pub mod failure;
 pub mod lifecycle;
+pub mod parts;
 pub mod scheduling;
 pub mod world;
 
 pub use events::{SimEvent, TickKind};
 pub use failure::{cascade_kill, inject_hogs, kill_dc, kill_jm_host, kill_node};
 pub use lifecycle::submit_job;
+pub use parts::{run_campaign_parts, run_cell_on_parts, PartCampaignReport, PartCell};
 pub use scheduling::{install_timers, should_steal};
-pub use world::{JobRt, World, WorldSim};
+pub use world::{DcPart, GlobalPart, JobRt, World, WorldSim};
 
 use crate::config::{Config, Deployment};
 use crate::dag::{SizeClass, WorkloadKind};

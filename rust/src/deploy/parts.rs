@@ -1,0 +1,953 @@
+//! The World-as-parts campaign engine: real campaign cells executed on
+//! [`ShardedSim`], with the world split into per-DC part states plus a
+//! thin global part.
+//!
+//! The sequential [`super::World`] keeps non-`Send` machinery (an
+//! `Rc`-based tracer, boxed strategy hooks), so it cannot ride the
+//! threaded engine directly. This module is the other half of the split
+//! that [`super::world::DcPart`] starts: a self-contained `Send` model of
+//! the same deployment — spot markets, JM replication and election, work
+//! stealing, WAN shuffles, insurance duplicates, and the whole chaos
+//! vocabulary — where **every** cross-DC interaction is a typed
+//! [`PartEvent`] message routed through `ShardedSim`'s mailboxes under
+//! [`crate::net::wan_lookahead`] floors.
+//!
+//! Part layout: parts `0..num_dcs` are the DC parts (market, container
+//! slots, primary/secondary JM bookkeeping, per-part RNG and tracer
+//! clock); part `num_dcs` is the global part, which owns only the spot
+//! market tick sweep and the campaign probe sweep and holds no DC state.
+//!
+//! Determinism contract (the differential wall pins this): a cell's
+//! digest is a pure function of `(base config, scenario, seed)` —
+//! independent of the shard/thread count and of wall-clock interleaving,
+//! because parts only touch their own state and all cross-part effects
+//! travel as messages ordered by `(time, canonical key)`.
+
+use std::collections::BTreeMap;
+
+use crate::config::Config;
+use crate::dag::{SizeClass, WorkloadKind};
+use crate::scenario::{CampaignSpec, ChaosEvent, ScenarioSpec, ScenarioWorkload};
+use crate::sim::shard::{ShardCtx, ShardEvent, ShardedSim};
+use crate::sim::{secs, secs_f, SimTime};
+use crate::trace::Fnv64;
+use crate::util::error::Result;
+use crate::util::json;
+use crate::util::rng::Pcg;
+
+/// Global-part market sweep period.
+const TICK_MS: SimTime = 5_000;
+/// Global-part campaign probe period.
+const PROBE_MS: SimTime = 30_000;
+/// Self-rescheduling drivers stop past this point; job work (and any
+/// chaos seeded later) may still finish after it, but the event
+/// population is finite once the drivers stop. Kept short enough that
+/// CMB rounds do not dwarf the per-task work on the threaded engine.
+const HORIZON_MS: SimTime = 180_000;
+/// Dead DCs / killed worker VMs re-acquire capacity after this long.
+const REVIVE_MS: SimTime = 60_000;
+/// Barrier gap between a stage completing and the next stage's release.
+const STAGE_GAP_MS: SimTime = 250;
+/// Backoff before retrying work that found no capacity anywhere.
+const RETRY_MS: SimTime = 500;
+/// Spot price (milli-units) above which a stage buys an insurance
+/// duplicate in another DC.
+const INSURANCE_PRICE_MILLI: u64 = 1_500;
+/// Deterministic CPU rounds burned per finished task, so the threaded
+/// engine has real per-part work to parallelize (large enough that the
+/// barrier cost of a CMB round amortizes away at 4 threads).
+const SPIN_ROUNDS: u32 = 20_000;
+/// Runaway-model backstop (the engine panics past this).
+const EVENT_BUDGET: u64 = 50_000_000;
+
+/// Deterministic task-execution work: a pure integer mix, identical on
+/// every engine and thread count.
+fn spin(seed: u64, rounds: u32) -> u64 {
+    let mut x = seed | 1;
+    for i in 0..rounds {
+        x = x.wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ (x >> 29) ^ i as u64;
+        x = x.rotate_left(23).wrapping_add(0x2545_f491_4f6c_dd1d);
+    }
+    x
+}
+
+/// (stages, tasks per stage, task service ms) for a submitted job.
+fn job_shape(kind: WorkloadKind, size: SizeClass) -> (u32, u32, u64) {
+    let stages = match kind {
+        WorkloadKind::WordCount => 3,
+        WorkloadKind::TpcH => 5,
+        WorkloadKind::IterativeMl => 8,
+        WorkloadKind::PageRank => 6,
+    };
+    let (tasks, task_ms) = match size {
+        SizeClass::Small => (8, 400),
+        SizeClass::Medium => (24, 900),
+        SizeClass::Large => (64, 1_600),
+    };
+    (stages, tasks, task_ms)
+}
+
+/// Primary-JM bookkeeping for one job, owned by exactly one DC part at a
+/// time (it moves between parts only inside [`PartEvent::ElectJm`]).
+#[derive(Debug, Clone, Copy)]
+pub struct JobSlice {
+    pub stage: u32,
+    pub stages: u32,
+    pub tasks: u32,
+    pub task_ms: u64,
+    pub outstanding: u32,
+}
+
+/// One part's entire state. Parts never touch each other's instances;
+/// everything a part learns about the rest of the world arrives as a
+/// [`PartEvent`].
+#[derive(Debug)]
+pub struct PartState {
+    pub part: usize,
+    pub ndc: usize,
+    pub is_global: bool,
+    rng: Pcg,
+    pub alive: bool,
+    pub slots_free: usize,
+    pub slots_total: usize,
+    /// Spot price in milli-units (1000 ≈ on-demand parity).
+    pub price_milli: u64,
+    /// Price-walk volatility multiplier (1000 = calm).
+    pub storm_milli: u64,
+    /// Outbound WAN factor per destination DC (1000 = nominal; smaller
+    /// is slower — degraded links stretch shuffle transfers).
+    wan_milli: Vec<u64>,
+    jobs: BTreeMap<u64, JobSlice>,
+    replicas: BTreeMap<u64, u64>,
+    pub tasks_run: u64,
+    pub steals: u64,
+    pub bytes_in: u64,
+    pub duplicates: u64,
+    pub elections: u64,
+    pub strays: u64,
+    pub jobs_done: u64,
+    /// Per-part tracer clock: one step per applied event/transition.
+    pub steps: u64,
+    hash: Fnv64,
+}
+
+impl PartState {
+    fn new(part: usize, ndc: usize, cfg: &Config) -> PartState {
+        let slots = cfg.topology.workers_per_dc * cfg.topology.containers_per_worker;
+        let is_global = part == ndc;
+        PartState {
+            part,
+            ndc,
+            is_global,
+            rng: Pcg::new(cfg.seed, 9_000 + part as u64),
+            alive: true,
+            slots_free: if is_global { 0 } else { slots },
+            slots_total: if is_global { 0 } else { slots },
+            price_milli: 1_000,
+            storm_milli: 1_000,
+            wan_milli: vec![1_000; ndc],
+            jobs: BTreeMap::new(),
+            replicas: BTreeMap::new(),
+            tasks_run: 0,
+            steals: 0,
+            bytes_in: 0,
+            duplicates: 0,
+            elections: 0,
+            strays: 0,
+            jobs_done: 0,
+            steps: 0,
+            hash: Fnv64::new(),
+        }
+    }
+
+    /// Advance the part's tracer clock and fold one transition into the
+    /// part digest.
+    fn fold(&mut self, tag: u64, now: SimTime, a: u64, b: u64) {
+        self.steps += 1;
+        self.hash.u64(tag);
+        self.hash.u64(now);
+        self.hash.u64(a);
+        self.hash.u64(b);
+    }
+
+    /// The running part digest (transition-order sensitive).
+    pub fn part_digest(&self) -> u64 {
+        self.hash.0
+    }
+
+    /// Shuffle-transfer extra delay in ms for `bytes` over the link to
+    /// `dst`, stretched by any WAN degradation on that pair.
+    fn transfer_ms(&self, bytes: u64, dst: usize) -> SimTime {
+        let nominal = (bytes / 2_000).max(1);
+        nominal * 1_000 / self.wan_milli[dst].max(1)
+    }
+}
+
+/// The typed cross-shard vocabulary: every cross-DC path the sequential
+/// deploy layer takes through shared memory is one of these messages.
+#[derive(Debug, Clone)]
+pub enum PartEvent {
+    /// A job arrives at its home DC.
+    SubmitJob { job: u64, stages: u32, tasks: u32, task_ms: u64 },
+    /// Async JM state replication to a secondary DC (`version ==
+    /// u64::MAX` retires the replica after the job completes).
+    ReplicateJm { job: u64, version: u64 },
+    /// The primary JM releases the current stage's tasks.
+    ReleaseStage { job: u64 },
+    /// A task finishes on whichever part ran it.
+    TaskFinish { job: u64, origin: u32, task_ms: u64, seed: u64 },
+    /// Shuffle output travels back to the primary (the WAN transfer).
+    TaskDone { job: u64, bytes: u64 },
+    /// Work sharing: a task with no local slot asks another DC to run it.
+    StealRequest { job: u64, origin: u32, task_ms: u64, ttl: u32 },
+    /// Belt-and-braces duplicate bought under a hot spot market.
+    InsuranceDuplicate { job: u64 },
+    /// JM failover: the job's bookkeeping moves to a successor DC.
+    ElectJm { job: u64, stage: u32, stages: u32, tasks: u32, task_ms: u64, ttl: u32 },
+    /// Global part: periodic market sweep (fans out `MarketTick`).
+    MarketSweep,
+    /// One DC advances its spot-price random walk.
+    MarketTick,
+    /// Global part: periodic campaign probe (fans out `Probe`).
+    ProbeSweep,
+    /// A DC part answers a probe with its tracer clock and digest.
+    Probe,
+    /// The probe answer, folded into the global part's digest.
+    ProbeReply { part: u32, steps: u64, digest: u64 },
+    /// `hogs@`: foreign tenants occupy (almost) all spare containers.
+    ChaosHogs,
+    /// `kill_jm@`: kill one job's JM replica in this DC.
+    ChaosKillJm { job: u64 },
+    /// `kill_jm_cascade@`: kill the current primary, then hunt and kill
+    /// each freshly-elected primary, `remaining` kills in total.
+    CascadeKill { job: u64, remaining: u32, gap_ms: SimTime, ttl: u32 },
+    /// `kill_node@`: spot-style termination of one worker VM.
+    ChaosKillNode { containers: usize },
+    /// `kill_dc@`: correlated whole-DC outage.
+    ChaosKillDc,
+    /// A dead DC re-acquires its capacity.
+    DcRevive,
+    /// A killed worker VM's containers come back.
+    NodeRevive { containers: usize },
+    /// `spot_storm@`: raise the price-walk volatility…
+    StormStart { milli: u64 },
+    /// …and restore calm at the end of the window.
+    StormEnd,
+    /// `wan@`: set this part's outbound factor to every destination.
+    WanSetAll { milli: u64 },
+    /// `wan_pair@`: set this part's outbound factor to one destination.
+    WanSetPair { dst: u32, milli: u64 },
+}
+
+impl ShardEvent<PartState> for PartEvent {
+    fn kind(&self) -> &'static str {
+        match self {
+            PartEvent::SubmitJob { .. } => "submit_job",
+            PartEvent::ReplicateJm { .. } => "replicate_jm",
+            PartEvent::ReleaseStage { .. } => "release_stage",
+            PartEvent::TaskFinish { .. } => "task_finish",
+            PartEvent::TaskDone { .. } => "task_done",
+            PartEvent::StealRequest { .. } => "steal_request",
+            PartEvent::InsuranceDuplicate { .. } => "insurance_duplicate",
+            PartEvent::ElectJm { .. } => "elect_jm",
+            PartEvent::MarketSweep => "market_sweep",
+            PartEvent::MarketTick => "market_tick",
+            PartEvent::ProbeSweep => "probe_sweep",
+            PartEvent::Probe => "probe",
+            PartEvent::ProbeReply { .. } => "probe_reply",
+            PartEvent::ChaosHogs => "chaos_hogs",
+            PartEvent::ChaosKillJm { .. } => "chaos_kill_jm",
+            PartEvent::CascadeKill { .. } => "cascade_kill",
+            PartEvent::ChaosKillNode { .. } => "chaos_kill_node",
+            PartEvent::ChaosKillDc => "chaos_kill_dc",
+            PartEvent::DcRevive => "dc_revive",
+            PartEvent::NodeRevive { .. } => "node_revive",
+            PartEvent::StormStart { .. } => "storm_start",
+            PartEvent::StormEnd => "storm_end",
+            PartEvent::WanSetAll { .. } => "wan_set_all",
+            PartEvent::WanSetPair { .. } => "wan_set_pair",
+        }
+    }
+
+    fn apply(self, ctx: &mut ShardCtx<'_, PartState, PartEvent>) {
+        let now = ctx.now();
+        let me = ctx.part();
+        match self {
+            PartEvent::SubmitJob { job, stages, tasks, task_ms } => {
+                ctx.state.fold(1, now, job, (stages as u64) << 32 | tasks as u64);
+                if !ctx.state.alive {
+                    // The home DC is down: hold the submission until it
+                    // (deterministically) revives.
+                    ctx.schedule_in(
+                        RETRY_MS,
+                        PartEvent::SubmitJob { job, stages, tasks, task_ms },
+                    );
+                    return;
+                }
+                ctx.state
+                    .jobs
+                    .insert(job, JobSlice { stage: 0, stages, tasks, task_ms, outstanding: 0 });
+                let ndc = ctx.state.ndc;
+                for d in 0..ndc {
+                    if d != me {
+                        ctx.send(d, 0, PartEvent::ReplicateJm { job, version: 0 });
+                    }
+                }
+                ctx.schedule_in(1, PartEvent::ReleaseStage { job });
+            }
+
+            PartEvent::ReplicateJm { job, version } => {
+                ctx.state.fold(2, now, job, version);
+                if version == u64::MAX {
+                    ctx.state.replicas.remove(&job);
+                } else if ctx.state.alive {
+                    ctx.state.replicas.insert(job, version);
+                } else {
+                    ctx.state.strays += 1;
+                }
+            }
+
+            PartEvent::ReleaseStage { job } => {
+                let Some(sl) = ctx.state.jobs.get(&job).copied() else {
+                    ctx.state.strays += 1;
+                    ctx.state.fold(3, now, job, u64::MAX);
+                    return;
+                };
+                ctx.state.fold(3, now, job, sl.stage as u64);
+                let ndc = ctx.state.ndc;
+                // Insurance: a hot spot market here means this stage's
+                // completion is at risk — buy one duplicate elsewhere.
+                if ctx.state.price_milli > INSURANCE_PRICE_MILLI && ndc > 1 {
+                    let tgt = (me + 1 + ctx.state.rng.index(ndc - 1)) % ndc;
+                    ctx.send(tgt, 0, PartEvent::InsuranceDuplicate { job });
+                }
+                ctx.state.jobs.get_mut(&job).expect("slice present").outstanding = sl.tasks;
+                let local = (sl.tasks as usize).min(ctx.state.slots_free) as u32;
+                ctx.state.slots_free -= local as usize;
+                for _ in 0..local {
+                    let jitter = ctx.state.rng.below(200);
+                    let seed = ctx.state.rng.next_u64();
+                    ctx.schedule_in(
+                        sl.task_ms + jitter,
+                        PartEvent::TaskFinish { job, origin: me as u32, task_ms: sl.task_ms, seed },
+                    );
+                }
+                // No local slot for the remainder: offer each leftover
+                // task to another DC (message-shaped work stealing).
+                for _ in local..sl.tasks {
+                    let req = PartEvent::StealRequest {
+                        job,
+                        origin: me as u32,
+                        task_ms: sl.task_ms,
+                        ttl: ndc as u32,
+                    };
+                    if ndc > 1 {
+                        let tgt = (me + 1 + ctx.state.rng.index(ndc - 1)) % ndc;
+                        ctx.send(tgt, 0, req);
+                    } else {
+                        ctx.schedule_in(RETRY_MS, req);
+                    }
+                }
+            }
+
+            PartEvent::StealRequest { job, origin, task_ms, ttl } => {
+                ctx.state.fold(4, now, job, (origin as u64) << 32 | ttl as u64);
+                let ndc = ctx.state.ndc;
+                if ctx.state.alive && ctx.state.slots_free > 0 {
+                    ctx.state.slots_free -= 1;
+                    if me != origin as usize {
+                        ctx.state.steals += 1;
+                    }
+                    let jitter = ctx.state.rng.below(200);
+                    let seed = ctx.state.rng.next_u64();
+                    ctx.schedule_in(
+                        task_ms + jitter,
+                        PartEvent::TaskFinish { job, origin, task_ms, seed },
+                    );
+                } else if ttl > 0 && ndc > 1 {
+                    let tgt = (me + 1 + ctx.state.rng.index(ndc - 1)) % ndc;
+                    ctx.send(tgt, 0, PartEvent::StealRequest { job, origin, task_ms, ttl: ttl - 1 });
+                } else {
+                    // Nowhere has capacity right now: back off and retry
+                    // with a fresh ttl once tasks (or revivals) free slots.
+                    ctx.schedule_in(
+                        RETRY_MS,
+                        PartEvent::StealRequest { job, origin, task_ms, ttl: ndc as u32 },
+                    );
+                }
+            }
+
+            PartEvent::TaskFinish { job, origin, task_ms, seed } => {
+                if !ctx.state.alive {
+                    // The VM died under the task: hand it back to the
+                    // primary's part for a retry.
+                    ctx.state.fold(5, now, job, 0);
+                    let ndc = ctx.state.ndc;
+                    ctx.send(
+                        origin as usize,
+                        0,
+                        PartEvent::StealRequest { job, origin, task_ms, ttl: ndc as u32 },
+                    );
+                    return;
+                }
+                let work = spin(seed, SPIN_ROUNDS);
+                ctx.state.fold(5, now, job, work);
+                ctx.state.slots_free = (ctx.state.slots_free + 1).min(ctx.state.slots_total);
+                ctx.state.tasks_run += 1;
+                let bytes = 10_000 + ctx.state.rng.below(90_000);
+                let extra = if origin as usize == me {
+                    0
+                } else {
+                    ctx.state.transfer_ms(bytes, origin as usize)
+                };
+                ctx.send(origin as usize, extra, PartEvent::TaskDone { job, bytes });
+            }
+
+            PartEvent::TaskDone { job, bytes } => {
+                ctx.state.bytes_in += bytes;
+                if !ctx.state.jobs.contains_key(&job) {
+                    // The primary moved (or the job finished) while this
+                    // shuffle was in flight — count the stray.
+                    ctx.state.strays += 1;
+                    ctx.state.fold(6, now, job, u64::MAX);
+                    return;
+                }
+                let done_stage = {
+                    let sl = ctx.state.jobs.get_mut(&job).expect("checked above");
+                    if sl.outstanding > 0 {
+                        sl.outstanding -= 1;
+                    }
+                    sl.outstanding == 0
+                };
+                ctx.state.fold(6, now, job, bytes);
+                if !done_stage {
+                    return;
+                }
+                let job_over = {
+                    let sl = ctx.state.jobs.get_mut(&job).expect("checked above");
+                    sl.stage += 1;
+                    sl.stage >= sl.stages
+                };
+                if !job_over {
+                    ctx.schedule_in(STAGE_GAP_MS, PartEvent::ReleaseStage { job });
+                } else {
+                    ctx.state.jobs.remove(&job);
+                    ctx.state.jobs_done += 1;
+                    let ndc = ctx.state.ndc;
+                    for d in 0..ndc {
+                        if d != me {
+                            ctx.send(d, 0, PartEvent::ReplicateJm { job, version: u64::MAX });
+                        }
+                    }
+                }
+            }
+
+            PartEvent::InsuranceDuplicate { job } => {
+                let work = {
+                    let seed = ctx.state.rng.next_u64();
+                    spin(seed, SPIN_ROUNDS / 8)
+                };
+                ctx.state.duplicates += 1;
+                ctx.state.fold(7, now, job, work);
+            }
+
+            PartEvent::ElectJm { job, stage, stages, tasks, task_ms, ttl } => {
+                ctx.state.fold(8, now, job, (stage as u64) << 32 | ttl as u64);
+                let ndc = ctx.state.ndc;
+                if ctx.state.alive {
+                    ctx.state.elections += 1;
+                    ctx.state
+                        .jobs
+                        .insert(job, JobSlice { stage, stages, tasks, task_ms, outstanding: 0 });
+                    // Re-release the interrupted stage; shuffles already
+                    // in flight to the dead primary land as strays there.
+                    ctx.schedule_in(1, PartEvent::ReleaseStage { job });
+                } else if ttl > 0 {
+                    ctx.send(
+                        (me + 1) % ndc,
+                        0,
+                        PartEvent::ElectJm { job, stage, stages, tasks, task_ms, ttl: ttl - 1 },
+                    );
+                } else {
+                    // Every DC is down: park the election until revival.
+                    ctx.schedule_in(
+                        RETRY_MS,
+                        PartEvent::ElectJm { job, stage, stages, tasks, task_ms, ttl: ndc as u32 },
+                    );
+                }
+            }
+
+            PartEvent::MarketSweep => {
+                ctx.state.fold(9, now, 0, 0);
+                let ndc = ctx.state.ndc;
+                for d in 0..ndc {
+                    ctx.send(d, 0, PartEvent::MarketTick);
+                }
+                if now < HORIZON_MS {
+                    ctx.schedule_in(TICK_MS, PartEvent::MarketSweep);
+                }
+            }
+
+            PartEvent::MarketTick => {
+                let draw = ctx.state.rng.below(2_001) as i64 - 1_000;
+                let delta = draw * ctx.state.storm_milli as i64 / 1_000 / 50;
+                let p = (ctx.state.price_milli as i64 + delta).clamp(200, 20_000);
+                ctx.state.price_milli = p as u64;
+                let (price, storm) = (ctx.state.price_milli, ctx.state.storm_milli);
+                ctx.state.fold(10, now, price, storm);
+            }
+
+            PartEvent::ProbeSweep => {
+                ctx.state.fold(11, now, 0, 0);
+                let ndc = ctx.state.ndc;
+                for d in 0..ndc {
+                    ctx.send(d, 0, PartEvent::Probe);
+                }
+                if now < HORIZON_MS {
+                    ctx.schedule_in(PROBE_MS, PartEvent::ProbeSweep);
+                }
+            }
+
+            PartEvent::Probe => {
+                let (steps, digest) = (ctx.state.steps, ctx.state.part_digest());
+                ctx.state.fold(12, now, steps, 0);
+                let nparts = ctx.nparts();
+                ctx.send(nparts - 1, 0, PartEvent::ProbeReply { part: me as u32, steps, digest });
+            }
+
+            PartEvent::ProbeReply { part, steps, digest } => {
+                ctx.state.fold(13, now, (part as u64) << 32 | steps, digest);
+            }
+
+            PartEvent::ChaosHogs => {
+                ctx.state.slots_free = ctx.state.slots_free.min(1);
+                let free = ctx.state.slots_free as u64;
+                ctx.state.fold(14, now, free, 0);
+            }
+
+            PartEvent::ChaosKillJm { job } => {
+                ctx.state.fold(15, now, job, 0);
+                let ndc = ctx.state.ndc;
+                if let Some(sl) = ctx.state.jobs.remove(&job) {
+                    ctx.send(
+                        (me + 1) % ndc,
+                        0,
+                        PartEvent::ElectJm {
+                            job,
+                            stage: sl.stage,
+                            stages: sl.stages,
+                            tasks: sl.tasks,
+                            task_ms: sl.task_ms,
+                            ttl: ndc as u32,
+                        },
+                    );
+                } else {
+                    ctx.state.replicas.remove(&job);
+                }
+            }
+
+            PartEvent::CascadeKill { job, remaining, gap_ms, ttl } => {
+                ctx.state.fold(16, now, job, (remaining as u64) << 32 | ttl as u64);
+                let ndc = ctx.state.ndc;
+                if let Some(sl) = ctx.state.jobs.remove(&job) {
+                    let succ = (me + 1) % ndc;
+                    ctx.send(
+                        succ,
+                        0,
+                        PartEvent::ElectJm {
+                            job,
+                            stage: sl.stage,
+                            stages: sl.stages,
+                            tasks: sl.tasks,
+                            task_ms: sl.task_ms,
+                            ttl: ndc as u32,
+                        },
+                    );
+                    if remaining > 1 {
+                        // Hunt the freshly-elected primary after the gap.
+                        ctx.send(
+                            succ,
+                            gap_ms,
+                            PartEvent::CascadeKill {
+                                job,
+                                remaining: remaining - 1,
+                                gap_ms,
+                                ttl: ndc as u32,
+                            },
+                        );
+                    }
+                } else if ttl > 0 {
+                    ctx.send(
+                        (me + 1) % ndc,
+                        0,
+                        PartEvent::CascadeKill { job, remaining, gap_ms, ttl: ttl - 1 },
+                    );
+                }
+                // ttl exhausted with no primary found: the job already
+                // finished and the cascade fizzles (recorded by the fold).
+            }
+
+            PartEvent::ChaosKillNode { containers } => {
+                ctx.state.slots_total = ctx.state.slots_total.saturating_sub(containers);
+                ctx.state.slots_free = ctx.state.slots_free.saturating_sub(containers);
+                let left = ctx.state.slots_total as u64;
+                ctx.state.fold(17, now, containers as u64, left);
+                ctx.schedule_in(REVIVE_MS, PartEvent::NodeRevive { containers });
+            }
+
+            PartEvent::NodeRevive { containers } => {
+                ctx.state.slots_total += containers;
+                ctx.state.slots_free += containers;
+                let total = ctx.state.slots_total as u64;
+                ctx.state.fold(18, now, containers as u64, total);
+            }
+
+            PartEvent::ChaosKillDc => {
+                ctx.state.alive = false;
+                ctx.state.slots_free = 0;
+                let orphans = std::mem::take(&mut ctx.state.jobs);
+                let norphans = orphans.len() as u64;
+                ctx.state.replicas.clear();
+                ctx.state.fold(19, now, norphans, 0);
+                let ndc = ctx.state.ndc;
+                for (job, sl) in orphans {
+                    ctx.send(
+                        (me + 1) % ndc,
+                        0,
+                        PartEvent::ElectJm {
+                            job,
+                            stage: sl.stage,
+                            stages: sl.stages,
+                            tasks: sl.tasks,
+                            task_ms: sl.task_ms,
+                            ttl: ndc as u32,
+                        },
+                    );
+                }
+                ctx.schedule_in(REVIVE_MS, PartEvent::DcRevive);
+            }
+
+            PartEvent::DcRevive => {
+                ctx.state.alive = true;
+                ctx.state.slots_free = ctx.state.slots_total;
+                let total = ctx.state.slots_total as u64;
+                ctx.state.fold(20, now, total, 0);
+            }
+
+            PartEvent::StormStart { milli } => {
+                ctx.state.storm_milli = milli.max(1);
+                ctx.state.fold(21, now, milli, 0);
+            }
+
+            PartEvent::StormEnd => {
+                ctx.state.storm_milli = 1_000;
+                ctx.state.fold(22, now, 0, 0);
+            }
+
+            PartEvent::WanSetAll { milli } => {
+                for f in ctx.state.wan_milli.iter_mut() {
+                    *f = milli.max(1);
+                }
+                ctx.state.fold(23, now, milli, 0);
+            }
+
+            PartEvent::WanSetPair { dst, milli } => {
+                ctx.state.wan_milli[dst as usize] = milli.max(1);
+                ctx.state.fold(24, now, dst as u64, milli);
+            }
+        }
+    }
+}
+
+/// Place one spec'd chaos injection on the timeline as seeded messages.
+fn seed_chaos(
+    sim: &mut ShardedSim<PartState, PartEvent>,
+    ev: &ChaosEvent,
+    ndc: usize,
+    containers_per_worker: usize,
+) {
+    match ev {
+        ChaosEvent::InjectHogs { at_secs, dcs } => {
+            for d in dcs {
+                sim.seed(d.0, secs_f(*at_secs), PartEvent::ChaosHogs);
+            }
+        }
+        ChaosEvent::KillJm { at_secs, dc } => {
+            sim.seed(dc.0, secs_f(*at_secs), PartEvent::ChaosKillJm { job: 0 });
+        }
+        ChaosEvent::KillJmCascade { at_secs, dc, count, gap_secs } => {
+            sim.seed(
+                dc.0,
+                secs_f(*at_secs),
+                PartEvent::CascadeKill {
+                    job: 0,
+                    remaining: *count,
+                    gap_ms: secs_f(*gap_secs),
+                    ttl: ndc as u32,
+                },
+            );
+        }
+        ChaosEvent::KillNode { at_secs, node } => {
+            sim.seed(
+                node.dc.0,
+                secs_f(*at_secs),
+                PartEvent::ChaosKillNode { containers: containers_per_worker },
+            );
+        }
+        ChaosEvent::KillDc { at_secs, dc } => {
+            sim.seed(dc.0, secs_f(*at_secs), PartEvent::ChaosKillDc);
+        }
+        ChaosEvent::SpotStorm { at_secs, dc, dur_secs, sigma_factor } => {
+            let milli = (sigma_factor * 1_000.0).round().max(1.0) as u64;
+            sim.seed(dc.0, secs_f(*at_secs), PartEvent::StormStart { milli });
+            sim.seed(dc.0, secs_f(*at_secs + *dur_secs), PartEvent::StormEnd);
+        }
+        ChaosEvent::WanDegrade { from_secs, until_secs, factor } => {
+            let milli = (factor * 1_000.0).round().max(1.0) as u64;
+            for d in 0..ndc {
+                sim.seed(d, secs_f(*from_secs), PartEvent::WanSetAll { milli });
+                sim.seed(d, secs_f(*until_secs), PartEvent::WanSetAll { milli: 1_000 });
+            }
+        }
+        ChaosEvent::WanPairDegrade { at_secs, a, b, factor } => {
+            let milli = (factor * 1_000.0).round().max(1.0) as u64;
+            sim.seed(a.0, secs_f(*at_secs), PartEvent::WanSetPair { dst: b.0 as u32, milli });
+            sim.seed(b.0, secs_f(*at_secs), PartEvent::WanSetPair { dst: a.0 as u32, milli });
+        }
+    }
+}
+
+/// One finished (scenario, seed) cell on the parts engine.
+#[derive(Debug, Clone)]
+pub struct PartCell {
+    pub scenario: String,
+    pub seed: u64,
+    pub events: u64,
+    pub digest: u64,
+    pub peak: usize,
+    pub tasks_run: u64,
+    pub steals: u64,
+    pub elections: u64,
+    pub jobs_done: u64,
+}
+
+/// Run one campaign cell on the parts engine with `threads` ShardedSim
+/// shards (`<= 1` uses the serial twin of the same round protocol). The
+/// returned digest is thread-count invariant.
+pub fn run_cell_on_parts(
+    base: &Config,
+    spec: &ScenarioSpec,
+    seed: u64,
+    threads: usize,
+) -> Result<PartCell> {
+    let cfg = spec.build_config(base, seed)?;
+    let ndc = cfg.topology.num_dcs();
+    let nparts = ndc + 1;
+    let states: Vec<PartState> = (0..nparts).map(|p| PartState::new(p, ndc, &cfg)).collect();
+    let la = crate::net::wan_lookahead(&cfg.wan, nparts);
+    let mut sim = ShardedSim::new(states, la, threads.max(1));
+    sim.set_event_budget(EVENT_BUDGET);
+
+    match spec.workload {
+        ScenarioWorkload::SingleJob { kind, size, home } => {
+            let (stages, tasks, task_ms) = job_shape(kind, size);
+            sim.seed(home.0, secs(1), PartEvent::SubmitJob { job: 0, stages, tasks, task_ms });
+        }
+        ScenarioWorkload::Trace { num_jobs } => {
+            // Host-side arrival process: a dedicated stream so part RNGs
+            // stay untouched by seeding.
+            let mut host = Pcg::new(cfg.seed, 8_999);
+            let mut t = secs(1);
+            for j in 0..num_jobs as u64 {
+                let kind = WorkloadKind::ALL[j as usize % WorkloadKind::ALL.len()];
+                let (stages, tasks, task_ms) = job_shape(kind, SizeClass::Small);
+                sim.seed(
+                    j as usize % ndc,
+                    t,
+                    PartEvent::SubmitJob { job: j, stages, tasks, task_ms },
+                );
+                t += 2_000 + host.below(8_000);
+            }
+        }
+    }
+
+    for ev in &spec.events {
+        seed_chaos(&mut sim, ev, ndc, cfg.topology.containers_per_worker);
+    }
+
+    // The thin global part owns the market tick and probe sweeps.
+    sim.seed(ndc, TICK_MS, PartEvent::MarketSweep);
+    sim.seed(ndc, PROBE_MS, PartEvent::ProbeSweep);
+
+    if threads <= 1 {
+        sim.run_serial();
+    } else {
+        sim.run();
+    }
+
+    let mut h = Fnv64::new();
+    h.u64(sim.digest());
+    h.u64(sim.events_processed());
+    h.u64(crate::trace::fold_part_digests((0..nparts).map(|p| {
+        let s = sim.part_state(p);
+        (s.steps, s.part_digest())
+    })));
+
+    let dcs = (0..ndc).map(|p| sim.part_state(p));
+    let (mut tasks_run, mut steals, mut elections, mut jobs_done) = (0, 0, 0, 0);
+    for s in dcs {
+        tasks_run += s.tasks_run;
+        steals += s.steals;
+        elections += s.elections;
+        jobs_done += s.jobs_done;
+    }
+
+    Ok(PartCell {
+        scenario: spec.name.clone(),
+        seed,
+        events: sim.events_processed(),
+        digest: h.0,
+        peak: sim.peak_pending(),
+        tasks_run,
+        steals,
+        elections,
+        jobs_done,
+    })
+}
+
+/// A whole campaign on the parts engine (cells in [`CampaignSpec::expand`]
+/// order — the same stable matrix order as the sequential runner).
+#[derive(Debug, Clone)]
+pub struct PartCampaignReport {
+    pub campaign: String,
+    pub threads: usize,
+    pub cells: Vec<PartCell>,
+}
+
+impl PartCampaignReport {
+    /// Order-sensitive fold of every cell digest.
+    pub fn campaign_digest(&self) -> u64 {
+        let mut h = Fnv64::new();
+        for c in &self.cells {
+            h.u64(c.seed);
+            h.u64(c.digest);
+        }
+        h.0
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "campaign {} on parts engine (ShardedSim, {} thread{})\n",
+            self.campaign,
+            self.threads,
+            if self.threads == 1 { "" } else { "s" }
+        ));
+        out.push_str(&format!(
+            "{:<24} {:>6} {:>9} {:>7} {:>7} {:>6} {:>5}  {:>16}\n",
+            "scenario", "seed", "events", "tasks", "steals", "elect", "jobs", "digest"
+        ));
+        for c in &self.cells {
+            out.push_str(&format!(
+                "{:<24} {:>6} {:>9} {:>7} {:>7} {:>6} {:>5}  {:016x}\n",
+                c.scenario, c.seed, c.events, c.tasks_run, c.steals, c.elections, c.jobs_done,
+                c.digest
+            ));
+        }
+        out.push_str(&format!(
+            "{} cells, campaign digest {:016x}\n",
+            self.cells.len(),
+            self.campaign_digest()
+        ));
+        out
+    }
+
+    /// JSON export in the same shape `ci.sh` greps on the sequential
+    /// report: per-cell 16-hex `"digest"` strings plus a campaign digest.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"campaign\": {},\n", json::escape(&self.campaign)));
+        out.push_str("  \"engine\": \"sharded-sim\",\n");
+        out.push_str(&format!("  \"threads\": {},\n", self.threads));
+        out.push_str(&format!("  \"campaign_digest\": \"{:016x}\",\n", self.campaign_digest()));
+        out.push_str("  \"runs\": [\n");
+        for (i, c) in self.cells.iter().enumerate() {
+            out.push_str("    {");
+            out.push_str(&format!("\"scenario\": {}, ", json::escape(&c.scenario)));
+            out.push_str(&format!("\"seed\": {}, ", c.seed));
+            out.push_str(&format!("\"events\": {}, ", c.events));
+            out.push_str(&format!("\"tasks_run\": {}, ", c.tasks_run));
+            out.push_str(&format!("\"steals\": {}, ", c.steals));
+            out.push_str(&format!("\"elections\": {}, ", c.elections));
+            out.push_str(&format!("\"jobs_done\": {}, ", c.jobs_done));
+            out.push_str(&format!("\"peak_pending\": {}, ", c.peak));
+            out.push_str(&format!("\"digest\": \"{:016x}\"", c.digest));
+            out.push_str(if i + 1 == self.cells.len() { "}\n" } else { "},\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+/// Run every cell of a campaign on the parts engine.
+pub fn run_campaign_parts(
+    base: &Config,
+    spec: &CampaignSpec,
+    threads: usize,
+) -> Result<PartCampaignReport> {
+    let mut cells = Vec::with_capacity(spec.scenarios.len() * spec.seeds.len());
+    for (sc, seed) in spec.expand() {
+        cells.push(run_cell_on_parts(base, &sc, seed, threads)?);
+    }
+    Ok(PartCampaignReport { campaign: spec.name.clone(), threads, cells })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario;
+
+    #[test]
+    fn smoke_campaign_digest_is_thread_count_invariant() {
+        let base = Config::default();
+        let spec = scenario::smoke_campaign();
+        let serial = run_campaign_parts(&base, &spec, 1).expect("serial parts run");
+        assert!(serial.cells.iter().all(|c| c.events > 0), "cells must execute events");
+        assert!(serial.cells.iter().all(|c| c.jobs_done > 0), "cells must finish jobs");
+        for threads in [2usize, 4] {
+            let t = run_campaign_parts(&base, &spec, threads).expect("threaded parts run");
+            assert_eq!(
+                serial.campaign_digest(),
+                t.campaign_digest(),
+                "parts campaign digest must not depend on thread count ({threads})"
+            );
+            for (a, b) in serial.cells.iter().zip(t.cells.iter()) {
+                assert_eq!(a.digest, b.digest, "cell {}#{} digest", a.scenario, a.seed);
+                assert_eq!(a.events, b.events, "cell {}#{} events", a.scenario, a.seed);
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_runs_are_bit_identical() {
+        let base = Config::default();
+        let spec = scenario::smoke_campaign();
+        let a = run_campaign_parts(&base, &spec, 2).expect("first run");
+        let b = run_campaign_parts(&base, &spec, 2).expect("second run");
+        assert_eq!(a.campaign_digest(), b.campaign_digest());
+        assert_eq!(a.to_json(), b.to_json());
+    }
+
+    #[test]
+    fn report_json_carries_sixteen_hex_digests() {
+        let base = Config::default();
+        let spec = scenario::smoke_campaign();
+        let report = run_campaign_parts(&base, &spec, 1).expect("parts run");
+        let json = report.to_json();
+        assert!(json.contains("\"engine\": \"sharded-sim\""));
+        let digests = json.matches("\"digest\": \"").count();
+        assert_eq!(digests, report.cells.len(), "one digest per cell");
+        assert!(json.contains(&format!("\"campaign_digest\": \"{:016x}\"", report.campaign_digest())));
+    }
+}

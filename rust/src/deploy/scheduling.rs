@@ -9,7 +9,7 @@ use crate::trace::{TraceEvent, TraceSink as _};
 
 use super::events::{arm_tick, SimEvent, TickKind};
 use super::lifecycle::{container_update, poke_executors, start_assignment};
-use super::world::WorldSim;
+use super::world::{master_for, WorldSim};
 
 /// Install the recurring world timers: period ticks, heartbeats, WAN
 /// resampling, spot-market steps. Call once after building the sim. Each
@@ -94,7 +94,7 @@ pub fn period_tick(sim: &mut WorldSim) {
                 .publish(TraceEvent::ContainersReturned { jm: jm_id, count: surplus.len() });
             w.metrics.on_event(&st);
         }
-        let master = if centralized { &mut w.masters[0] } else { &mut w.masters[dc.0] };
+        let master = master_for(&mut w.global, &mut w.parts, dc);
         master.set_desire(jm_id, desire);
         if bidding_active {
             // The container request carries an instance-class preference
@@ -107,14 +107,15 @@ pub fn period_tick(sim: &mut WorldSim) {
         }
     }
 
-    // Phase 3: allocation per master.
-    let n_masters = sim.state.masters.len();
+    // Phase 3: allocation per master, in stable slot order (the single
+    // central master, or each DC's part master in DC order).
+    let n_masters = sim.state.master_count();
     let mut pokes: Vec<(JobId, DcId)> = Vec::new();
     for mi in 0..n_masters {
         let grants = {
             let w = &mut sim.state;
-            let (masters, cluster) = (&mut w.masters, &mut w.cluster);
-            masters[mi].allocate(cluster)
+            let (global, parts, cluster) = (&mut w.global, &mut w.parts, &mut w.cluster);
+            master_for(global, parts, DcId(mi)).allocate(cluster)
         };
         let w = &mut sim.state;
         for (jm_id, cids) in grants {

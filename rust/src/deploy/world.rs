@@ -128,6 +128,51 @@ impl JobRt {
     }
 }
 
+/// Per-DC slice of the world (the HOUTU "part"): every piece of mutable
+/// state whose owner is naturally a single data center — its spot
+/// market, its master (decentralized deployments), and any hog sub-jobs
+/// injected into it. `DcPart` is `Send`: it holds no `Rc`, no trait
+/// objects and no cross-DC references, which is what lets the part-world
+/// campaign engine ([`super::parts`]) run one part per [`crate::sim::ShardedSim`]
+/// shard while the monolithic `World` keeps the exact same state grouped
+/// per DC.
+pub struct DcPart {
+    pub dc: DcId,
+    /// This DC's spot market (prices recalculated by the global tick,
+    /// revocations scoped to this DC's nodes).
+    pub market: SpotMarket,
+    /// The per-DC master. `None` under the centralized baselines, where
+    /// the single monolithic master lives in [`GlobalPart`].
+    pub master: Option<Master>,
+    /// Hog pseudo-sub-jobs injected into this DC (the Fig-9 injection;
+    /// kept registered forever).
+    pub hogs: Vec<JmId>,
+}
+
+/// The thin global part: state that has no single-DC owner — under the
+/// centralized baselines that is the monolithic master spanning every
+/// region. Spot-market *ticks* and campaign probes are also global
+/// concerns, but they carry no state of their own beyond the per-DC
+/// markets they fan out to.
+pub struct GlobalPart {
+    /// The monolithic master (centralized deployments only).
+    pub central_master: Option<Master>,
+}
+
+/// The master responsible for `dc`, borrowed through the split fields so
+/// call sites can hold `&mut w.cluster` / `&mut w.jobs` at the same time
+/// (a `World` method would lock the whole struct).
+pub(crate) fn master_for<'a>(
+    global: &'a mut GlobalPart,
+    parts: &'a mut [DcPart],
+    dc: DcId,
+) -> &'a mut Master {
+    match global.central_master.as_mut() {
+        Some(m) => m,
+        None => parts[dc.0].master.as_mut().expect("per-DC master"),
+    }
+}
+
 /// The whole simulated testbed.
 pub struct World {
     pub cfg: Config,
@@ -136,15 +181,18 @@ pub struct World {
     pub cluster: Cluster,
     pub wan: Wan,
     pub zk: ZkEnsemble,
-    pub markets: Vec<SpotMarket>,
+    /// Per-DC part states (market + master + hogs), indexed by DC. The
+    /// split mirrors the paper's per-DC autonomy: cross-part interaction
+    /// in the deploy layer happens only through `SimEvent` messages.
+    pub parts: Vec<DcPart>,
+    /// Global (non-per-DC) state: the centralized baselines' monolithic
+    /// master. See [`World::master_of`] for the indexing rule.
+    pub global: GlobalPart,
     /// The configured bid strategy: prices every worker-VM acquisition,
     /// observes every market recalculation, and hands per-JM container
     /// class preferences to the masters each scheduling period.
     pub strategy: Box<dyn BidStrategy>,
     pub cost: CostMeter,
-    /// One master per DC (decentralized) or a single monolithic master
-    /// (centralized) — indexed by [`World::master_of`].
-    pub masters: Vec<Master>,
     pub dfs: Dfs,
     pub gen: WorkloadGen,
     pub jobs: BTreeMap<JobId, JobRt>,
@@ -163,8 +211,6 @@ pub struct World {
     /// at its own rate; empty (the naive/default case) degenerates to
     /// the original single-segment billing, bit for bit.
     pub class_changes: Vec<(NodeId, f64, InstanceClass)>,
-    /// Hog sub-jobs for the Fig-9 injection (kept registered forever).
-    pub hogs: Vec<JmId>,
     /// Wall-clock guard: stop submitting after the trace ends.
     pub trace_done: bool,
     /// Optional real-compute hook (e2e example).
@@ -248,16 +294,31 @@ impl World {
             }
         }
         let gen = WorkloadGen::new(&cfg, rng.split(2));
+        // Assemble the per-DC parts: each DC owns its market, its master
+        // (decentralized) and its hog list; the centralized baselines park
+        // their single monolithic master in the global part instead.
+        let mut masters = masters.into_iter();
+        let central_master = if mode.centralized() { masters.next() } else { None };
+        let parts: Vec<DcPart> = markets
+            .into_iter()
+            .enumerate()
+            .map(|(d, market)| DcPart {
+                dc: DcId(d),
+                market,
+                master: if mode.centralized() { None } else { masters.next() },
+                hogs: Vec::new(),
+            })
+            .collect();
         World {
             params: ParadesParams { delta: cfg.scheduler.delta, tau: cfg.scheduler.tau },
             mode,
             cluster,
             wan,
             zk,
-            markets,
+            parts,
+            global: GlobalPart { central_master },
             strategy,
             cost: CostMeter::default(),
-            masters,
             dfs: Dfs::default(),
             gen,
             jobs: BTreeMap::new(),
@@ -267,7 +328,6 @@ impl World {
             next_job: 0,
             bids,
             class_changes: Vec::new(),
-            hogs: Vec::new(),
             trace_done: false,
             hook: None,
             probe_violations: Vec::new(),
@@ -290,13 +350,53 @@ impl World {
         self.tracer.digest()
     }
 
-    /// Index of the master responsible for `dc`.
+    /// The master responsible for `dc`: the monolithic central master if
+    /// one exists, else the DC's own part master.
     pub fn master_of(&mut self, dc: DcId) -> &mut Master {
-        if self.mode.centralized() {
-            &mut self.masters[0]
+        master_for(&mut self.global, &mut self.parts, dc)
+    }
+
+    /// Number of master slots (1 centralized, one per DC otherwise) —
+    /// the pre-split `masters.len()`.
+    pub fn master_count(&self) -> usize {
+        if self.global.central_master.is_some() {
+            1
         } else {
-            &mut self.masters[dc.0]
+            self.parts.len()
         }
+    }
+
+    /// All masters in stable slot order (the central master alone, or
+    /// each DC's master in DC order) — bit-identical iteration order to
+    /// the pre-split `Vec<Master>`.
+    pub fn masters(&self) -> impl Iterator<Item = &Master> {
+        self.global
+            .central_master
+            .iter()
+            .chain(self.parts.iter().filter_map(|p| p.master.as_ref()))
+    }
+
+    /// Mutable twin of [`World::masters`], same slot order.
+    pub fn masters_mut(&mut self) -> impl Iterator<Item = &mut Master> {
+        self.global
+            .central_master
+            .iter_mut()
+            .chain(self.parts.iter_mut().filter_map(|p| p.master.as_mut()))
+    }
+
+    /// This DC's spot market (read side).
+    pub fn market(&self, dc: usize) -> &SpotMarket {
+        &self.parts[dc].market
+    }
+
+    /// This DC's spot market (write side).
+    pub fn market_mut(&mut self, dc: usize) -> &mut SpotMarket {
+        &mut self.parts[dc].market
+    }
+
+    /// True when no DC has hog sub-jobs injected.
+    pub fn hogs_empty(&self) -> bool {
+        self.parts.iter().all(|p| p.hogs.is_empty())
     }
 
     pub fn alloc_job_id(&mut self) -> JobId {

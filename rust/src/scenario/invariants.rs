@@ -112,7 +112,7 @@ pub fn check_world(w: &World) -> Vec<Violation> {
         }
     }
 
-    if w.hogs.is_empty() && done == total {
+    if w.hogs_empty() && done == total {
         for dcid in 0..w.cfg.topology.num_dcs() {
             let dc = DcId(dcid);
             let free = w.cluster.free_pool(dc).len();
@@ -121,7 +121,7 @@ pub fn check_world(w: &World) -> Vec<Violation> {
                 push(&mut v, "pool-restored", format!("{dc}: {free} free of {cap} capacity"));
             }
         }
-        for (i, m) in w.masters.iter().enumerate() {
+        for (i, m) in w.masters().enumerate() {
             let leftover = m.sub_jobs();
             if !leftover.is_empty() {
                 push(&mut v, "master-leak", format!("master {i} still tracks {leftover:?}"));
@@ -488,7 +488,7 @@ mod tests {
 pub fn probe_world(w: &mut World, prev: &mut HashMap<JmId, usize>) {
     let mut seen: HashSet<ContainerId> = HashSet::new();
     let mut found: Vec<String> = Vec::new();
-    for m in &w.masters {
+    for m in w.masters() {
         for jm in m.sub_jobs() {
             let a = m.allocation(jm);
             let d = m.desire(jm);
@@ -514,7 +514,7 @@ pub fn probe_world(w: &mut World, prev: &mut HashMap<JmId, usize>) {
             prev.insert(jm, a);
         }
     }
-    prev.retain(|jm, _| w.masters.iter().any(|m| m.is_registered(*jm)));
+    prev.retain(|jm, _| w.masters().any(|m| m.is_registered(*jm)));
     for f in found {
         if w.probe_violations.len() < 64 {
             w.probe_violations.push(f);

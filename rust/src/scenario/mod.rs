@@ -99,7 +99,8 @@ pub use replay::{
 pub use report::write_and_verify;
 pub use runner::{
     resolve_threads, run_campaign, run_campaign_on, run_digest, run_one, run_one_on, run_scenario,
-    run_scenario_hooked, run_scenario_on, CampaignReport, FinishedRun, RunReport,
+    run_scenario_hooked, run_scenario_on, try_resolve_threads, CampaignReport, FinishedRun,
+    RunReport,
 };
 pub use spec::{CampaignSpec, ChaosEvent, ScenarioSpec, ScenarioWorkload};
 

@@ -379,24 +379,54 @@ impl CampaignReport {
     }
 }
 
+/// The thread-count precedence rule, with the environment read lifted
+/// out for error reporting and testing: an explicit `explicit > 0` wins,
+/// then `HOUTU_THREADS` (which must parse to a positive integer — `0` or
+/// garbage is an error, not a silent clamp), then one worker per
+/// available core. `env` is the raw `HOUTU_THREADS` value, `None` when
+/// unset; an empty / whitespace-only value counts as unset.
+pub fn try_resolve_threads(
+    explicit: usize,
+    env: Option<&str>,
+) -> std::result::Result<usize, String> {
+    if explicit > 0 {
+        return Ok(explicit);
+    }
+    if let Some(v) = env {
+        let v = v.trim();
+        if !v.is_empty() {
+            return match v.parse::<usize>() {
+                Ok(0) => Err("HOUTU_THREADS must be >= 1 (got 0); unset it for auto-sizing"
+                    .to_string()),
+                Ok(k) => Ok(k),
+                Err(_) => Err(format!(
+                    "HOUTU_THREADS must be a positive integer, got {v:?}; unset it for \
+                     auto-sizing"
+                )),
+            };
+        }
+    }
+    Ok(std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4))
+}
+
 /// Resolve a thread-count knob: an explicit `n > 0` wins, then a
 /// positive `HOUTU_THREADS` environment variable, then one worker per
 /// available core. This is the single sizing rule for every pool in the
 /// crate — the campaign runner, the fuzzer, the bench harness and the
-/// sharded engine's shard count all route through it, so `--threads N`
-/// and `HOUTU_THREADS=N` mean the same thing everywhere.
+/// sharded engines' shard count all route through it, so `--threads N`
+/// and `HOUTU_THREADS=N` mean the same thing everywhere. A
+/// `HOUTU_THREADS` of `0` (or one that does not parse) is rejected with
+/// a clear diagnostic and exit code 2 instead of being silently clamped
+/// — see [`try_resolve_threads`] for the testable core.
 pub fn resolve_threads(n: usize) -> usize {
-    if n > 0 {
-        return n;
-    }
-    if let Ok(v) = std::env::var("HOUTU_THREADS") {
-        if let Ok(k) = v.trim().parse::<usize>() {
-            if k > 0 {
-                return k;
-            }
+    let env = std::env::var("HOUTU_THREADS").ok();
+    match try_resolve_threads(n, env.as_deref()) {
+        Ok(k) => k,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
         }
     }
-    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
 }
 
 /// Resolve a parallelism knob (0 = `HOUTU_THREADS`, else one worker per
@@ -622,5 +652,33 @@ mod tests {
         assert!(!report.runs[0].passed(), "broken cell must carry a violation");
         assert!(report.runs[1].passed(), "sibling cell must run clean");
         assert!(report.runs[1].completed_jobs > 0);
+    }
+
+    /// The thread-sizing precedence order, on the pure core so no test
+    /// has to mutate process-global environment state: explicit flag >
+    /// `HOUTU_THREADS` > auto, and a zero / unparsable `HOUTU_THREADS`
+    /// is a hard error rather than a silent clamp.
+    #[test]
+    fn thread_resolution_precedence_and_zero_rejection() {
+        // An explicit --threads N shadows whatever the environment says.
+        assert_eq!(try_resolve_threads(3, Some("7")), Ok(3));
+        assert_eq!(try_resolve_threads(3, Some("0")), Ok(3));
+        assert_eq!(try_resolve_threads(1, None), Ok(1));
+        // No explicit flag: HOUTU_THREADS decides (whitespace tolerated).
+        assert_eq!(try_resolve_threads(0, Some("7")), Ok(7));
+        assert_eq!(try_resolve_threads(0, Some(" 2 ")), Ok(2));
+        // Unset or blank env falls through to core-count auto-sizing.
+        assert!(try_resolve_threads(0, None).unwrap() >= 1);
+        assert!(try_resolve_threads(0, Some("")).unwrap() >= 1);
+        assert!(try_resolve_threads(0, Some("   ")).unwrap() >= 1);
+        // HOUTU_THREADS=0 and garbage are rejected with a clear message.
+        let e = try_resolve_threads(0, Some("0")).unwrap_err();
+        assert!(e.contains(">= 1"), "{e}");
+        let e = try_resolve_threads(0, Some(" 0 ")).unwrap_err();
+        assert!(e.contains(">= 1"), "{e}");
+        let e = try_resolve_threads(0, Some("lots")).unwrap_err();
+        assert!(e.contains("positive integer"), "{e}");
+        let e = try_resolve_threads(0, Some("-2")).unwrap_err();
+        assert!(e.contains("positive integer"), "{e}");
     }
 }

@@ -69,14 +69,28 @@
 //! `run()` ≡ `run_serial()` bit-for-bit is a CI-pinned property, the same
 //! golden-baseline discipline `LegacyQueue` established in PR 4.
 //!
-//! The flip side of conservative parallelism is that the whole-world
-//! `deploy::World` (shared WAN fair-sharing, cross-DC work stealing,
-//! elections) stays on the sequential engine; its sharded story is
-//! [`super::queue::ShardedQueue`] — per-DC subqueues behind an exact
-//! merge, bit-identical on every standard campaign cell. This module is
-//! the throughput path for partitioned workloads (`houtu bench`'s
-//! `multi-dc-churn` rows), and the substrate for ROADMAP item 3's
-//! planet-scale worlds.
+//! Two kinds of world run on this engine. Synthetic `Send` workloads
+//! (`houtu bench`'s `multi-dc-churn` rows) partition trivially. Real
+//! campaign cells run through `deploy::parts`: the monolithic
+//! `deploy::World` is split into per-DC `DcPart` state plus a thin
+//! global part, and every cross-DC interaction — steals, WAN transfers,
+//! JM replication/election, insurance duplicates, `kill_dc`/`wan_pair`
+//! chaos — becomes a typed cross-shard message whose arrival pays the
+//! `net::wan_lookahead` floor. The exact-merge
+//! [`super::queue::ShardedQueue`] remains the bit-identical-to-slab
+//! story for the sequential whole-world engine; this module is the
+//! thread-per-shard throughput path (`campaign --engine sharded-sim`,
+//! `houtu bench`'s `campaign-smoke-threaded` row).
+//!
+//! **Queue-depth reporting.** [`ShardedSim::peak_pending`] is the high-water
+//! mark of the *summed* per-shard queue depths, maximized per round: each
+//! shard tracks its own round-local peak, the per-round peaks are summed
+//! at the round barrier, and the run keeps the largest round sum. A
+//! single-shard run degenerates to the sequential engine's definition,
+//! and `run()` ≡ `run_serial()` holds for the metric at every shard
+//! count (the round protocol assigns identical events to identical
+//! rounds). Earlier revisions reported one shard's lifetime peak, which
+//! under-reported the fleet-wide backlog.
 //!
 //! A panicking event handler poisons the round protocol: the panic is
 //! captured, every worker exits at the next barrier, and [`ShardedSim::run`]
@@ -294,6 +308,10 @@ struct ShardRunner<S, E> {
     now: SimTime,
     events: u64,
     peak_pending: usize,
+    /// This shard's queue-depth peak within the current round (reset at
+    /// the start of every `exec_round`); the round barrier sums these
+    /// across shards for [`ShardedSim::peak_pending`].
+    round_peak: usize,
     clock: ShardClock,
 }
 
@@ -324,6 +342,12 @@ impl<S, E: ShardEvent<S>> ShardRunner<S, E> {
     /// horizon), stopping early at the `cap` runaway guard. Cross-shard
     /// sends accumulate in `self.outbox`.
     fn exec_round(&mut self, limit: SimTime, cap: u64, env: &ShardEnv<'_>) {
+        // The round-entry depth counts too: a shard stalled behind its
+        // horizon still holds a backlog this round.
+        self.round_peak = self.queue.pending();
+        if self.round_peak > self.peak_pending {
+            self.peak_pending = self.round_peak;
+        }
         loop {
             match self.queue.next_time() {
                 Some(t) if t < limit => {}
@@ -356,6 +380,9 @@ impl<S, E: ShardEvent<S>> ShardRunner<S, E> {
             };
             ev.apply(&mut ctx);
             let live = self.queue.pending();
+            if live > self.round_peak {
+                self.round_peak = live;
+            }
             if live > self.peak_pending {
                 self.peak_pending = live;
             }
@@ -371,6 +398,11 @@ impl<S, E: ShardEvent<S>> ShardRunner<S, E> {
 struct Shared<E> {
     next: Vec<AtomicU64>,
     executed: Vec<AtomicU64>,
+    /// Per-shard round-local queue-depth peaks, published in phase B and
+    /// summed by everyone after the round barrier.
+    round_peak: Vec<AtomicU64>,
+    /// Largest round sum seen so far — [`ShardedSim::peak_pending`].
+    peak: AtomicU64,
     inbox: Vec<Mutex<Vec<Msg<E>>>>,
     poisoned: AtomicBool,
     panics: Mutex<Vec<Box<dyn Any + Send>>>,
@@ -437,6 +469,7 @@ fn worker<S, E: ShardEvent<S>>(
                 }
             }
             r.exec_round(h, budget.saturating_add(1), &env);
+            shared.round_peak[me].store(r.round_peak as u64, Ordering::SeqCst);
             for dst in 0..n {
                 if dst != me && !r.outbox[dst].is_empty() {
                     let mut slot = shared.inbox[dst * n + me].lock().unwrap();
@@ -452,6 +485,12 @@ fn worker<S, E: ShardEvent<S>>(
         if shared.poisoned.load(Ordering::SeqCst) {
             return;
         }
+        // Everyone is past the round barrier, so every shard's round
+        // peak is visible; sum them and keep the largest round. All
+        // threads compute the same sum — fetch_max is idempotent.
+        let round_sum: u64 =
+            (0..n).map(|t| shared.round_peak[t].load(Ordering::SeqCst)).sum();
+        shared.peak.fetch_max(round_sum, Ordering::SeqCst);
     }
 }
 
@@ -469,6 +508,8 @@ pub struct ShardedSim<S, E> {
     la: Lookahead,
     runners: Vec<ShardRunner<S, E>>,
     budget: u64,
+    /// Max over rounds of the summed per-shard round peaks.
+    peak: usize,
 }
 
 impl<S: Send, E: ShardEvent<S>> ShardedSim<S, E> {
@@ -508,6 +549,7 @@ impl<S: Send, E: ShardEvent<S>> ShardedSim<S, E> {
                 now: 0,
                 events: 0,
                 peak_pending: 0,
+                round_peak: 0,
                 clock: ShardClock::default(),
             })
             .collect();
@@ -528,6 +570,7 @@ impl<S: Send, E: ShardEvent<S>> ShardedSim<S, E> {
             la,
             runners,
             budget: DEFAULT_EVENT_BUDGET,
+            peak: 0,
         }
     }
 
@@ -628,6 +671,12 @@ impl<S: Send, E: ShardEvent<S>> ShardedSim<S, E> {
                     }
                 }
             }
+            // Same reduction the parallel workers perform after the round
+            // barrier: the summed per-shard round peaks, maxed per run.
+            let round_sum: usize = self.runners.iter().map(|r| r.round_peak).sum();
+            if round_sum > self.peak {
+                self.peak = round_sum;
+            }
         }
     }
 
@@ -636,6 +685,8 @@ impl<S: Send, E: ShardEvent<S>> ShardedSim<S, E> {
         let shared: Shared<E> = Shared {
             next: (0..n).map(|_| AtomicU64::new(0)).collect(),
             executed: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            round_peak: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            peak: AtomicU64::new(self.peak as u64),
             inbox: (0..n * n).map(|_| Mutex::new(Vec::new())).collect(),
             poisoned: AtomicBool::new(false),
             panics: Mutex::new(Vec::new()),
@@ -650,6 +701,7 @@ impl<S: Send, E: ShardEvent<S>> ShardedSim<S, E> {
                 scope.spawn(move || worker(r, shared_ref, env, shard_la, n, budget));
             }
         });
+        self.peak = self.peak.max(shared.peak.load(Ordering::SeqCst) as usize);
         if shared.poisoned.load(Ordering::SeqCst) {
             match shared.panics.lock().unwrap().pop() {
                 Some(p) => std::panic::resume_unwind(p),
@@ -700,9 +752,18 @@ impl<S: Send, E: ShardEvent<S>> ShardedSim<S, E> {
         self.runners.iter().map(|r| r.events).sum()
     }
 
-    /// Largest single-shard pending-queue high-water mark observed.
+    /// Fleet-wide pending-queue high-water mark: the largest *summed*
+    /// per-shard queue depth any round observed (see the module docs'
+    /// "Queue-depth reporting"). Identical between `run()` and
+    /// `run_serial()` at every shard count; a 1-shard run degenerates to
+    /// the sequential engine's per-pop high-water mark.
     pub fn peak_pending(&self) -> usize {
-        self.runners.iter().map(|r| r.peak_pending).max().unwrap_or(0)
+        self.peak
+    }
+
+    /// One shard's own lifetime queue-depth peak (diagnostics).
+    pub fn shard_peak_pending(&self, shard: usize) -> usize {
+        self.runners[shard].peak_pending
     }
 
     /// Maximum shard-local virtual time reached.
@@ -807,6 +868,36 @@ mod tests {
     #[test]
     fn parallel_runs_are_reproducible() {
         assert_eq!(run_hops(4, false), run_hops(4, false));
+    }
+
+    fn run_hops_peak(nshards: usize, serial: bool) -> usize {
+        const PARTS: usize = 4;
+        let la = Lookahead::from_fn(PARTS, |a, b| if a == b { 1 } else { 15 });
+        let mut sim: ShardedSim<u64, Hop> = ShardedSim::new(vec![0u64; PARTS], la, nshards);
+        for p in 0..PARTS {
+            for c in 0..8u32 {
+                sim.seed(p, (c as u64) % 5, Hop { left: 40, stride: 1 + c % 3 });
+            }
+        }
+        if serial {
+            sim.run_serial();
+        } else {
+            sim.run();
+        }
+        sim.peak_pending()
+    }
+
+    /// The queue-depth metric is a round-protocol quantity, so the
+    /// parallel run must report exactly the serial twin's value at every
+    /// shard count (no per-thread timing may leak into it).
+    #[test]
+    fn peak_pending_sums_shards_and_matches_the_serial_twin() {
+        for nshards in [1usize, 2, 3, 4] {
+            let s = run_hops_peak(nshards, true);
+            let p = run_hops_peak(nshards, false);
+            assert!(s > 0, "workload must queue something at {nshards} shards");
+            assert_eq!(s, p, "peak_pending run() vs run_serial() at {nshards} shards");
+        }
     }
 
     /// Cross-shard sends arrive at exactly `now + floor + extra`.

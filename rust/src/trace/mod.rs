@@ -359,6 +359,19 @@ impl Fnv64 {
     }
 }
 
+/// Combine per-part `(tracer steps, part digest)` pairs, in part order,
+/// into one order-sensitive digest — the parts-engine analogue of how
+/// [`Tracer::digest`] mixes its step clock into the stream fold. Used by
+/// [`crate::deploy::parts`] to pin cells across thread counts.
+pub fn fold_part_digests<I: IntoIterator<Item = (u64, u64)>>(parts: I) -> u64 {
+    let mut h = Fnv64::new();
+    for (steps, digest) in parts {
+        h.u64(steps);
+        h.u64(digest);
+    }
+    h.0
+}
+
 /// Bounded history of the most recent events (flight-recorder memory).
 #[derive(Debug)]
 pub struct RingBuffer {

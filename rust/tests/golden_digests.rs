@@ -22,10 +22,21 @@
 //!    [`QueueKind::Sharded`] at 1, 2 and 4 shards and must reproduce the
 //!    slab digests bit-identically — the determinism gate for the
 //!    per-DC sharded queue (`houtu campaign --shards N`).
+//! 4. **Parts-engine wall.** Every cell also runs on the World-as-parts
+//!    model (`houtu campaign --engine sharded-sim`), where DC state is
+//!    split into `Send` parts and all cross-DC interaction is
+//!    message-shaped. That engine has its *own* digest (the sequential
+//!    World's trace stream cannot be compared bit-for-bit against a
+//!    differently-factored state model), so its wall is internal:
+//!    serial, 2-thread and 4-thread executions of every cell must be
+//!    bit-identical.
 
 use houtu::config::Config;
+use houtu::deploy::run_cell_on_parts;
 use houtu::scenario::runner::par_map;
-use houtu::scenario::{run_digest, run_scenario_on, standard_campaign};
+use houtu::scenario::{
+    run_digest, run_scenario_on, smoke_campaign, standard_campaign,
+};
 use houtu::sim::QueueKind;
 use houtu::util::json::{self, Json};
 
@@ -157,6 +168,89 @@ fn standard_campaign_digests_survive_the_queue_swap() {
 /// invariant to the shard count (1, 2 and 4 shards), because the n-way
 /// merge restores the exact global `(time, seq)` order no matter how
 /// events were routed across sub-queues.
+/// The parts-engine wall (`--engine sharded-sim`): all 30
+/// standard-campaign cells replay bit-identically on the World-as-parts
+/// model whether the ShardedSim rounds execute serially or on 2 or 4
+/// worker threads. Event counts and completion counters must match too,
+/// so a thread-sensitive stray (a dropped mailbox message, a double
+/// delivery) cannot hide behind a lucky hash.
+#[test]
+fn standard_campaign_parts_digests_are_thread_count_invariant() {
+    let base = Config::default();
+    let cells = standard_campaign().expand();
+    assert_eq!(cells.len(), 30, "expected the 10×3 standard matrix");
+    let workers =
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(cells.len());
+    let serial = par_map(workers, cells.len(), |i| {
+        let (sc, seed) = &cells[i];
+        run_cell_on_parts(&base, sc, *seed, 1)
+            .unwrap_or_else(|e| panic!("{}/seed{}: {e}", sc.name, seed))
+    });
+    for threads in [2usize, 4] {
+        // Threaded cells run one at a time: each already spawns its own
+        // shard workers, and the wall must observe *their* interleaving.
+        for (i, (sc, seed)) in cells.iter().enumerate() {
+            let t = run_cell_on_parts(&base, sc, *seed, threads)
+                .unwrap_or_else(|e| panic!("{}/seed{}/t{threads}: {e}", sc.name, seed));
+            let s = &serial[i];
+            assert_eq!(
+                format!("{:016x}", s.digest),
+                format!("{:016x}", t.digest),
+                "{}/seed{}: parts digest diverged at {threads} threads",
+                sc.name,
+                seed
+            );
+            assert_eq!(
+                (s.events, s.tasks_run, s.jobs_done),
+                (t.events, t.tasks_run, t.jobs_done),
+                "{}/seed{}: parts counters diverged at {threads} threads",
+                sc.name,
+                seed
+            );
+        }
+    }
+    for s in &serial {
+        assert!(s.events > 0, "{}/seed{}: empty parts run", s.scenario, s.seed);
+        assert!(s.jobs_done > 0, "{}/seed{}: no job finished", s.scenario, s.seed);
+        assert_ne!(s.digest, 0, "{}/seed{}: degenerate digest", s.scenario, s.seed);
+    }
+    // Seeds must move the parts stream exactly as they move the World's.
+    for chunk in serial.chunks(3) {
+        assert!(
+            chunk[0].digest != chunk[1].digest
+                && chunk[1].digest != chunk[2].digest
+                && chunk[0].digest != chunk[2].digest,
+            "{}: seeds collided on the parts engine",
+            chunk[0].scenario
+        );
+    }
+}
+
+/// Queue-depth regression for the sharded queue (`--shards N`): the
+/// engines execute the identical event stream, so the high-water mark
+/// [`houtu::scenario::FinishedRun::peak_pending`] reports must agree
+/// between the sequential slab queue and the sharded queue at any shard
+/// count — the sharded engine tracks *live* global depth, not per-shard
+/// fragments.
+#[test]
+fn smoke_campaign_peak_pending_is_engine_invariant() {
+    let base = Config::default();
+    for (sc, seed) in smoke_campaign().expand() {
+        let slab = run_scenario_on(&base, &sc, seed, QueueKind::Slab)
+            .unwrap_or_else(|e| panic!("{}/seed{seed}: {e}", sc.name));
+        assert!(slab.peak_pending > 0, "{}/seed{seed}: depth never rose", sc.name);
+        for shards in [2usize, 4] {
+            let sharded = run_scenario_on(&base, &sc, seed, QueueKind::Sharded(shards))
+                .unwrap_or_else(|e| panic!("{}/seed{seed}: {e}", sc.name));
+            assert_eq!(
+                slab.peak_pending, sharded.peak_pending,
+                "{}/seed{seed}: peak queue depth drifted at {shards} shards",
+                sc.name
+            );
+        }
+    }
+}
+
 #[test]
 fn standard_campaign_digests_are_shard_count_invariant() {
     let slab = compute_pins(QueueKind::Slab);
