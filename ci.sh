@@ -82,6 +82,21 @@ if ! diff -u /tmp/smoke-parts-digests.txt /tmp/smoke-parts-threaded-digests.txt;
 fi
 echo "ci.sh: parts-engine campaign digests are thread-count invariant"
 
+# Generated-topology gate: the same smoke campaign rebased onto a
+# 64-DC generated world (`--topology`, docs/SCALE.md) with a 4-DC
+# exact tier, serial vs 4 threads — planet-scale worlds must be as
+# deterministic as the hand-written 4-DC ones (the in-process walls
+# live in tests/planet.rs).
+cargo run --release --quiet -- campaign --smoke --topology generated:64,4,7 --set topology.exact_dcs=4 --engine sharded-sim --threads 1 --report /tmp/smoke-planet.json
+cargo run --release --quiet -- campaign --smoke --topology generated:64,4,7 --set topology.exact_dcs=4 --engine sharded-sim --threads 4 --report /tmp/smoke-planet-threaded.json
+grep -o '"digest": "[0-9a-f]*"' /tmp/smoke-planet.json > /tmp/smoke-planet-digests.txt
+grep -o '"digest": "[0-9a-f]*"' /tmp/smoke-planet-threaded.json > /tmp/smoke-planet-threaded-digests.txt
+if ! diff -u /tmp/smoke-planet-digests.txt /tmp/smoke-planet-threaded-digests.txt; then
+  echo "ci.sh: 64-DC generated-world digests diverged across thread counts" >&2
+  exit 1
+fi
+echo "ci.sh: 64-DC generated-world campaign digests are thread-count invariant"
+
 cargo run --release --quiet -- fuzz --cases 8 --seed 1 --repro /tmp/fuzz-repro.toml
 cargo run --release --quiet -- bench --smoke --report BENCH_sim.json --history BENCH_history.jsonl --compare BENCH_baseline.json
 

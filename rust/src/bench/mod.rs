@@ -52,6 +52,14 @@
 //!   pinned thread-count-invariant by the differential wall, so the row
 //!   pair is the measured threaded-vs-sequential campaign speedup
 //!   ([`BenchReport::threaded_speedup`]).
+//! * `planet-churn-{64,256}dc` — the two-tier fidelity claim: the same
+//!   trace workload on generated planet-scale worlds
+//!   (`topology.generated`, [`crate::topo`]) with `exact_dcs = 4`, so
+//!   only the job-touching tier simulates exactly while 60 vs 252
+//!   background DCs ride the aggregate tier. Flat `events_per_sec`
+//!   across the pair is the measured background-DC independence; the
+//!   render footer reports the SoA per-node memory
+//!   ([`crate::cluster::soa_bytes_per_node`]) next to the rows.
 //!
 //! # Baseline gate
 //!
@@ -167,6 +175,10 @@ pub enum BenchWorkload {
     /// ShardedSim shards (1 = the serial round twin; the matrix pairs it
     /// with 4 for the threaded-vs-sequential campaign speedup).
     CampaignSmokeParts { threads: usize },
+    /// The trace workload on a generated `dcs`-DC world with a 4-DC
+    /// exact tier (`topology.exact_dcs=4`) — the matrix pairs 64 with
+    /// 256 so the report carries the background-DC scaling claim.
+    PlanetChurn { dcs: usize },
 }
 
 impl BenchWorkload {
@@ -185,6 +197,8 @@ impl BenchWorkload {
             BenchWorkload::MultiDcChurn => "multi-dc-churn",
             BenchWorkload::CampaignSmokeParts { threads: 1 } => "campaign-smoke-parts",
             BenchWorkload::CampaignSmokeParts { .. } => "campaign-smoke-threaded",
+            BenchWorkload::PlanetChurn { dcs: 64 } => "planet-churn-64dc",
+            BenchWorkload::PlanetChurn { .. } => "planet-churn-256dc",
         }
     }
 
@@ -275,6 +289,27 @@ impl BenchWorkload {
                     peak_pending: report.cells.iter().map(|c| c.peak).max().unwrap_or(0),
                     usd: 0.0,
                 }
+            }
+            BenchWorkload::PlanetChurn { dcs } => {
+                // The same exact-tier work at every scale: only the 60
+                // vs 252 aggregate-tier background DCs differ, so the
+                // row pair isolates the background-scan cost.
+                let sc = ScenarioSpec {
+                    name: format!("planet-churn-{dcs}dc"),
+                    deployment: Deployment::Houtu,
+                    regions: 0,
+                    workload: ScenarioWorkload::Trace {
+                        num_jobs: if smoke { 2 } else { 4 },
+                    },
+                    events: vec![],
+                    overrides: vec![
+                        format!("topology.generated=generated:{dcs},8,1"),
+                        "topology.exact_dcs=4".to_string(),
+                    ],
+                };
+                let cell = crate::deploy::run_cell_on_parts(base, &sc, 42, 1)
+                    .expect("planet churn spec is always valid");
+                IterOut { events: cell.events, peak_pending: cell.peak, usd: 0.0 }
             }
             BenchWorkload::BidChurn(strategy) => {
                 // The bid-insurance-storm shape: a revocation-heavy price
@@ -644,6 +679,8 @@ pub fn run_bench(base: &Config, opts: &BenchOpts) -> BenchReport {
         // rows sit on the Slab axis and keep their plain names.
         (BenchWorkload::CampaignSmokeParts { threads: 1 }, QueueKind::Slab),
         (BenchWorkload::CampaignSmokeParts { threads: 4 }, QueueKind::Slab),
+        (BenchWorkload::PlanetChurn { dcs: 64 }, QueueKind::Slab),
+        (BenchWorkload::PlanetChurn { dcs: 256 }, QueueKind::Slab),
     ];
     let workloads =
         matrix.iter().map(|&(w, q)| time_workload(base, w, q, opts)).collect();
@@ -736,6 +773,27 @@ impl BenchReport {
                  parts engine (events/s)"
             )
             .unwrap();
+        }
+        if self.workloads.iter().any(|w| w.name.starts_with("planet-churn")) {
+            writeln!(
+                out,
+                "planet-churn: SoA node state is {} bytes/node",
+                crate::cluster::soa_bytes_per_node()
+            )
+            .unwrap();
+            let small = self.workloads.iter().find(|w| w.name == "planet-churn-64dc");
+            let big = self.workloads.iter().find(|w| w.name == "planet-churn-256dc");
+            if let (Some(s), Some(b)) = (small, big) {
+                if s.events_per_sec > 0.0 {
+                    writeln!(
+                        out,
+                        "planet-churn: 256dc runs at {:.2}x the 64dc rate (flat ⇒ \
+                         background DCs are free)",
+                        b.events_per_sec / s.events_per_sec
+                    )
+                    .unwrap();
+                }
+            }
         }
         out
     }
@@ -1218,6 +1276,23 @@ mod tests {
             BenchWorkload::CampaignSmokeParts { threads: 4 }.name(),
             "campaign-smoke-threaded"
         );
+    }
+
+    #[test]
+    fn planet_churn_rows_run_identical_exact_tier_work() {
+        // 64 vs 256 DCs differ only in the aggregate-tier background:
+        // generated topologies are prefix-stable, so the 4-DC exact tier
+        // is bit-identical and the event totals must match exactly —
+        // that is what makes the events/s pair a background-cost probe.
+        let base = Config::default();
+        let small =
+            BenchWorkload::PlanetChurn { dcs: 64 }.run_once(&base, QueueKind::Slab, true);
+        let big =
+            BenchWorkload::PlanetChurn { dcs: 256 }.run_once(&base, QueueKind::Slab, true);
+        assert!(small.events > 0, "planet churn must execute events");
+        assert_eq!(small.events, big.events, "background DCs leaked into the exact tier");
+        assert_eq!(BenchWorkload::PlanetChurn { dcs: 64 }.name(), "planet-churn-64dc");
+        assert_eq!(BenchWorkload::PlanetChurn { dcs: 256 }.name(), "planet-churn-256dc");
     }
 
     #[test]

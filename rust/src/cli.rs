@@ -24,6 +24,11 @@
 //!            [--shards N]                        ... on the sharded queue engine
 //!                                                (0 = auto; digests must not change)
 //!            [--threads N]                       ... on N worker threads (N >= 1)
+//!            [--topology generated:D,N,S]        ... every scenario on a generated
+//!                                                world with D DCs, N nodes per DC,
+//!                                                seed S (see docs/SCALE.md; pair
+//!                                                with --set topology.exact_dcs=K
+//!                                                for the two-tier engine)
 //!            [--engine slab|sharded-sim]         ... slab (default): the sequential
 //!                                                World; sharded-sim: the World-as-parts
 //!                                                model on the threaded ShardedSim
@@ -57,7 +62,7 @@ fn usage() -> ! {
         "usage: houtu <fig2|fig3|fig7|fig8|fig9|fig10|fig11|fig12|theorem1|run|trace|load|campaign|replay|fuzz|bench|export|all> \
          [--config FILE] [--set section.key=value]... [--deployment D] [--workload W] [--size S] \
          [--spec FILE] [--smoke] [--report out.json|out.csv] [--record out.log] \
-         [--shards N] [--threads N] [--engine slab|sharded-sim] \
+         [--shards N] [--threads N] [--engine slab|sharded-sim] [--topology generated:D,N,S] \
          [--cases N] [--seed S] [--soak MINUTES] [--repro out.toml] [--iters N] \
          [--compare BENCH_baseline.json] [--history BENCH_history.jsonl]\n\
          replay takes the log path as its positional argument: houtu replay out.log"
@@ -106,6 +111,10 @@ pub struct Cli {
     /// `None`/`slab` runs the sequential World; `sharded-sim` runs the
     /// World-as-parts model on the threaded ShardedSim.
     pub engine: Option<String>,
+    /// Generated-world token for `campaign --topology generated:D,N,S`:
+    /// every scenario in the campaign runs on that topology (scenarios
+    /// that already pin a `topology.generated=` override keep theirs).
+    pub topology: Option<String>,
     /// Positional event-log path (`replay LOG`).
     pub log_path: Option<String>,
 }
@@ -133,6 +142,7 @@ pub fn parse(args: &[String]) -> Cli {
     let mut threads = 0usize;
     let mut shards = None;
     let mut engine = None;
+    let mut topology = None;
     let mut log_path = None;
     let mut i = 1;
     while i < args.len() {
@@ -267,6 +277,15 @@ pub fn parse(args: &[String]) -> Cli {
                     args.get(i).and_then(|s| s.parse::<usize>().ok()).unwrap_or_else(|| usage()),
                 );
             }
+            "--topology" => {
+                i += 1;
+                let t = args.get(i).unwrap_or_else(|| usage()).clone();
+                if let Err(e) = crate::topo::parse_spec(&t) {
+                    eprintln!("error: {e:#}");
+                    std::process::exit(2);
+                }
+                topology = Some(t);
+            }
             other => {
                 // `replay` takes its log path as the one positional arg.
                 if command == "replay" && !other.starts_with('-') && log_path.is_none() {
@@ -299,6 +318,7 @@ pub fn parse(args: &[String]) -> Cli {
         threads,
         shards,
         engine,
+        topology,
         log_path,
     }
 }
@@ -432,6 +452,16 @@ pub fn run(cli: &Cli) {
             };
             if cli.threads > 0 {
                 spec.parallelism = cli.threads;
+            }
+            if let Some(t) = &cli.topology {
+                // Rebase every scenario onto the generated world; a
+                // scenario that already pins its own topology keeps it.
+                for sc in &mut spec.scenarios {
+                    if !sc.overrides.iter().any(|o| o.starts_with("topology.generated=")) {
+                        sc.regions = 0;
+                        sc.overrides.push(format!("topology.generated={t}"));
+                    }
+                }
             }
             if cli.engine.as_deref() == Some("sharded-sim") {
                 // The World-as-parts model on ShardedSim: `--threads`

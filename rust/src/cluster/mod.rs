@@ -12,6 +12,22 @@
 //! YARN's NodeManager; [`Cluster::take_period_utilization`] returns the
 //! average over the closing scheduling period — exactly the `u(q−1)` that
 //! Af consumes.
+//!
+//! Node state is stored struct-of-arrays ([`NodeTable`]): parallel `Vec`s
+//! for class/alive/started-at plus a `(base, count)` range into the dense
+//! container table, indexed by `dc * workers_per_dc + idx`. A node costs
+//! [`soa_bytes_per_node`] bytes, and the sweeps that touch every node of
+//! a DC (`market_tick` revocation scans, `kill_dc`) walk contiguous
+//! memory — the layout planet-scale generated topologies (`crate::topo`)
+//! need. The representation is private; callers go through the same
+//! accessor surface as before ([`Cluster::node_class`],
+//! [`Cluster::node_alive`], [`Cluster::node_ids`], ...), and
+//! [`set_shadow_check`] can arm a legacy per-node-struct mirror that
+//! cross-checks every mutation — `rust/tests/golden_digests.rs` runs the
+//! whole standard campaign under it to prove the swap is a pure
+//! representation change.
+
+use std::sync::atomic::{AtomicBool, Ordering};
 
 use crate::cloud::InstanceClass;
 use crate::ids::{ContainerId, DcId, JmId, NodeId, TaskId};
@@ -47,23 +63,78 @@ impl Container {
     }
 }
 
-/// A worker machine hosting several containers.
-#[derive(Debug)]
-pub struct Node {
-    pub id: NodeId,
-    pub rack: usize,
-    pub class: InstanceClass,
-    pub containers: Vec<ContainerId>,
-    pub alive: bool,
-    pub started_at: SimTime,
-}
-
-/// One region's machines.
+/// One region (node state lives in the [`NodeTable`], not here).
 #[derive(Debug)]
 pub struct DataCenter {
     pub id: DcId,
     pub region: String,
-    pub nodes: Vec<Node>,
+}
+
+/// Struct-of-arrays node store. Row `dc * workers_per_dc + idx` holds one
+/// node; a node's containers are the consecutive id range
+/// `cbase..cbase + ccount` (both [`Cluster::build`] and
+/// [`Cluster::restart_node`] allocate container ids consecutively, so a
+/// range replaces the per-node `Vec<ContainerId>`). Racks are a pure
+/// function of the in-DC index (`idx % racks_per_dc`) and are not stored.
+#[derive(Debug, Default)]
+struct NodeTable {
+    workers_per_dc: usize,
+    racks_per_dc: usize,
+    class: Vec<InstanceClass>,
+    alive: Vec<bool>,
+    started_at: Vec<SimTime>,
+    cbase: Vec<u64>,
+    ccount: Vec<u32>,
+}
+
+impl NodeTable {
+    #[inline]
+    fn row(&self, node: NodeId) -> usize {
+        debug_assert!(node.idx < self.workers_per_dc, "node idx out of range");
+        node.dc.0 * self.workers_per_dc + node.idx
+    }
+
+    #[inline]
+    fn rack_of(&self, idx: usize) -> usize {
+        idx % self.racks_per_dc.max(1)
+    }
+
+    #[inline]
+    fn containers_of(&self, row: usize) -> impl Iterator<Item = ContainerId> {
+        let base = self.cbase[row];
+        (base..base + self.ccount[row] as u64).map(ContainerId)
+    }
+}
+
+/// Memory cost of one node row in the struct-of-arrays store (the figure
+/// the `planet-churn-*` bench rows report).
+pub fn soa_bytes_per_node() -> usize {
+    std::mem::size_of::<InstanceClass>()
+        + std::mem::size_of::<bool>()
+        + std::mem::size_of::<SimTime>()
+        + std::mem::size_of::<u64>()
+        + std::mem::size_of::<u32>()
+}
+
+/// When armed (differential tests only), every [`Cluster::build`] also
+/// populates a legacy per-node-struct mirror and every node mutation
+/// cross-checks the two representations. Read once at build time.
+static SHADOW_CHECK: AtomicBool = AtomicBool::new(false);
+
+/// Arm/disarm the legacy shadow mirror for clusters built from now on.
+pub fn set_shadow_check(on: bool) {
+    SHADOW_CHECK.store(on, Ordering::SeqCst);
+}
+
+/// The pre-SoA per-node struct, kept verbatim as the shadow-check mirror.
+#[derive(Debug, Clone, PartialEq)]
+struct LegacyNode {
+    id: NodeId,
+    rack: usize,
+    class: InstanceClass,
+    containers: Vec<ContainerId>,
+    alive: bool,
+    started_at: SimTime,
 }
 
 /// Dense container table: ids are allocated monotonically and entries are
@@ -111,6 +182,8 @@ impl std::ops::Index<&ContainerId> for ContainerStore {
 pub struct Cluster {
     pub dcs: Vec<DataCenter>,
     pub containers: ContainerStore,
+    nodes: NodeTable,
+    shadow: Option<Vec<LegacyNode>>,
     next_container: u64,
 }
 
@@ -126,20 +199,16 @@ impl Cluster {
         mut class_of: impl FnMut(DcId, usize) -> InstanceClass,
     ) -> Cluster {
         let mut cluster = Cluster::default();
+        cluster.nodes.workers_per_dc = workers;
+        cluster.nodes.racks_per_dc = racks;
+        let mut shadow = SHADOW_CHECK.load(Ordering::SeqCst).then(Vec::new);
         for (d, region) in regions.iter().enumerate() {
             let dc = DcId(d);
-            let mut nodes = Vec::new();
             for n in 0..workers {
                 let id = NodeId { dc, idx: n };
                 let rack = n % racks.max(1);
-                let mut node = Node {
-                    id,
-                    rack,
-                    class: class_of(dc, n),
-                    containers: Vec::new(),
-                    alive: true,
-                    started_at: 0,
-                };
+                let class = class_of(dc, n);
+                let cbase = cluster.next_container;
                 for _ in 0..slots {
                     let cid = ContainerId(cluster.next_container);
                     cluster.next_container += 1;
@@ -153,13 +222,48 @@ impl Cluster {
                         util: TimeWeighted::new(0.0, 0.0),
                         alive: true,
                     });
-                    node.containers.push(cid);
                 }
-                nodes.push(node);
+                cluster.nodes.class.push(class);
+                cluster.nodes.alive.push(true);
+                cluster.nodes.started_at.push(0);
+                cluster.nodes.cbase.push(cbase);
+                cluster.nodes.ccount.push(slots as u32);
+                if let Some(s) = shadow.as_mut() {
+                    s.push(LegacyNode {
+                        id,
+                        rack,
+                        class,
+                        containers: (cbase..cbase + slots as u64).map(ContainerId).collect(),
+                        alive: true,
+                        started_at: 0,
+                    });
+                }
             }
-            cluster.dcs.push(DataCenter { id: dc, region: region.clone(), nodes });
+            cluster.dcs.push(DataCenter { id: dc, region: region.clone() });
+        }
+        cluster.shadow = shadow;
+        if cluster.shadow.is_some() {
+            for row in 0..cluster.nodes.alive.len() {
+                cluster.shadow_verify(row);
+            }
         }
         cluster
+    }
+
+    /// Cross-check one node row against the legacy mirror (no-op unless
+    /// the cluster was built with [`set_shadow_check`] armed).
+    fn shadow_verify(&self, row: usize) {
+        let Some(s) = self.shadow.as_ref() else { return };
+        let (n, t) = (&s[row], &self.nodes);
+        assert_eq!(n.class, t.class[row], "shadow class diverged at node row {row}");
+        assert_eq!(n.alive, t.alive[row], "shadow alive diverged at node row {row}");
+        assert_eq!(
+            n.started_at, t.started_at[row],
+            "shadow started_at diverged at node row {row}"
+        );
+        assert_eq!(n.rack, t.rack_of(n.id.idx), "shadow rack diverged at node row {row}");
+        let soa: Vec<ContainerId> = t.containers_of(row).collect();
+        assert_eq!(n.containers, soa, "shadow containers diverged at node row {row}");
     }
 
     pub fn container(&self, id: ContainerId) -> &Container {
@@ -170,15 +274,33 @@ impl Cluster {
         self.containers.get_mut(&id).expect("unknown container")
     }
 
+    /// The node ids of one DC, in index order (owned, so callers can keep
+    /// mutating the cluster while walking them).
+    pub fn node_ids(&self, dc: DcId) -> Vec<NodeId> {
+        (0..self.nodes.workers_per_dc).map(|idx| NodeId { dc, idx }).collect()
+    }
+
+    /// Whether a node is currently up.
+    pub fn node_alive(&self, node: NodeId) -> bool {
+        self.nodes.alive[self.nodes.row(node)]
+    }
+
+    /// The container ids a node currently hosts (its latest incarnation).
+    pub fn node_containers(&self, node: NodeId) -> Vec<ContainerId> {
+        self.nodes.containers_of(self.nodes.row(node)).collect()
+    }
+
     /// All live containers in a DC.
     pub fn dc_containers(&self, dc: DcId) -> Vec<ContainerId> {
-        self.dcs[dc.0]
-            .nodes
-            .iter()
-            .filter(|n| n.alive)
-            .flat_map(|n| n.containers.iter().copied())
-            .filter(|c| self.containers[c].alive)
-            .collect()
+        let mut out = Vec::new();
+        for idx in 0..self.nodes.workers_per_dc {
+            let row = dc.0 * self.nodes.workers_per_dc + idx;
+            if !self.nodes.alive[row] {
+                continue;
+            }
+            out.extend(self.nodes.containers_of(row).filter(|c| self.containers[c].alive));
+        }
+        out
     }
 
     /// Live containers in a DC not granted to any sub-job.
@@ -186,11 +308,12 @@ impl Cluster {
     /// round and steal check.
     pub fn free_pool(&self, dc: DcId) -> Vec<ContainerId> {
         let mut out = Vec::new();
-        for n in &self.dcs[dc.0].nodes {
-            if !n.alive {
+        for idx in 0..self.nodes.workers_per_dc {
+            let row = dc.0 * self.nodes.workers_per_dc + idx;
+            if !self.nodes.alive[row] {
                 continue;
             }
-            for &cid in &n.containers {
+            for cid in self.nodes.containers_of(row) {
                 let c = &self.containers[&cid];
                 if c.alive && c.owner.is_none() {
                     out.push(cid);
@@ -203,12 +326,15 @@ impl Cluster {
     /// Total live container capacity per DC (|P_j| in the analysis).
     /// Allocation-free count.
     pub fn dc_capacity(&self, dc: DcId) -> usize {
-        self.dcs[dc.0]
-            .nodes
-            .iter()
-            .filter(|n| n.alive)
-            .map(|n| n.containers.iter().filter(|c| self.containers[c].alive).count())
-            .sum()
+        let mut sum = 0;
+        for idx in 0..self.nodes.workers_per_dc {
+            let row = dc.0 * self.nodes.workers_per_dc + idx;
+            if !self.nodes.alive[row] {
+                continue;
+            }
+            sum += self.nodes.containers_of(row).filter(|c| self.containers[c].alive).count();
+        }
+        sum
     }
 
     /// Grant a free container to a sub-job. Panics if already owned.
@@ -289,12 +415,12 @@ impl Cluster {
     pub fn kill_node(&mut self, node: NodeId, t: SimTime) -> (Vec<ContainerId>, Vec<TaskId>) {
         let mut dead_containers = Vec::new();
         let mut dead_tasks = Vec::new();
-        let n = &mut self.dcs[node.dc.0].nodes[node.idx];
-        if !n.alive {
+        let row = self.nodes.row(node);
+        if !self.nodes.alive[row] {
             return (dead_containers, dead_tasks);
         }
-        n.alive = false;
-        let cids = n.containers.clone();
+        self.nodes.alive[row] = false;
+        let cids: Vec<ContainerId> = self.nodes.containers_of(row).collect();
         for cid in cids {
             let c = self.container_mut(cid);
             if !c.alive {
@@ -308,13 +434,19 @@ impl Cluster {
             c.free = 0.0;
             dead_containers.push(cid);
         }
+        if let Some(s) = self.shadow.as_mut() {
+            s[row].alive = false;
+        }
+        self.shadow_verify(row);
         (dead_containers, dead_tasks)
     }
 
     /// Restart a dead node with fresh containers (new instance acquired
     /// from the market). Returns the new container ids.
     pub fn restart_node(&mut self, node: NodeId, slots: usize, t: SimTime) -> Vec<ContainerId> {
-        let rack = self.dcs[node.dc.0].nodes[node.idx].rack;
+        let row = self.nodes.row(node);
+        let rack = self.nodes.rack_of(node.idx);
+        let cbase = self.next_container;
         let mut fresh = Vec::new();
         for _ in 0..slots {
             let cid = ContainerId(self.next_container);
@@ -331,22 +463,34 @@ impl Cluster {
             });
             fresh.push(cid);
         }
-        let n = &mut self.dcs[node.dc.0].nodes[node.idx];
-        n.alive = true;
-        n.started_at = t;
-        n.containers = fresh.clone();
+        self.nodes.alive[row] = true;
+        self.nodes.started_at[row] = t;
+        self.nodes.cbase[row] = cbase;
+        self.nodes.ccount[row] = slots as u32;
+        if let Some(s) = self.shadow.as_mut() {
+            let n = &mut s[row];
+            n.alive = true;
+            n.started_at = t;
+            n.containers = fresh.clone();
+        }
+        self.shadow_verify(row);
         fresh
     }
 
     /// The instance class a node is currently paid under.
     pub fn node_class(&self, node: NodeId) -> InstanceClass {
-        self.dcs[node.dc.0].nodes[node.idx].class
+        self.nodes.class[self.nodes.row(node)]
     }
 
     /// Re-class a node (market re-acquisition may come back with a fresh
     /// bid or as an on-demand instance — the bid strategy's decision).
     pub fn set_node_class(&mut self, node: NodeId, class: InstanceClass) {
-        self.dcs[node.dc.0].nodes[node.idx].class = class;
+        let row = self.nodes.row(node);
+        self.nodes.class[row] = class;
+        if let Some(s) = self.shadow.as_mut() {
+            s[row].class = class;
+        }
+        self.shadow_verify(row);
     }
 
     /// Sum of used resource over live containers of a DC (for injection
@@ -388,8 +532,46 @@ mod tests {
         assert_eq!(c.dc_capacity(DcId(1)), 4);
         assert_eq!(c.free_pool(DcId(0)).len(), 4);
         // Rack spread: nodes 0,1 on racks 0,1.
-        assert_eq!(c.dcs[0].nodes[0].rack, 0);
-        assert_eq!(c.dcs[0].nodes[1].rack, 1);
+        let n0 = c.node_containers(NodeId { dc: DcId(0), idx: 0 });
+        let n1 = c.node_containers(NodeId { dc: DcId(0), idx: 1 });
+        assert_eq!(c.container(n0[0]).rack, 0);
+        assert_eq!(c.container(n1[0]).rack, 1);
+    }
+
+    #[test]
+    fn node_accessors_expose_the_soa_store() {
+        let mut c = small_cluster();
+        assert_eq!(
+            c.node_ids(DcId(1)),
+            vec![NodeId { dc: DcId(1), idx: 0 }, NodeId { dc: DcId(1), idx: 1 }]
+        );
+        let node = NodeId { dc: DcId(1), idx: 1 };
+        assert!(c.node_alive(node));
+        let before = c.node_containers(node);
+        assert_eq!(before.len(), 2);
+        c.kill_node(node, secs(1));
+        assert!(!c.node_alive(node));
+        let fresh = c.restart_node(node, 2, secs(5));
+        assert!(c.node_alive(node));
+        assert_eq!(c.node_containers(node), fresh);
+        assert_ne!(c.node_containers(node), before, "restart re-homes containers");
+        // The whole store costs a few tens of bytes per node.
+        assert!(soa_bytes_per_node() <= 48, "{}", soa_bytes_per_node());
+    }
+
+    #[test]
+    fn shadow_mirror_cross_checks_every_mutation() {
+        set_shadow_check(true);
+        let mut c = small_cluster();
+        set_shadow_check(false);
+        assert!(c.shadow.is_some(), "shadow must arm at build");
+        let node = NodeId { dc: DcId(0), idx: 1 };
+        c.kill_node(node, secs(2));
+        c.restart_node(node, 2, secs(9));
+        c.set_node_class(node, InstanceClass::Spot { bid: 0.05 });
+        assert_eq!(c.node_class(node), InstanceClass::Spot { bid: 0.05 });
+        // An unarmed build carries no mirror.
+        assert!(small_cluster().shadow.is_none());
     }
 
     #[test]
@@ -455,7 +637,7 @@ mod tests {
     fn kill_node_reports_casualties_and_restart_revives() {
         let mut c = small_cluster();
         let node = NodeId { dc: DcId(0), idx: 0 };
-        let cids = c.dcs[0].nodes[0].containers.clone();
+        let cids = c.node_containers(node);
         c.grant(cids[0], jm());
         c.start_task(cids[0], task(3), 0.5, secs(1));
         let (dead_c, dead_t) = c.kill_node(node, secs(2));

@@ -82,6 +82,17 @@ pub struct TopologyConfig {
     pub containers_per_worker: usize,
     /// Racks per DC (locality tier between node-local and any).
     pub racks_per_dc: usize,
+    /// Generated-topology token (`generated:<dcs>,<nodes_per_dc>,<seed>`
+    /// — see [`crate::topo`]). Empty = the explicit `regions` list above.
+    /// Setting `topology.generated` expands the token: it installs the
+    /// generated region names, `workers_per_dc` and the full bandwidth
+    /// matrix, winning over explicit values in the same document.
+    pub generated: String,
+    /// Two-tier fidelity boundary for the parts engine: DCs
+    /// `0..exact_dcs` simulate exactly, the rest run as aggregate
+    /// background until promoted (see `docs/SCALE.md`). 0 = all exact.
+    /// The sequential slab engine ignores this knob.
+    pub exact_dcs: usize,
 }
 
 impl TopologyConfig {
@@ -258,6 +269,8 @@ impl Default for Config {
                 workers_per_dc: 4,
                 containers_per_worker: 4,
                 racks_per_dc: 2,
+                generated: String::new(),
+                exact_dcs: 0,
             },
             wan: WanConfig {
                 bandwidth: fig2_bandwidth(),
@@ -337,6 +350,13 @@ impl Config {
         t.containers_per_worker =
             doc.i64_or("topology", "containers_per_worker", t.containers_per_worker as i64) as usize;
         t.racks_per_dc = doc.i64_or("topology", "racks_per_dc", t.racks_per_dc as i64) as usize;
+        t.exact_dcs = doc.i64_or("topology", "exact_dcs", t.exact_dcs as i64) as usize;
+        // Handled after the scalar keys so a generated token wins over
+        // explicit regions/workers values in the same document.
+        if let Some(v) = doc.get("topology", "generated") {
+            let s = v.as_str().context("topology.generated must be a string")?;
+            self.expand_generated(s)?;
+        }
 
         let w = &mut self.wan;
         w.rtt_ms = doc.f64_or("wan", "rtt_ms", w.rtt_ms);
@@ -431,11 +451,36 @@ impl Config {
         self.apply_doc(&doc)
     }
 
+    /// Expand a `generated:<dcs>,<nodes_per_dc>,<seed>` token (see
+    /// [`crate::topo`]) into concrete region names, worker count and the
+    /// full `(mean, std)` bandwidth matrix. The installed matrix is
+    /// exactly `dcs × dcs`, so a later [`Config::resize_bandwidth`] is a
+    /// no-op that preserves it.
+    pub fn expand_generated(&mut self, token: &str) -> Result<()> {
+        let spec = crate::topo::parse_spec(token)?;
+        let g = crate::topo::generate(spec);
+        self.topology.generated = token.to_string();
+        self.topology.regions = g.regions;
+        self.topology.workers_per_dc = spec.nodes_per_dc;
+        self.wan.bandwidth = g.bandwidth;
+        Ok(())
+    }
+
     /// Sanity checks on parameter ranges.
     pub fn validate(&self) -> Result<()> {
         let n = self.topology.num_dcs();
         if n == 0 {
             bail!("need at least one region");
+        }
+        if !self.topology.generated.is_empty() {
+            crate::topo::parse_spec(&self.topology.generated)?;
+        }
+        if self.topology.exact_dcs > n {
+            bail!(
+                "topology.exact_dcs {} exceeds the topology's {} DCs",
+                self.topology.exact_dcs,
+                n
+            );
         }
         if self.wan.bandwidth.len() != n {
             // The Fig-2 matrix is 4x4; synthesize a uniform matrix for other
@@ -608,6 +653,33 @@ mod tests {
         let mut cfg = Config::default();
         cfg.apply_override("bidding.insurance=true").unwrap();
         assert!(cfg.bidding.active());
+    }
+
+    #[test]
+    fn generated_topology_expands_and_validates() {
+        let mut cfg = Config::default();
+        cfg.apply_override("topology.generated=generated:16,2,7").unwrap();
+        assert_eq!(cfg.topology.num_dcs(), 16);
+        assert_eq!(cfg.topology.workers_per_dc, 2);
+        assert!(cfg.topology.regions[0].starts_with('G'), "{:?}", cfg.topology.regions[0]);
+        assert_eq!(cfg.wan.bandwidth.len(), 16);
+        assert_eq!(cfg.wan.bandwidth[3][3], (827.0, 104.0));
+        assert!(cfg.wan.bandwidth[0][1].0 < 827.0, "cross-DC must trail the LAN");
+        assert_eq!(cfg.wan.bandwidth[0][1], cfg.wan.bandwidth[1][0], "symmetric");
+        // The installed matrix is exactly n×n, so resize preserves it.
+        let before = cfg.wan.bandwidth.clone();
+        cfg.resize_bandwidth();
+        assert_eq!(cfg.wan.bandwidth, before);
+        // A bad token is a clear error, not a panic.
+        let e = cfg
+            .apply_override("topology.generated=generated:64")
+            .expect_err("missing fields must fail")
+            .to_string();
+        assert!(e.contains("topology spec"), "{e}");
+        // The two-tier boundary knob validates against the DC count.
+        cfg.apply_override("topology.exact_dcs=4").unwrap();
+        assert_eq!(cfg.topology.exact_dcs, 4);
+        assert!(cfg.apply_override("topology.exact_dcs=99").is_err());
     }
 
     #[test]

@@ -17,6 +17,19 @@
 //! clock); part `num_dcs` is the global part, which owns only the spot
 //! market tick sweep and the campaign probe sweep and holds no DC state.
 //!
+//! Two-tier fidelity (`topology.exact_dcs`, see `docs/SCALE.md`): on a
+//! generated planet-scale topology only the leading `exact_dcs` parts —
+//! the *exact tier* — run the full protocol; the remaining *background*
+//! parts stay dormant (no market ticks, no probes, no replication
+//! fan-out), so events/sec is a function of the exact tier, not the
+//! world size. The first event to touch a background part (a DC-targeted
+//! chaos injection) *promotes* it: it catches up the price walk it
+//! skipped, folds one promotion transition, and runs the full protocol
+//! from then on. A `SingleJob` home outside the boundary widens the
+//! exact tier statically at cell setup. With `exact_dcs = 0` (the
+//! default) every DC is exact and the engine is bit-identical to the
+//! pre-tier behavior.
+//!
 //! Determinism contract (the differential wall pins this): a cell's
 //! digest is a pure function of `(base config, scenario, seed)` —
 //! independent of the shard/thread count and of wall-clock interleaving,
@@ -105,7 +118,14 @@ pub struct JobSlice {
 pub struct PartState {
     pub part: usize,
     pub ndc: usize,
+    /// Exact-tier size: parts `0..edc` run the full protocol; parts
+    /// `edc..ndc` are dormant background until promoted.
+    pub edc: usize,
     pub is_global: bool,
+    /// Whether this part started in the exact tier (or is the global part).
+    pub exact: bool,
+    /// Whether a background part has been promoted to exact fidelity.
+    pub promoted: bool,
     rng: Pcg,
     pub alive: bool,
     pub slots_free: usize,
@@ -132,13 +152,16 @@ pub struct PartState {
 }
 
 impl PartState {
-    fn new(part: usize, ndc: usize, cfg: &Config) -> PartState {
+    fn new(part: usize, ndc: usize, edc: usize, cfg: &Config) -> PartState {
         let slots = cfg.topology.workers_per_dc * cfg.topology.containers_per_worker;
         let is_global = part == ndc;
         PartState {
             part,
             ndc,
+            edc,
             is_global,
+            exact: is_global || part < edc,
+            promoted: false,
             rng: Pcg::new(cfg.seed, 9_000 + part as u64),
             alive: true,
             slots_free: if is_global { 0 } else { slots },
@@ -272,6 +295,27 @@ impl ShardEvent<PartState> for PartEvent {
     fn apply(self, ctx: &mut ShardCtx<'_, PartState, PartEvent>) {
         let now = ctx.now();
         let me = ctx.part();
+        // Two-tier promotion: the first event to touch a background part
+        // switches it to exact fidelity. Catch up the price walk it
+        // skipped (one draw per elapsed market tick, from the part's own
+        // untouched stream — deterministic however the touch arrived),
+        // fold one promotion transition, then arm the part's own market
+        // tick loop, since the global sweep only covers the exact tier.
+        if !ctx.state.is_global && !ctx.state.exact && !ctx.state.promoted {
+            ctx.state.promoted = true;
+            let ticks = now / TICK_MS;
+            for _ in 0..ticks {
+                let draw = ctx.state.rng.below(2_001) as i64 - 1_000;
+                let delta = draw * ctx.state.storm_milli as i64 / 1_000 / 50;
+                let p = (ctx.state.price_milli as i64 + delta).clamp(200, 20_000);
+                ctx.state.price_milli = p as u64;
+            }
+            let price = ctx.state.price_milli;
+            ctx.state.fold(25, now, ticks, price);
+            if now < HORIZON_MS {
+                ctx.schedule_in(TICK_MS, PartEvent::MarketTick);
+            }
+        }
         match self {
             PartEvent::SubmitJob { job, stages, tasks, task_ms } => {
                 ctx.state.fold(1, now, job, (stages as u64) << 32 | tasks as u64);
@@ -287,8 +331,8 @@ impl ShardEvent<PartState> for PartEvent {
                 ctx.state
                     .jobs
                     .insert(job, JobSlice { stage: 0, stages, tasks, task_ms, outstanding: 0 });
-                let ndc = ctx.state.ndc;
-                for d in 0..ndc {
+                let edc = ctx.state.edc;
+                for d in 0..edc {
                     if d != me {
                         ctx.send(d, 0, PartEvent::ReplicateJm { job, version: 0 });
                     }
@@ -314,11 +358,11 @@ impl ShardEvent<PartState> for PartEvent {
                     return;
                 };
                 ctx.state.fold(3, now, job, sl.stage as u64);
-                let ndc = ctx.state.ndc;
+                let edc = ctx.state.edc;
                 // Insurance: a hot spot market here means this stage's
                 // completion is at risk — buy one duplicate elsewhere.
-                if ctx.state.price_milli > INSURANCE_PRICE_MILLI && ndc > 1 {
-                    let tgt = (me + 1 + ctx.state.rng.index(ndc - 1)) % ndc;
+                if ctx.state.price_milli > INSURANCE_PRICE_MILLI && edc > 1 {
+                    let tgt = (me + 1 + ctx.state.rng.index(edc - 1)) % edc;
                     ctx.send(tgt, 0, PartEvent::InsuranceDuplicate { job });
                 }
                 ctx.state.jobs.get_mut(&job).expect("slice present").outstanding = sl.tasks;
@@ -339,10 +383,10 @@ impl ShardEvent<PartState> for PartEvent {
                         job,
                         origin: me as u32,
                         task_ms: sl.task_ms,
-                        ttl: ndc as u32,
+                        ttl: edc as u32,
                     };
-                    if ndc > 1 {
-                        let tgt = (me + 1 + ctx.state.rng.index(ndc - 1)) % ndc;
+                    if edc > 1 {
+                        let tgt = (me + 1 + ctx.state.rng.index(edc - 1)) % edc;
                         ctx.send(tgt, 0, req);
                     } else {
                         ctx.schedule_in(RETRY_MS, req);
@@ -352,7 +396,7 @@ impl ShardEvent<PartState> for PartEvent {
 
             PartEvent::StealRequest { job, origin, task_ms, ttl } => {
                 ctx.state.fold(4, now, job, (origin as u64) << 32 | ttl as u64);
-                let ndc = ctx.state.ndc;
+                let edc = ctx.state.edc;
                 if ctx.state.alive && ctx.state.slots_free > 0 {
                     ctx.state.slots_free -= 1;
                     if me != origin as usize {
@@ -364,15 +408,15 @@ impl ShardEvent<PartState> for PartEvent {
                         task_ms + jitter,
                         PartEvent::TaskFinish { job, origin, task_ms, seed },
                     );
-                } else if ttl > 0 && ndc > 1 {
-                    let tgt = (me + 1 + ctx.state.rng.index(ndc - 1)) % ndc;
+                } else if ttl > 0 && edc > 1 {
+                    let tgt = (me + 1 + ctx.state.rng.index(edc - 1)) % edc;
                     ctx.send(tgt, 0, PartEvent::StealRequest { job, origin, task_ms, ttl: ttl - 1 });
                 } else {
                     // Nowhere has capacity right now: back off and retry
                     // with a fresh ttl once tasks (or revivals) free slots.
                     ctx.schedule_in(
                         RETRY_MS,
-                        PartEvent::StealRequest { job, origin, task_ms, ttl: ndc as u32 },
+                        PartEvent::StealRequest { job, origin, task_ms, ttl: edc as u32 },
                     );
                 }
             }
@@ -382,11 +426,11 @@ impl ShardEvent<PartState> for PartEvent {
                     // The VM died under the task: hand it back to the
                     // primary's part for a retry.
                     ctx.state.fold(5, now, job, 0);
-                    let ndc = ctx.state.ndc;
+                    let edc = ctx.state.edc;
                     ctx.send(
                         origin as usize,
                         0,
-                        PartEvent::StealRequest { job, origin, task_ms, ttl: ndc as u32 },
+                        PartEvent::StealRequest { job, origin, task_ms, ttl: edc as u32 },
                     );
                     return;
                 }
@@ -433,8 +477,8 @@ impl ShardEvent<PartState> for PartEvent {
                 } else {
                     ctx.state.jobs.remove(&job);
                     ctx.state.jobs_done += 1;
-                    let ndc = ctx.state.ndc;
-                    for d in 0..ndc {
+                    let edc = ctx.state.edc;
+                    for d in 0..edc {
                         if d != me {
                             ctx.send(d, 0, PartEvent::ReplicateJm { job, version: u64::MAX });
                         }
@@ -453,7 +497,7 @@ impl ShardEvent<PartState> for PartEvent {
 
             PartEvent::ElectJm { job, stage, stages, tasks, task_ms, ttl } => {
                 ctx.state.fold(8, now, job, (stage as u64) << 32 | ttl as u64);
-                let ndc = ctx.state.ndc;
+                let edc = ctx.state.edc;
                 if ctx.state.alive {
                     ctx.state.elections += 1;
                     ctx.state
@@ -464,7 +508,7 @@ impl ShardEvent<PartState> for PartEvent {
                     ctx.schedule_in(1, PartEvent::ReleaseStage { job });
                 } else if ttl > 0 {
                     ctx.send(
-                        (me + 1) % ndc,
+                        (me + 1) % edc,
                         0,
                         PartEvent::ElectJm { job, stage, stages, tasks, task_ms, ttl: ttl - 1 },
                     );
@@ -472,15 +516,15 @@ impl ShardEvent<PartState> for PartEvent {
                     // Every DC is down: park the election until revival.
                     ctx.schedule_in(
                         RETRY_MS,
-                        PartEvent::ElectJm { job, stage, stages, tasks, task_ms, ttl: ndc as u32 },
+                        PartEvent::ElectJm { job, stage, stages, tasks, task_ms, ttl: edc as u32 },
                     );
                 }
             }
 
             PartEvent::MarketSweep => {
                 ctx.state.fold(9, now, 0, 0);
-                let ndc = ctx.state.ndc;
-                for d in 0..ndc {
+                let edc = ctx.state.edc;
+                for d in 0..edc {
                     ctx.send(d, 0, PartEvent::MarketTick);
                 }
                 if now < HORIZON_MS {
@@ -495,12 +539,17 @@ impl ShardEvent<PartState> for PartEvent {
                 ctx.state.price_milli = p as u64;
                 let (price, storm) = (ctx.state.price_milli, ctx.state.storm_milli);
                 ctx.state.fold(10, now, price, storm);
+                // Promoted background parts drive their own tick loop —
+                // the global sweep never reaches past the exact tier.
+                if ctx.state.promoted && now < HORIZON_MS {
+                    ctx.schedule_in(TICK_MS, PartEvent::MarketTick);
+                }
             }
 
             PartEvent::ProbeSweep => {
                 ctx.state.fold(11, now, 0, 0);
-                let ndc = ctx.state.ndc;
-                for d in 0..ndc {
+                let edc = ctx.state.edc;
+                for d in 0..edc {
                     ctx.send(d, 0, PartEvent::Probe);
                 }
                 if now < HORIZON_MS {
@@ -527,10 +576,10 @@ impl ShardEvent<PartState> for PartEvent {
 
             PartEvent::ChaosKillJm { job } => {
                 ctx.state.fold(15, now, job, 0);
-                let ndc = ctx.state.ndc;
+                let edc = ctx.state.edc;
                 if let Some(sl) = ctx.state.jobs.remove(&job) {
                     ctx.send(
-                        (me + 1) % ndc,
+                        (me + 1) % edc,
                         0,
                         PartEvent::ElectJm {
                             job,
@@ -538,7 +587,7 @@ impl ShardEvent<PartState> for PartEvent {
                             stages: sl.stages,
                             tasks: sl.tasks,
                             task_ms: sl.task_ms,
-                            ttl: ndc as u32,
+                            ttl: edc as u32,
                         },
                     );
                 } else {
@@ -548,9 +597,9 @@ impl ShardEvent<PartState> for PartEvent {
 
             PartEvent::CascadeKill { job, remaining, gap_ms, ttl } => {
                 ctx.state.fold(16, now, job, (remaining as u64) << 32 | ttl as u64);
-                let ndc = ctx.state.ndc;
+                let edc = ctx.state.edc;
                 if let Some(sl) = ctx.state.jobs.remove(&job) {
-                    let succ = (me + 1) % ndc;
+                    let succ = (me + 1) % edc;
                     ctx.send(
                         succ,
                         0,
@@ -560,7 +609,7 @@ impl ShardEvent<PartState> for PartEvent {
                             stages: sl.stages,
                             tasks: sl.tasks,
                             task_ms: sl.task_ms,
-                            ttl: ndc as u32,
+                            ttl: edc as u32,
                         },
                     );
                     if remaining > 1 {
@@ -572,13 +621,13 @@ impl ShardEvent<PartState> for PartEvent {
                                 job,
                                 remaining: remaining - 1,
                                 gap_ms,
-                                ttl: ndc as u32,
+                                ttl: edc as u32,
                             },
                         );
                     }
                 } else if ttl > 0 {
                     ctx.send(
-                        (me + 1) % ndc,
+                        (me + 1) % edc,
                         0,
                         PartEvent::CascadeKill { job, remaining, gap_ms, ttl: ttl - 1 },
                     );
@@ -609,10 +658,10 @@ impl ShardEvent<PartState> for PartEvent {
                 let norphans = orphans.len() as u64;
                 ctx.state.replicas.clear();
                 ctx.state.fold(19, now, norphans, 0);
-                let ndc = ctx.state.ndc;
+                let edc = ctx.state.edc;
                 for (job, sl) in orphans {
                     ctx.send(
-                        (me + 1) % ndc,
+                        (me + 1) % edc,
                         0,
                         PartEvent::ElectJm {
                             job,
@@ -620,7 +669,7 @@ impl ShardEvent<PartState> for PartEvent {
                             stages: sl.stages,
                             tasks: sl.tasks,
                             task_ms: sl.task_ms,
-                            ttl: ndc as u32,
+                            ttl: edc as u32,
                         },
                     );
                 }
@@ -660,10 +709,13 @@ impl ShardEvent<PartState> for PartEvent {
 }
 
 /// Place one spec'd chaos injection on the timeline as seeded messages.
+/// DC-targeted arms seed their part directly (promoting a background DC
+/// on delivery); tier-wide arms — the `wan@` fan and cascade ttls — span
+/// the exact tier only, so the aggregate background stays untouched.
 fn seed_chaos(
     sim: &mut ShardedSim<PartState, PartEvent>,
     ev: &ChaosEvent,
-    ndc: usize,
+    edc: usize,
     containers_per_worker: usize,
 ) {
     match ev {
@@ -683,7 +735,7 @@ fn seed_chaos(
                     job: 0,
                     remaining: *count,
                     gap_ms: secs_f(*gap_secs),
-                    ttl: ndc as u32,
+                    ttl: edc as u32,
                 },
             );
         }
@@ -704,7 +756,7 @@ fn seed_chaos(
         }
         ChaosEvent::WanDegrade { from_secs, until_secs, factor } => {
             let milli = (factor * 1_000.0).round().max(1.0) as u64;
-            for d in 0..ndc {
+            for d in 0..edc {
                 sim.seed(d, secs_f(*from_secs), PartEvent::WanSetAll { milli });
                 sim.seed(d, secs_f(*until_secs), PartEvent::WanSetAll { milli: 1_000 });
             }
@@ -742,8 +794,18 @@ pub fn run_cell_on_parts(
 ) -> Result<PartCell> {
     let cfg = spec.build_config(base, seed)?;
     let ndc = cfg.topology.num_dcs();
+    // Two-tier boundary: `exact_dcs = 0` (default) keeps every DC exact.
+    // A single-job home beyond the boundary widens the tier statically —
+    // the promotion rule applied at setup instead of mid-run.
+    let mut edc = if cfg.topology.exact_dcs == 0 { ndc } else { cfg.topology.exact_dcs.min(ndc) };
+    if let ScenarioWorkload::SingleJob { home, .. } = spec.workload {
+        if home.0 >= edc {
+            edc = home.0 + 1;
+        }
+    }
     let nparts = ndc + 1;
-    let states: Vec<PartState> = (0..nparts).map(|p| PartState::new(p, ndc, &cfg)).collect();
+    let states: Vec<PartState> =
+        (0..nparts).map(|p| PartState::new(p, ndc, edc, &cfg)).collect();
     let la = crate::net::wan_lookahead(&cfg.wan, nparts);
     let mut sim = ShardedSim::new(states, la, threads.max(1));
     sim.set_event_budget(EVENT_BUDGET);
@@ -762,7 +824,7 @@ pub fn run_cell_on_parts(
                 let kind = WorkloadKind::ALL[j as usize % WorkloadKind::ALL.len()];
                 let (stages, tasks, task_ms) = job_shape(kind, SizeClass::Small);
                 sim.seed(
-                    j as usize % ndc,
+                    j as usize % edc,
                     t,
                     PartEvent::SubmitJob { job: j, stages, tasks, task_ms },
                 );
@@ -772,7 +834,7 @@ pub fn run_cell_on_parts(
     }
 
     for ev in &spec.events {
-        seed_chaos(&mut sim, ev, ndc, cfg.topology.containers_per_worker);
+        seed_chaos(&mut sim, ev, edc, cfg.topology.containers_per_worker);
     }
 
     // The thin global part owns the market tick and probe sweeps.
@@ -785,13 +847,20 @@ pub fn run_cell_on_parts(
         sim.run();
     }
 
+    // Cell digest: fold the event count plus the per-part digests of the
+    // parts that processed at least one event. Dormant background parts
+    // (and their indices) stay out of the fold, so a job confined to the
+    // exact tier digests identically however many background DCs the
+    // generated world carries — the invariance `rust/tests/part_world.rs`
+    // pins. The global part always participates (it drives the sweeps).
     let mut h = Fnv64::new();
-    h.u64(sim.digest());
     h.u64(sim.events_processed());
-    h.u64(crate::trace::fold_part_digests((0..nparts).map(|p| {
-        let s = sim.part_state(p);
-        (s.steps, s.part_digest())
-    })));
+    h.u64(crate::trace::fold_part_digests(
+        (0..nparts).filter(|&p| sim.part_events(p) > 0).map(|p| {
+            let s = sim.part_state(p);
+            (s.steps, s.part_digest())
+        }),
+    ));
 
     let dcs = (0..ndc).map(|p| sim.part_state(p));
     let (mut tasks_run, mut steals, mut elections, mut jobs_done) = (0, 0, 0, 0);

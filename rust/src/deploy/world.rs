@@ -459,11 +459,11 @@ impl World {
             InstanceClass::OnDemand => od_rate,
             InstanceClass::Spot { .. } => spot_rate,
         };
-        for dc in &self.cluster.dcs {
-            for node in &dc.nodes {
+        for d in 0..num_dcs {
+            for node in self.cluster.node_ids(DcId(d)) {
                 let mut prev = 0.0f64;
                 for &(n, t, class_before) in &self.class_changes {
-                    if n != node.id {
+                    if n != node {
                         continue;
                     }
                     let upto = t.clamp(0.0, makespan_secs);
@@ -471,8 +471,9 @@ impl World {
                     self.cost.charge_machine(class_before, seg / 3600.0, rate(class_before));
                     prev = prev.max(upto);
                 }
+                let class = self.cluster.node_class(node);
                 let seg = (makespan_secs - prev).max(0.0);
-                self.cost.charge_machine(node.class, seg / 3600.0, rate(node.class));
+                self.cost.charge_machine(class, seg / 3600.0, rate(class));
             }
         }
         let bytes = self.wan.stats.cross_dc_total_bytes();

@@ -26,6 +26,7 @@ pub mod scenario;
 pub mod sim;
 pub mod storage;
 pub mod testkit;
+pub mod topo;
 pub mod trace;
 pub mod util;
 pub mod workloads;

@@ -281,7 +281,7 @@ impl LoadSpec {
                 "load spec: unknown section [{section}] (expected [load] or [class.<name>])"
             );
         }
-        const KNOWN: [&str; 11] = [
+        const KNOWN: [&str; 12] = [
             "name",
             "deployment",
             "initial_rps",
@@ -293,6 +293,7 @@ impl LoadSpec {
             "slo_goodput_frac",
             "events",
             "overrides",
+            "topology",
         ];
         for k in load.keys() {
             ensure!(
@@ -343,7 +344,18 @@ impl LoadSpec {
             .iter()
             .map(|s| ChaosEvent::parse(s))
             .collect::<Result<Vec<_>>>()?;
-        let overrides = str_array("overrides")?;
+        let mut overrides = str_array("overrides")?;
+        // `topology = "generated:<dcs>,<nodes>,<seed>"` — same surface as
+        // scenario specs: parse-checked here, then desugared into a
+        // `topology.generated` override so the config layer expands it.
+        if let Some(v) = load.get("topology") {
+            let s = v
+                .as_str()
+                .with_context(|| format!("load {name:?}: topology must be a string"))?;
+            crate::topo::parse_spec(s)
+                .with_context(|| format!("load {name:?}: bad topology"))?;
+            overrides.push(format!("topology.generated={s}"));
+        }
 
         let mut classes = Vec::new();
         // BTreeMap order = alphabetical class names = stable class
@@ -519,6 +531,32 @@ arrival = "poisson"
             let text = FULL.replace(from, to);
             assert!(LoadSpec::parse(&text).is_err(), "{to:?} must be rejected");
         }
+    }
+
+    #[test]
+    fn topology_key_desugars_and_class_homes_validate_against_it() {
+        let text = FULL.replace(
+            "overrides = [\"cloud.revocations=true\"]",
+            "overrides = [\"cloud.revocations=true\"]\ntopology = \"generated:16,2,7\"",
+        );
+        let spec = LoadSpec::parse(&text).expect("topology key parses");
+        assert!(
+            spec.overrides.iter().any(|o| o == "topology.generated=generated:16,2,7"),
+            "{:?}",
+            spec.overrides
+        );
+        let cfg = spec.build_config(&Config::default(), 42).expect("generated world builds");
+        assert_eq!(cfg.topology.num_dcs(), 16);
+        assert_eq!(cfg.topology.workers_per_dc, 2);
+        // A bad token is a clear parse error naming the load spec.
+        let bad = text.replace("generated:16,2,7", "generated:16,2");
+        let e = LoadSpec::parse(&bad).expect_err("short token").to_string();
+        assert!(e.contains("bad topology"), "{e}");
+        // Class homes validate against the *generated* DC count.
+        let far = text.replace("home = 1", "home = 20");
+        let spec = LoadSpec::parse(&far).expect("parses; fit is checked at build");
+        let e = spec.build_config(&Config::default(), 42).expect_err("dc20 of 16").to_string();
+        assert!(e.contains("outside the 16-region topology"), "{e}");
     }
 
     #[test]

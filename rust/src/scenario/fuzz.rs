@@ -70,6 +70,14 @@ pub struct FuzzSpace {
     /// `bidding.strategy=...` (possibly with `bidding.insurance=true`).
     /// Empty disables the axis; naive stays the implicit default.
     pub strategies: Vec<crate::cloud::bidding::StrategyKind>,
+    /// Topology-scale axis: `(dcs, nodes_per_dc)` draws for generated
+    /// worlds (`topology.generated=generated:<dcs>,<nodes>,<seed>`). A
+    /// cell that takes this axis forces `regions = 0` (the two topology
+    /// sources are mutually exclusive) and draws chaos targets from the
+    /// generated world's dimensions. Failing cells shrink down the
+    /// `(dcs, nodes)` lattice toward a minimal failing scale. Empty
+    /// disables the axis.
+    pub topo_scales: Vec<(usize, usize)>,
 }
 
 impl Default for FuzzSpace {
@@ -89,6 +97,10 @@ impl Default for FuzzSpace {
                 crate::cloud::bidding::StrategyKind::Adaptive,
                 crate::cloud::bidding::StrategyKind::Deadline,
             ],
+            // Small generated worlds: large enough to leave the paper's
+            // 4-DC shape, small enough that every cell stays fast under
+            // the full invariant oracle.
+            topo_scales: vec![(8, 2), (16, 2)],
         }
     }
 }
@@ -133,8 +145,28 @@ impl<'a> CellGen<'a> {
 impl Gen<FuzzCell> for CellGen<'_> {
     fn generate(&self, rng: &mut Pcg) -> FuzzCell {
         let space = self.space;
-        let regions = space.regions[rng.index(space.regions.len())];
-        let n = self.dcs(regions);
+        // Topology-scale axis first: a generated world replaces the
+        // regions axis (mutually exclusive at the config layer), and
+        // every later DC/node draw must use *its* dimensions.
+        let topo = if !space.topo_scales.is_empty() && rng.chance(0.2) {
+            let (dcs, nodes) = space.topo_scales[rng.index(space.topo_scales.len())];
+            Some((dcs, nodes, 1 + rng.below(9)))
+        } else {
+            None
+        };
+        let regions = if topo.is_some() {
+            0
+        } else {
+            space.regions[rng.index(space.regions.len())]
+        };
+        let n = match topo {
+            Some((dcs, _, _)) => dcs,
+            None => self.dcs(regions),
+        };
+        let nodes_per_dc = match topo {
+            Some((_, nodes, _)) => nodes,
+            None => self.base.topology.workers_per_dc,
+        };
         let deployment = if rng.chance(0.7) || space.deployments.is_empty() {
             Deployment::Houtu
         } else {
@@ -206,7 +238,7 @@ impl Gen<FuzzCell> for CellGen<'_> {
                         at_secs: round1(rng.uniform(10.0, 300.0)),
                         node: NodeId {
                             dc: DcId(rng.index(n)),
-                            idx: rng.index(self.base.topology.workers_per_dc),
+                            idx: rng.index(nodes_per_dc),
                         },
                     });
                 }
@@ -224,7 +256,7 @@ impl Gen<FuzzCell> for CellGen<'_> {
                         at_secs: round1(rng.uniform(10.0, 300.0)),
                         node: NodeId {
                             dc: DcId((dead.0 + 1 + rng.index(n - 1)) % n),
-                            idx: rng.index(self.base.topology.workers_per_dc),
+                            idx: rng.index(nodes_per_dc),
                         },
                     });
                 }
@@ -307,6 +339,9 @@ impl Gen<FuzzCell> for CellGen<'_> {
         if rng.chance(0.2) {
             overrides.push(format!("scheduler.tau={}", [0.25, 0.5, 1.0][rng.index(3)]));
         }
+        if let Some((dcs, nodes, tseed)) = topo {
+            overrides.push(format!("topology.generated=generated:{dcs},{nodes},{tseed}"));
+        }
         events.truncate(space.max_events);
         let spec = ScenarioSpec {
             name: format!("fuzz-{:08x}", rng.next_u32()),
@@ -364,11 +399,49 @@ impl Gen<FuzzCell> for CellGen<'_> {
             }
         }
 
-        // 3. Drop overrides one at a time.
+        // 3. Drop overrides one at a time. (Dropping a
+        // `topology.generated=` override reverts to the base topology;
+        // events that no longer fit are filtered by the caller's
+        // validity check, like every other candidate.)
         for i in 0..s.overrides.len() {
             let mut ov = s.overrides.clone();
             ov.remove(i);
             out.push(with_spec(ScenarioSpec { overrides: ov, ..s.clone() }, cell.seed));
+        }
+
+        // 3b. Walk a generated topology down the (dcs, nodes_per_dc)
+        // lattice: halve each coordinate (floored at 2 DCs / 1 node) so
+        // a failing planet-scale cell minimizes to the smallest world
+        // that still fails, not a 256-DC monster.
+        for i in 0..s.overrides.len() {
+            let rest = match s.overrides[i].strip_prefix("topology.generated=") {
+                Some(r) => r,
+                None => continue,
+            };
+            let ts = match crate::topo::parse_spec(rest) {
+                Ok(t) => t,
+                Err(_) => continue,
+            };
+            if ts.dcs > 2 {
+                let mut ov = s.overrides.clone();
+                ov[i] = format!(
+                    "topology.generated=generated:{},{},{}",
+                    (ts.dcs / 2).max(2),
+                    ts.nodes_per_dc,
+                    ts.seed
+                );
+                out.push(with_spec(ScenarioSpec { overrides: ov, ..s.clone() }, cell.seed));
+            }
+            if ts.nodes_per_dc > 1 {
+                let mut ov = s.overrides.clone();
+                ov[i] = format!(
+                    "topology.generated=generated:{},{},{}",
+                    ts.dcs,
+                    ts.nodes_per_dc / 2,
+                    ts.seed
+                );
+                out.push(with_spec(ScenarioSpec { overrides: ov, ..s.clone() }, cell.seed));
+            }
         }
 
         // 4. Simplify the workload / topology / deployment axes.
@@ -1068,7 +1141,18 @@ mod tests {
                         }
                 }
             };
+            let topo_cost: f64 = c
+                .spec
+                .overrides
+                .iter()
+                .filter_map(|o| {
+                    o.strip_prefix("topology.generated=")
+                        .and_then(|r| crate::topo::parse_spec(r).ok())
+                        .map(|ts| (ts.dcs * 10 + ts.nodes_per_dc) as f64)
+                })
+                .sum();
             ev_cost * 1000.0
+                + topo_cost * 50.0
                 + c.spec.overrides.len() as f64 * 100.0
                 + wl_cost
                 + c.spec.regions as f64

@@ -237,6 +237,15 @@ impl ScenarioSpec {
             cfg.apply_override(ov)
                 .with_context(|| format!("scenario {:?} override {ov:?}", self.name))?;
         }
+        if self.regions > 0 && !cfg.topology.generated.is_empty() {
+            bail!(
+                "scenario {:?}: regions = {} conflicts with generated topology {:?} \
+                 (the token fixes the DC count)",
+                self.name,
+                self.regions,
+                cfg.topology.generated
+            );
+        }
         if self.regions > 0 && self.regions != cfg.topology.num_dcs() {
             cfg.topology.regions = (0..self.regions).map(|i| format!("R{i}")).collect();
         }
@@ -318,7 +327,7 @@ impl ScenarioSpec {
     fn from_keys(name: &str, keys: &BTreeMap<String, Value>) -> Result<ScenarioSpec> {
         // A typo'd key (e.g. `event` for `events`) must not silently yield
         // a chaos-free scenario that then passes every invariant.
-        const KNOWN: [&str; 9] = [
+        const KNOWN: [&str; 10] = [
             "deployment",
             "workload",
             "size",
@@ -328,6 +337,7 @@ impl ScenarioSpec {
             "events",
             "overrides",
             "strategy",
+            "topology",
         ];
         for k in keys.keys() {
             ensure!(
@@ -392,6 +402,13 @@ impl ScenarioSpec {
             crate::cloud::bidding::StrategyKind::parse(s)
                 .with_context(|| format!("scenario {name:?}: bad strategy"))?;
             overrides.push(format!("bidding.strategy={s}"));
+        }
+        // `topology = "generated:..."` is sugar for the topology override,
+        // validated at parse time like `strategy` above.
+        if let Some(s) = get_str("topology") {
+            crate::topo::parse_spec(s)
+                .with_context(|| format!("scenario {name:?}: bad topology"))?;
+            overrides.push(format!("topology.generated={s}"));
         }
         Ok(ScenarioSpec {
             name: name.to_string(),
@@ -693,6 +710,59 @@ mod tests {
         .unwrap();
         let err = CampaignSpec::from_doc(&doc).unwrap_err().to_string();
         assert!(err.contains("bad strategy"), "{err}");
+    }
+
+    #[test]
+    fn topology_key_desugars_to_a_generated_override() {
+        let doc = toml::parse(
+            r#"
+            [campaign]
+            seeds = [1]
+            [scenario.planet]
+            workload = "trace"
+            num_jobs = 2
+            topology = "generated:16,2,7"
+            "#,
+        )
+        .unwrap();
+        let c = CampaignSpec::from_doc(&doc).unwrap();
+        assert_eq!(
+            c.scenarios[0].overrides,
+            vec!["topology.generated=generated:16,2,7".to_string()]
+        );
+        let cfg = c.scenarios[0].build_config(&Config::default(), 1).unwrap();
+        assert_eq!(cfg.topology.num_dcs(), 16);
+        assert_eq!(cfg.topology.workers_per_dc, 2);
+        assert_eq!(cfg.wan.bandwidth.len(), 16);
+        // A bad token fails at parse time, not at run time.
+        let doc = toml::parse(
+            "[campaign]\nseeds = [1]\n[scenario.x]\nworkload = \"trace\"\ntopology = \"generated:16\"\n",
+        )
+        .unwrap();
+        let err = CampaignSpec::from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("bad topology"), "{err}");
+        // `regions` and a generated topology fight over the DC count.
+        let clash = ScenarioSpec {
+            name: "clash".into(),
+            deployment: Deployment::Houtu,
+            regions: 8,
+            workload: ScenarioWorkload::Trace { num_jobs: 1 },
+            events: vec![],
+            overrides: vec!["topology.generated=generated:16,2,7".into()],
+        };
+        let err = clash.build_config(&Config::default(), 1).unwrap_err().to_string();
+        assert!(err.contains("conflicts with generated topology"), "{err}");
+        // Chaos targets validate against the generated DC/node counts.
+        let out_of_range = ScenarioSpec {
+            name: "oob".into(),
+            deployment: Deployment::Houtu,
+            regions: 0,
+            workload: ScenarioWorkload::Trace { num_jobs: 1 },
+            events: vec![ChaosEvent::KillDc { at_secs: 10.0, dc: DcId(70) }],
+            overrides: vec!["topology.generated=generated:64,4,7".into()],
+        };
+        let err = out_of_range.build_config(&Config::default(), 1).unwrap_err().to_string();
+        assert!(err.contains("outside the 64-region topology"), "{err}");
     }
 
     #[test]

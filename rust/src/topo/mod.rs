@@ -1,0 +1,261 @@
+//! Seeded planet-scale topology generator (`topology = "generated:..."`).
+//!
+//! Every built-in scenario mirrors the paper's 4-region deployment; the
+//! ROADMAP's north star needs dozens-to-hundreds of DCs with realistic
+//! WAN structure. This module turns a three-token spec string,
+//! `generated:<dcs>,<nodes_per_dc>,<seed>`, into a deterministic world
+//! layout: per-DC positions on a unit square, spot-price correlation
+//! groups (DCs in one group share a regional market), and a symmetric
+//! `(mean, std)` bandwidth matrix whose cross-DC capacity decays with
+//! distance while the diagonal keeps the measured LAN figure.
+//!
+//! Two properties are load-bearing and pinned by `rust/tests/planet.rs`:
+//!
+//! * **Purity.** The layout is a pure function of `(dcs, nodes_per_dc,
+//!   seed)` — regenerating a spec is bit-identical, so a topology token
+//!   in a campaign/load/fuzz spec is a complete description of the
+//!   world and repro TOMLs stay one-line.
+//! * **Prefix stability.** DC `i` draws from its own seeded substream
+//!   and every matrix entry is a function of the two endpoint positions
+//!   only, so the leading `k×k` block of a `generated:n,...` world is
+//!   identical to the whole `generated:k,...` world (same seed, same
+//!   nodes). The two-tier fidelity model leans on this: growing the
+//!   *background* DC count cannot perturb the exact tier's WAN inputs,
+//!   which is what makes the 0-vs-200-background digest invariance in
+//!   `rust/tests/part_world.rs` provable rather than lucky.
+//!
+//! The config layer (`topology.generated`) expands a parsed spec into
+//! concrete region names / worker counts / bandwidth via [`generate`];
+//! see `docs/SCALE.md` for the schema and the promotion rule the
+//! two-tier engine applies on top.
+
+use crate::util::error::Result;
+use crate::util::Pcg;
+use crate::{anyhow, ensure};
+
+/// Per-DC substream base: DC `i` draws from `Pcg::new(seed, DC_STREAM + i)`.
+const DC_STREAM: u64 = 0x7070;
+/// Per-group substream base: group centers are functions of the group
+/// index alone, never of the DC count.
+const GROUP_STREAM: u64 = 0x9090;
+
+/// Number of spot-price correlation groups ("continental" markets). A
+/// fixed constant — not a function of the DC count — so group draws stay
+/// prefix-stable as worlds grow.
+pub const CORRELATION_GROUPS: usize = 16;
+
+/// Intra-DC (diagonal) bandwidth `(mean, std)` in MB/s — the measured
+/// LAN figure the paper-shaped 4-region matrix also uses.
+pub const LAN_BW: (f64, f64) = (827.0, 104.0);
+
+/// Cross-DC bandwidth floor (MB/s): the capacity two antipodal DCs keep.
+const CROSS_BW_FLOOR: f64 = 25.0;
+/// Cross-DC bandwidth scale: capacity added as distance shrinks to 0.
+/// Floor + scale = 525 MB/s < LAN, so intra-DC always beats cross-DC.
+const CROSS_BW_SCALE: f64 = 500.0;
+/// Distance-decay rate for cross-DC capacity.
+const CROSS_BW_DECAY: f64 = 3.0;
+
+/// Hard caps on a parsed spec, so a typo'd token fails fast instead of
+/// allocating a gigabyte of bandwidth matrix.
+pub const MAX_DCS: usize = 1024;
+pub const MAX_NODES_PER_DC: usize = 4096;
+const MAX_TOTAL_NODES: usize = 1 << 20;
+
+/// Parsed `generated:<dcs>,<nodes_per_dc>,<seed>` topology token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TopoSpec {
+    pub dcs: usize,
+    pub nodes_per_dc: usize,
+    pub seed: u64,
+}
+
+/// Parse a `generated:<dcs>,<nodes_per_dc>,<seed>` token with bounds
+/// checks. Every failure names the token and the expected shape, so a
+/// bad `--topology` / `topology =` value is a clear error, not a panic.
+pub fn parse_spec(s: &str) -> Result<TopoSpec> {
+    let rest = s.strip_prefix("generated:").ok_or_else(|| {
+        anyhow!(
+            "topology spec {s:?} must have the form \
+             \"generated:<dcs>,<nodes_per_dc>,<seed>\""
+        )
+    })?;
+    let parts: Vec<&str> = rest.split(',').collect();
+    ensure!(
+        parts.len() == 3,
+        "topology spec {s:?} needs exactly three comma-separated fields \
+         (<dcs>,<nodes_per_dc>,<seed>)"
+    );
+    let field = |idx: usize, name: &str| -> Result<u64> {
+        parts[idx]
+            .trim()
+            .parse::<u64>()
+            .map_err(|_| anyhow!("topology spec {s:?}: {name} {:?} is not a number", parts[idx]))
+    };
+    let dcs = field(0, "dc count")? as usize;
+    let nodes_per_dc = field(1, "nodes_per_dc")? as usize;
+    let seed = field(2, "seed")?;
+    ensure!(
+        (1..=MAX_DCS).contains(&dcs),
+        "topology spec {s:?}: dc count {dcs} out of range 1..={MAX_DCS}"
+    );
+    ensure!(
+        (1..=MAX_NODES_PER_DC).contains(&nodes_per_dc),
+        "topology spec {s:?}: nodes_per_dc {nodes_per_dc} out of range 1..={MAX_NODES_PER_DC}"
+    );
+    ensure!(
+        dcs * nodes_per_dc <= MAX_TOTAL_NODES,
+        "topology spec {s:?}: {dcs}x{nodes_per_dc} nodes exceeds the \
+         {MAX_TOTAL_NODES}-node cap"
+    );
+    Ok(TopoSpec { dcs, nodes_per_dc, seed })
+}
+
+/// A fully generated world layout (see the module docs for the model).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GeneratedTopology {
+    pub spec: TopoSpec,
+    /// Region names, `"G<group>-DC<i>"` — the `G` prefix is the DC's
+    /// spot-price correlation group.
+    pub regions: Vec<String>,
+    /// Correlation group per DC (`0..CORRELATION_GROUPS`).
+    pub groups: Vec<usize>,
+    /// DC positions on the unit square (group center + local jitter).
+    pub positions: Vec<(f64, f64)>,
+    /// Symmetric `dcs × dcs` `(mean, std)` bandwidth matrix in MB/s;
+    /// the diagonal is [`LAN_BW`].
+    pub bandwidth: Vec<Vec<(f64, f64)>>,
+}
+
+/// Position + group of one DC, drawn from its own substream. Public to
+/// the crate only through [`generate`]; factored out so the prefix
+/// stability argument is visible: nothing here reads the DC count.
+fn place_dc(seed: u64, i: usize) -> (usize, (f64, f64)) {
+    let mut rng = Pcg::new(seed, DC_STREAM + i as u64);
+    let g = rng.index(CORRELATION_GROUPS);
+    let mut grng = Pcg::new(seed, GROUP_STREAM + g as u64);
+    let (cx, cy) = (grng.f64(), grng.f64());
+    let x = (cx + rng.uniform(-0.06, 0.06)).clamp(0.0, 1.0);
+    let y = (cy + rng.uniform(-0.06, 0.06)).clamp(0.0, 1.0);
+    (g, (x, y))
+}
+
+/// Deterministically expand a spec into a world layout. Pure function of
+/// the spec; see the module docs for the purity/prefix-stability pins.
+pub fn generate(spec: TopoSpec) -> GeneratedTopology {
+    let n = spec.dcs;
+    let mut groups = Vec::with_capacity(n);
+    let mut positions = Vec::with_capacity(n);
+    let mut regions = Vec::with_capacity(n);
+    for i in 0..n {
+        let (g, pos) = place_dc(spec.seed, i);
+        groups.push(g);
+        positions.push(pos);
+        regions.push(format!("G{g}-DC{i}"));
+    }
+    let mut bandwidth = vec![vec![LAN_BW; n]; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let (xi, yi) = positions[i];
+            let (xj, yj) = positions[j];
+            let d = ((xi - xj).powi(2) + (yi - yj).powi(2)).sqrt();
+            let mean = CROSS_BW_FLOOR + CROSS_BW_SCALE * (-CROSS_BW_DECAY * d).exp();
+            let cell = (mean, mean / 4.0);
+            bandwidth[i][j] = cell;
+            bandwidth[j][i] = cell;
+        }
+    }
+    GeneratedTopology { spec, regions, groups, positions, bandwidth }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_tokens_parse_and_bad_ones_fail_with_clear_errors() {
+        let ts = parse_spec("generated:64,8,7").expect("valid token");
+        assert_eq!(ts, TopoSpec { dcs: 64, nodes_per_dc: 8, seed: 7 });
+        let ts = parse_spec("generated: 16 , 2 , 42 ").expect("whitespace tolerated");
+        assert_eq!(ts, TopoSpec { dcs: 16, nodes_per_dc: 2, seed: 42 });
+        for bad in [
+            "64,8,7",
+            "generated:64,8",
+            "generated:64,8,7,9",
+            "generated:zero,8,7",
+            "generated:0,8,7",
+            "generated:64,0,7",
+            "generated:9999,8,7",
+            "generated:1024,4096,7",
+        ] {
+            let err = parse_spec(bad).expect_err(bad).to_string();
+            assert!(err.contains("topology spec"), "{bad}: unhelpful error {err:?}");
+        }
+    }
+
+    #[test]
+    fn generation_is_a_pure_function_of_the_spec() {
+        let spec = TopoSpec { dcs: 48, nodes_per_dc: 4, seed: 11 };
+        let a = generate(spec);
+        let b = generate(spec);
+        assert_eq!(a, b, "same spec must regenerate bit-identically");
+        let c = generate(TopoSpec { seed: 12, ..spec });
+        assert_ne!(a.bandwidth, c.bandwidth, "the seed must move the matrix");
+    }
+
+    #[test]
+    fn matrices_are_symmetric_finite_positive_and_lan_dominates() {
+        let g = generate(TopoSpec { dcs: 32, nodes_per_dc: 2, seed: 3 });
+        for i in 0..32 {
+            assert_eq!(g.bandwidth[i][i], LAN_BW);
+            for j in 0..32 {
+                let (m, s) = g.bandwidth[i][j];
+                assert!(m.is_finite() && m > 0.0, "[{i}][{j}] mean {m}");
+                assert!(s.is_finite() && s > 0.0, "[{i}][{j}] std {s}");
+                assert_eq!(g.bandwidth[i][j], g.bandwidth[j][i], "asymmetry at [{i}][{j}]");
+                if i != j {
+                    assert!(m < LAN_BW.0, "cross-DC [{i}][{j}] {m} beats the LAN");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn leading_block_is_prefix_stable_as_the_world_grows() {
+        let small = generate(TopoSpec { dcs: 16, nodes_per_dc: 2, seed: 7 });
+        let big = generate(TopoSpec { dcs: 64, nodes_per_dc: 2, seed: 7 });
+        assert_eq!(&big.regions[..16], &small.regions[..]);
+        assert_eq!(&big.groups[..16], &small.groups[..]);
+        for i in 0..16 {
+            assert_eq!(
+                &big.bandwidth[i][..16],
+                &small.bandwidth[i][..],
+                "row {i} of the leading block drifted with the DC count"
+            );
+        }
+    }
+
+    #[test]
+    fn correlation_groups_cluster_capacity() {
+        // Same-group DCs sit around one center, so their mean pairwise
+        // bandwidth must beat the cross-group mean (deterministic for a
+        // fixed seed; a large world keeps the averages stable).
+        let g = generate(TopoSpec { dcs: 128, nodes_per_dc: 1, seed: 5 });
+        let (mut same, mut cross) = ((0.0, 0usize), (0.0, 0usize));
+        for i in 0..128 {
+            for j in (i + 1)..128 {
+                let m = g.bandwidth[i][j].0;
+                if g.groups[i] == g.groups[j] {
+                    same = (same.0 + m, same.1 + 1);
+                } else {
+                    cross = (cross.0 + m, cross.1 + 1);
+                }
+            }
+        }
+        assert!(same.1 > 0 && cross.1 > 0, "both pair kinds must occur");
+        assert!(
+            same.0 / same.1 as f64 > cross.0 / cross.1 as f64,
+            "same-group capacity must beat cross-group on average"
+        );
+    }
+}

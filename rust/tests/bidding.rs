@@ -153,7 +153,7 @@ fn mid_run_class_conversion_bills_segmented_hours() {
     let cfg = Config::default();
     let mk = || World::new(cfg.clone(), Deployment::Houtu);
     // Pick a spot worker node (all workers are spot on houtu).
-    let node = mk().cluster.dcs[1].nodes[2].id;
+    let node = houtu::ids::NodeId { dc: houtu::ids::DcId(1), idx: 2 };
     let mut base = mk();
     assert!(base.cluster.node_class(node).is_spot(), "expected a spot worker");
     base.bill_machines(3600.0);

@@ -221,7 +221,7 @@ fn killing_idle_node_is_harmless() {
     kill_node(&mut sim, NodeId { dc: DcId(3), idx: 2 });
     sim.run_until(secs(100));
     // Node respawns after the re-acquisition delay.
-    assert!(sim.state.cluster.dcs[3].nodes[2].alive);
+    assert!(sim.state.cluster.node_alive(NodeId { dc: DcId(3), idx: 2 }));
     assert_eq!(sim.state.cluster.dc_capacity(DcId(3)), 16);
 }
 

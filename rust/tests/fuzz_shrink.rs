@@ -170,6 +170,7 @@ fn fuzz_report_json_round_trips_clean_and_failing_reports() {
         cases: 3,
         workers: 2,
         case_digests: vec![0xdead_beef_0000_0001, 7, u64::MAX],
+        case_usd: vec![0.25, 0.0, 1.5],
         failures: vec![],
         wall_ms: 12,
     };

@@ -251,6 +251,43 @@ fn smoke_campaign_peak_pending_is_engine_invariant() {
     }
 }
 
+/// The SoA node-store wall: all 30 standard-campaign cells replay
+/// bit-identically with the legacy per-node mirror enabled. With shadow
+/// checking on, every cluster build and every node mutation
+/// (kill/restart/class change) is cross-checked field-by-field against
+/// an array-of-structs replica, so the columnar store cannot silently
+/// drift from the layout it replaced — and because the mirror only adds
+/// assertions, the digests themselves must not move either.
+#[test]
+fn standard_campaign_digests_survive_the_soa_node_store() {
+    let plain = compute_pins(QueueKind::Slab);
+    assert_eq!(plain.len(), 30, "expected the 10×3 standard matrix");
+    houtu::cluster::set_shadow_check(true);
+    let shadowed = compute_pins(QueueKind::Slab);
+    houtu::cluster::set_shadow_check(false);
+    assert_eq!(plain.len(), shadowed.len());
+    for (a, b) in plain.iter().zip(&shadowed) {
+        assert_eq!(
+            (&a.scenario, a.seed),
+            (&b.scenario, b.seed),
+            "cell order must not depend on shadow checking"
+        );
+        assert_eq!(
+            format!("{:016x}", a.digest),
+            format!("{:016x}", b.digest),
+            "{}/seed{}: replay digest drifted under the SoA shadow mirror",
+            a.scenario,
+            a.seed
+        );
+        assert_eq!(
+            a.events, b.events,
+            "{}/seed{}: event count drifted under the SoA shadow mirror",
+            a.scenario,
+            a.seed
+        );
+    }
+}
+
 #[test]
 fn standard_campaign_digests_are_shard_count_invariant() {
     let slab = compute_pins(QueueKind::Slab);

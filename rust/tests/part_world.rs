@@ -209,6 +209,126 @@ fn every_chaos_family_pins_serial_vs_threaded() {
     assert_eq!(uniq.len(), digests.len(), "two chaos families produced identical streams");
 }
 
+/// Build a generated-topology cell with a two-tier boundary.
+fn tiered(
+    name: &str,
+    total: usize,
+    exact: usize,
+    workload: ScenarioWorkload,
+    events: Vec<ChaosEvent>,
+) -> ScenarioSpec {
+    ScenarioSpec {
+        name: name.to_string(),
+        deployment: Deployment::Houtu,
+        regions: 0,
+        workload,
+        events,
+        overrides: vec![
+            format!("topology.generated=generated:{total},4,7"),
+            format!("topology.exact_dcs={exact}"),
+        ],
+    }
+}
+
+/// The two-tier invariance pin: a job that never leaves the exact tier
+/// digests bit-identically whether the generated world carries 0 or 200
+/// background DCs. Background parts stay dormant (zero events), the
+/// exact tier's WAN inputs are prefix-stable (`houtu::topo`), and the
+/// cell digest folds active parts only — so the *whole observable row*
+/// (digest, events, tasks, jobs) must match, not just survive. `peak`
+/// is excluded: queue capacity is a function of the part count.
+#[test]
+fn background_dcs_do_not_perturb_the_exact_tier() {
+    let mk = |total: usize| {
+        tiered(
+            "bg-invariance",
+            total,
+            4,
+            ScenarioWorkload::Trace { num_jobs: 3 },
+            vec![ChaosEvent::SpotStorm {
+                at_secs: 20.0,
+                dc: DcId(1),
+                dur_secs: 90.0,
+                sigma_factor: 2.5,
+            }],
+        )
+    };
+    let base = Config::default();
+    for seed in [42u64, 7] {
+        let small = run_cell_on_parts(&base, &mk(4), seed, 1)
+            .unwrap_or_else(|e| panic!("4dc/seed{seed}: {e}"));
+        let big = run_cell_on_parts(&base, &mk(204), seed, 1)
+            .unwrap_or_else(|e| panic!("204dc/seed{seed}: {e}"));
+        assert!(small.jobs_done > 0, "seed{seed}: no job finished");
+        assert_eq!(
+            format!("{:016x}", small.digest),
+            format!("{:016x}", big.digest),
+            "seed{seed}: 200 dormant background DCs moved the exact tier's digest"
+        );
+        assert_eq!(
+            (small.events, small.tasks_run, small.jobs_done),
+            (big.events, big.tasks_run, big.jobs_done),
+            "seed{seed}: background DCs moved the exact tier's counters"
+        );
+    }
+}
+
+/// Dynamic promotion: `kill_dc@` targeting a *background* DC of a
+/// 16-DC world (exact tier = 4) promotes it mid-run. The promotion —
+/// price-walk catch-up from the part's own untouched stream, one
+/// transition fold, market ticks from then on — must be deterministic
+/// and serial ≡ threaded, and it must visibly change the stream
+/// relative to the no-kill twin (the promoted part now participates in
+/// the digest).
+#[test]
+fn promoting_a_background_dc_mid_run_is_deterministic() {
+    let job = ScenarioWorkload::SingleJob {
+        kind: WorkloadKind::PageRank,
+        size: SizeClass::Medium,
+        home: DcId(1),
+    };
+    let kill = tiered(
+        "bg-promote",
+        16,
+        4,
+        job.clone(),
+        vec![ChaosEvent::KillDc { at_secs: 30.0, dc: DcId(10) }],
+    );
+    let calm = tiered("bg-calm", 16, 4, job, vec![]);
+    for seed in [42u64, 7] {
+        let k = pin_thread_invariant(&kill, seed);
+        assert_eq!(k.jobs_done, 1, "seed{seed}: killing a background DC must not hurt the job");
+        let c = pin_thread_invariant(&calm, seed);
+        assert_ne!(
+            k.digest, c.digest,
+            "seed{seed}: promoting dc10 left no trace in the stream"
+        );
+        assert!(k.events > c.events, "seed{seed}: the promoted part processed no events");
+    }
+}
+
+/// Static promotion: a `SingleJob` homed *outside* the boundary widens
+/// the exact tier at cell setup (the promotion rule applied statically),
+/// so the job still runs the full protocol and completes, thread-count
+/// invariantly.
+#[test]
+fn a_job_homed_beyond_the_boundary_widens_the_exact_tier() {
+    let spec = tiered(
+        "bg-home-outside",
+        16,
+        4,
+        ScenarioWorkload::SingleJob {
+            kind: WorkloadKind::WordCount,
+            size: SizeClass::Small,
+            home: DcId(10),
+        },
+        vec![],
+    );
+    let cell = pin_thread_invariant(&spec, 42);
+    assert_eq!(cell.jobs_done, 1, "the out-of-tier job must finish");
+    assert!(cell.tasks_run > 0);
+}
+
 /// Property wall: random topologies (2–6 DCs), random workloads and a
 /// random chaos schedule — each drawn case must be thread-count
 /// invariant and replay in lockstep. The kit prints the failing case.
